@@ -1,0 +1,72 @@
+//! Quickstart: train an exact GP (BBMM) on a small synthetic dataset and
+//! make calibrated predictions — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Needs `make artifacts` for the PJRT backend; pass `--backend native`
+//! to run without artifacts.
+
+use exactgp::cli::Args;
+use exactgp::config::Config;
+use exactgp::coordinator::make_pool;
+use exactgp::data::synthetic::{load, Scale};
+use exactgp::gp::exact::{ExactGp, Recipe};
+use exactgp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    let mut cfg = Config::default();
+    cfg.scale = Scale::SMOKE; // n_train = 1024 — a few seconds end to end
+    if let Some(b) = args.get("backend") {
+        cfg.backend = exactgp::config::Backend::parse(b)?;
+    }
+
+    // 1. A dataset with the paper's Bike signature (n scaled down).
+    let ds = load("bike", cfg.scale, 0).expect("known dataset");
+    println!("dataset: {} n_train={} d={}", ds.name, ds.n_train(), ds.d);
+
+    // 2. The worker pool — each worker stands in for one GPU and owns its
+    //    own PJRT client + compiled HLO artifacts.
+    let (pool, spec) = make_pool(&cfg, ds.d)?;
+
+    // 3. Train with the paper's recipe: L-BFGS+Adam pretraining on a
+    //    subset, then 3 Adam steps of BBMM (mBCG solves + stochastic
+    //    Lanczos quadrature) on the full data.
+    let mut rng = Rng::new(42, 0);
+    let mut gp = ExactGp::new(&cfg, cfg.kernel, &ds, pool, spec);
+    gp.train(Recipe::paper_default(&cfg), &mut rng)?;
+    println!(
+        "trained: lengthscale={:.3} outputscale={:.3} noise={:.4} ({:.1}s, {} partitions)",
+        gp.hypers.log_lengthscales[0].exp(),
+        gp.hypers.outputscale(),
+        gp.hypers.noise(),
+        gp.train_seconds,
+        gp.partitions,
+    );
+
+    // 4. Precompute the prediction caches (tight solve for the mean,
+    //    LOVE cache for variances) — after this, predictions are O(n)
+    //    matmuls with no solves.
+    gp.precompute(&mut rng)?;
+    println!("precompute: {:.2}s", gp.precompute_seconds);
+
+    // 5. Predict with uncertainty.
+    let preds = gp.predict(&ds.test_x)?;
+    let rmse = preds.rmse(&ds.test_y);
+    let nll = preds.nll(&ds.test_y);
+    println!("test rmse={rmse:.4} (random guess = 1.0), nll={nll:.4}");
+
+    // 6. Calibration check: ~95% of test targets inside 2-sigma.
+    let mut inside = 0;
+    for i in 0..ds.n_test() {
+        let sd = (preds.var[i] + preds.noise).sqrt();
+        if (ds.test_y[i] - preds.mean[i]).abs() <= 2.0 * sd {
+            inside += 1;
+        }
+    }
+    println!(
+        "calibration: {:.1}% of test points within 2 sigma (expect ~95%)",
+        100.0 * inside as f64 / ds.n_test() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! End-to-end driver (deliverable (b)/EXPERIMENTS.md): the paper's core
+//! comparison — exact GP vs SGPR vs SVGP — on any subset of the
+//! UCI-signature suite, at a chosen scale.
+//!
+//!     cargo run --release --example uci_benchmark -- \
+//!         --datasets poletele,bike,kin40k --scale default --trials 1
+//!
+//! Prints Table-1-style rows and writes results/uci_benchmark.json.
+
+use exactgp::cli::Args;
+use exactgp::config::Config;
+use exactgp::coordinator::{self, Model};
+use exactgp::data::synthetic::Scale;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    let mut cfg = Config::load(args.get("config"), &args.overrides()?)?;
+    if let Some(s) = args.get("scale") {
+        cfg.scale = Scale::parse(s).ok_or_else(|| anyhow::anyhow!("bad scale"))?;
+    }
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    let trials = args.get_usize("trials")?.unwrap_or(1) as u64;
+    let datasets: Vec<String> = args
+        .get_or("datasets", "poletele,bike,kin40k")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    let models = [Model::ExactBbmm, Model::Sgpr, Model::Svgp];
+    let mut reports = Vec::new();
+    let mut rows = Vec::new();
+    for name in &datasets {
+        for trial in 0..trials {
+            let ds = coordinator::load_dataset(&cfg, name, trial)?;
+            for model in &models {
+                match coordinator::run_model(&cfg, *model, &ds, trial) {
+                    Ok(r) => {
+                        println!(
+                            "{name:>14} trial={trial} {:>9}: rmse={:.4} nll={:+.4} train={:.1}s",
+                            model.name(),
+                            r.rmse,
+                            r.nll,
+                            r.train_seconds
+                        );
+                        rows.push(vec![
+                            name.clone(),
+                            model.name().into(),
+                            format!("{:.4}", r.rmse),
+                            format!("{:+.4}", r.nll),
+                            format!("{:.1}s", r.train_seconds),
+                        ]);
+                        reports.push(r);
+                    }
+                    Err(e) => eprintln!("{name} {}: SKIPPED ({e})", model.name()),
+                }
+            }
+        }
+    }
+    coordinator::print_table(
+        "UCI benchmark (Table 1 protocol)",
+        &["dataset", "model", "RMSE", "NLL", "train"],
+        &rows,
+    );
+    let path = coordinator::write_results(&cfg, "uci_benchmark", &reports)?;
+    eprintln!("wrote {path:?}");
+    Ok(())
+}

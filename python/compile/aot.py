@@ -1,0 +1,197 @@
+"""AOT lowering: jax entry points -> HLO text artifacts + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` rust crate) rejects; the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE, here. The Rust coordinator loads `manifest.json`, picks
+artifacts by (entry, kind, mode, flavor, shape), compiles them with the
+PJRT CPU client at startup, and never calls back into Python.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--profile quick|full]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, sgpr, svgp
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact plan
+# ---------------------------------------------------------------------------
+
+# Production tile geometry (DESIGN.md SS2): rows x cols per tile call.
+TILE_R, TILE_C = 512, 2048
+CROSS_R, CROSS_C = 512, 512
+SVGP_B = 1024
+
+NTHETA = {"shared": 2, "ard": lambda d: d + 1}  # kernel-only theta
+NTHETA_FULL = {"shared": 3, "ard": lambda d: d + 2}  # + log_noise
+
+
+def _ntheta(mode, d, full=False):
+    tbl = NTHETA_FULL if full else NTHETA
+    v = tbl[mode]
+    return v if isinstance(v, int) else v(d)
+
+
+def plan(profile):
+    """Yield artifact descriptors: (name, build_fn, arg_specs, meta)."""
+    arts = []
+
+    def mvm_family(kind, mode, d, tees, flavors):
+        p = _ntheta(mode, d)
+        for flavor in flavors:
+            for t in tees:
+                name = f"mvm__{kind}_{mode}_{flavor}__r{TILE_R}c{TILE_C}t{t}d{d}"
+                fn = model.build_mvm(flavor, kind, mode, TILE_R, TILE_C, t, d)
+                args = [
+                    spec(TILE_R, d),
+                    spec(TILE_C, d),
+                    spec(TILE_C, t),
+                    spec(p),
+                ]
+                arts.append(
+                    (name, fn, args,
+                     dict(entry="mvm", kind=kind, mode=mode, flavor=flavor,
+                          r=TILE_R, c=TILE_C, t=t, d=d, outputs=1))
+                )
+            # gradient tile (largest t only)
+            t = max(tees)
+            name = f"mvmgrad__{kind}_{mode}_{flavor}__r{TILE_R}c{TILE_C}t{t}d{d}"
+            fn = model.build_mvm_grads(flavor, kind, mode, TILE_R, TILE_C, t, d)
+            args = [spec(TILE_R, d), spec(TILE_C, d), spec(TILE_C, t), spec(p)]
+            arts.append(
+                (name, fn, args,
+                 dict(entry="mvmgrad", kind=kind, mode=mode, flavor=flavor,
+                      r=TILE_R, c=TILE_C, t=t, d=d, outputs=2))
+            )
+
+    def cross_family(kind, mode, d, flavors):
+        p = _ntheta(mode, d)
+        for flavor in flavors:
+            name = f"cross__{kind}_{mode}_{flavor}__r{CROSS_R}c{CROSS_C}d{d}"
+            fn = model.build_cross(flavor, kind, mode, CROSS_R, CROSS_C, d)
+            args = [spec(CROSS_R, d), spec(CROSS_C, d), spec(p)]
+            arts.append(
+                (name, fn, args,
+                 dict(entry="cross", kind=kind, mode=mode, flavor=flavor,
+                      r=CROSS_R, c=CROSS_C, d=d, outputs=1))
+            )
+
+    def svgp_family(kind, mode, d, ms):
+        p = _ntheta(mode, d, full=True)
+        for m in ms:
+            name = f"svgp__{kind}_{mode}_jnp__m{m}b{SVGP_B}d{d}"
+            fn = svgp.build_svgp_step(kind, mode, m, SVGP_B, d)
+            args = [
+                spec(m, d), spec(m), spec(m, m), spec(p),
+                spec(SVGP_B, d), spec(SVGP_B), spec(),
+            ]
+            arts.append(
+                (name, fn, args,
+                 dict(entry="svgp", kind=kind, mode=mode, flavor="jnp",
+                      m=m, b=SVGP_B, d=d, outputs=5))
+            )
+
+    def sgpr_family(kind, mode, d, m_n_pairs):
+        p = _ntheta(mode, d, full=True)
+        for m, n in m_n_pairs:
+            name = f"sgpr__{kind}_{mode}_jnp__m{m}n{n}d{d}"
+            fn = sgpr.build_sgpr_step(kind, mode, m, n, d)
+            args = [spec(m, d), spec(p), spec(n, d), spec(n), spec(n)]
+            arts.append(
+                (name, fn, args,
+                 dict(entry="sgpr", kind=kind, mode=mode, flavor="jnp",
+                      m=m, n=n, d=d, outputs=3))
+            )
+
+    if profile == "quick":
+        # Minimal set: enough for rust integration tests.
+        mvm_family("matern32", "shared", 32, [1, 16], ["jnp", "pallas"])
+        cross_family("matern32", "shared", 32, ["jnp"])
+        svgp_family("matern32", "shared", 32, [64])
+        sgpr_family("matern32", "shared", 32, [(64, 4096)])
+        return arts
+
+    flavors = ["jnp", "pallas"]
+    for mode in ("shared", "ard"):
+        mvm_family("matern32", mode, 32, [1, 16], flavors)
+        cross_family("matern32", mode, 32, flavors)
+    mvm_family("matern32", "shared", 8, [1, 16], flavors)
+    mvm_family("rbf", "shared", 32, [1, 16], flavors)
+
+    svgp_family("matern32", "shared", 32, [16, 64, 256, 1024])
+    svgp_family("matern32", "ard", 32, [64, 256])
+    sgpr_family(
+        "matern32", "shared", 32,
+        [(16, 4096), (64, 4096), (128, 4096), (256, 4096), (512, 4096),
+         (64, 16384), (128, 16384), (512, 16384)],
+    )
+    sgpr_family("matern32", "ard", 32, [(64, 4096), (128, 4096), (128, 16384)])
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profile",
+                    default=os.environ.get("EXACTGP_AOT_PROFILE", "full"),
+                    choices=["quick", "full"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "profile": args.profile, "tile": {
+        "r": TILE_R, "c": TILE_C, "cross_r": CROSS_R, "cross_c": CROSS_C,
+        "svgp_b": SVGP_B,
+    }, "artifacts": []}
+
+    arts = plan(args.profile)
+    t0 = time.time()
+    for i, (name, fn, argspecs, meta) in enumerate(arts):
+        path = f"{name}.hlo.txt"
+        full = os.path.join(args.out, path)
+        t1 = time.time()
+        lowered = jax.jit(fn).lower(*argspecs)
+        text = to_hlo_text(lowered)
+        with open(full, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["name"] = name
+        meta["file"] = path
+        meta["inputs"] = [list(s.shape) for s in argspecs]
+        manifest["artifacts"].append(meta)
+        print(f"[{i+1}/{len(arts)}] {name}  ({time.time()-t1:.1f}s, "
+              f"{len(text)//1024} KiB)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(arts)} artifacts in {time.time()-t0:.1f}s "
+          f"-> {args.out}/manifest.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

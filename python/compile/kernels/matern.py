@@ -1,0 +1,253 @@
+"""L1 Pallas kernels: fused distance -> covariance -> matvec tiles.
+
+The paper's GPU strategy materializes each (n/p) x n kernel partition in HBM,
+multiplies with cuBLAS, and discards it. The TPU rethink (DESIGN.md
+SS8 Hardware-Adaptation): never materialize the partition at all. One Pallas
+kernel stages X-row/X-col/V blocks HBM->VMEM, computes the covariance tile on
+the MXU (the -2*Xr@Xc^T term and the final (R,C)x(C,T) accumulation are both
+systolic-array matmuls), applies the Matern/RBF nonlinearity on the VPU, and
+accumulates K@V in a VMEM-resident accumulator across the column-block grid.
+The K tile exists only in scratchpad.
+
+Scalar-free kernels: all hyperparameters are folded into the *inputs* by the
+caller (same jit, same HLO module):
+
+    xr_s = xr * (1/l)   (per-dim 1/l_i for ARD)
+    xc_s = xc * (1/l)
+    v_s  = v * outputscale
+
+so  K @ v = os * rho(dists(xr_s, xc_s)) @ v = rho(...) @ v_s,  and the
+lengthscale-gradient tiles become (Matern-3/2, with u = sqrt(3)*r_scaled):
+
+    d/dlog_l_i [K] v = 3 * e^{-u} .* d_i^2_scaled @ v_s        (ARD)
+    d/dlog_l   [K] v =     e^{-u} .* u^2          @ v_s        (shared)
+
+(derivation in DESIGN.md SS6; verified against jax.jacfwd of ref.py).
+RBF analogues:  rho = e^{-r^2/2},  d/dlog_l_i = rho .* d_i^2_scaled.
+
+Kernels MUST be lowered with interpret=True for CPU-PJRT execution (real-TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT3 = 1.7320508075688772
+
+
+def _tile_r2(xr, xc):
+    """Squared distances for a tile via the MXU-friendly expansion."""
+    xr2 = jnp.sum(xr * xr, axis=1, keepdims=True)  # (R, 1)
+    xc2 = jnp.sum(xc * xc, axis=1, keepdims=True).T  # (1, C)
+    cross = jnp.dot(xr, xc.T, preferred_element_type=jnp.float32)  # MXU
+    return jnp.maximum(xr2 + xc2 - 2.0 * cross, 0.0)
+
+
+def _rho_and_e(kind, r2):
+    """Correlation rho(r2) and the shared exponential factor e.
+
+    Matern-3/2: rho = (1+u) e^{-u}, u = sqrt(3) r;  e = e^{-u}
+    RBF:        rho = e^{-r2/2};                    e = rho
+    """
+    if kind == "matern32":
+        u = jnp.sqrt(3.0 * r2)
+        e = jnp.exp(-u)
+        return (1.0 + u) * e, e, u
+    elif kind == "rbf":
+        rho = jnp.exp(-0.5 * r2)
+        return rho, rho, None
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def _grad_weight(kind, e, u, r2):
+    """Elementwise weight W s.t. d/dlog_l_i [K] v = (W .* d_i^2) @ v_scaled."""
+    if kind == "matern32":
+        return 3.0 * e
+    # RBF: dk/dlog_l_i = k * d_i^2_scaled
+    return e
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _mvm_kernel(xr_ref, xc_ref, v_ref, o_ref, *, kind):
+    """Fused K@V accumulation over column blocks (grid axis 0)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    r2 = _tile_r2(xr_ref[...], xc_ref[...])
+    rho, _, _ = _rho_and_e(kind, r2)
+    o_ref[...] += jnp.dot(rho, v_ref[...], preferred_element_type=jnp.float32)
+
+
+def _mvm_grads_shared_kernel(xr_ref, xc_ref, v_ref, o_ref, g_ref, *, kind):
+    """K@V and (d/dlog_l K)@V for a shared lengthscale, one fused pass."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    r2 = _tile_r2(xr_ref[...], xc_ref[...])
+    rho, e, u = _rho_and_e(kind, r2)
+    v = v_ref[...]
+    o_ref[...] += jnp.dot(rho, v, preferred_element_type=jnp.float32)
+    if kind == "matern32":
+        w = e * (3.0 * r2)  # = e^{-u} u^2
+    else:
+        w = e * r2
+    g_ref[...] += jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+
+def _mvm_grads_ard_kernel(xr_ref, xc_ref, v_ref, o_ref, g_ref, *, kind, d):
+    """K@V and per-dimension (d/dlog_l_i K)@V, one fused pass.
+
+    g_ref: (d, R, T). The per-dim squared-distance tiles reuse the same
+    rank-1 expansion; the loop over d is static (unrolled at trace time).
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    xr = xr_ref[...]
+    xc = xc_ref[...]
+    v = v_ref[...]
+    r2 = _tile_r2(xr, xc)
+    rho, e, u = _rho_and_e(kind, r2)
+    o_ref[...] += jnp.dot(rho, v, preferred_element_type=jnp.float32)
+    w = _grad_weight(kind, e, u, r2)
+    for i in range(d):
+        ri = xr[:, i : i + 1]  # (R, 1)
+        ci = xc[:, i : i + 1].T  # (1, C)
+        d2 = ri * ri + ci * ci - 2.0 * (ri * ci)
+        g_ref[i, ...] += jnp.dot(w * d2, v, preferred_element_type=jnp.float32)
+
+
+def _cross_kernel(xr_ref, xc_ref, o_ref, *, kind):
+    """Explicit covariance tile K(xr, xc) (no matvec)."""
+    r2 = _tile_r2(xr_ref[...], xc_ref[...])
+    rho, _, _ = _rho_and_e(kind, r2)
+    o_ref[...] = rho
+
+
+# ---------------------------------------------------------------------------
+# Scaling wrappers (fold hyperparameters into inputs) + pallas_call builders
+# ---------------------------------------------------------------------------
+
+
+def _scale_inputs(mode, d, xr, xc, v, theta):
+    """Fold theta into the tensors; see module docstring."""
+    if mode == "shared":
+        inv_l = jnp.exp(-theta[0])
+        os = jnp.exp(theta[1])
+        return xr * inv_l, xc * inv_l, v * os
+    inv_ls = jnp.exp(-theta[:d])[None, :]
+    os = jnp.exp(theta[d])
+    return xr * inv_ls, xc * inv_ls, v * os
+
+
+def build_pallas_mvm(kind, mode, r, c, t, d, cb=None, interpret=True):
+    """fn(xr (r,d), xc (c,d), v (c,t), theta) -> (K@v (r,t),)"""
+    cb = cb or min(c, 512)
+    assert c % cb == 0
+    grid = (c // cb,)
+    call = pl.pallas_call(
+        functools.partial(_mvm_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, d), lambda j: (0, 0)),
+            pl.BlockSpec((cb, d), lambda j: (j, 0)),
+            pl.BlockSpec((cb, t), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, t), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, t), jnp.float32),
+        interpret=interpret,
+    )
+
+    def fn(xr, xc, v, theta):
+        xr_s, xc_s, v_s = _scale_inputs(mode, d, xr, xc, v, theta)
+        return (call(xr_s, xc_s, v_s),)
+
+    return fn
+
+
+def build_pallas_mvm_grads(kind, mode, r, c, t, d, cb=None, interpret=True):
+    """fn(xr, xc, v, theta) -> (K@v (r,t), G (nl,r,t)) with nl = 1|d."""
+    cb = cb or min(c, 512)
+    assert c % cb == 0
+    grid = (c // cb,)
+    if mode == "shared":
+        body = functools.partial(_mvm_grads_shared_kernel, kind=kind)
+        g_shape, g_spec = (r, t), pl.BlockSpec((r, t), lambda j: (0, 0))
+    else:
+        body = functools.partial(_mvm_grads_ard_kernel, kind=kind, d=d)
+        g_shape = (d, r, t)
+        g_spec = pl.BlockSpec((d, r, t), lambda j: (0, 0, 0))
+    call = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, d), lambda j: (0, 0)),
+            pl.BlockSpec((cb, d), lambda j: (j, 0)),
+            pl.BlockSpec((cb, t), lambda j: (j, 0)),
+        ],
+        out_specs=[pl.BlockSpec((r, t), lambda j: (0, 0)), g_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, t), jnp.float32),
+            jax.ShapeDtypeStruct(g_shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    def fn(xr, xc, v, theta):
+        xr_s, xc_s, v_s = _scale_inputs(mode, d, xr, xc, v, theta)
+        kv, g = call(xr_s, xc_s, v_s)
+        if mode == "shared":
+            g = g[None, ...]
+        return (kv, g)
+
+    return fn
+
+
+def build_pallas_cross(kind, mode, r, c, d, cb=None, interpret=True):
+    """fn(xr, xc, theta) -> (K(xr, xc) (r, c),) — explicit covariance tile."""
+    cb = cb or min(c, 512)
+    assert c % cb == 0
+    grid = (c // cb,)
+    call = pl.pallas_call(
+        functools.partial(_cross_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, d), lambda j: (0, 0)),
+            pl.BlockSpec((cb, d), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, cb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=interpret,
+    )
+
+    def fn(xr, xc, theta):
+        # outputscale folded back in at the end (no V to fold it into).
+        if mode == "shared":
+            inv_l = jnp.exp(-theta[0])
+            os = jnp.exp(theta[1])
+            xr_s, xc_s = xr * inv_l, xc * inv_l
+        else:
+            inv_ls = jnp.exp(-theta[:d])[None, :]
+            os = jnp.exp(theta[d])
+            xr_s, xc_s = xr * inv_ls, xc * inv_ls
+        return (os * call(xr_s, xc_s),)
+
+    return fn

@@ -1,0 +1,111 @@
+"""Pure-jnp correctness oracle for the kernel tiles.
+
+This module is the *specification*: naive, obviously-correct pairwise
+formulas, differentiated with jax autodiff. The Pallas kernels in
+``matern.py`` / ``rbf.py`` and the fused jnp flavors in ``model.py`` are
+tested against these functions (pytest + hypothesis in python/tests/).
+
+Conventions (shared with the Rust side — keep in sync with
+rust/src/kernels/mod.rs):
+
+* ``theta_shared = [log_lengthscale, log_outputscale]`` — outputscale is the
+  *variance* s^2, not the std.
+* ``theta_ard    = [log_l_0, ..., log_l_{d-1}, log_outputscale]``.
+* Observational noise sigma^2 is NOT part of any kernel tile; the Rust
+  coordinator adds ``sigma^2 * v_i`` on diagonal blocks.
+* Matern-3/2:  k(r) = s^2 (1 + u) exp(-u),  u = sqrt(3) r / l.
+* RBF:         k(r) = s^2 exp(-r^2 / (2 l^2)).
+"""
+
+import jax
+import jax.numpy as jnp
+
+SQRT3 = 1.7320508075688772
+
+
+def sq_dists(xr, xc, inv_ls=None):
+    """Pairwise squared distances (R, C), optionally ARD-weighted.
+
+    ``inv_ls``: per-dimension 1/l_i (d,). If None, unit weights.
+    Naive quadratic formula — the oracle; the fused kernels use the
+    ||a||^2 + ||b||^2 - 2ab expansion instead.
+    """
+    if inv_ls is not None:
+        xr = xr * inv_ls[None, :]
+        xc = xc * inv_ls[None, :]
+    diff = xr[:, None, :] - xc[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def matern32(xr, xc, theta):
+    """Shared-lengthscale Matern-3/2 covariance tile (R, C)."""
+    log_l, log_os = theta[0], theta[1]
+    l = jnp.exp(log_l)
+    os = jnp.exp(log_os)
+    r = jnp.sqrt(jnp.maximum(sq_dists(xr, xc), 0.0))
+    u = SQRT3 * r / l
+    return os * (1.0 + u) * jnp.exp(-u)
+
+
+def matern32_ard(xr, xc, theta):
+    """ARD Matern-3/2 covariance tile. theta = [log_l_0..log_l_{d-1}, log_os]."""
+    d = xr.shape[-1]
+    inv_ls = jnp.exp(-theta[:d])
+    os = jnp.exp(theta[d])
+    r = jnp.sqrt(jnp.maximum(sq_dists(xr, xc, inv_ls), 0.0))
+    u = SQRT3 * r
+    return os * (1.0 + u) * jnp.exp(-u)
+
+
+def rbf(xr, xc, theta):
+    """Shared-lengthscale RBF covariance tile (R, C)."""
+    log_l, log_os = theta[0], theta[1]
+    inv_l = jnp.exp(-log_l)
+    os = jnp.exp(log_os)
+    r2 = jnp.maximum(sq_dists(xr, xc), 0.0)
+    return os * jnp.exp(-0.5 * r2 * inv_l * inv_l)
+
+
+def rbf_ard(xr, xc, theta):
+    d = xr.shape[-1]
+    inv_ls = jnp.exp(-theta[:d])
+    os = jnp.exp(theta[d])
+    r2 = jnp.maximum(sq_dists(xr, xc, inv_ls), 0.0)
+    return os * jnp.exp(-0.5 * r2)
+
+
+KERNELS = {
+    ("matern32", "shared"): matern32,
+    ("matern32", "ard"): matern32_ard,
+    ("rbf", "shared"): rbf,
+    ("rbf", "ard"): rbf_ard,
+}
+
+
+def kernel_mvm_ref(kind, mode, xr, xc, v, theta):
+    """Oracle for the fused MVM tile: K(xr, xc) @ v -> (R, T)."""
+    return KERNELS[(kind, mode)](xr, xc, theta) @ v
+
+
+def kernel_mvm_grads_ref(kind, mode, xr, xc, v, theta):
+    """Oracle for the gradient-MVM tile.
+
+    Returns (KV, G) where G stacks d/dlog_l_i [K] V over the lengthscale
+    parameters:
+      shared: KV (R,T), G (1, R, T)
+      ard:    KV (R,T), G (d, R, T)
+
+    The log-outputscale derivative is omitted because
+    d/dlog_os [K] V == K V exactly (K = os * rho), and the noise derivative
+    is the identity — both are recovered for free by the coordinator.
+    """
+    kfn = KERNELS[(kind, mode)]
+    nl = 1 if mode == "shared" else xr.shape[-1]
+
+    def mv(th):
+        return kfn(xr, xc, th) @ v
+
+    kv = mv(theta)
+    jac = jax.jacfwd(mv)(theta)  # (R, T, P)
+    g = jnp.moveaxis(jac[..., :nl], -1, 0)  # (nl, R, T)
+    return kv, g

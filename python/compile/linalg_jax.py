@@ -1,0 +1,160 @@
+"""Custom-call-free dense linear algebra for the AOT path.
+
+jax.numpy's cholesky / triangular_solve lower to LAPACK custom-calls
+(API_VERSION_TYPED_FFI) on CPU, which xla_extension 0.5.1 — the XLA behind
+the Rust `xla` crate — cannot execute. The SGPR/SVGP artifacts therefore
+use these hand-rolled implementations built only from plain HLO ops
+(while-loops + masked vector updates), with custom VJPs so jax.grad works
+without O(m^3) autodiff memory:
+
+* ``cholesky(a)``        — left-looking, O(m) loop iterations of O(m^2)
+                           masked work; VJP per Murray (2016).
+* ``solve_lower(l, b)``  — forward substitution; VJP via transposed solves.
+* ``solve_upper(u, b)``  — back substitution.
+
+Verified against jnp.linalg / jax.scipy (values and gradients) in
+python/tests/test_linalg_jax.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _chol_forward(a):
+    a = jnp.asarray(a)
+    m = a.shape[0]
+    idx = jnp.arange(m)
+
+    def body(j, l):
+        # row_j = L[j, :j] (mask out k >= j)
+        row_j = jnp.where(idx < j, l[j, :], 0.0)
+        # c_i = A[i, j] - sum_{k<j} L[i,k] L[j,k]
+        c = a[:, j] - l @ row_j
+        d = jnp.sqrt(jnp.maximum(c[j], 1e-30))
+        col = jnp.where(idx > j, c / d, 0.0)
+        l = l.at[:, j].set(col)
+        l = l.at[j, j].set(d)
+        return l
+
+    return lax.fori_loop(0, m, body, jnp.zeros_like(a))
+
+
+def _solve_lower_forward(l, b):
+    """X = L^{-1} B by forward substitution. b: (m,) or (m, k)."""
+    l = jnp.asarray(l)
+    b = jnp.asarray(b)
+    vec = b.ndim == 1
+    bb = b[:, None] if vec else b
+    m = l.shape[0]
+    idx = jnp.arange(m)
+
+    def body(i, x):
+        li = jnp.where(idx < i, l[i, :], 0.0)
+        xi = (bb[i, :] - li @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    x = lax.fori_loop(0, m, body, jnp.zeros_like(bb))
+    return x[:, 0] if vec else x
+
+
+def _solve_upper_forward(u, b):
+    """X = U^{-1} B by back substitution."""
+    u = jnp.asarray(u)
+    b = jnp.asarray(b)
+    vec = b.ndim == 1
+    bb = b[:, None] if vec else b
+    m = u.shape[0]
+    idx = jnp.arange(m)
+
+    def body(step, x):
+        i = m - 1 - step
+        ui = jnp.where(idx > i, u[i, :], 0.0)
+        xi = (bb[i, :] - ui @ x) / u[i, i]
+        return x.at[i, :].set(xi)
+
+    x = lax.fori_loop(0, m, body, jnp.zeros_like(bb))
+    return x[:, 0] if vec else x
+
+
+# ---------------------------------------------------------------------------
+# custom VJPs
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def cholesky(a):
+    """Lower Cholesky factor of SPD `a` (no custom-calls in the lowering)."""
+    return _chol_forward(a)
+
+
+def _chol_fwd(a):
+    l = _chol_forward(a)
+    return l, l
+
+
+def _phi(m):
+    """Lower triangle with halved diagonal (Murray 2016's Phi)."""
+    return jnp.tril(m) - 0.5 * jnp.diag(jnp.diag(m))
+
+
+def _chol_bwd(l, l_bar):
+    # a_bar = 1/2 L^{-T} (Phi + Phi^T) L^{-1},  Phi = phi(L^T L_bar)
+    p = _phi(l.T @ l_bar)
+    sym = p + p.T
+    # w = L^{-T} sym  -> solve L^T w = sym (upper solve with U = L^T)
+    w = _solve_upper_forward(l.T, sym)
+    # a_bar = 1/2 w L^{-1}  -> solve a_bar L = w/2, i.e. L^T a_bar^T = w^T/2
+    a_bar_t = _solve_upper_forward(l.T, w.T / 2.0)
+    return (a_bar_t.T,)
+
+
+cholesky.defvjp(_chol_fwd, _chol_bwd)
+
+
+@jax.custom_vjp
+def solve_lower(l, b):
+    """X = L^{-1} B for lower-triangular L."""
+    return _solve_lower_forward(l, b)
+
+
+def _sl_fwd(l, b):
+    x = _solve_lower_forward(l, b)
+    return x, (l, x)
+
+
+def _sl_bwd(res, x_bar):
+    l, x = res
+    b_bar = _solve_upper_forward(l.T, x_bar)
+    if x.ndim == 1:
+        l_bar = -jnp.tril(jnp.outer(b_bar, x))
+    else:
+        l_bar = -jnp.tril(b_bar @ x.T)
+    return (l_bar, b_bar)
+
+
+solve_lower.defvjp(_sl_fwd, _sl_bwd)
+
+
+@jax.custom_vjp
+def solve_upper(u, b):
+    """X = U^{-1} B for upper-triangular U."""
+    return _solve_upper_forward(u, b)
+
+
+def _su_fwd(u, b):
+    x = _solve_upper_forward(u, b)
+    return x, (u, x)
+
+
+def _su_bwd(res, x_bar):
+    u, x = res
+    b_bar = _solve_lower_forward(u.T, x_bar)
+    if x.ndim == 1:
+        u_bar = -jnp.triu(jnp.outer(b_bar, x))
+    else:
+        u_bar = -jnp.triu(b_bar @ x.T)
+    return (u_bar, b_bar)
+
+
+solve_upper.defvjp(_su_fwd, _su_bwd)

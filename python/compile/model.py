@@ -1,0 +1,114 @@
+"""L2: the jax compute graph for exact-GP tiles.
+
+Two flavors of every MVM entry point:
+
+* ``pallas`` — the L1 fused kernel from ``kernels/matern.py`` (interpret
+  mode; the TPU-shaped BlockSpec schedule, DESIGN.md SS8).
+* ``jnp``    — the same math as straight-line jnp, fully fused by XLA-CPU.
+  On the CPU testbed this flavor is the fast path; both are AOT-lowered and
+  the Rust coordinator selects per config (`runtime.flavor`).
+
+Both flavors fold hyperparameters into the inputs (see matern.py docstring)
+so the HLO entry signature is uniform:
+
+    kernel_mvm        (xr (R,D), xc (C,D), v (C,T), theta) -> (KV,)
+    kernel_mvm_grads  (...)                      -> (KV, G (NL,R,T))
+    cross_kernel      (xr, xc, theta)            -> (K (R,C),)
+
+Noise is never inside a tile: the coordinator adds sigma^2 * v on diagonal
+blocks. Row/column padding needs no masks: padded V rows are zero, so their
+covariance contributions vanish; padded output rows are ignored by the
+coordinator.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matern as pk
+from .kernels.matern import SQRT3, _scale_inputs
+
+
+def _r2(xr_s, xc_s):
+    xr2 = jnp.sum(xr_s * xr_s, axis=1, keepdims=True)
+    xc2 = jnp.sum(xc_s * xc_s, axis=1, keepdims=True).T
+    return jnp.maximum(xr2 + xc2 - 2.0 * xr_s @ xc_s.T, 0.0)
+
+
+def _rho(kind, r2):
+    if kind == "matern32":
+        # Double-where guard: sqrt is non-differentiable at 0, and the
+        # K_ZZ diagonal hits r2 = 0 exactly — without the guard, jax.grad
+        # of the SGPR/SVGP objectives w.r.t. Z is NaN.
+        safe = jnp.where(r2 > 0.0, r2, 1.0)
+        u = jnp.where(r2 > 0.0, jnp.sqrt(3.0 * safe), 0.0)
+        return (1.0 + u) * jnp.exp(-u)
+    return jnp.exp(-0.5 * r2)
+
+
+def build_jnp_mvm(kind, mode, r, c, t, d):
+    def fn(xr, xc, v, theta):
+        xr_s, xc_s, v_s = _scale_inputs(mode, d, xr, xc, v, theta)
+        return (_rho(kind, _r2(xr_s, xc_s)) @ v_s,)
+
+    return fn
+
+
+def build_jnp_mvm_grads(kind, mode, r, c, t, d):
+    def fn(xr, xc, v, theta):
+        xr_s, xc_s, v_s = _scale_inputs(mode, d, xr, xc, v, theta)
+        r2 = _r2(xr_s, xc_s)
+        if kind == "matern32":
+            u = jnp.sqrt(3.0 * r2)
+            e = jnp.exp(-u)
+            rho = (1.0 + u) * e
+            w = 3.0 * e
+            w_shared = e * (3.0 * r2)
+        else:
+            rho = jnp.exp(-0.5 * r2)
+            e = rho
+            w = rho
+            w_shared = rho * r2
+        kv = rho @ v_s
+        if mode == "shared":
+            return (kv, (w_shared @ v_s)[None, ...])
+        gs = []
+        for i in range(d):
+            ri = xr_s[:, i : i + 1]
+            ci = xc_s[:, i : i + 1].T
+            d2 = ri * ri + ci * ci - 2.0 * (ri * ci)
+            gs.append((w * d2) @ v_s)
+        return (kv, jnp.stack(gs, axis=0))
+
+    return fn
+
+
+def build_jnp_cross(kind, mode, r, c, d):
+    def fn(xr, xc, theta):
+        if mode == "shared":
+            inv = jnp.exp(-theta[0])
+            os = jnp.exp(theta[1])
+            xr_s, xc_s = xr * inv, xc * inv
+        else:
+            inv = jnp.exp(-theta[:d])[None, :]
+            os = jnp.exp(theta[d])
+            xr_s, xc_s = xr * inv, xc * inv
+        return (os * _rho(kind, _r2(xr_s, xc_s)),)
+
+    return fn
+
+
+def build_mvm(flavor, kind, mode, r, c, t, d):
+    if flavor == "pallas":
+        return pk.build_pallas_mvm(kind, mode, r, c, t, d)
+    return build_jnp_mvm(kind, mode, r, c, t, d)
+
+
+def build_mvm_grads(flavor, kind, mode, r, c, t, d):
+    if flavor == "pallas":
+        return pk.build_pallas_mvm_grads(kind, mode, r, c, t, d)
+    return build_jnp_mvm_grads(kind, mode, r, c, t, d)
+
+
+def build_cross(flavor, kind, mode, r, c, d):
+    if flavor == "pallas":
+        return pk.build_pallas_cross(kind, mode, r, c, d)
+    return build_jnp_cross(kind, mode, r, c, d)

@@ -1,0 +1,92 @@
+"""L2: SGPR (Titsias 2009) collapsed variational bound + gradients.
+
+The paper's first baseline: sparse GP regression with m = 512 inducing
+points learned by maximizing the collapsed bound with Adam. Full-batch
+objective; fixed-shape artifacts are compiled for a menu of padded N
+(rows beyond the true n carry mask = 0 and contribute nothing).
+
+Bound (Gaussian likelihood, Q = Kxz Kzz^{-1} Kzx):
+
+    log p(y) >= -1/2 [ N log 2pi + log|Q + s2 I| + y^T (Q + s2 I)^{-1} y ]
+                - 1/(2 s2) tr(K - Q)
+
+computed via the standard Woodbury factorization with
+A = Lz^{-1} Kzx / s,  B = I + A A^T.
+"""
+
+import jax
+import jax.numpy as jnp
+from .linalg_jax import cholesky as _chol, solve_lower as _slo, solve_upper as _sup
+
+from .model import _r2, _rho
+from .svgp import JITTER, LOG2PI, _kernel_parts, _kmat
+
+
+def neg_bound(kind, mode, z, theta, x, y, mask):
+    """Negative collapsed bound, masked rows excluded."""
+    m, d = z.shape
+    inv, os, s2 = _kernel_parts(kind, mode, d, theta)
+
+    z_s = z * inv
+    x_s = x * inv
+    kzz = _kmat(kind, z_s, z_s, os) + JITTER * jnp.eye(m)
+    kzx = _kmat(kind, z_s, x_s, os) * mask[None, :]  # (M, N), masked cols
+    y_m = y * mask
+    n_eff = jnp.sum(mask)
+
+    lz = _chol(kzz)
+    a = _slo(lz, kzx) / jnp.sqrt(s2)  # (M, N)
+    b = jnp.eye(m) + a @ a.T
+    lb = _chol(b)
+    ay = a @ y_m
+    c = _slo(lb, ay) / jnp.sqrt(s2)
+
+    logdet = n_eff * jnp.log(s2) + 2.0 * jnp.sum(jnp.log(jnp.diag(lb)))
+    quad = jnp.dot(y_m, y_m) / s2 - jnp.dot(c, c)
+    # tr(K - Q) over unmasked rows; K_ii = os (stationary kernel).
+    trace = (os * n_eff - s2 * jnp.sum(a * a)) / s2
+
+    return 0.5 * (n_eff * LOG2PI + logdet + quad) + 0.5 * trace
+
+
+def build_sgpr_step(kind, mode, m, n, d):
+    """fn(z, theta, x (n,d), y (n,), mask (n,)) -> (loss, g_z, g_theta)."""
+    grad = jax.grad(
+        lambda z, theta, x, y, mask: neg_bound(kind, mode, z, theta, x, y, mask),
+        argnums=(0, 1),
+    )
+
+    def fn(z, theta, x, y, mask):
+        loss = neg_bound(kind, mode, z, theta, x, y, mask)
+        gz, gth = grad(z, theta, x, y, mask)
+        return (loss, gz, gth)
+
+    return fn
+
+
+def sgpr_predict_ref(kind, mode, z, theta, x, y, xstar):
+    """Oracle for the Rust-native SGPR predictor (tests only).
+
+    mu* = Ksz Lz^{-T} Lb^{-T} c      var* = k** - ||Lz^{-1} kz*||^2
+                                            + ||Lb^{-1} Lz^{-1} kz*||^2
+    """
+    m, d = z.shape
+    inv, os, s2 = _kernel_parts(kind, mode, d, theta)
+    z_s, x_s, xs_s = z * inv, x * inv, xstar * inv
+    kzz = _kmat(kind, z_s, z_s, os) + JITTER * jnp.eye(m)
+    kzx = _kmat(kind, z_s, x_s, os)
+    kzs = _kmat(kind, z_s, xs_s, os)
+    lz = _chol(kzz)
+    a = _slo(lz, kzx) / jnp.sqrt(s2)
+    b = jnp.eye(m) + a @ a.T
+    lb = _chol(b)
+    c = _slo(lb, a @ y) / jnp.sqrt(s2)
+
+    proj = _slo(lz, kzs)  # (M, S)
+    proj_b = _slo(lb, proj)
+    mean = proj_b.T @ c
+    var = jnp.maximum(
+        os - jnp.sum(proj * proj, axis=0) + jnp.sum(proj_b * proj_b, axis=0),
+        0.0,
+    )
+    return mean, var

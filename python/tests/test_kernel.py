@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernel tiles vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps shapes, kernels, modes, and hyperparameter ranges; every property
+asserts allclose against the naive pairwise oracle.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import matern as pk
+from compile.kernels import ref
+
+KINDS = ["matern32", "rbf"]
+MODES = ["shared", "ard"]
+
+
+def make_inputs(seed, r, c, t, d, mode, scale=1.0):
+    rng = np.random.default_rng(seed)
+    xr = (rng.normal(size=(r, d)) * scale).astype(np.float32)
+    xc = (rng.normal(size=(c, d)) * scale).astype(np.float32)
+    v = rng.normal(size=(c, t)).astype(np.float32)
+    p = 2 if mode == "shared" else d + 1
+    theta = (rng.normal(size=(p,)) * 0.5).astype(np.float32)
+    return xr, xc, v, theta
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("flavor", ["jnp", "pallas"])
+def test_mvm_matches_oracle(kind, mode, flavor):
+    r, c, t, d = 16, 32, 4, 8
+    xr, xc, v, theta = make_inputs(0, r, c, t, d, mode)
+    got = model.build_mvm(flavor, kind, mode, r, c, t, d)(xr, xc, v, theta)[0]
+    want = ref.kernel_mvm_ref(kind, mode, xr, xc, v, theta)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    r=st.sampled_from([1, 4, 16]),
+    cb_blocks=st.integers(1, 4),
+    t=st.sampled_from([1, 2, 16]),
+    d=st.sampled_from([1, 3, 8, 32]),
+    kind=st.sampled_from(KINDS),
+    mode=st.sampled_from(MODES),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_mvm_hypothesis_sweep(seed, r, cb_blocks, t, d, kind, mode, scale):
+    """Pallas flavor across a broad (shape, hyper, input-scale) space."""
+    cb = 8
+    c = cb * cb_blocks
+    xr, xc, v, theta = make_inputs(seed, r, c, t, d, mode, scale)
+    fn = pk.build_pallas_mvm(kind, mode, r, c, t, d, cb=cb)
+    got = fn(xr, xc, v, theta)[0]
+    want = ref.kernel_mvm_ref(kind, mode, xr, xc, v, theta)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("flavor", ["jnp", "pallas"])
+def test_cross_matches_oracle(kind, mode, flavor):
+    r, c, d = 16, 32, 8
+    xr, xc, _, theta = make_inputs(3, r, c, 1, d, mode)
+    got = model.build_cross(flavor, kind, mode, r, c, d)(xr, xc, theta)[0]
+    want = ref.KERNELS[(kind, mode)](xr, xc, theta)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_padding_semantics():
+    """Padded V rows are zero => padded columns contribute nothing.
+
+    This is the contract the Rust coordinator relies on instead of masks
+    (DESIGN.md SS2 fixed-shape strategy).
+    """
+    r, c, t, d = 8, 32, 2, 4
+    xr, xc, v, theta = make_inputs(7, r, c, t, d, "shared")
+    n_real = 20
+    v_pad = v.copy()
+    v_pad[n_real:] = 0.0
+    xc_garbage = xc.copy()
+    xc_garbage[n_real:] = 123.0  # arbitrary finite garbage in padded rows
+    fn = model.build_mvm("jnp", "matern32", "shared", r, c, t, d)
+    got = fn(xr, xc_garbage, v_pad, theta)[0]
+    want = ref.kernel_mvm_ref(
+        "matern32", "shared", xr, xc[:n_real], v[:n_real], theta
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_distance_is_outputscale():
+    """k(x, x) = outputscale exactly, and no NaNs from r=0 (sqrt corner)."""
+    d = 5
+    x = np.ones((4, d), np.float32)
+    theta = np.array([0.3, 0.7], np.float32)
+    for kind in KINDS:
+        k = np.asarray(ref.KERNELS[(kind, "shared")](x, x, theta))
+        np.testing.assert_allclose(k, np.exp(0.7), rtol=1e-6)
+        fn = model.build_mvm("pallas", kind, "shared", 4, 8, 1, d)
+        xc = np.ones((8, d), np.float32)
+        v = np.ones((8, 1), np.float32)
+        out = np.asarray(fn(x, xc, v, theta)[0])
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out, 8 * np.exp(0.7), rtol=1e-5)
+
+
+def test_shared_equals_ard_with_tied_lengthscales():
+    r, c, t, d = 8, 16, 2, 6
+    xr, xc, v, _ = make_inputs(11, r, c, t, d, "shared")
+    log_l, log_os = 0.4, -0.2
+    th_s = np.array([log_l, log_os], np.float32)
+    th_a = np.array([log_l] * d + [log_os], np.float32)
+    for kind in KINDS:
+        a = ref.kernel_mvm_ref(kind, "shared", xr, xc, v, th_s)
+        b = ref.kernel_mvm_ref(kind, "ard", xr, xc, v, th_a)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_matrix_is_psd():
+    """K(X, X) + small jitter must be positive semi-definite."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(40, 6)).astype(np.float32)
+    theta = np.array([0.0, 0.0], np.float32)
+    for kind in KINDS:
+        k = np.asarray(ref.KERNELS[(kind, "shared")](x, x, theta), np.float64)
+        w = np.linalg.eigvalsh(k + 1e-5 * np.eye(40))
+        assert w.min() > 0, (kind, w.min())

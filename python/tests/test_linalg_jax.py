@@ -1,0 +1,101 @@
+"""Custom-call-free linalg (compile/linalg_jax.py) vs jax references.
+
+These ops are what let the SGPR/SVGP artifacts run under xla_extension
+0.5.1 (no LAPACK custom-calls); they must match jnp.linalg / jax.scipy in
+both values and gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.scipy.linalg import solve_triangular
+
+from compile import linalg_jax as lj
+
+
+def spd(m, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(m, m + 2)).astype(dtype)
+    return g @ g.T + 0.5 * np.eye(m, dtype=dtype)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 24), seed=st.integers(0, 10_000))
+def test_cholesky_matches_reference(m, seed):
+    a = spd(m, seed)
+    got = np.asarray(lj.cholesky(a))
+    want = np.asarray(jnp.linalg.cholesky(a))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 20), k=st.integers(1, 5), seed=st.integers(0, 10_000))
+def test_triangular_solves_match_reference(m, k, seed):
+    rng = np.random.default_rng(seed)
+    l = np.tril(rng.normal(size=(m, m))).astype(np.float32) + 2.0 * np.eye(m, dtype=np.float32)
+    b = rng.normal(size=(m, k)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(lj.solve_lower(l, b)),
+        np.asarray(solve_triangular(l, b, lower=True)),
+        rtol=2e-4, atol=2e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(lj.solve_upper(l.T.copy(), b)),
+        np.asarray(solve_triangular(l.T.copy(), b, lower=False)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_cholesky_gradient_matches_reference():
+    m = 10
+    a = spd(m, 3)
+
+    def f(chol):
+        def inner(a):
+            l = chol(a)
+            return jnp.sum(jnp.sin(l) * (1.0 + jnp.arange(m)[None, :]))
+        return inner
+
+    ga = np.asarray(jax.grad(f(jnp.linalg.cholesky))(a))
+    gb = np.asarray(jax.grad(f(lj.cholesky))(a))
+    sym = lambda g: (g + g.T) / 2
+    np.testing.assert_allclose(sym(ga), sym(gb), rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("argn", [0, 1])
+def test_solve_gradients_match_reference(argn):
+    m, k = 9, 3
+    rng = np.random.default_rng(7)
+    l = np.tril(rng.normal(size=(m, m))).astype(np.float32) + 3.0 * np.eye(m, dtype=np.float32)
+    b = rng.normal(size=(m, k)).astype(np.float32)
+
+    def g_ref(l, b):
+        return jnp.sum(jnp.cos(solve_triangular(l, b, lower=True)))
+
+    def g_got(l, b):
+        return jnp.sum(jnp.cos(lj.solve_lower(l, b)))
+
+    gr = np.tril(np.asarray(jax.grad(g_ref, argn)(l, b)))
+    gg = np.tril(np.asarray(jax.grad(g_got, argn)(l, b)))
+    np.testing.assert_allclose(gr, gg, rtol=1e-3, atol=1e-5)
+
+
+def test_vector_rhs_supported():
+    m = 8
+    a = spd(m, 11)
+    l = np.asarray(lj.cholesky(a))
+    b = np.random.default_rng(1).normal(size=(m,)).astype(np.float32)
+    x = np.asarray(lj.solve_lower(l, b))
+    assert x.shape == (m,)
+    np.testing.assert_allclose(l @ x, b, rtol=1e-4, atol=1e-4)
+
+
+def test_logdet_identity():
+    m = 12
+    a = spd(m, 13)
+    l = lj.cholesky(a)
+    logdet = 2.0 * float(jnp.sum(jnp.log(jnp.diag(l))))
+    want = float(np.linalg.slogdet(np.asarray(a, np.float64))[1])
+    assert abs(logdet - want) < 1e-3 * abs(want)

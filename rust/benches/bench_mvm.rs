@@ -1,0 +1,127 @@
+//! Micro-benchmark: partitioned kernel MVM throughput across backends and
+//! partition counts — the hot path underneath every experiment.
+//!
+//! Reports wall time per full K(X,X) @ V (V is a t=16 block), effective
+//! GFLOP/s (counting the fused dist+cov+matvec tile math), and the
+//! partitioning overhead (p=1 vs p=many at fixed n).
+
+use std::sync::Arc;
+
+use exactgp::bench_harness::{time_fn, BenchEnv};
+use exactgp::config::{Backend, Flavor};
+use exactgp::coordinator::print_table;
+use exactgp::exec::{backend_factory, pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
+use exactgp::kernels::Hypers;
+use exactgp::linalg::Mat;
+use exactgp::metrics::Accounting;
+use exactgp::partition::Plan;
+use exactgp::util::rng::Rng;
+
+fn tile_flops(spec: &TileSpec) -> f64 {
+    // Per tile: r2 expansion (2 matmul-ish: r*c*(2d+4)) + matern (~8 ops)
+    // + matvec (r*c*2t).
+    (spec.r * spec.c) as f64 * (2.0 * spec.d as f64 + 12.0 + 2.0 * spec.t as f64)
+}
+
+fn main() {
+    let env = BenchEnv::from_env(&[]);
+    let spec = TileSpec::PROD;
+    let d = 8;
+    let mut rng = Rng::new(3, 0);
+    let mut rows = Vec::new();
+
+    let ns: Vec<usize> = match std::env::var("EXACTGP_BENCH_N") {
+        Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
+        Err(_) => vec![2048, 8192],
+    };
+
+    for &n in &ns {
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let data = Arc::new(PaddedData::new(&x, d, &spec));
+        let v = Mat::from_vec(n, spec.t, rng.normal_vec(n * spec.t));
+        let tiles_per_mvm =
+            (data.n_pad / spec.r) as f64 * (data.n_pad / spec.c).max(1) as f64;
+        let flops = tiles_per_mvm * tile_flops(&spec);
+
+        for (label, backend, flavor) in [
+            ("native", Backend::Native, Flavor::Jnp),
+            ("pjrt/jnp", Backend::Pjrt, Flavor::Jnp),
+            ("pjrt/pallas", Backend::Pjrt, Flavor::Pallas),
+        ] {
+            let mut cfg = env.cfg.clone();
+            cfg.backend = backend;
+            cfg.flavor = flavor;
+            let Ok(factory) = backend_factory(&cfg, cfg.kernel, false, spec.d, spec) else {
+                eprintln!("{label}: backend unavailable, skipping");
+                continue;
+            };
+            let Ok(pool) = DevicePool::new(cfg.workers, factory) else { continue };
+            let op = PartitionedKernelOp::square(
+                data.clone(),
+                Arc::new(pool),
+                Plan::with_rows(data.n_pad, data.n_pad, spec.r),
+                spec,
+                Hypers::default_init(None),
+                Arc::new(Accounting::default()),
+            );
+            let stats = time_fn(1, 3, || {
+                let _ = op.apply_raw(&v);
+            });
+            rows.push(vec![
+                format!("n={n}"),
+                label.into(),
+                stats.fmt_seconds(),
+                format!("{:.2}", flops / stats.min / 1e9),
+            ]);
+        }
+    }
+
+    print_table(
+        "MVM throughput (full K(X,X) @ V, t=16 RHS block)",
+        &["size", "backend", "time/MVM", "GFLOP/s (best)"],
+        &rows,
+    );
+
+    // Partition-count overhead at fixed n (the O(n)-memory knob).
+    let n = *ns.last().unwrap_or(&8192);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let data = Arc::new(PaddedData::new(&x, d, &spec));
+    let v = Mat::from_vec(n, spec.t, rng.normal_vec(n * spec.t));
+    let mut rows2 = Vec::new();
+    let mut base = f64::NAN;
+    for rows_pp in [data.n_pad, data.n_pad / 2, spec.r * 2, spec.r] {
+        let plan = Plan::with_rows(data.n_pad, data.n_pad, rows_pp.max(spec.r));
+        let p = plan.p();
+        let mut cfg = env.cfg.clone();
+        cfg.backend = Backend::Pjrt;
+        let Ok(factory) = backend_factory(&cfg, cfg.kernel, false, spec.d, spec) else {
+            break;
+        };
+        let Ok(pool) = DevicePool::new(cfg.workers, factory) else { break };
+        let op = PartitionedKernelOp::square(
+            data.clone(),
+            Arc::new(pool),
+            plan.clone(),
+            spec,
+            Hypers::default_init(None),
+            Arc::new(Accounting::default()),
+        );
+        let stats = time_fn(1, 3, || {
+            let _ = op.apply_raw(&v);
+        });
+        if p == 1 {
+            base = stats.mean;
+        }
+        rows2.push(vec![
+            format!("p={p}"),
+            format!("{}", plan.transient_bytes(spec.t) >> 20),
+            stats.fmt_seconds(),
+            format!("{:+.1}%", (stats.mean / base - 1.0) * 100.0),
+        ]);
+    }
+    print_table(
+        &format!("Partitioning overhead at n={n} (PJRT backend; paper: partitioning trades memory for sequential compute)"),
+        &["partitions", "transient MiB", "time/MVM", "vs p=1"],
+        &rows2,
+    );
+}

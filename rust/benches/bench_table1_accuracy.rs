@@ -1,0 +1,73 @@
+//! Table 1: RMSE and NLL of exact GPs (BBMM) vs SGPR (m=512) vs SVGP
+//! (m=1024) on the UCI-signature suite, shared lengthscale.
+//!
+//! Defaults: 4 representative datasets at smoke scale, 1 trial — set
+//! EXACTGP_BENCH_DATASETS=all, EXACTGP_BENCH_SCALE=default|large|paper and
+//! EXACTGP_BENCH_TRIALS=3 for the paper protocol.
+
+use exactgp::bench_harness::BenchEnv;
+use exactgp::coordinator::{self, Model};
+
+fn main() {
+    let env = BenchEnv::from_env(&["poletele", "bike", "kin40k", "3droad"]);
+    let models = [Model::ExactBbmm, Model::Sgpr, Model::Svgp];
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+
+    for name in &env.datasets {
+        let mut rmses = vec![vec![]; models.len()];
+        let mut nlls = vec![vec![]; models.len()];
+        let mut n_train = 0;
+        let mut d = 0;
+        for trial in 0..env.trials {
+            let ds = match coordinator::load_dataset(&env.cfg, name, trial) {
+                Ok(ds) => ds,
+                Err(e) => {
+                    eprintln!("skipping {name}: {e}");
+                    continue;
+                }
+            };
+            n_train = ds.n_train();
+            d = ds.d;
+            for (mi, model) in models.iter().enumerate() {
+                match coordinator::run_model(&env.cfg, *model, &ds, trial) {
+                    Ok(r) => {
+                        rmses[mi].push(r.rmse);
+                        nlls[mi].push(r.nll);
+                        reports.push(r);
+                    }
+                    Err(e) => eprintln!("  {} on {name}: SKIPPED ({e})", model.name()),
+                }
+            }
+        }
+        let mut cells = vec![format!("{name} (n={n_train}, d={d})")];
+        for mi in 0..models.len() {
+            cells.push(if rmses[mi].is_empty() {
+                "-".into()
+            } else {
+                exactgp::bench_harness::agg(&rmses[mi])
+            });
+        }
+        for mi in 0..models.len() {
+            cells.push(if nlls[mi].is_empty() {
+                "-".into()
+            } else {
+                exactgp::bench_harness::agg(&nlls[mi])
+            });
+        }
+        rows.push(cells);
+    }
+
+    coordinator::print_table(
+        "Table 1 — RMSE / NLL, shared lengthscale (paper: exact GP best on nearly all)",
+        &[
+            "dataset",
+            "RMSE exact", "RMSE sgpr", "RMSE svgp",
+            "NLL exact", "NLL sgpr", "NLL svgp",
+        ],
+        &rows,
+    );
+    if let Ok(p) = coordinator::write_results(&env.cfg, "table1_accuracy", &reports) {
+        eprintln!("wrote {p:?}");
+    }
+}

@@ -1,0 +1,54 @@
+//! Table 2: training time, #workers ("GPUs"), kernel partitions p,
+//! precomputation time, and 1,000-point prediction latency.
+//!
+//! Paper shape to reproduce: exact-GP prediction from warm caches is
+//! sub-second and comparable to the approximate methods even where
+//! training was much slower.
+
+use exactgp::bench_harness::BenchEnv;
+use exactgp::coordinator::{self, Model};
+
+fn main() {
+    let env = BenchEnv::from_env(&["poletele", "bike", "kin40k", "3droad"]);
+    let models = [Model::ExactBbmm, Model::Sgpr, Model::Svgp];
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+
+    for name in &env.datasets {
+        let Ok(ds) = coordinator::load_dataset(&env.cfg, name, 0) else {
+            continue;
+        };
+        for model in &models {
+            match coordinator::run_model(&env.cfg, *model, &ds, 0) {
+                Ok(r) => {
+                    let p = r
+                        .extra
+                        .iter()
+                        .find(|(k, _)| k == "partitions")
+                        .map(|(_, v)| format!("{v:.0}"))
+                        .unwrap_or_else(|| "-".into());
+                    rows.push(vec![
+                        format!("{name} (n={})", ds.n_train()),
+                        model.name().into(),
+                        format!("{:.1}s", r.train_seconds),
+                        format!("{}", env.cfg.workers),
+                        p,
+                        format!("{:.2}s", r.precompute_seconds),
+                        format!("{:.0}ms", r.predict_seconds * 1e3),
+                    ]);
+                    reports.push(r);
+                }
+                Err(e) => eprintln!("  {} on {name}: SKIPPED ({e})", model.name()),
+            }
+        }
+    }
+
+    coordinator::print_table(
+        "Table 2 — timing (train | precompute | 1k predictions from warm caches)",
+        &["dataset", "model", "train", "#workers", "p", "precompute", "predict(1k)"],
+        &rows,
+    );
+    if let Ok(p) = coordinator::write_results(&env.cfg, "table2_timing", &reports) {
+        eprintln!("wrote {p:?}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Table 3/4 (appendix): independent lengthscales per dimension (ARD).
+//!
+//! Paper shape: exact GPs remain generally more accurate than SGPR/SVGP
+//! with ARD kernels; training times in the same regime as Table 2.
+
+use exactgp::bench_harness::BenchEnv;
+use exactgp::coordinator::{self, Model};
+
+fn main() {
+    let mut env = BenchEnv::from_env(&["bike", "kin40k", "protein"]);
+    env.cfg.ard = true;
+    // The compiled ARD baseline menu (aot.py): SGPR m=128, SVGP m=256.
+    env.cfg.sgpr_m = 128;
+    env.cfg.svgp_m = 256;
+
+    let models = [Model::ExactBbmm, Model::Sgpr, Model::Svgp];
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for name in &env.datasets {
+        let Ok(ds) = coordinator::load_dataset(&env.cfg, name, 0) else { continue };
+        let mut cells = vec![format!("{name} (n={}, d={})", ds.n_train(), ds.d)];
+        let mut times = vec![];
+        for model in &models {
+            match coordinator::run_model(&env.cfg, *model, &ds, 0) {
+                Ok(r) => {
+                    cells.push(format!("{:.3}", r.rmse));
+                    cells.push(format!("{:.3}", r.nll));
+                    times.push(format!("{:.1}s", r.train_seconds));
+                    reports.push(r);
+                }
+                Err(e) => {
+                    eprintln!("  {} on {name}: SKIPPED ({e})", model.name());
+                    cells.push("-".into());
+                    cells.push("-".into());
+                    times.push("-".into());
+                }
+            }
+        }
+        cells.extend(times);
+        rows.push(cells);
+    }
+
+    coordinator::print_table(
+        "Table 3/4 — ARD (independent lengthscales): RMSE | NLL | train time",
+        &[
+            "dataset",
+            "exact RMSE", "exact NLL",
+            "sgpr RMSE", "sgpr NLL",
+            "svgp RMSE", "svgp NLL",
+            "t(exact)", "t(sgpr)", "t(svgp)",
+        ],
+        &rows,
+    );
+    if let Ok(p) = coordinator::write_results(&env.cfg, "table3_ard", &reports) {
+        eprintln!("wrote {p:?}");
+    }
+}

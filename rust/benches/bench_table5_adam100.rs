@@ -1,0 +1,65 @@
+//! Table 5 (appendix): exact GPs trained with plain Adam (no subset
+//! pretraining), the "fair comparison against SGPR/SVGP trained with
+//! Adam" configuration, plus the Figure 5 observation that large datasets
+//! need fewer steps than 100.
+
+use exactgp::bench_harness::BenchEnv;
+use exactgp::coordinator::{self, ExactRecipe, Model};
+
+fn main() {
+    let mut env = BenchEnv::from_env(&["poletele", "bike", "kin40k"]);
+    env.cfg.full_adam_steps = std::env::var("EXACTGP_BENCH_FULL_ADAM")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25);
+
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for name in &env.datasets {
+        let Ok(ds) = coordinator::load_dataset(&env.cfg, name, 0) else { continue };
+        // Exact GP with full Adam.
+        match coordinator::run_model_with_recipe(
+            &env.cfg,
+            Model::ExactBbmm,
+            &ds,
+            0,
+            ExactRecipe::FullAdam,
+        ) {
+            Ok(mut r) => {
+                rows.push(vec![
+                    format!("{name} (n={})", ds.n_train()),
+                    format!("exact-gp ({} Adam)", env.cfg.full_adam_steps),
+                    format!("{:.3}", r.rmse),
+                    format!("{:.1}s", r.train_seconds),
+                ]);
+                r.model = "exact-gp-fulladam".into();
+                reports.push(r);
+            }
+            Err(e) => eprintln!("  exact on {name}: SKIPPED ({e})"),
+        }
+        for model in [Model::Sgpr, Model::Svgp] {
+            match coordinator::run_model(&env.cfg, model, &ds, 0) {
+                Ok(r) => {
+                    rows.push(vec![
+                        format!("{name} (n={})", ds.n_train()),
+                        model.name().into(),
+                        format!("{:.3}", r.rmse),
+                        format!("{:.1}s", r.train_seconds),
+                    ]);
+                    reports.push(r);
+                }
+                Err(e) => eprintln!("  {} on {name}: SKIPPED ({e})", model.name()),
+            }
+        }
+    }
+
+    coordinator::print_table(
+        "Table 5 — exact GP with plain Adam vs approximations (paper: exact \
+         still wins; RMSE random-guess = 1)",
+        &["dataset", "model", "RMSE", "train"],
+        &rows,
+    );
+    if let Ok(p) = coordinator::write_results(&env.cfg, "table5_adam100", &reports) {
+        eprintln!("wrote {p:?}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Benchmark harness (criterion is not in the offline dependency closure).
+//!
+//! Provides warmup + repeated timing with mean/std reporting, and the
+//! environment knobs shared by every `rust/benches/bench_*.rs` binary:
+//!
+//! * `EXACTGP_BENCH_SCALE`   — smoke | default | large | paper | <cap>
+//! * `EXACTGP_BENCH_DATASETS`— comma-separated dataset subset
+//! * `EXACTGP_BENCH_TRIALS`  — trials per cell (paper: 3)
+//! * `EXACTGP_BENCH_WORKERS` — worker ("GPU") count
+//!
+//! Each bench prints a paper-style table and writes `results/<exp>.json`.
+
+use crate::config::Config;
+use crate::data::synthetic::Scale;
+
+/// Timing statistics from `time_fn`.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingStats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub reps: usize,
+}
+
+impl TimingStats {
+    pub fn fmt_seconds(&self) -> String {
+        if self.mean < 1e-3 {
+            format!("{:.1}us +/- {:.1}", self.mean * 1e6, self.std * 1e6)
+        } else if self.mean < 1.0 {
+            format!("{:.1}ms +/- {:.1}", self.mean * 1e3, self.std * 1e3)
+        } else {
+            format!("{:.2}s +/- {:.2}", self.mean, self.std)
+        }
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `reps` measured repetitions.
+pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean, std) = crate::metrics::mean_std(&times);
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    TimingStats { mean, std, min, reps }
+}
+
+/// Bench configuration from the environment.
+pub struct BenchEnv {
+    pub cfg: Config,
+    pub datasets: Vec<String>,
+    pub trials: u64,
+}
+
+impl BenchEnv {
+    /// `default_datasets`: the subset a bench runs when none is specified
+    /// (keep `cargo bench` wall-clock sane on one core; set
+    /// EXACTGP_BENCH_DATASETS=all for the full 12-dataset suite).
+    pub fn from_env(default_datasets: &[&str]) -> BenchEnv {
+        let mut cfg = Config::default();
+        if let Ok(s) = std::env::var("EXACTGP_BENCH_SCALE") {
+            if let Some(scale) = Scale::parse(&s) {
+                cfg.scale = scale;
+            }
+        } else {
+            cfg.scale = Scale::SMOKE; // benches default to smoke scale
+        }
+        if let Ok(w) = std::env::var("EXACTGP_BENCH_WORKERS") {
+            if let Ok(w) = w.parse() {
+                cfg.workers = w;
+            }
+        }
+        let datasets = match std::env::var("EXACTGP_BENCH_DATASETS") {
+            Ok(s) if s == "all" => crate::data::synthetic::SUITE
+                .iter()
+                .map(|d| d.name.to_string())
+                .collect(),
+            Ok(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            Err(_) => default_datasets.iter().map(|s| s.to_string()).collect(),
+        };
+        let trials = std::env::var("EXACTGP_BENCH_TRIALS")
+            .ok()
+            .and_then(|t| t.parse().ok())
+            .unwrap_or(1);
+        BenchEnv { cfg, datasets, trials }
+    }
+}
+
+/// mean +/- std formatting for table cells.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.3} +/- {std:.3}")
+}
+
+/// Aggregate (mean, std) over trials of a per-trial metric.
+pub fn agg(values: &[f64]) -> String {
+    let (m, s) = crate::metrics::mean_std(values);
+    pm(m, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_reps() {
+        let mut calls = 0;
+        let stats = time_fn(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(stats.reps, 5);
+        assert!(stats.mean >= 0.0);
+        assert!(stats.min <= stats.mean + 1e-12);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        let s = TimingStats { mean: 0.5e-4, std: 0.0, min: 0.0, reps: 1 };
+        assert!(s.fmt_seconds().contains("us"));
+        let s = TimingStats { mean: 0.5, std: 0.1, min: 0.0, reps: 1 };
+        assert!(s.fmt_seconds().contains("ms"));
+        let s = TimingStats { mean: 2.0, std: 0.1, min: 0.0, reps: 1 };
+        assert!(s.fmt_seconds().contains("s"));
+    }
+}

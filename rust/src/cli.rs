@@ -1,0 +1,135 @@
+//! Command-line argument parsing (clap is not in the offline dependency
+//! closure). Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! flags, repeated `--set key=value` config overrides, and positional args.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(flag) = item.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.push((k.to_string(), Some(v.to_string())));
+                } else {
+                    // Peek: next token is a value unless it is another flag.
+                    let takes_value =
+                        iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        args.flags.push((flag.to_string(), iter.next()));
+                    } else {
+                        args.flags.push((flag.to_string(), None));
+                    }
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(item);
+            } else {
+                args.positional.push(item);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag_present(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{name} expects a number, got {v:?}"),
+            },
+        }
+    }
+
+    /// All `--set key=value` overrides, in order.
+    pub fn overrides(&self) -> Result<Vec<(String, String)>> {
+        let mut out = Vec::new();
+        for (k, v) in &self.flags {
+            if k == "set" {
+                let Some(v) = v else { bail!("--set expects key=value") };
+                let Some((key, value)) = v.split_once('=') else {
+                    bail!("--set expects key=value, got {v:?}")
+                };
+                out.push((key.trim().to_string(), value.trim().to_string()));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = args("train --dataset bike --workers 4 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("bike"));
+        assert_eq!(a.get_usize("workers").unwrap(), Some(4));
+        assert!(a.flag_present("verbose"));
+        assert!(!a.flag_present("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_overrides() {
+        let a = args("reproduce --set solver.probes=16 --set exec.workers=8 --scale=smoke");
+        assert_eq!(a.get("scale"), Some("smoke"));
+        let ov = a.overrides().unwrap();
+        assert_eq!(ov.len(), 2);
+        assert_eq!(ov[0], ("solver.probes".into(), "16".into()));
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = args("x --k 1 --k 2");
+        assert_eq!(a.get("k"), Some("2"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = args("x --n abc");
+        assert!(a.get_usize("n").is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! TOML-subset parser: `[section]` headers, `key = value`, `#` comments.
+//! Produces flat `("section.key", "raw value")` pairs; typing happens at
+//! the `Config::set` layer so error messages name the key.
+
+use anyhow::{bail, Result};
+
+pub fn parse(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let value = line[eq + 1..].trim();
+        if key.is_empty() || value.is_empty() {
+            bail!("line {}: empty key or value", lineno + 1);
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full, value.to_string()));
+    }
+    Ok(out)
+}
+
+/// Strip a trailing `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let text = r#"
+# top comment
+[solver]
+probes = 16      # inline comment
+train_tol = 1.0
+
+[run]
+results_dir = "results/x # not a comment"
+"#;
+        let kv = parse(text).unwrap();
+        assert_eq!(kv[0], ("solver.probes".into(), "16".into()));
+        assert_eq!(kv[1], ("solver.train_tol".into(), "1.0".into()));
+        assert_eq!(kv[2].0, "run.results_dir");
+        assert!(kv[2].1.contains("# not a comment"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("just a line").is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! CSV loader for real UCI files (when available).
+//!
+//! Format: numeric CSV, last column is the regression target; an optional
+//! header row is auto-detected (skipped if any field fails to parse).
+
+use std::io::BufRead;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::RawData;
+
+pub fn load_csv(path: &Path, name: &str) -> Result<RawData> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut d = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = t.split(',').map(str::trim).collect();
+        let parsed: Result<Vec<f64>, _> = fields.iter().map(|f| f.parse::<f64>()).collect();
+        let vals = match parsed {
+            Ok(v) => v,
+            Err(_) if lineno == 0 => continue, // header
+            Err(e) => bail!("{path:?}:{}: {e}", lineno + 1),
+        };
+        if vals.len() < 2 {
+            bail!("{path:?}:{}: need >= 2 columns", lineno + 1);
+        }
+        match d {
+            None => d = Some(vals.len() - 1),
+            Some(d0) if d0 != vals.len() - 1 => {
+                bail!("{path:?}:{}: ragged row ({} vs {})", lineno + 1, vals.len() - 1, d0)
+            }
+            _ => {}
+        }
+        y.push(*vals.last().unwrap());
+        x.extend_from_slice(&vals[..vals.len() - 1]);
+    }
+    let d = d.context("empty csv")?;
+    Ok(RawData { name: name.to_string(), d, x, y })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn loads_with_and_without_header() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("exactgp_test_csv.csv");
+        let mut f = std::fs::File::create(&p).unwrap();
+        writeln!(f, "a,b,target").unwrap();
+        writeln!(f, "1.0,2.0,3.0").unwrap();
+        writeln!(f, "4.0,5.0,6.0").unwrap();
+        drop(f);
+        let raw = load_csv(&p, "t").unwrap();
+        assert_eq!(raw.d, 2);
+        assert_eq!(raw.y, vec![3.0, 6.0]);
+        assert_eq!(raw.x, vec![1.0, 2.0, 4.0, 5.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("exactgp_test_ragged.csv");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&p, "t").is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

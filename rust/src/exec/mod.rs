@@ -1,0 +1,524 @@
+//! Execution layer: the partitioned, distributed kernel operator.
+//!
+//! This is the paper's systems contribution made concrete (SS3):
+//!
+//! * `PaddedData` — the training inputs in the fixed-shape f32 tile layout;
+//! * `pool::DevicePool` — W workers standing in for W GPUs; each owns a
+//!   private backend (its own PJRT client + compiled executables, or the
+//!   native evaluator) and processes row-partition jobs from a shared
+//!   queue;
+//! * `PartitionedKernelOp` — `BatchMvm` over K^ = K + sigma^2 I that never
+//!   materializes K: each partition's (rows x n) strip exists only tile by
+//!   tile inside a worker, exactly the O(n)-memory scheme of the paper;
+//! * gradient MVMs (d/dlog_l K) V for the BBMM hyperparameter gradients.
+//!
+//! Communication accounting (`metrics::Accounting`) tracks bytes moved to
+//! and from workers, verifying the O(n)-per-MVM communication claim.
+
+pub mod native;
+pub mod pjrt_backend;
+pub mod pool;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{Backend, Config, Flavor};
+use crate::kernels::{Hypers, KernelKind};
+use crate::linalg::Mat;
+use crate::metrics::Accounting;
+use crate::partition::Plan;
+use crate::runtime::Manifest;
+use crate::solvers::BatchMvm;
+
+/// Fixed tile geometry (must match the compiled artifacts for PJRT).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileSpec {
+    pub r: usize,
+    pub c: usize,
+    pub t: usize,
+    pub d: usize,
+}
+
+impl TileSpec {
+    /// Production geometry (aot.py TILE_R/TILE_C).
+    pub const PROD: TileSpec = TileSpec { r: 512, c: 2048, t: 16, d: 32 };
+
+    pub fn d_pad_for(d: usize) -> usize {
+        if d <= 8 {
+            8
+        } else {
+            32
+        }
+    }
+}
+
+/// What a tile backend must compute. All slices are flat f32 row-major with
+/// the backend's `TileSpec` shapes; `theta` is the kernel-only parameter
+/// vector (no noise — the coordinator owns the diagonal).
+pub trait TileBackend {
+    fn spec(&self) -> TileSpec;
+
+    /// K(xr, xc) @ v  -> (r, t)
+    fn mvm(&mut self, xr: &[f32], xc: &[f32], v: &[f32], theta: &[f32]) -> Result<Vec<f32>>;
+
+    /// (K @ v, d/dlog_l K @ v stacked) -> ((r, t), (nl, r, t))
+    fn mvm_grads(
+        &mut self,
+        xr: &[f32],
+        xc: &[f32],
+        v: &[f32],
+        theta: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Number of lengthscale-gradient outputs (1 shared, d ARD).
+    fn n_ls_grads(&self) -> usize;
+}
+
+/// Factory that builds one backend per worker thread (PJRT objects are not
+/// Send; each worker constructs its own client inside the thread).
+pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn TileBackend>> + Send + Sync>;
+
+/// Dataset in tile layout: rows padded to a multiple of the tile width,
+/// features padded to the compiled d.
+pub struct PaddedData {
+    pub n: usize,     // true rows
+    pub n_pad: usize, // padded rows (multiple of spec.c)
+    pub d: usize,     // true feature dim
+    pub d_pad: usize, // padded feature dim
+    pub x: Vec<f32>,  // (n_pad, d_pad)
+}
+
+impl PaddedData {
+    pub fn new(x: &[f64], d: usize, spec: &TileSpec) -> PaddedData {
+        let n = x.len() / d;
+        assert!(d <= spec.d, "d={d} exceeds compiled tile width {}", spec.d);
+        let n_pad = n.div_ceil(spec.c) * spec.c;
+        let mut out = vec![0.0f32; n_pad * spec.d];
+        for i in 0..n {
+            for j in 0..d {
+                out[i * spec.d + j] = x[i * d + j] as f32;
+            }
+        }
+        PaddedData { n, n_pad, d, d_pad: spec.d, x: out }
+    }
+
+    pub fn row_block(&self, start: usize, rows: usize) -> &[f32] {
+        &self.x[start * self.d_pad..(start + rows) * self.d_pad]
+    }
+}
+
+/// The partitioned kernel operator (possibly rectangular:
+/// rows = `row_data`, columns = `col_data`).
+pub struct PartitionedKernelOp {
+    pub row_data: Arc<PaddedData>,
+    pub col_data: Arc<PaddedData>,
+    pub pool: Arc<pool::DevicePool>,
+    pub plan: Plan,
+    pub spec: TileSpec,
+    pub hypers: Hypers,
+    /// Added on the diagonal when row_data and col_data are the same set.
+    pub noise: f64,
+    pub square: bool,
+    pub acct: Arc<Accounting>,
+}
+
+impl PartitionedKernelOp {
+    /// Square training operator K^(X, X).
+    pub fn square(
+        data: Arc<PaddedData>,
+        pool: Arc<pool::DevicePool>,
+        plan: Plan,
+        spec: TileSpec,
+        hypers: Hypers,
+        acct: Arc<Accounting>,
+    ) -> Self {
+        let noise = hypers.noise();
+        PartitionedKernelOp {
+            row_data: data.clone(),
+            col_data: data,
+            pool,
+            plan,
+            spec,
+            hypers,
+            noise,
+            square: true,
+            acct,
+        }
+    }
+
+    /// Rectangular prediction operator K(X*, X).
+    pub fn rect(
+        row_data: Arc<PaddedData>,
+        col_data: Arc<PaddedData>,
+        pool: Arc<pool::DevicePool>,
+        spec: TileSpec,
+        hypers: Hypers,
+        acct: Arc<Accounting>,
+    ) -> Self {
+        let plan = Plan::with_rows(row_data.n_pad, col_data.n_pad, spec.r.max(512));
+        PartitionedKernelOp {
+            row_data,
+            col_data,
+            pool,
+            plan,
+            spec,
+            hypers,
+            noise: 0.0,
+            square: false,
+            acct,
+        }
+    }
+
+    pub fn set_hypers(&mut self, h: Hypers) {
+        self.noise = if self.square { h.noise() } else { 0.0 };
+        self.hypers = h;
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.row_data.n
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.col_data.n
+    }
+
+    /// Kernel-only theta in the wire layout, with ARD lengthscales padded
+    /// to the compiled tile width (padded X dims are zero, so any finite
+    /// log-lengthscale works there; we use 0).
+    fn theta_padded(&self) -> Vec<f32> {
+        if !self.hypers.is_ard() {
+            return self.hypers.theta_f32();
+        }
+        let d_pad = self.spec.d;
+        let mut t = vec![0.0f32; d_pad + 1];
+        for (i, &l) in self.hypers.log_lengthscales.iter().enumerate() {
+            t[i] = l as f32;
+        }
+        t[d_pad] = self.hypers.log_outputscale as f32;
+        t
+    }
+
+    /// Pad an (n_cols, t_any) f64 RHS into (n_pad, spec.t) f32 chunks.
+    fn pad_rhs(&self, v: &Mat, chunk: std::ops::Range<usize>) -> Vec<f32> {
+        let t = self.spec.t;
+        let mut out = vec![0.0f32; self.col_data.n_pad * t];
+        for i in 0..v.rows {
+            for (jj, j) in chunk.clone().enumerate() {
+                out[i * t + jj] = v[(i, j)] as f32;
+            }
+        }
+        out
+    }
+
+    /// Raw K @ V (no noise), handling RHS chunking over the compiled t.
+    pub fn apply_raw(&self, v: &Mat) -> Mat {
+        assert_eq!(v.rows, self.col_data.n);
+        let mut out = Mat::zeros(self.row_data.n, v.cols);
+        for chunk_start in (0..v.cols).step_by(self.spec.t) {
+            let chunk = chunk_start..(chunk_start + self.spec.t).min(v.cols);
+            let padded = Arc::new(self.pad_rhs(v, chunk.clone()));
+            let theta = Arc::new(self.theta_padded());
+            let results = self.run_jobs(pool::JobKind::Mvm, padded, theta);
+            for (p, res) in self.plan.partitions.iter().zip(&results) {
+                let rows = p.len().min(self.row_data.n.saturating_sub(p.start));
+                for i in 0..rows {
+                    for (jj, j) in chunk.clone().enumerate() {
+                        out[(p.start + i, j)] += res[i * self.spec.t + jj];
+                    }
+                }
+            }
+        }
+        self.acct.note_mvm();
+        out
+    }
+
+    /// (K V, [d/dlog_l_i K V]) — the BBMM gradient MVM. No noise on K V.
+    pub fn apply_grads(&self, v: &Mat) -> (Mat, Vec<Mat>) {
+        assert_eq!(v.rows, self.col_data.n);
+        let nl = if self.hypers.is_ard() { self.row_data.d_pad } else { 1 };
+        let n_ls = self.hypers.log_lengthscales.len();
+        let mut kv = Mat::zeros(self.row_data.n, v.cols);
+        let mut gs: Vec<Mat> = (0..n_ls).map(|_| Mat::zeros(self.row_data.n, v.cols)).collect();
+        let t = self.spec.t;
+        for chunk_start in (0..v.cols).step_by(t) {
+            let chunk = chunk_start..(chunk_start + t).min(v.cols);
+            let padded = Arc::new(self.pad_rhs(v, chunk.clone()));
+            let theta = Arc::new(self.theta_padded());
+            let results = self.run_jobs(pool::JobKind::MvmGrads { nl }, padded, theta);
+            for (p, res) in self.plan.partitions.iter().zip(&results) {
+                let rows = p.len().min(self.row_data.n.saturating_sub(p.start));
+                let stride = p.len() * t;
+                for i in 0..rows {
+                    for (jj, j) in chunk.clone().enumerate() {
+                        kv[(p.start + i, j)] += res[i * t + jj];
+                        for g in 0..n_ls {
+                            gs[g][(p.start + i, j)] +=
+                                res[stride * (1 + g) + i * t + jj];
+                        }
+                    }
+                }
+            }
+        }
+        self.acct.note_mvm();
+        (kv, gs)
+    }
+
+    fn run_jobs(
+        &self,
+        kind: pool::JobKind,
+        v: Arc<Vec<f32>>,
+        theta: Arc<Vec<f32>>,
+    ) -> Vec<Vec<f64>> {
+        // The RHS travels to each *device* once per MVM — O(n w), the
+        // paper's communication model (SS3, "Distributed MVMs in Parallel").
+        self.acct
+            .add_to_device((v.len() * 4) as u64 * self.pool.workers as u64);
+        let jobs: Vec<pool::Job> = self
+            .plan
+            .partitions
+            .iter()
+            .enumerate()
+            .map(|(id, p)| pool::Job {
+                id,
+                kind,
+                row_start: p.start,
+                row_len: p.len(),
+                row_data: self.row_data.clone(),
+                col_data: self.col_data.clone(),
+                col_limit: self.col_data.n, // skip all-padding column tiles
+                v: v.clone(),
+                theta: theta.clone(),
+                acct: self.acct.clone(),
+            })
+            .collect();
+        self.pool.run(jobs)
+    }
+}
+
+impl BatchMvm for PartitionedKernelOp {
+    fn n(&self) -> usize {
+        assert!(self.square);
+        self.row_data.n
+    }
+
+    fn mvm(&self, v: &Mat) -> Mat {
+        let mut out = self.apply_raw(v);
+        if self.noise > 0.0 {
+            for i in 0..out.rows {
+                for j in 0..out.cols {
+                    out[(i, j)] += self.noise * v[(i, j)];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Build the backend factory for a config (used by the coordinator and
+/// all benches/examples).
+pub fn backend_factory(
+    cfg: &Config,
+    kind: KernelKind,
+    ard: bool,
+    d_pad: usize,
+    spec: TileSpec,
+) -> Result<BackendFactory> {
+    let mode = if ard { "ard" } else { "shared" };
+    match cfg.backend {
+        Backend::Native => {
+            let k = kind;
+            let a = ard;
+            Ok(Arc::new(move |_wid| {
+                Ok(Box::new(native::NativeBackend::new(k, a, spec)) as Box<dyn TileBackend>)
+            }))
+        }
+        Backend::Pjrt => {
+            let manifest = Arc::new(Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?);
+            let flavor = match cfg.flavor {
+                Flavor::Pallas => "pallas",
+                Flavor::Jnp => "jnp",
+            };
+            // Validate availability up front (better error than in-thread).
+            manifest.require("mvm", kind.name(), mode, flavor, &[("t", spec.t), ("d", d_pad)])?;
+            let kname = kind.name().to_string();
+            let mode = mode.to_string();
+            let flavor = flavor.to_string();
+            Ok(Arc::new(move |_wid| {
+                let b = pjrt_backend::PjrtBackend::new(&manifest, &kname, &mode, &flavor, spec)?;
+                Ok(Box::new(b) as Box<dyn TileBackend>)
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelEval;
+    use crate::util::rng::Rng;
+
+    fn native_pool(kind: KernelKind, ard: bool, spec: TileSpec, workers: usize) -> Arc<pool::DevicePool> {
+        let factory: BackendFactory = Arc::new(move |_w| {
+            Ok(Box::new(native::NativeBackend::new(kind, ard, spec)) as Box<dyn TileBackend>)
+        });
+        Arc::new(pool::DevicePool::new(workers, factory).unwrap())
+    }
+
+    fn toy_op(
+        n: usize,
+        d: usize,
+        ard: bool,
+        workers: usize,
+        spec: TileSpec,
+        rows_per_partition: usize,
+    ) -> (PartitionedKernelOp, Vec<f64>) {
+        let mut rng = Rng::new(51, 0);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let data = Arc::new(PaddedData::new(&x, d, &spec));
+        let plan = Plan::with_rows(data.n_pad, data.n_pad, rows_per_partition);
+        let hypers = Hypers {
+            log_lengthscales: vec![0.2; if ard { d } else { 1 }],
+            log_outputscale: 0.1,
+            log_noise: (0.3f64).ln(),
+        };
+        let pool = native_pool(KernelKind::Matern32, ard, spec, workers);
+        let op = PartitionedKernelOp::square(
+            data,
+            pool,
+            plan,
+            spec,
+            hypers,
+            Arc::new(Accounting::default()),
+        );
+        (op, x)
+    }
+
+    #[test]
+    fn partitioned_mvm_matches_dense() {
+        let spec = TileSpec { r: 8, c: 16, t: 4, d: 3 };
+        let n = 45; // deliberately not a multiple of any tile dim
+        let (op, x) = toy_op(n, 3, false, 2, spec, 16);
+        let eval = KernelEval::new(KernelKind::Matern32, &op.hypers);
+        let khat = eval.gram_with_noise(&x, 3, op.hypers.noise());
+        let mut rng = Rng::new(52, 0);
+        let v = Mat::from_vec(n, 3, rng.normal_vec(n * 3));
+        let got = op.mvm(&v);
+        let want = khat.matmul(&v);
+        assert!(got.max_abs_diff(&want) < 1e-4, "diff={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn results_invariant_to_worker_count_and_partitioning() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let n = 30;
+        let mut rng = Rng::new(53, 0);
+        let v = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+        let mut outputs = Vec::new();
+        for (workers, rpp) in [(1, 8), (2, 8), (4, 16), (3, 32)] {
+            let (op, _) = toy_op(n, 2, false, workers, spec, rpp);
+            outputs.push(op.mvm(&v));
+        }
+        for o in &outputs[1..] {
+            // Identical tile traversal per row => bitwise-equal f64 sums.
+            assert!(o.max_abs_diff(&outputs[0]) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grads_match_native_oracle() {
+        let spec = TileSpec { r: 8, c: 8, t: 4, d: 3 };
+        let n = 20;
+        let (op, _) = toy_op(n, 3, true, 2, spec, 8);
+        let mut rng = Rng::new(54, 0);
+        let v = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+        let (kv, gs) = op.apply_grads(&v);
+        assert_eq!(gs.len(), 3); // true d, not padded
+        // Finite differences through the op itself.
+        let eps = 1e-5;
+        for l in 0..3 {
+            let mut hp = op.hypers.clone();
+            hp.log_lengthscales[l] += eps;
+            let mut hm = op.hypers.clone();
+            hm.log_lengthscales[l] -= eps;
+            let mut op2 = toy_op(n, 3, true, 2, spec, 8).0;
+            op2.set_hypers(hp);
+            let up = op2.apply_raw(&v);
+            op2.set_hypers(hm);
+            let um = op2.apply_raw(&v);
+            for i in 0..n {
+                for j in 0..2 {
+                    let fd = (up[(i, j)] - um[(i, j)]) / (2.0 * eps);
+                    assert!(
+                        (fd - gs[l][(i, j)]).abs() < 2e-2 * (1.0 + fd.abs()),
+                        "l={l} ({i},{j}): fd={fd} an={}",
+                        gs[l][(i, j)]
+                    );
+                }
+            }
+        }
+        let _ = kv;
+    }
+
+    #[test]
+    fn rhs_wider_than_tile_t_is_chunked() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let n = 12;
+        let (op, x) = toy_op(n, 2, false, 1, spec, 8);
+        let eval = KernelEval::new(KernelKind::Matern32, &op.hypers);
+        let khat = eval.gram_with_noise(&x, 2, op.hypers.noise());
+        let mut rng = Rng::new(55, 0);
+        let v = Mat::from_vec(n, 7, rng.normal_vec(n * 7)); // 7 > t=2
+        let got = op.mvm(&v);
+        let want = khat.matmul(&v);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn communication_is_linear_in_n() {
+        // O(n) communication per MVM (paper SS3): bytes moved per MVM grow
+        // linearly, not quadratically, with n.
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let mut per_n = Vec::new();
+        for n in [64, 128, 256] {
+            let (op, _) = toy_op(n, 2, false, 2, spec, 8);
+            let mut rng = Rng::new(56, 0);
+            let v = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+            let before = op.acct.snapshot();
+            let _ = op.mvm(&v);
+            let moved = op.acct.snapshot().delta(&before);
+            per_n.push((moved.bytes_to_device + moved.bytes_from_device) as f64 / n as f64);
+        }
+        // bytes/n should be ~constant: allow 2x slack for padding effects.
+        let max = per_n.iter().cloned().fold(0.0, f64::max);
+        let min = per_n.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 2.0, "per-n bytes: {per_n:?}");
+    }
+
+    #[test]
+    fn rect_operator_matches_dense_cross() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let mut rng = Rng::new(57, 0);
+        let (n_test, n_train, d) = (9, 21, 2);
+        let xt: Vec<f64> = (0..n_test * d).map(|_| rng.normal()).collect();
+        let xs: Vec<f64> = (0..n_train * d).map(|_| rng.normal()).collect();
+        let test_data = Arc::new(PaddedData::new(&xt, d, &spec));
+        let train_data = Arc::new(PaddedData::new(&xs, d, &spec));
+        let hypers = Hypers::default_init(None);
+        let pool = native_pool(KernelKind::Matern32, false, spec, 2);
+        let op = PartitionedKernelOp::rect(
+            test_data,
+            train_data,
+            pool,
+            spec,
+            hypers.clone(),
+            Arc::new(Accounting::default()),
+        );
+        let v = Mat::from_vec(n_train, 2, rng.normal_vec(n_train * 2));
+        let got = op.apply_raw(&v);
+        let eval = KernelEval::new(KernelKind::Matern32, &hypers);
+        let want = eval.cross(&xt, &xs, d).matmul(&v);
+        assert_eq!(got.rows, n_test);
+        assert!(got.max_abs_diff(&want) < 1e-4, "diff={}", got.max_abs_diff(&want));
+    }
+}

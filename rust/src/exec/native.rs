@@ -1,0 +1,297 @@
+//! Pure-Rust tile backend: the same tile contract as the PJRT artifacts,
+//! computed natively. Serves as (a) the fallback when artifacts are absent,
+//! (b) the numerics oracle for the PJRT path (integration tests), and
+//! (c) the apples-to-apples CPU baseline in the perf pass.
+//!
+//! Math mirrors python/compile/kernels/matern.py: hyperparameters are
+//! folded into scaled inputs, gradients use the closed forms
+//!   matern32: d/dlog_l_i K = 3 e^{-u} d_i^2_scaled;  shared: e^{-u} u^2
+//!   rbf:      d/dlog_l_i K = rho d_i^2_scaled;       shared: rho r^2
+//! (os folded into V).
+
+use anyhow::Result;
+
+use crate::exec::{TileBackend, TileSpec};
+use crate::kernels::KernelKind;
+
+pub struct NativeBackend {
+    kind: KernelKind,
+    ard: bool,
+    spec: TileSpec,
+    // Scratch (reused across tiles to keep the hot loop allocation-free).
+    xr_s: Vec<f32>,
+    xc_s: Vec<f32>,
+    v_s: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new(kind: KernelKind, ard: bool, spec: TileSpec) -> NativeBackend {
+        NativeBackend {
+            kind,
+            ard,
+            spec,
+            xr_s: vec![0.0; spec.r * spec.d],
+            xc_s: vec![0.0; spec.c * spec.d],
+            v_s: vec![0.0; spec.c * spec.t],
+        }
+    }
+
+    /// Fold theta into scaled copies of the inputs.
+    fn scale_inputs(&mut self, xr: &[f32], xc: &[f32], v: &[f32], theta: &[f32]) {
+        let d = self.spec.d;
+        let (inv, os): (Vec<f32>, f32) = if self.ard {
+            (
+                (0..d).map(|i| (-theta[i]).exp()).collect(),
+                theta[d].exp(),
+            )
+        } else {
+            (vec![(-theta[0]).exp(); d], theta[1].exp())
+        };
+        for (o, chunk) in self.xr_s.chunks_mut(d).zip(xr.chunks(d)) {
+            for j in 0..d {
+                o[j] = chunk[j] * inv[j];
+            }
+        }
+        for (o, chunk) in self.xc_s.chunks_mut(d).zip(xc.chunks(d)) {
+            for j in 0..d {
+                o[j] = chunk[j] * inv[j];
+            }
+        }
+        for (o, &x) in self.v_s.iter_mut().zip(v) {
+            *o = x * os;
+        }
+    }
+
+    #[inline]
+    fn rho_e(&self, r2: f32) -> (f32, f32) {
+        match self.kind {
+            KernelKind::Matern32 => {
+                let u = (3.0 * r2).sqrt();
+                let e = (-u).exp();
+                ((1.0 + u) * e, e)
+            }
+            KernelKind::Rbf => {
+                let rho = (-0.5 * r2).exp();
+                (rho, rho)
+            }
+        }
+    }
+}
+
+impl TileBackend for NativeBackend {
+    fn spec(&self) -> TileSpec {
+        self.spec
+    }
+
+    fn mvm(&mut self, xr: &[f32], xc: &[f32], v: &[f32], theta: &[f32]) -> Result<Vec<f32>> {
+        let TileSpec { r, c, t, d } = self.spec;
+        self.scale_inputs(xr, xc, v, theta);
+        let mut out = vec![0.0f32; r * t];
+        for i in 0..r {
+            let a = &self.xr_s[i * d..(i + 1) * d];
+            let orow = &mut out[i * t..(i + 1) * t];
+            for jc in 0..c {
+                let b = &self.xc_s[jc * d..(jc + 1) * d];
+                let mut r2 = 0.0f32;
+                for k in 0..d {
+                    let diff = a[k] - b[k];
+                    r2 += diff * diff;
+                }
+                let (rho, _) = self.rho_e(r2);
+                let vrow = &self.v_s[jc * t..(jc + 1) * t];
+                for j in 0..t {
+                    orow[j] += rho * vrow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn mvm_grads(
+        &mut self,
+        xr: &[f32],
+        xc: &[f32],
+        v: &[f32],
+        theta: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let TileSpec { r, c, t, d } = self.spec;
+        self.scale_inputs(xr, xc, v, theta);
+        let nl = self.n_ls_grads();
+        let mut kv = vec![0.0f32; r * t];
+        let mut g = vec![0.0f32; nl * r * t];
+        for i in 0..r {
+            let a = &self.xr_s[i * d..(i + 1) * d];
+            for jc in 0..c {
+                let b = &self.xc_s[jc * d..(jc + 1) * d];
+                let mut r2 = 0.0f32;
+                for k in 0..d {
+                    let diff = a[k] - b[k];
+                    r2 += diff * diff;
+                }
+                let (rho, e) = self.rho_e(r2);
+                let vrow = &self.v_s[jc * t..(jc + 1) * t];
+                for j in 0..t {
+                    kv[i * t + j] += rho * vrow[j];
+                }
+                if self.ard {
+                    let w = match self.kind {
+                        KernelKind::Matern32 => 3.0 * e,
+                        KernelKind::Rbf => e,
+                    };
+                    for l in 0..d {
+                        let diff = a[l] - b[l];
+                        let coeff = w * diff * diff;
+                        if coeff != 0.0 {
+                            let grow = &mut g[(l * r + i) * t..(l * r + i + 1) * t];
+                            for j in 0..t {
+                                grow[j] += coeff * vrow[j];
+                            }
+                        }
+                    }
+                } else {
+                    let w = match self.kind {
+                        KernelKind::Matern32 => e * 3.0 * r2, // e^{-u} u^2
+                        KernelKind::Rbf => e * r2,
+                    };
+                    let grow = &mut g[i * t..(i + 1) * t];
+                    for j in 0..t {
+                        grow[j] += w * vrow[j];
+                    }
+                }
+            }
+        }
+        Ok((kv, g))
+    }
+
+    fn n_ls_grads(&self) -> usize {
+        if self.ard {
+            self.spec.d
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Hypers, KernelEval};
+    use crate::util::rng::Rng;
+
+    fn run_case(kind: KernelKind, ard: bool) {
+        let spec = TileSpec { r: 4, c: 8, t: 3, d: 5 };
+        let mut rng = Rng::new(41, 0);
+        let xr: Vec<f32> = (0..spec.r * spec.d).map(|_| rng.normal() as f32).collect();
+        let xc: Vec<f32> = (0..spec.c * spec.d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..spec.c * spec.t).map(|_| rng.normal() as f32).collect();
+        let theta: Vec<f32> = if ard {
+            (0..spec.d + 1).map(|_| (rng.normal() * 0.3) as f32).collect()
+        } else {
+            vec![0.2, -0.1]
+        };
+        let mut be = NativeBackend::new(kind, ard, spec);
+        let kv = be.mvm(&xr, &xc, &v, &theta).unwrap();
+
+        // Oracle via the f64 KernelEval.
+        let h = Hypers {
+            log_lengthscales: if ard {
+                theta[..spec.d].iter().map(|&x| x as f64).collect()
+            } else {
+                vec![theta[0] as f64]
+            },
+            log_outputscale: *theta.last().unwrap() as f64,
+            log_noise: 0.0,
+        };
+        let h = Hypers { log_outputscale: if ard { theta[spec.d] as f64 } else { theta[1] as f64 }, ..h };
+        let eval = KernelEval::new(kind, &h);
+        let xr64: Vec<f64> = xr.iter().map(|&x| x as f64).collect();
+        let xc64: Vec<f64> = xc.iter().map(|&x| x as f64).collect();
+        let k = eval.cross(&xr64, &xc64, spec.d);
+        for i in 0..spec.r {
+            for j in 0..spec.t {
+                let want: f64 = (0..spec.c)
+                    .map(|jc| k[(i, jc)] * v[jc * spec.t + j] as f64)
+                    .sum();
+                assert!(
+                    (kv[i * spec.t + j] as f64 - want).abs() < 1e-4,
+                    "{kind:?} ard={ard} ({i},{j}): {} vs {want}",
+                    kv[i * spec.t + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mvm_matches_kernel_eval() {
+        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
+            for ard in [false, true] {
+                run_case(kind, ard);
+            }
+        }
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        // d/dlog_l [K v] via central differences on the f64 oracle.
+        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
+            for ard in [false, true] {
+                let spec = TileSpec { r: 3, c: 6, t: 2, d: 4 };
+                let mut rng = Rng::new(42, 7);
+                let xr: Vec<f32> =
+                    (0..spec.r * spec.d).map(|_| rng.normal() as f32).collect();
+                let xc: Vec<f32> =
+                    (0..spec.c * spec.d).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> =
+                    (0..spec.c * spec.t).map(|_| rng.normal() as f32).collect();
+                let nls = if ard { spec.d } else { 1 };
+                let theta: Vec<f32> =
+                    (0..nls + 1).map(|_| (rng.normal() * 0.3) as f32).collect();
+
+                let mut be = NativeBackend::new(kind, ard, spec);
+                let (_, g) = be.mvm_grads(&xr, &xc, &v, &theta).unwrap();
+
+                let eps = 1e-3f32;
+                for l in 0..nls {
+                    let mut tp = theta.clone();
+                    tp[l] += eps;
+                    let mut tm = theta.clone();
+                    tm[l] -= eps;
+                    let kp = be.mvm(&xr, &xc, &v, &tp).unwrap();
+                    let km = be.mvm(&xr, &xc, &v, &tm).unwrap();
+                    for idx in 0..spec.r * spec.t {
+                        let fd = (kp[idx] - km[idx]) / (2.0 * eps);
+                        let an = g[l * spec.r * spec.t + idx];
+                        assert!(
+                            (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                            "{kind:?} ard={ard} l={l} idx={idx}: fd={fd} an={an}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        // Two different calls on the same backend give the same answers as
+        // two fresh backends (no state leaks through the scratch buffers).
+        let spec = TileSpec { r: 2, c: 4, t: 2, d: 3 };
+        let mut rng = Rng::new(43, 0);
+        let mk = |rng: &mut Rng| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            (
+                (0..spec.r * spec.d).map(|_| rng.normal() as f32).collect(),
+                (0..spec.c * spec.d).map(|_| rng.normal() as f32).collect(),
+                (0..spec.c * spec.t).map(|_| rng.normal() as f32).collect(),
+            )
+        };
+        let (xr1, xc1, v1) = mk(&mut rng);
+        let (xr2, xc2, v2) = mk(&mut rng);
+        let th = [0.1f32, 0.2];
+        let mut reused = NativeBackend::new(KernelKind::Matern32, false, spec);
+        let _ = reused.mvm(&xr1, &xc1, &v1, &th).unwrap();
+        let second = reused.mvm(&xr2, &xc2, &v2, &th).unwrap();
+        let mut fresh = NativeBackend::new(KernelKind::Matern32, false, spec);
+        let clean = fresh.mvm(&xr2, &xc2, &v2, &th).unwrap();
+        assert_eq!(second, clean);
+    }
+}

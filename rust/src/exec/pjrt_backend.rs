@@ -1,0 +1,82 @@
+//! PJRT tile backend: executes the AOT artifacts (L1 Pallas or L2 jnp
+//! flavor) through the `xla` crate's PJRT CPU client.
+//!
+//! One backend per worker thread, holding its own `Engine` (client) and
+//! compiled executables; this mirrors per-GPU compilation in the paper's
+//! setup and sidesteps `Send` constraints on PJRT handles.
+
+use anyhow::{Context, Result};
+
+use crate::exec::{TileBackend, TileSpec};
+use crate::runtime::{Engine, Executable, Manifest};
+
+pub struct PjrtBackend {
+    spec: TileSpec,
+    ard: bool,
+    #[allow(dead_code)]
+    engine: Engine,
+    mvm_exe: Executable,
+    grads_exe: Executable,
+}
+
+impl PjrtBackend {
+    pub fn new(
+        manifest: &Manifest,
+        kind: &str,
+        mode: &str,
+        flavor: &str,
+        spec: TileSpec,
+    ) -> Result<PjrtBackend> {
+        let engine = Engine::cpu().context("creating PJRT CPU client")?;
+        let dims = [("r", spec.r), ("c", spec.c), ("t", spec.t), ("d", spec.d)];
+        let mvm_meta = manifest.require("mvm", kind, mode, flavor, &dims)?;
+        let grads_meta = manifest.require("mvmgrad", kind, mode, flavor, &dims)?;
+        let mvm_exe = engine.compile(&mvm_meta.file, 1)?;
+        let grads_exe = engine.compile(&grads_meta.file, 2)?;
+        Ok(PjrtBackend { spec, ard: mode == "ard", engine, mvm_exe, grads_exe })
+    }
+}
+
+impl TileBackend for PjrtBackend {
+    fn spec(&self) -> TileSpec {
+        self.spec
+    }
+
+    fn mvm(&mut self, xr: &[f32], xc: &[f32], v: &[f32], theta: &[f32]) -> Result<Vec<f32>> {
+        let TileSpec { r, c, t, d } = self.spec;
+        // Device-buffer path (execute_b): skips the Literal wrapper's
+        // extra host copy per input (EXPERIMENTS.md SS Perf L3 iteration 2).
+        let bxr = self.engine.upload(xr, &[r, d])?;
+        let bxc = self.engine.upload(xc, &[c, d])?;
+        let bv = self.engine.upload(v, &[c, t])?;
+        let bt = self.engine.upload(theta, &[theta.len()])?;
+        let mut out = self.mvm_exe.run_b(&[&bxr, &bxc, &bv, &bt])?;
+        Ok(out.remove(0))
+    }
+
+    fn mvm_grads(
+        &mut self,
+        xr: &[f32],
+        xc: &[f32],
+        v: &[f32],
+        theta: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let TileSpec { r, c, t, d } = self.spec;
+        let bxr = self.engine.upload(xr, &[r, d])?;
+        let bxc = self.engine.upload(xc, &[c, d])?;
+        let bv = self.engine.upload(v, &[c, t])?;
+        let bt = self.engine.upload(theta, &[theta.len()])?;
+        let mut out = self.grads_exe.run_b(&[&bxr, &bxc, &bv, &bt])?;
+        let kv = out.remove(0);
+        let g = out.remove(0);
+        Ok((kv, g))
+    }
+
+    fn n_ls_grads(&self) -> usize {
+        if self.ard {
+            self.spec.d
+        } else {
+            1
+        }
+    }
+}

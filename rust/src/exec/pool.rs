@@ -1,0 +1,241 @@
+//! The device pool: W worker threads standing in for W GPUs.
+//!
+//! Each worker owns a private `TileBackend` (its own PJRT client +
+//! compiled executables — PJRT handles are not `Send`, and per-device
+//! isolation is exactly the paper's setup). Row-partition jobs go through
+//! a shared queue; a worker streams the partition's kernel strip tile by
+//! tile, accumulating K^(X^(l), X) V locally in f64, and ships back only
+//! the (rows x t) result — O(n) communication per MVM.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::exec::{BackendFactory, PaddedData};
+use crate::metrics::Accounting;
+
+#[derive(Clone, Copy, Debug)]
+pub enum JobKind {
+    Mvm,
+    /// nl = number of lengthscale gradients in the backend output.
+    MvmGrads { nl: usize },
+}
+
+/// One row-partition job.
+pub struct Job {
+    pub id: usize,
+    pub kind: JobKind,
+    pub row_start: usize,
+    pub row_len: usize,
+    pub row_data: Arc<PaddedData>,
+    pub col_data: Arc<PaddedData>,
+    /// True column count — tiles entirely beyond this are skipped (their
+    /// RHS rows are zero-padded).
+    pub col_limit: usize,
+    /// (n_pad, t) RHS, f32 flat.
+    pub v: Arc<Vec<f32>>,
+    pub theta: Arc<Vec<f32>>,
+    pub acct: Arc<Accounting>,
+}
+
+enum Message {
+    Work(Job),
+    Shutdown,
+}
+
+/// Worker pool. `run` is synchronous: submit all jobs, wait for all
+/// results, return them ordered by job id.
+pub struct DevicePool {
+    queue: Arc<(Mutex<VecDeque<Message>>, Condvar)>,
+    results_rx: Mutex<mpsc::Receiver<(usize, anyhow::Result<Vec<f64>>)>>,
+    results_tx: mpsc::Sender<(usize, anyhow::Result<Vec<f64>>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub workers: usize,
+}
+
+impl DevicePool {
+    pub fn new(workers: usize, factory: BackendFactory) -> anyhow::Result<DevicePool> {
+        assert!(workers > 0);
+        let queue = Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+        let (results_tx, results_rx) = mpsc::channel();
+        let mut handles = Vec::with_capacity(workers);
+        // Surface backend construction errors synchronously.
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        for wid in 0..workers {
+            let queue = queue.clone();
+            let tx = results_tx.clone();
+            let factory = factory.clone();
+            let ready = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut backend = match factory(wid) {
+                    Ok(b) => {
+                        let _ = ready.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    let msg = {
+                        let (lock, cv) = &*queue;
+                        let mut q = lock.lock().unwrap();
+                        loop {
+                            if let Some(m) = q.pop_front() {
+                                break m;
+                            }
+                            q = cv.wait(q).unwrap();
+                        }
+                    };
+                    match msg {
+                        Message::Shutdown => break,
+                        Message::Work(job) => {
+                            let id = job.id;
+                            let out = run_partition(&mut *backend, &job);
+                            let _ = tx.send((id, out));
+                        }
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            ready_rx.recv().expect("worker init channel")?;
+        }
+        Ok(DevicePool {
+            queue,
+            results_rx: Mutex::new(results_rx),
+            results_tx,
+            handles,
+            workers,
+        })
+    }
+
+    /// Execute all jobs; panics on backend errors (they indicate broken
+    /// artifacts / shape mismatches — programming errors, not data).
+    pub fn run(&self, jobs: Vec<Job>) -> Vec<Vec<f64>> {
+        let n = jobs.len();
+        {
+            let (lock, cv) = &*self.queue;
+            let mut q = lock.lock().unwrap();
+            for j in jobs {
+                q.push_back(Message::Work(j));
+            }
+            cv.notify_all();
+        }
+        let mut out: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
+        let rx = self.results_rx.lock().unwrap();
+        for _ in 0..n {
+            let (id, res) = rx.recv().expect("worker died");
+            out[id] = Some(res.unwrap_or_else(|e| panic!("tile backend error: {e:#}")));
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.queue;
+        {
+            let mut q = lock.lock().unwrap();
+            for _ in 0..self.handles.len() {
+                q.push_back(Message::Shutdown);
+            }
+            cv.notify_all();
+        }
+        let _ = &self.results_tx;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Process one row partition on a worker: stream column tiles, accumulate
+/// K(X^(l), :) V in f64. Output layout: [kv (rows*t)] for Mvm, or
+/// [kv | g_0 | g_1 | ...] each (rows*t) for MvmGrads.
+fn run_partition(
+    backend: &mut dyn crate::exec::TileBackend,
+    job: &Job,
+) -> anyhow::Result<Vec<f64>> {
+    let spec = backend.spec();
+    let t = spec.t;
+    let nl = match job.kind {
+        JobKind::Mvm => 0,
+        JobKind::MvmGrads { nl } => nl,
+    };
+    // Number of *reported* gradient blocks: native reports per true-dim,
+    // PJRT reports per padded-dim; both are handled by the caller keeping
+    // only the first n_ls blocks.
+    let out_blocks = 1 + nl;
+    let mut acc = vec![0.0f64; out_blocks * job.row_len * t];
+
+    // Communication accounting: only theta here — the RHS is charged once
+    // per device per MVM by `PartitionedKernelOp::run_jobs` (the paper's
+    // model: "supply each device with a new right-hand-side vector v"),
+    // and X tiles are device-resident (uploaded once), so neither is
+    // charged per partition.
+    job.acct.add_to_device(job.theta.len() as u64 * 4);
+
+    // Partitions need not be tile-aligned (memory budgets can give
+    // rows-per-partition < tile height); clamp the row block to the padded
+    // data and zero-fill the overhang in a scratch tile.
+    let mut xr_scratch = vec![0.0f32; spec.r * job.row_data.d_pad];
+    let mut row = job.row_start;
+    while row < job.row_start + job.row_len {
+        let avail = job.row_data.n_pad.saturating_sub(row).min(spec.r);
+        let xr: &[f32] = if avail == spec.r {
+            job.row_data.row_block(row, spec.r)
+        } else {
+            xr_scratch.iter_mut().for_each(|v| *v = 0.0);
+            xr_scratch[..avail * job.row_data.d_pad]
+                .copy_from_slice(job.row_data.row_block(row, avail));
+            &xr_scratch
+        };
+        let mut col = 0;
+        while col < job.col_limit {
+            let xc = job.col_data.row_block(col, spec.c);
+            let vt = &job.v[col * t..(col + spec.c) * t];
+            job.acct
+                .note_tile((spec.r * spec.c * 4 + spec.c * t * 4 + spec.r * t * 4) as u64);
+            match job.kind {
+                JobKind::Mvm => {
+                    let kv = backend.mvm(xr, xc, vt, &job.theta)?;
+                    let base = (row - job.row_start) * t;
+                    for i in 0..spec.r {
+                        if row + i >= job.row_start + job.row_len {
+                            break;
+                        }
+                        for j in 0..t {
+                            acc[base + i * t + j] += kv[i * t + j] as f64;
+                        }
+                    }
+                }
+                JobKind::MvmGrads { nl } => {
+                    let (kv, g) = backend.mvm_grads(xr, xc, vt, &job.theta)?;
+                    let base = (row - job.row_start) * t;
+                    let block = job.row_len * t;
+                    let n_g = backend.n_ls_grads().min(nl);
+                    for i in 0..spec.r {
+                        if row + i >= job.row_start + job.row_len {
+                            break;
+                        }
+                        for j in 0..t {
+                            acc[base + i * t + j] += kv[i * t + j] as f64;
+                        }
+                        for l in 0..n_g {
+                            for j in 0..t {
+                                acc[block * (1 + l) + base + i * t + j] +=
+                                    g[l * spec.r * t + i * t + j] as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            col += spec.c;
+        }
+        row += spec.r;
+    }
+    job.acct.add_from_device((acc.len() * 8) as u64);
+    Ok(acc)
+}

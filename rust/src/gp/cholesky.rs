@@ -1,0 +1,281 @@
+//! The Cholesky GP: exact inference by O(n^3) dense factorization.
+//!
+//! Three roles in this system:
+//! 1. the baseline the paper *replaces* (its memory wall is the paper's
+//!    motivation — at n = 500k the factor alone is a terabyte);
+//! 2. the exactness oracle: at small n the BBMM GP must match this model's
+//!    NLL, gradients, and predictive moments to solver tolerance;
+//! 3. the pretraining engine for the paper's initialization recipe (SS5):
+//!    10 L-BFGS + 10 Adam steps on a training subset.
+
+use anyhow::Result;
+
+use crate::kernels::{Hypers, KernelEval, KernelKind};
+use crate::linalg::{cholesky, CholeskyFactor, Mat};
+use crate::metrics::LOG_2PI;
+use crate::opt::{Adam, Lbfgs};
+
+pub struct CholeskyGp {
+    pub kind: KernelKind,
+    pub hypers: Hypers,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub d: usize,
+    factor: Option<CholeskyFactor>,
+    alpha: Option<Vec<f64>>,
+}
+
+/// Exact negative log marginal likelihood and its gradient w.r.t. the
+/// log-hypers, by dense factorization.
+pub fn nll_and_grad(
+    kind: KernelKind,
+    hypers: &Hypers,
+    x: &[f64],
+    y: &[f64],
+    d: usize,
+) -> Result<(f64, Vec<f64>)> {
+    let n = y.len();
+    let eval = KernelEval::new(kind, hypers);
+    let khat = eval.gram_with_noise(x, d, hypers.noise());
+    let f = cholesky(&khat)?;
+    let alpha = f.solve_vec(y);
+    let nll = 0.5 * (crate::linalg::dot(y, &alpha) + f.logdet() + n as f64 * LOG_2PI);
+
+    // K^{-1} via n solves (oracle-grade, not performance-critical).
+    let kinv = f.solve_mat(&Mat::eye(n));
+
+    let n_ls = hypers.log_lengthscales.len();
+    let mut grad = vec![0.0; n_ls + 2];
+    // Lengthscale + outputscale terms: dNLL/dtheta =
+    //   0.5 * [ tr(K^{-1} dK) - alpha^T dK alpha ].
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..n {
+            let xj = &x[j * d..(j + 1) * d];
+            let (kij, dls) = eval.eval_with_grads(xi, xj);
+            let w = kinv[(i, j)] - alpha[i] * alpha[j];
+            for (l, dl) in dls.iter().enumerate() {
+                grad[l] += w * dl;
+            }
+            grad[n_ls] += w * kij; // d/dlog_os K = K
+        }
+    }
+    // Noise term: dK^/dlog_noise = sigma^2 I.
+    let noise = hypers.noise();
+    let tr_kinv: f64 = (0..n).map(|i| kinv[(i, i)]).sum();
+    let aa = crate::linalg::dot(&alpha, &alpha);
+    grad[n_ls + 1] = noise * (tr_kinv - aa);
+    for g in &mut grad {
+        *g *= 0.5;
+    }
+    Ok((nll, grad))
+}
+
+impl CholeskyGp {
+    pub fn new(kind: KernelKind, hypers: Hypers, x: Vec<f64>, y: Vec<f64>, d: usize) -> Self {
+        CholeskyGp { kind, hypers, x, y, d, factor: None, alpha: None }
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// The paper's pretraining recipe: `lbfgs_steps` of L-BFGS then
+    /// `adam_steps` of Adam (lr), with the noise floored at `noise_floor`.
+    pub fn fit(
+        &mut self,
+        lbfgs_steps: usize,
+        adam_steps: usize,
+        lr: f64,
+        noise_floor: f64,
+    ) -> Result<f64> {
+        let n_ls = self.hypers.log_lengthscales.len();
+        let (kind, d) = (self.kind, self.d);
+        let (x, y) = (self.x.clone(), self.y.clone());
+        let clamp = |p: &mut [f64]| {
+            // log_noise is the last parameter.
+            let ln_floor = noise_floor.ln();
+            let last = p.len() - 1;
+            if p[last] < ln_floor {
+                p[last] = ln_floor;
+            }
+        };
+
+        let mut params = self.hypers.to_vec();
+        let mut obj = |p: &[f64]| -> (f64, Vec<f64>) {
+            let h = Hypers::from_vec(p, n_ls);
+            match nll_and_grad(kind, &h, &x, &y, d) {
+                Ok(r) => r,
+                // Non-PD draw during line search: return +inf to reject.
+                Err(_) => (f64::INFINITY, vec![0.0; p.len()]),
+            }
+        };
+
+        if lbfgs_steps > 0 {
+            let mut lbfgs = Lbfgs::new(10);
+            lbfgs.minimize(&mut obj, &mut params, lbfgs_steps);
+            clamp(&mut params);
+        }
+        if adam_steps > 0 {
+            let mut adam = Adam::new(params.len(), lr);
+            for _ in 0..adam_steps {
+                let (_, g) = obj(&params);
+                adam.step(&mut params, &g);
+                clamp(&mut params);
+            }
+        }
+        let (final_nll, _) = obj(&params);
+        self.hypers = Hypers::from_vec(&params, n_ls);
+        self.factor = None;
+        self.alpha = None;
+        Ok(final_nll)
+    }
+
+    /// Factor K^ and cache alpha = K^{-1} y.
+    pub fn precompute(&mut self) -> Result<()> {
+        let eval = KernelEval::new(self.kind, &self.hypers);
+        let khat = eval.gram_with_noise(&self.x, self.d, self.hypers.noise());
+        let f = cholesky(&khat)?;
+        self.alpha = Some(f.solve_vec(&self.y));
+        self.factor = Some(f);
+        Ok(())
+    }
+
+    /// Exact predictive moments at `xstar` (flat (s, d)).
+    pub fn predict(&mut self, xstar: &[f64]) -> Result<super::Predictions> {
+        if self.factor.is_none() {
+            self.precompute()?;
+        }
+        let f = self.factor.as_ref().unwrap();
+        let alpha = self.alpha.as_ref().unwrap();
+        let eval = KernelEval::new(self.kind, &self.hypers);
+        let s = xstar.len() / self.d;
+        let mut mean = Vec::with_capacity(s);
+        let mut var = Vec::with_capacity(s);
+        let mut kstar = vec![0.0; self.n()];
+        for i in 0..s {
+            let xs = &xstar[i * self.d..(i + 1) * self.d];
+            eval.row(xs, &self.x, self.d, &mut kstar);
+            mean.push(crate::linalg::dot(&kstar, alpha));
+            let w = f.solve_l_vec(&kstar);
+            let explained = crate::linalg::dot(&w, &w);
+            var.push((eval.outputscale - explained).max(0.0));
+        }
+        Ok(super::Predictions { mean, var, noise: self.hypers.noise() })
+    }
+
+    pub fn nll_value(&self) -> Result<f64> {
+        let (nll, _) = nll_and_grad(self.kind, &self.hypers, &self.x, &self.y, self.d)?;
+        Ok(nll)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed, 0);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        // Smooth target + noise.
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let xi = &x[i * d..(i + 1) * d];
+                (xi[0] * 1.3).sin() + 0.5 * xi[d - 1] + 0.05 * rng.normal()
+            })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let (x, y) = toy(40, 2, 71);
+        for ard in [false, true] {
+            let h = Hypers {
+                log_lengthscales: vec![0.2; if ard { 2 } else { 1 }],
+                log_outputscale: -0.1,
+                log_noise: (0.2f64).ln(),
+            };
+            let (_, grad) = nll_and_grad(KernelKind::Matern32, &h, &x, &y, 2).unwrap();
+            let p0 = h.to_vec();
+            let eps = 1e-5;
+            for i in 0..p0.len() {
+                let mut pp = p0.clone();
+                pp[i] += eps;
+                let mut pm = p0.clone();
+                pm[i] -= eps;
+                let hp = Hypers::from_vec(&pp, h.log_lengthscales.len());
+                let hm = Hypers::from_vec(&pm, h.log_lengthscales.len());
+                let (lp, _) = nll_and_grad(KernelKind::Matern32, &hp, &x, &y, 2).unwrap();
+                let (lm, _) = nll_and_grad(KernelKind::Matern32, &hm, &x, &y, 2).unwrap();
+                let fd = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (fd - grad[i]).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "ard={ard} param {i}: fd={fd} analytic={}",
+                    grad[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_nll() {
+        let (x, y) = toy(60, 2, 72);
+        let mut gp = CholeskyGp::new(
+            KernelKind::Matern32,
+            Hypers::default_init(None),
+            x,
+            y,
+            2,
+        );
+        let before = gp.nll_value().unwrap();
+        let after = gp.fit(5, 5, 0.1, 1e-4).unwrap();
+        assert!(after < before, "before={before} after={after}");
+    }
+
+    #[test]
+    fn interpolates_noiseless_data() {
+        // With tiny noise, predictions at training points ~= y.
+        let (x, y) = toy(50, 2, 73);
+        let mut h = Hypers::default_init(None);
+        h.log_noise = (1e-6f64).ln();
+        let mut gp = CholeskyGp::new(KernelKind::Matern32, h, x.clone(), y.clone(), 2);
+        let preds = gp.predict(&x).unwrap();
+        for i in 0..y.len() {
+            assert!((preds.mean[i] - y[i]).abs() < 1e-3, "i={i}");
+            assert!(preds.var[i] < 1e-4);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let (x, y) = toy(30, 1, 74);
+        let mut gp = CholeskyGp::new(
+            KernelKind::Matern32,
+            Hypers::default_init(None),
+            x,
+            y,
+            1,
+        );
+        let near = gp.predict(&[0.1]).unwrap().var[0];
+        let far = gp.predict(&[50.0]).unwrap().var[0];
+        assert!(far > near);
+        // Far from data, variance approaches the prior outputscale.
+        assert!((far - gp.hypers.outputscale()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noise_floor_respected() {
+        let (x, y) = toy(40, 1, 75);
+        let mut gp = CholeskyGp::new(
+            KernelKind::Matern32,
+            Hypers::default_init(None),
+            x,
+            y,
+            1,
+        );
+        gp.fit(3, 5, 0.3, 0.1).unwrap();
+        assert!(gp.hypers.noise() >= 0.1 - 1e-12);
+    }
+}

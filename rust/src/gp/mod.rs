@@ -1,0 +1,77 @@
+//! GP models: the exact BBMM GP (the paper's system), the Cholesky GP
+//! (the O(n^3) method it replaces — also the small-n exactness oracle and
+//! the pretraining engine), and the two approximate baselines the paper
+//! compares against (SGPR, SVGP).
+
+pub mod cholesky;
+pub mod exact;
+pub mod sgpr;
+pub mod svgp;
+
+use crate::data::Dataset;
+use crate::metrics;
+
+/// Predictive moments on a test set. `var` is the *latent* variance
+/// Var[f*]; `var_y` (latent + noise) is what NLL uses.
+#[derive(Clone, Debug)]
+pub struct Predictions {
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+    pub noise: f64,
+}
+
+impl Predictions {
+    pub fn rmse(&self, truth: &[f64]) -> f64 {
+        metrics::rmse(&self.mean, truth)
+    }
+
+    pub fn nll(&self, truth: &[f64]) -> f64 {
+        let var_y: Vec<f64> = self.var.iter().map(|v| v + self.noise).collect();
+        metrics::mean_nll(&self.mean, &var_y, truth)
+    }
+}
+
+/// Shared result record for every model (rows of Tables 1/2/3/5).
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    pub model: String,
+    pub dataset: String,
+    pub n_train: usize,
+    pub d: usize,
+    pub rmse: f64,
+    pub nll: f64,
+    pub train_seconds: f64,
+    pub precompute_seconds: f64,
+    /// Seconds to predict the full test set after precomputation.
+    pub predict_seconds: f64,
+    pub extra: Vec<(String, f64)>,
+}
+
+impl FitReport {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj, s, Json};
+        let mut fields = vec![
+            ("model", s(&self.model)),
+            ("dataset", s(&self.dataset)),
+            ("n_train", num(self.n_train as f64)),
+            ("d", num(self.d as f64)),
+            ("rmse", num(self.rmse)),
+            ("nll", num(self.nll)),
+            ("train_seconds", num(self.train_seconds)),
+            ("precompute_seconds", num(self.precompute_seconds)),
+            ("predict_seconds", num(self.predict_seconds)),
+        ];
+        let extras: Vec<Json> = self
+            .extra
+            .iter()
+            .map(|(k, v)| obj(vec![("key", s(k)), ("value", num(*v))]))
+            .collect();
+        fields.push(("extra", arr(extras)));
+        obj(fields)
+    }
+}
+
+/// Evaluate predictions against a dataset's test split.
+pub fn evaluate(preds: &Predictions, ds: &Dataset) -> (f64, f64) {
+    (preds.rmse(&ds.test_y), preds.nll(&ds.test_y))
+}

@@ -1,0 +1,379 @@
+//! SGPR baseline (Titsias 2009): sparse GP regression with m inducing
+//! points learned by maximizing the collapsed variational bound.
+//!
+//! The paper's first comparison method (m = 512). The bound and its
+//! gradients w.r.t. (Z, theta) are one AOT artifact (jax.grad at
+//! compile time, `python/compile/sgpr.py`); Rust owns the Adam loop,
+//! initialization, and the closed-form predictive posterior (computed
+//! natively — m x m systems).
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::data::Dataset;
+use crate::kernels::{Hypers, KernelEval, KernelKind};
+use crate::linalg::{cholesky, solve_lower, solve_lower_transpose};
+use crate::metrics::Stopwatch;
+use crate::opt::Adam;
+use crate::runtime::{Engine, Executable, Manifest};
+use crate::util::rng::Rng;
+
+/// Must match python/compile/svgp.py JITTER.
+pub const JITTER: f64 = 1.0e-4;
+/// Baseline artifacts are compiled at this feature width.
+pub const D_PAD: usize = 32;
+
+pub struct Sgpr {
+    pub kind: KernelKind,
+    pub ard: bool,
+    pub m: usize,
+    pub hypers: Hypers,
+    /// Inducing points, flat (m, D_PAD).
+    pub z: Vec<f64>,
+    d: usize,
+    n_pad: usize,
+    engine: Engine,
+    exe: Executable,
+    // Padded training tensors (artifact inputs).
+    x_pad: Vec<f32>,
+    y_pad: Vec<f32>,
+    mask: Vec<f32>,
+    // Originals for prediction.
+    x: Vec<f64>,
+    y: Vec<f64>,
+    pub train_seconds: f64,
+    pub losses: Vec<f64>,
+}
+
+/// Theta in the artifact wire layout: shared = [log_l, log_os, log_noise];
+/// ARD = [log_l_0..log_l_{D_PAD-1} (padded with 0), log_os, log_noise].
+pub fn pad_theta_wire(hypers: &Hypers, ard: bool, d: usize) -> Vec<f32> {
+    if !ard {
+        return hypers.theta_full_f32();
+    }
+    let mut t = vec![0.0f32; D_PAD + 2];
+    for (i, &l) in hypers.log_lengthscales.iter().enumerate().take(d) {
+        t[i] = l as f32;
+    }
+    t[D_PAD] = hypers.log_outputscale as f32;
+    t[D_PAD + 1] = hypers.log_noise as f32;
+    t
+}
+
+fn pad_rows(x: &[f64], d: usize, n_pad: usize) -> Vec<f32> {
+    let n = x.len() / d;
+    let mut out = vec![0.0f32; n_pad * D_PAD];
+    for i in 0..n {
+        for j in 0..d {
+            out[i * D_PAD + j] = x[i * d + j] as f32;
+        }
+    }
+    out
+}
+
+impl Sgpr {
+    /// Set up from the artifact menu: picks the smallest compiled n_pad
+    /// that fits the training set.
+    pub fn new(cfg: &Config, kind: KernelKind, m: usize, ds: &Dataset, rng: &mut Rng) -> Result<Sgpr> {
+        let manifest = Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let mode = if cfg.ard { "ard" } else { "shared" };
+        let n = ds.n_train();
+        let menu = manifest.dim_menu("sgpr", kind.name(), mode, "n");
+        let Some(&n_pad) = menu.iter().find(|&&np| np >= n) else {
+            bail!(
+                "no SGPR artifact large enough: n={n}, menu={menu:?} \
+                 (mode={mode}, m={m})"
+            );
+        };
+        let meta = manifest.require("sgpr", kind.name(), mode, "jnp", &[("m", m), ("n", n_pad)])?;
+        let engine = Engine::cpu()?;
+        let exe = engine.compile(&meta.file, 3)?;
+
+        // Z init: random training subset (standard practice).
+        let idx = rng.sample_indices(n, m.min(n));
+        let mut z = vec![0.0f64; m * D_PAD];
+        for (zi, &i) in idx.iter().enumerate() {
+            for j in 0..ds.d {
+                z[zi * D_PAD + j] = ds.train_x[i * ds.d + j];
+            }
+        }
+        // If m > n (tiny datasets), jitter-fill the rest.
+        for zi in idx.len()..m {
+            for j in 0..ds.d {
+                z[zi * D_PAD + j] = rng.normal();
+            }
+        }
+
+        let mut mask = vec![0.0f32; n_pad];
+        for mi in mask.iter_mut().take(n) {
+            *mi = 1.0;
+        }
+        let mut y_pad = vec![0.0f32; n_pad];
+        for i in 0..n {
+            y_pad[i] = ds.train_y[i] as f32;
+        }
+
+        let hypers = Hypers {
+            log_lengthscales: vec![0.0; if cfg.ard { ds.d } else { 1 }],
+            log_outputscale: 0.0,
+            log_noise: (0.5f64).ln(),
+        };
+
+        Ok(Sgpr {
+            kind,
+            ard: cfg.ard,
+            m,
+            hypers,
+            z,
+            d: ds.d,
+            n_pad,
+            engine,
+            exe,
+            x_pad: pad_rows(&ds.train_x, ds.d, n_pad),
+            y_pad,
+            mask,
+            x: ds.train_x.clone(),
+            y: ds.train_y.clone(),
+            train_seconds: 0.0,
+            losses: vec![],
+        })
+    }
+
+    /// Theta in the artifact wire layout (ARD padded to D_PAD + 2).
+    fn theta_wire(&self) -> Vec<f32> {
+        pad_theta_wire(&self.hypers, self.ard, self.d)
+    }
+
+    fn theta_from_wire(&self, t: &[f32]) -> Hypers {
+        if !self.ard {
+            Hypers {
+                log_lengthscales: vec![t[0] as f64],
+                log_outputscale: t[1] as f64,
+                log_noise: t[2] as f64,
+            }
+        } else {
+            Hypers {
+                log_lengthscales: t[..self.d].iter().map(|&v| v as f64).collect(),
+                log_outputscale: t[D_PAD] as f64,
+                log_noise: t[D_PAD + 1] as f64,
+            }
+        }
+    }
+
+    /// One artifact evaluation: (loss, dZ, dtheta) at current params.
+    fn step_eval(&self) -> Result<(f64, Vec<f32>, Vec<f32>)> {
+        let z32: Vec<f32> = self.z.iter().map(|&v| v as f32).collect();
+        let theta = self.theta_wire();
+        let mut out = self.exe.run(&[
+            (&z32, &[self.m, D_PAD]),
+            (&theta, &[theta.len()]),
+            (&self.x_pad, &[self.n_pad, D_PAD]),
+            (&self.y_pad, &[self.n_pad]),
+            (&self.mask, &[self.n_pad]),
+        ])?;
+        let loss = out[0][0] as f64;
+        let gz = out.remove(1);
+        let gt = out.remove(1);
+        Ok((loss, gz, gt))
+    }
+
+    /// Paper recipe: `iters` (100) iterations of Adam at lr 0.1.
+    pub fn train(&mut self, iters: usize, lr: f64) -> Result<()> {
+        let sw = Stopwatch::start();
+        let nz = self.z.len();
+        let ntheta = self.theta_wire().len();
+        let mut adam = Adam::new(nz + ntheta, lr);
+        for _ in 0..iters {
+            let (loss, gz, gt) = self.step_eval()?;
+            if !loss.is_finite() {
+                bail!("SGPR loss diverged (non-finite)");
+            }
+            self.losses.push(loss);
+            let mut params: Vec<f64> = self
+                .z
+                .iter()
+                .copied()
+                .chain(self.theta_wire().iter().map(|&v| v as f64))
+                .collect();
+            let grad: Vec<f64> = gz
+                .iter()
+                .map(|&v| v as f64)
+                .chain(gt.iter().map(|&v| v as f64))
+                .collect();
+            adam.step(&mut params, &grad);
+            self.z.copy_from_slice(&params[..nz]);
+            let theta32: Vec<f32> = params[nz..].iter().map(|&v| v as f32).collect();
+            self.hypers = self.theta_from_wire(&theta32);
+        }
+        self.train_seconds = sw.total();
+        Ok(())
+    }
+
+    /// Closed-form SGPR predictive posterior (native m x m math; mirrors
+    /// `sgpr_predict_ref` in python/compile/sgpr.py).
+    pub fn predict(&self, xstar: &[f64]) -> Result<super::Predictions> {
+        // Prediction runs in the padded D_PAD feature space (Z lives
+        // there); ARD lengthscales must be padded too — padded coordinates
+        // are zero so the padded lengthscale value is irrelevant (use 1).
+        let mut h_pad = self.hypers.clone();
+        if self.ard {
+            h_pad.log_lengthscales.resize(D_PAD, 0.0);
+        }
+        let eval = KernelEval::new(self.kind, &h_pad);
+        let s2 = self.hypers.noise();
+        let os = self.hypers.outputscale();
+        let m = self.m;
+        let n = self.y.len();
+        let s = xstar.len() / self.d;
+
+        // Work in the padded feature space (Z lives there; padded dims of
+        // X are zero so geometry is unchanged).
+        let x_pad64: Vec<f64> = pad_rows(&self.x, self.d, n).iter().map(|&v| v as f64).collect();
+        let xs_pad64: Vec<f64> = pad_rows(xstar, self.d, s).iter().map(|&v| v as f64).collect();
+
+        let mut kzz = eval.cross(&self.z, &self.z, D_PAD);
+        kzz.add_diag(JITTER);
+        let lz = cholesky(&kzz)?;
+        let kzx = eval.cross(&self.z, &x_pad64, D_PAD); // (m, n)
+        let a = {
+            let mut a = solve_lower(&lz.l, &kzx);
+            a.scale(1.0 / s2.sqrt());
+            a
+        };
+        let mut b = a.matmul(&a.transpose());
+        b.add_diag(1.0);
+        let lb = cholesky(&b)?;
+        let ay = a.matvec(&self.y);
+        let mut c = lb.solve_l_vec(&ay);
+        for v in &mut c {
+            *v /= s2.sqrt();
+        }
+
+        let kzs = eval.cross(&self.z, &xs_pad64, D_PAD); // (m, s)
+        let proj = solve_lower(&lz.l, &kzs);
+        let proj_b = solve_lower(&lb.l, &proj);
+        let mut mean = Vec::with_capacity(s);
+        let mut var = Vec::with_capacity(s);
+        for j in 0..s {
+            let mut mu = 0.0;
+            let mut p2 = 0.0;
+            let mut pb2 = 0.0;
+            for i in 0..m {
+                mu += proj_b[(i, j)] * c[i];
+                p2 += proj[(i, j)] * proj[(i, j)];
+                pb2 += proj_b[(i, j)] * proj_b[(i, j)];
+            }
+            mean.push(mu);
+            var.push((os - p2 + pb2).max(0.0));
+        }
+        let _ = solve_lower_transpose; // (kept for symmetry with svgp)
+        Ok(super::Predictions { mean, var, noise: s2 })
+    }
+
+    pub fn engine_platform(&self) -> String {
+        self.engine.platform()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    fn toy_ds(n_total: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed, 0);
+        let mut raw = crate::data::RawData {
+            name: "toy".into(),
+            d,
+            x: (0..n_total * d).map(|_| rng.normal()).collect(),
+            y: vec![0.0; n_total],
+        };
+        for i in 0..n_total {
+            let xi = raw.x[i * d];
+            raw.y[i] = (1.2 * xi).sin() + 0.05 * rng.normal();
+        }
+        raw.prepare(32, &mut rng)
+    }
+
+    #[test]
+    fn sgpr_trains_and_beats_prior() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let ds = toy_ds(800, 2, 91);
+        let cfg = Config::default();
+        let mut rng = Rng::new(92, 0);
+        let mut sgpr = Sgpr::new(&cfg, KernelKind::Matern32, 64, &ds, &mut rng).unwrap();
+        sgpr.train(40, 0.1).unwrap();
+        // Loss decreased over training.
+        assert!(sgpr.losses.last().unwrap() < sgpr.losses.first().unwrap());
+        let preds = sgpr.predict(&ds.test_x).unwrap();
+        let rmse = preds.rmse(&ds.test_y);
+        assert!(rmse < 0.6, "rmse={rmse}");
+        assert!(preds.var.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn sgpr_with_z_equal_x_approaches_exact_gp() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // With Z = X (m = n), SGPR's posterior equals the exact GP's.
+        let ds = toy_ds(144, 2, 93); // n_train = 64 = available artifact m
+        let cfg = Config::default();
+        let mut rng = Rng::new(94, 0);
+        let n = ds.n_train();
+        assert!(n >= 64);
+        let mut sgpr = Sgpr::new(&cfg, KernelKind::Matern32, 64, &ds, &mut rng).unwrap();
+        // Plant Z = first 64 training points; no training (same hypers).
+        for (zi, i) in (0..64).enumerate() {
+            for j in 0..ds.d {
+                sgpr.z[zi * D_PAD + j] = ds.train_x[i * ds.d + j];
+            }
+            for j in ds.d..D_PAD {
+                sgpr.z[zi * D_PAD + j] = 0.0;
+            }
+        }
+        let preds = sgpr.predict(&ds.test_x).unwrap();
+
+        let mut oracle = crate::gp::cholesky::CholeskyGp::new(
+            KernelKind::Matern32,
+            sgpr.hypers.clone(),
+            ds.train_x[..64 * ds.d].to_vec(),
+            ds.train_y[..64].to_vec(),
+            ds.d,
+        );
+        let want = oracle.predict(&ds.test_x).unwrap();
+        // SGPR trained on the same 64 points with Z = those points is the
+        // exact GP (up to jitter).
+        let sgpr64 = {
+            let mut ds64 = ds.clone();
+            ds64.train_x.truncate(64 * ds.d);
+            ds64.train_y.truncate(64);
+            let mut s = Sgpr::new(&cfg, KernelKind::Matern32, 64, &ds64, &mut rng).unwrap();
+            for (zi, i) in (0..64).enumerate() {
+                for j in 0..ds.d {
+                    s.z[zi * D_PAD + j] = ds64.train_x[i * ds.d + j];
+                }
+                for j in ds.d..D_PAD {
+                    s.z[zi * D_PAD + j] = 0.0;
+                }
+            }
+            s.predict(&ds.test_x).unwrap()
+        };
+        for i in 0..ds.n_test().min(50) {
+            assert!(
+                (sgpr64.mean[i] - want.mean[i]).abs() < 0.02,
+                "mean[{i}]: {} vs {}",
+                sgpr64.mean[i],
+                want.mean[i]
+            );
+        }
+        let _ = preds;
+    }
+}

@@ -1,0 +1,269 @@
+//! SVGP baseline (Hensman et al. 2013): stochastic variational GP with
+//! minibatch ELBO optimization.
+//!
+//! The paper's second comparison method (m = 1024, minibatch 1024, Adam
+//! lr 0.01, 100 epochs). The per-step ELBO + gradients are one AOT
+//! artifact (`python/compile/svgp.py`); Rust owns minibatch sampling, the
+//! Adam loop over all (Z, mu, L_raw, theta) parameters, and the native
+//! predictive posterior.
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::data::Dataset;
+use crate::gp::sgpr::{pad_theta_wire, D_PAD, JITTER};
+use crate::kernels::{Hypers, KernelEval, KernelKind};
+use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
+use crate::metrics::Stopwatch;
+use crate::opt::Adam;
+use crate::runtime::{Engine, Executable, Manifest};
+use crate::util::rng::Rng;
+
+pub struct Svgp {
+    pub kind: KernelKind,
+    pub ard: bool,
+    pub m: usize,
+    pub b: usize,
+    pub hypers: Hypers,
+    /// Inducing points (m, D_PAD), variational mean (m), raw scale (m, m).
+    pub z: Vec<f64>,
+    pub mu: Vec<f64>,
+    pub l_raw: Vec<f64>,
+    d: usize,
+    #[allow(dead_code)]
+    engine: Engine,
+    exe: Executable,
+    x: Vec<f64>,
+    y: Vec<f64>,
+    pub train_seconds: f64,
+    pub elbos: Vec<f64>,
+}
+
+impl Svgp {
+    pub fn new(cfg: &Config, kind: KernelKind, m: usize, ds: &Dataset, rng: &mut Rng) -> Result<Svgp> {
+        let manifest = Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let mode = if cfg.ard { "ard" } else { "shared" };
+        let meta = manifest.require("svgp", kind.name(), mode, "jnp", &[("m", m)])?;
+        let b = meta.dim("b").unwrap_or(1024);
+        let engine = Engine::cpu()?;
+        let exe = engine.compile(&meta.file, 5)?;
+
+        let n = ds.n_train();
+        let idx = rng.sample_indices(n, m.min(n));
+        let mut z = vec![0.0f64; m * D_PAD];
+        for (zi, &i) in idx.iter().enumerate() {
+            for j in 0..ds.d {
+                z[zi * D_PAD + j] = ds.train_x[i * ds.d + j];
+            }
+        }
+        for zi in idx.len()..m {
+            for j in 0..ds.d {
+                z[zi * D_PAD + j] = rng.normal();
+            }
+        }
+
+        Ok(Svgp {
+            kind,
+            ard: cfg.ard,
+            m,
+            b,
+            hypers: Hypers {
+                log_lengthscales: vec![0.0; if cfg.ard { ds.d } else { 1 }],
+                log_outputscale: 0.0,
+                log_noise: (0.5f64).ln(),
+            },
+            z,
+            mu: vec![0.0; m],
+            l_raw: vec![0.0; m * m], // S = I (diag exp(0))
+            d: ds.d,
+            engine,
+            exe,
+            x: ds.train_x.clone(),
+            y: ds.train_y.clone(),
+            train_seconds: 0.0,
+            elbos: vec![],
+        })
+    }
+
+    fn theta_wire(&self) -> Vec<f32> {
+        pad_theta_wire(&self.hypers, self.ard, self.d)
+    }
+
+    /// Minibatch step: sample b indices (with replacement if b > n),
+    /// evaluate ELBO + grads through the artifact, Adam-update everything.
+    pub fn train(&mut self, epochs: usize, lr: f64, rng: &mut Rng) -> Result<()> {
+        let sw = Stopwatch::start();
+        let n = self.y.len();
+        let steps_per_epoch = n.div_ceil(self.b).max(1);
+        let nz = self.z.len();
+        let nmu = self.mu.len();
+        let nl = self.l_raw.len();
+        let ntheta = self.theta_wire().len();
+        let mut adam = Adam::new(nz + nmu + nl + ntheta, lr);
+        let scale = n as f64 / self.b as f64;
+
+        let mut xb = vec![0.0f32; self.b * D_PAD];
+        let mut yb = vec![0.0f32; self.b];
+        for _epoch in 0..epochs {
+            let perm = rng.permutation(n);
+            for step in 0..steps_per_epoch {
+                // Wrap-around minibatch (artifact shape is fixed at b).
+                for k in 0..self.b {
+                    let i = perm[(step * self.b + k) % n];
+                    for j in 0..self.d {
+                        xb[k * D_PAD + j] = self.x[i * self.d + j] as f32;
+                    }
+                    for j in self.d..D_PAD {
+                        xb[k * D_PAD + j] = 0.0;
+                    }
+                    yb[k] = self.y[i] as f32;
+                }
+                let z32: Vec<f32> = self.z.iter().map(|&v| v as f32).collect();
+                let mu32: Vec<f32> = self.mu.iter().map(|&v| v as f32).collect();
+                let l32: Vec<f32> = self.l_raw.iter().map(|&v| v as f32).collect();
+                let theta = self.theta_wire();
+                let scale32 = [scale as f32];
+                let out = self.exe.run(&[
+                    (&z32, &[self.m, D_PAD]),
+                    (&mu32, &[self.m]),
+                    (&l32, &[self.m, self.m]),
+                    (&theta, &[theta.len()]),
+                    (&xb, &[self.b, D_PAD]),
+                    (&yb, &[self.b]),
+                    (&scale32, &[]),
+                ])?;
+                let elbo = out[0][0] as f64;
+                if !elbo.is_finite() {
+                    bail!("SVGP ELBO diverged (non-finite)");
+                }
+                self.elbos.push(elbo);
+
+                let mut params: Vec<f64> = Vec::with_capacity(nz + nmu + nl + ntheta);
+                params.extend(self.z.iter());
+                params.extend(self.mu.iter());
+                params.extend(self.l_raw.iter());
+                params.extend(theta.iter().map(|&v| v as f64));
+                let mut grad: Vec<f64> = Vec::with_capacity(params.len());
+                for g in &out[1..5] {
+                    grad.extend(g.iter().map(|&v| v as f64));
+                }
+                adam.step(&mut params, &grad);
+                self.z.copy_from_slice(&params[..nz]);
+                self.mu.copy_from_slice(&params[nz..nz + nmu]);
+                self.l_raw.copy_from_slice(&params[nz + nmu..nz + nmu + nl]);
+                let tw: Vec<f32> =
+                    params[nz + nmu + nl..].iter().map(|&v| v as f32).collect();
+                self.hypers = if self.ard {
+                    Hypers {
+                        log_lengthscales: tw[..self.d].iter().map(|&v| v as f64).collect(),
+                        log_outputscale: tw[D_PAD] as f64,
+                        log_noise: tw[D_PAD + 1] as f64,
+                    }
+                } else {
+                    Hypers {
+                        log_lengthscales: vec![tw[0] as f64],
+                        log_outputscale: tw[1] as f64,
+                        log_noise: tw[2] as f64,
+                    }
+                };
+            }
+        }
+        self.train_seconds = sw.total();
+        Ok(())
+    }
+
+    /// Native predictive posterior (mirrors `svgp_predict_ref`).
+    pub fn predict(&self, xstar: &[f64]) -> Result<super::Predictions> {
+        // Prediction runs in the padded D_PAD feature space (Z lives
+        // there); ARD lengthscales must be padded too — padded coordinates
+        // are zero so the padded lengthscale value is irrelevant (use 1).
+        let mut h_pad = self.hypers.clone();
+        if self.ard {
+            h_pad.log_lengthscales.resize(D_PAD, 0.0);
+        }
+        let eval = KernelEval::new(self.kind, &h_pad);
+        let os = self.hypers.outputscale();
+        let m = self.m;
+        let s = xstar.len() / self.d;
+        let xs_pad: Vec<f64> = {
+            let n = s;
+            let mut out = vec![0.0f64; n * D_PAD];
+            for i in 0..n {
+                for j in 0..self.d {
+                    out[i * D_PAD + j] = xstar[i * self.d + j];
+                }
+            }
+            out
+        };
+        let mut kzz = eval.cross(&self.z, &self.z, D_PAD);
+        kzz.add_diag(JITTER);
+        let lz = cholesky(&kzz)?;
+        let kzs = eval.cross(&self.z, &xs_pad, D_PAD); // (m, s)
+        let a = solve_lower(&lz.l, &kzs);
+        let alpha = lz.solve_l_vec(&self.mu);
+        let w = solve_lower_transpose(&lz.l, &a); // Kzz^{-1} Kzs
+        // L = tril(l_raw, -1) + diag(exp(diag)).
+        let mut l = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..i {
+                l[(i, j)] = self.l_raw[i * m + j];
+            }
+            l[(i, i)] = self.l_raw[i * m + i].exp();
+        }
+        let u = l.t_matmul(&w); // (m, s)
+        let mut mean = Vec::with_capacity(s);
+        let mut var = Vec::with_capacity(s);
+        for j in 0..s {
+            let mut mu = 0.0;
+            let mut a2 = 0.0;
+            let mut u2 = 0.0;
+            for i in 0..m {
+                mu += a[(i, j)] * alpha[i];
+                a2 += a[(i, j)] * a[(i, j)];
+                u2 += u[(i, j)] * u[(i, j)];
+            }
+            mean.push(mu);
+            var.push((os - a2 + u2).max(0.0));
+        }
+        Ok(super::Predictions { mean, var, noise: self.hypers.noise() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn svgp_trains_and_improves_elbo() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rng = Rng::new(95, 0);
+        let mut raw = crate::data::RawData {
+            name: "toy".into(),
+            d: 2,
+            x: (0..1200 * 2).map(|_| rng.normal()).collect(),
+            y: vec![0.0; 1200],
+        };
+        for i in 0..1200 {
+            raw.y[i] = (raw.x[i * 2] * 1.3).sin() + 0.1 * rng.normal();
+        }
+        let ds = raw.prepare(32, &mut rng);
+        let cfg = Config::default();
+        let mut svgp = Svgp::new(&cfg, KernelKind::Matern32, 64, &ds, &mut rng).unwrap();
+        svgp.train(20, 0.05, &mut rng).unwrap();
+        // ELBO should trend upward.
+        let first: f64 = svgp.elbos[..3].iter().sum::<f64>() / 3.0;
+        let n = svgp.elbos.len();
+        let last: f64 = svgp.elbos[n - 3..].iter().sum::<f64>() / 3.0;
+        assert!(last > first, "elbo {first} -> {last}");
+        let preds = svgp.predict(&ds.test_x).unwrap();
+        let rmse = preds.rmse(&ds.test_y);
+        assert!(rmse < 0.7, "rmse={rmse}");
+    }
+}

@@ -1,0 +1,323 @@
+//! Rust-native kernel evaluation.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (keep conventions in
+//! sync). Used for: pivoted-Cholesky preconditioner rows (O(nk) — too small
+//! to ship to a device), SGPR/SVGP prediction-time cross-covariances, the
+//! native fallback tile backend (`exec::native`), and as a test oracle for
+//! the PJRT path.
+
+pub const SQRT3: f64 = 1.732_050_807_568_877_2;
+
+/// Kernel family. The paper's experiments use Matern-3/2 throughout; RBF is
+/// wired for ablations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Matern32,
+    Rbf,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Matern32 => "matern32",
+            KernelKind::Rbf => "rbf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "matern32" => Some(KernelKind::Matern32),
+            "rbf" => Some(KernelKind::Rbf),
+            _ => None,
+        }
+    }
+}
+
+/// Hyperparameters, stored as log-values (the optimizer's coordinates).
+///
+/// `log_lengthscales` has length 1 (shared across dimensions — Table 1) or
+/// d (independent/ARD — Table 3). `log_outputscale` is log s^2,
+/// `log_noise` is log sigma^2.
+#[derive(Clone, Debug)]
+pub struct Hypers {
+    pub log_lengthscales: Vec<f64>,
+    pub log_outputscale: f64,
+    pub log_noise: f64,
+}
+
+impl Hypers {
+    pub fn default_init(ard_dims: Option<usize>) -> Self {
+        Hypers {
+            log_lengthscales: vec![0.0; ard_dims.unwrap_or(1)],
+            log_outputscale: 0.0,
+            log_noise: (0.1f64).ln(), // paper: noise constrained >= 0.1 on hard sets
+        }
+    }
+
+    pub fn is_ard(&self) -> bool {
+        self.log_lengthscales.len() > 1
+    }
+
+    pub fn noise(&self) -> f64 {
+        self.log_noise.exp()
+    }
+
+    pub fn outputscale(&self) -> f64 {
+        self.log_outputscale.exp()
+    }
+
+    /// Number of optimizable parameters.
+    pub fn dim(&self) -> usize {
+        self.log_lengthscales.len() + 2
+    }
+
+    /// Flatten to the optimizer's parameter vector:
+    /// [log_l.., log_os, log_noise].
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut v = self.log_lengthscales.clone();
+        v.push(self.log_outputscale);
+        v.push(self.log_noise);
+        v
+    }
+
+    pub fn from_vec(v: &[f64], n_ls: usize) -> Self {
+        assert_eq!(v.len(), n_ls + 2);
+        Hypers {
+            log_lengthscales: v[..n_ls].to_vec(),
+            log_outputscale: v[n_ls],
+            log_noise: v[n_ls + 1],
+        }
+    }
+
+    /// Kernel-only theta in the artifact wire layout (f32):
+    /// shared: [log_l, log_os];  ard: [log_l_0.., log_os].
+    pub fn theta_f32(&self) -> Vec<f32> {
+        let mut t: Vec<f32> = self.log_lengthscales.iter().map(|&x| x as f32).collect();
+        t.push(self.log_outputscale as f32);
+        t
+    }
+
+    /// Full theta including noise (SGPR/SVGP artifacts).
+    pub fn theta_full_f32(&self) -> Vec<f32> {
+        let mut t = self.theta_f32();
+        t.push(self.log_noise as f32);
+        t
+    }
+
+    /// Apply the paper's noise floor (sigma^2 >= floor) used to regularize
+    /// ill-conditioned datasets (houseelectric).
+    pub fn clamp_noise_floor(&mut self, floor: f64) {
+        if self.noise() < floor {
+            self.log_noise = floor.ln();
+        }
+    }
+}
+
+/// Weighted squared distance with per-dim inverse lengthscales folded in.
+#[inline]
+pub fn scaled_sq_dist(a: &[f64], b: &[f64], inv_ls: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    if inv_ls.len() == 1 {
+        let w = inv_ls[0] * inv_ls[0];
+        for i in 0..a.len() {
+            let d = a[i] - b[i];
+            s += d * d;
+        }
+        s * w
+    } else {
+        for i in 0..a.len() {
+            let d = (a[i] - b[i]) * inv_ls[i];
+            s += d * d;
+        }
+        s
+    }
+}
+
+/// Correlation rho(r2_scaled) — covariance is outputscale * rho.
+#[inline]
+pub fn rho(kind: KernelKind, r2: f64) -> f64 {
+    match kind {
+        KernelKind::Matern32 => {
+            let u = (3.0 * r2).sqrt();
+            (1.0 + u) * (-u).exp()
+        }
+        KernelKind::Rbf => (-0.5 * r2).exp(),
+    }
+}
+
+/// Precomputed per-hyper state for fast row evaluation.
+pub struct KernelEval {
+    pub kind: KernelKind,
+    pub inv_ls: Vec<f64>,
+    pub outputscale: f64,
+}
+
+impl KernelEval {
+    pub fn new(kind: KernelKind, h: &Hypers) -> Self {
+        KernelEval {
+            kind,
+            inv_ls: h.log_lengthscales.iter().map(|&l| (-l).exp()).collect(),
+            outputscale: h.outputscale(),
+        }
+    }
+
+    /// k(a, b).
+    #[inline]
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        self.outputscale * rho(self.kind, scaled_sq_dist(a, b, &self.inv_ls))
+    }
+
+    /// k(a, b) together with d k / d log_l_i for each lengthscale
+    /// parameter (1 shared / d ARD). Closed forms (see
+    /// python/compile/kernels/matern.py):
+    ///   matern32: dk/dlog_l_i = 3 os e^{-u} w_i d_i^2 ; shared: os u^2 e^{-u}
+    ///   rbf:      dk/dlog_l_i = k w_i d_i^2 ;           shared: k r~^2
+    pub fn eval_with_grads(&self, a: &[f64], b: &[f64]) -> (f64, Vec<f64>) {
+        let r2 = scaled_sq_dist(a, b, &self.inv_ls);
+        let (k, e) = match self.kind {
+            KernelKind::Matern32 => {
+                let u = (3.0 * r2).sqrt();
+                let e = (-u).exp();
+                (self.outputscale * (1.0 + u) * e, e)
+            }
+            KernelKind::Rbf => {
+                let rho = (-0.5 * r2).exp();
+                (self.outputscale * rho, rho)
+            }
+        };
+        let grads = if self.inv_ls.len() == 1 {
+            let g = match self.kind {
+                KernelKind::Matern32 => self.outputscale * e * 3.0 * r2,
+                KernelKind::Rbf => k * r2,
+            };
+            vec![g]
+        } else {
+            (0..a.len())
+                .map(|i| {
+                    let di = (a[i] - b[i]) * self.inv_ls[i];
+                    let d2 = di * di;
+                    match self.kind {
+                        KernelKind::Matern32 => 3.0 * self.outputscale * e * d2,
+                        KernelKind::Rbf => k * d2,
+                    }
+                })
+                .collect()
+        };
+        (k, grads)
+    }
+
+    /// One kernel row: k(x, X[rows]) for X given as flat row-major (n, d).
+    pub fn row(&self, x: &[f64], xs: &[f64], d: usize, out: &mut [f64]) {
+        let n = xs.len() / d;
+        assert_eq!(out.len(), n);
+        for i in 0..n {
+            out[i] = self.eval(x, &xs[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Dense covariance matrix K(A, B) — small problems only (tests, m x m
+    /// inducing blocks).
+    pub fn cross(&self, a: &[f64], b: &[f64], d: usize) -> crate::linalg::Mat {
+        let na = a.len() / d;
+        let nb = b.len() / d;
+        let mut k = crate::linalg::Mat::zeros(na, nb);
+        for i in 0..na {
+            let ai = &a[i * d..(i + 1) * d];
+            for j in 0..nb {
+                k[(i, j)] = self.eval(ai, &b[j * d..(j + 1) * d]);
+            }
+        }
+        k
+    }
+
+    /// Dense K(X, X) + noise * I.
+    pub fn gram_with_noise(&self, x: &[f64], d: usize, noise: f64) -> crate::linalg::Mat {
+        let mut k = self.cross(x, x, d);
+        k.add_diag(noise);
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matern_at_zero_is_outputscale() {
+        let h = Hypers { log_lengthscales: vec![0.3], log_outputscale: 0.7, log_noise: 0.0 };
+        let e = KernelEval::new(KernelKind::Matern32, &h);
+        let x = [1.0, 2.0, 3.0];
+        assert!((e.eval(&x, &x) - 0.7f64.exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matern_known_value() {
+        // l = 1, os = 1, r = 1: k = (1+sqrt3) exp(-sqrt3)
+        let h = Hypers { log_lengthscales: vec![0.0], log_outputscale: 0.0, log_noise: 0.0 };
+        let e = KernelEval::new(KernelKind::Matern32, &h);
+        let k = e.eval(&[0.0], &[1.0]);
+        let want = (1.0 + SQRT3) * (-SQRT3).exp();
+        assert!((k - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rbf_known_value() {
+        let h = Hypers { log_lengthscales: vec![0.0], log_outputscale: 0.0, log_noise: 0.0 };
+        let e = KernelEval::new(KernelKind::Rbf, &h);
+        let k = e.eval(&[0.0, 0.0], &[1.0, 1.0]);
+        assert!((k - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ard_matches_shared_when_tied() {
+        let d = 4;
+        let shared = Hypers { log_lengthscales: vec![0.4], log_outputscale: 0.1, log_noise: 0.0 };
+        let ard = Hypers { log_lengthscales: vec![0.4; d], log_outputscale: 0.1, log_noise: 0.0 };
+        let es = KernelEval::new(KernelKind::Matern32, &shared);
+        let ea = KernelEval::new(KernelKind::Matern32, &ard);
+        let a = [0.1, -0.2, 0.5, 1.0];
+        let b = [1.0, 0.3, -0.7, 0.2];
+        assert!((es.eval(&a, &b) - ea.eval(&a, &b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernel_decreases_with_distance() {
+        let h = Hypers::default_init(None);
+        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
+            let e = KernelEval::new(kind, &h);
+            let mut last = f64::INFINITY;
+            for r in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0] {
+                let k = e.eval(&[0.0], &[r]);
+                assert!(k <= last + 1e-15);
+                assert!(k > 0.0);
+                last = k;
+            }
+        }
+    }
+
+    #[test]
+    fn hypers_roundtrip() {
+        let h = Hypers { log_lengthscales: vec![0.1, 0.2, 0.3], log_outputscale: -0.5, log_noise: -2.0 };
+        let v = h.to_vec();
+        let h2 = Hypers::from_vec(&v, 3);
+        assert_eq!(h.log_lengthscales, h2.log_lengthscales);
+        assert_eq!(h.log_outputscale, h2.log_outputscale);
+        assert_eq!(h.log_noise, h2.log_noise);
+        assert_eq!(h.theta_full_f32().len(), 5);
+    }
+
+    #[test]
+    fn gram_is_symmetric_with_noise_diag() {
+        let h = Hypers::default_init(None);
+        let e = KernelEval::new(KernelKind::Matern32, &h);
+        let x = [0.0, 1.0, 2.0, 5.0];
+        let k = e.gram_with_noise(&x, 1, 0.25);
+        for i in 0..4 {
+            assert!((k[(i, i)] - (1.0 + 0.25)).abs() < 1e-12);
+            for j in 0..4 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12);
+            }
+        }
+    }
+}

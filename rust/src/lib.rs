@@ -1,0 +1,37 @@
+//! # exactgp — Exact Gaussian Processes on a Million Data Points
+//!
+//! A Rust + JAX + Pallas reproduction of Wang, Pleiss, Gardner, Tyree,
+//! Weinberger & Wilson, *Exact Gaussian Processes on a Million Data
+//! Points* (NeurIPS 2019).
+//!
+//! The system is a three-layer stack (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the mBCG
+//!   solver accessing the kernel only through partitioned, distributed
+//!   matrix multiplies; the pivoted-Cholesky preconditioner; O(n)-memory
+//!   partition planning; a multi-worker device pool; training recipes and
+//!   prediction caches; plus the SGPR/SVGP baselines.
+//! * **L2 (python/compile)** — JAX entry points AOT-lowered once to HLO
+//!   text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas tiles fusing
+//!   distance -> covariance -> matvec in VMEM.
+//!
+//! Python never runs at train/predict time: the binary loads
+//! `artifacts/manifest.json`, compiles the HLO with the PJRT CPU client,
+//! and runs everything from Rust.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod opt;
+pub mod partition;
+pub mod runtime;
+pub mod solvers;
+pub mod util;

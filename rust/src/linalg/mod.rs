@@ -1,0 +1,312 @@
+//! Dense linear algebra substrate.
+//!
+//! No LAPACK/BLAS/ndarray in the offline dependency closure, so the small
+//! dense problems the coordinator owns are implemented here:
+//!
+//! * Cholesky factorization + triangular solves — the O(n^3) baseline GP
+//!   (`gp::cholesky`), the m x m inducing-point systems (SGPR/SVGP
+//!   prediction), and the k x k Woodbury core of the pivoted-Cholesky
+//!   preconditioner;
+//! * symmetric tridiagonal eigensolver (implicit-shift QL) — turning the
+//!   mBCG Lanczos coefficients into log-determinant quadrature (BBMM);
+//! * the usual vector/matrix kit (gemm, gemv, dots, norms).
+//!
+//! Everything is f64: these paths are small, and keeping the *solver state*
+//! in f64 while the kernel tiles run in f32 mirrors the paper's setup (GPU
+//! f32 MVMs + stable reductions).
+
+pub mod chol;
+pub mod eig;
+
+pub use chol::{cholesky, solve_lower, solve_lower_transpose, solve_psd, CholeskyFactor};
+pub use eig::tridiag_eig;
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// self @ other (naive ikj-ordered gemm — cache-friendly for row-major).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for (k, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for j in 0..other.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// self^T @ other without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = other.row(k);
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for j in 0..other.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|i| dot(self.row(i), v)).collect()
+    }
+
+    pub fn scale(&mut self, a: f64) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += y;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Add a * I in place (square only).
+    pub fn add_diag(&mut self, a: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += a;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Cast to the f32 wire format used by the tile backends.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector kit
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled accumulation: measurably faster than the naive loop
+    // and deterministic (fixed association order).
+    let n = a.len();
+    let mut acc = [0.0f64; 4];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn scale_vec(a: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Mat::eye(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let b = Mat::from_rows(vec![vec![7.0, 8.0], vec![9.0, 10.0], vec![11.0, 12.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(vec![vec![58.0, 64.0], vec![139.0, 154.0]]));
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = crate::util::rng::Rng::new(1, 0);
+        let a = Mat::from_vec(5, 3, rng.normal_vec(15));
+        let b = Mat::from_vec(5, 4, rng.normal_vec(20));
+        let fast = a.t_matmul(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!(fast.max_abs_diff(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = crate::util::rng::Rng::new(2, 0);
+        let a = Mat::from_vec(4, 6, rng.normal_vec(24));
+        let v = rng.normal_vec(6);
+        let got = a.matvec(&v);
+        let want = a.matmul(&Mat::col_vec(&v));
+        for i in 0..4 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = crate::util::rng::Rng::new(3, 0);
+        for n in [0, 1, 3, 4, 5, 17, 100] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Mat::from_rows(vec![vec![1.5, -2.25], vec![0.0, 3.0]]);
+        let back = Mat::from_f32(2, 2, &m.to_f32());
+        assert!(m.max_abs_diff(&back) < 1e-6);
+    }
+}

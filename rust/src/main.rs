@@ -1,0 +1,176 @@
+//! exactgp — leader entrypoint.
+//!
+//! Subcommands:
+//!   train        train one model on one dataset and report metrics
+//!   reproduce    run a paper experiment (table1|table2|fig1..fig4|table3|table5)
+//!   datasets     list the benchmark suite (paper signature + scaled size)
+//!   info         runtime / artifact environment report
+//!
+//! Common flags: --config <file.toml>, --set sec.key=value (repeatable),
+//! --dataset, --model, --scale, --workers, --backend, --flavor, --trials.
+
+use anyhow::{bail, Result};
+
+use exactgp::cli::Args;
+use exactgp::config::Config;
+use exactgp::coordinator::{self, Model};
+use exactgp::data::synthetic::{Scale, SUITE};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::load(args.get("config"), &args.overrides()?)?;
+    if let Some(s) = args.get("scale") {
+        cfg.scale = Scale::parse(s).ok_or_else(|| anyhow::anyhow!("bad --scale {s:?}"))?;
+    }
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = exactgp::config::Backend::parse(b)?;
+    }
+    if let Some(f) = args.get("flavor") {
+        cfg.flavor = exactgp::config::Flavor::parse(f)?;
+    }
+    if let Some(t) = args.get_usize("trials")? {
+        cfg.trials = t;
+    }
+    if args.flag_present("ard") {
+        cfg.ard = true;
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("datasets") => cmd_datasets(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (train|reproduce|datasets|info)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "exactgp — Exact Gaussian Processes on a Million Data Points (NeurIPS 2019)\n\
+         \n\
+         USAGE:\n\
+           exactgp train --dataset <name> [--model exact|cholesky|sgpr|svgp]\n\
+                         [--scale smoke|default|large|paper|<cap>] [--workers N]\n\
+                         [--backend pjrt|native] [--flavor jnp|pallas] [--ard]\n\
+                         [--config file.toml] [--set sec.key=value]...\n\
+           exactgp reproduce --exp table1|table2|table3|table5|fig1|fig2|fig3|fig4\n\
+           exactgp datasets [--scale ...]\n\
+           exactgp info\n"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let name = args.get_or("dataset", "bike");
+    let model = Model::parse(args.get_or("model", "exact"))?;
+    let mut rows = Vec::new();
+    for trial in 0..cfg.trials.max(1) as u64 {
+        let ds = coordinator::load_dataset(&cfg, name, trial)?;
+        eprintln!(
+            "[trial {trial}] {name}: n_train={} d={} (paper n={}) model={}",
+            ds.n_train(),
+            ds.d,
+            exactgp::data::synthetic::spec_by_name(name).map(|s| s.n_train_paper).unwrap_or(0),
+            model.name(),
+        );
+        let report = coordinator::run_model(&cfg, model, &ds, trial)?;
+        eprintln!(
+            "  rmse={:.4} nll={:.4} train={:.1}s precompute={:.2}s predict(1k)={:.0}ms",
+            report.rmse,
+            report.nll,
+            report.train_seconds,
+            report.precompute_seconds,
+            report.predict_seconds * 1e3,
+        );
+        rows.push(report);
+    }
+    let path = coordinator::write_results(&cfg, &format!("train_{name}_{}", model.name()), &rows)?;
+    eprintln!("wrote {path:?}");
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "table1").to_string();
+    // The reproduce paths live in the bench binaries (one per table /
+    // figure) so `cargo bench` regenerates everything; the subcommand
+    // points at the right one for discoverability.
+    bail!(
+        "run experiments via the bench harness: `cargo bench --bench bench_{}` \
+         (set EXACTGP_BENCH_SCALE / EXACTGP_BENCH_DATASETS / EXACTGP_BENCH_TRIALS \
+         to widen); requested exp = {exp}",
+        match exp.as_str() {
+            "table1" => "table1_accuracy",
+            "table2" => "table2_timing",
+            "table3" => "table3_ard",
+            "table5" => "table5_adam100",
+            "fig1" => "fig1_init",
+            "fig2" => "fig2_speedup",
+            "fig3" => "fig3_inducing",
+            "fig4" => "fig4_subsample",
+            other => other,
+        }
+    );
+}
+
+fn cmd_datasets(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let rows: Vec<Vec<String>> = SUITE
+        .iter()
+        .map(|s| {
+            vec![
+                s.name.to_string(),
+                s.n_train_paper.to_string(),
+                cfg.scale.effective_train_n(s).to_string(),
+                s.d.to_string(),
+                format!("{:?}", s.dist),
+                format!("{}", s.effective_dims),
+                format!("{:.2}", s.noise),
+            ]
+        })
+        .collect();
+    coordinator::print_table(
+        "Benchmark suite (paper Table 1 signature)",
+        &["dataset", "n_paper", "n_scaled", "d", "inputs", "eff_dims", "noise"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!("exactgp {}", env!("CARGO_PKG_VERSION"));
+    println!("backend: {:?}, flavor: {:?}, workers: {}", cfg.backend, cfg.flavor, cfg.workers);
+    match exactgp::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir)) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} ({} entries, profile={})",
+                cfg.artifacts_dir,
+                m.artifacts.len(),
+                m.profile
+            );
+            match exactgp::runtime::Engine::cpu() {
+                Ok(e) => println!("pjrt: {} OK", e.platform()),
+                Err(e) => println!("pjrt: ERROR {e:#}"),
+            }
+        }
+        Err(e) => println!("artifacts: NOT AVAILABLE ({e}) — native backend only"),
+    }
+    Ok(())
+}

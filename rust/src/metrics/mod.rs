@@ -1,0 +1,197 @@
+//! Metrics & instrumentation: regression metrics (RMSE / NLL as reported
+//! in Tables 1/3/5), wall-clock stopwatches, and the communication /
+//! memory accounting used to verify the paper's O(n) claims (SS3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+pub const LOG_2PI: f64 = 1.8378770664093453;
+
+/// Root-mean-square error (whitened units; random guess = 1.0).
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let s: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t) * (p - t)).sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// Mean negative log predictive likelihood:
+/// mean_i -log N(y_i; mu_i, var_i) — `var` must already include the
+/// observational noise.
+pub fn mean_nll(mean: &[f64], var: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(mean.len(), truth.len());
+    assert_eq!(var.len(), truth.len());
+    let n = truth.len() as f64;
+    mean.iter()
+        .zip(var)
+        .zip(truth)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-12);
+            0.5 * (LOG_2PI + v.ln() + (t - m) * (t - m) / v)
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Wall-clock stopwatch with named laps.
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub laps: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, laps: vec![] }
+    }
+
+    pub fn lap(&mut self, name: &str) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.laps.push((name.to_string(), dt));
+        self.last = now;
+        dt
+    }
+
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Global counters for the distributed-MVM accounting: bytes moved
+/// host<->device (the paper's O(n) communication claim) and transient
+/// partition bytes (the O(n) memory claim).
+#[derive(Default)]
+pub struct Accounting {
+    /// Bytes copied to devices (RHS vectors, X partitions).
+    pub bytes_to_device: AtomicU64,
+    /// Bytes copied back from devices (MVM results).
+    pub bytes_from_device: AtomicU64,
+    /// Peak transient tile memory (bytes) alive at once, per worker.
+    pub peak_tile_bytes: AtomicU64,
+    /// Number of tile executions.
+    pub tile_execs: AtomicU64,
+    /// Number of full kernel MVMs performed.
+    pub mvms: AtomicU64,
+}
+
+impl Accounting {
+    pub fn add_to_device(&self, b: u64) {
+        self.bytes_to_device.fetch_add(b, Ordering::Relaxed);
+    }
+
+    pub fn add_from_device(&self, b: u64) {
+        self.bytes_from_device.fetch_add(b, Ordering::Relaxed);
+    }
+
+    pub fn note_tile(&self, bytes: u64) {
+        self.tile_execs.fetch_add(1, Ordering::Relaxed);
+        self.peak_tile_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    pub fn note_mvm(&self) {
+        self.mvms.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> AccountingSnapshot {
+        AccountingSnapshot {
+            bytes_to_device: self.bytes_to_device.load(Ordering::Relaxed),
+            bytes_from_device: self.bytes_from_device.load(Ordering::Relaxed),
+            peak_tile_bytes: self.peak_tile_bytes.load(Ordering::Relaxed),
+            tile_execs: self.tile_execs.load(Ordering::Relaxed),
+            mvms: self.mvms.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.bytes_to_device.store(0, Ordering::Relaxed);
+        self.bytes_from_device.store(0, Ordering::Relaxed);
+        self.peak_tile_bytes.store(0, Ordering::Relaxed);
+        self.tile_execs.store(0, Ordering::Relaxed);
+        self.mvms.store(0, Ordering::Relaxed);
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccountingSnapshot {
+    pub bytes_to_device: u64,
+    pub bytes_from_device: u64,
+    pub peak_tile_bytes: u64,
+    pub tile_execs: u64,
+    pub mvms: u64,
+}
+
+impl AccountingSnapshot {
+    pub fn delta(&self, earlier: &AccountingSnapshot) -> AccountingSnapshot {
+        AccountingSnapshot {
+            bytes_to_device: self.bytes_to_device - earlier.bytes_to_device,
+            bytes_from_device: self.bytes_from_device - earlier.bytes_from_device,
+            peak_tile_bytes: self.peak_tile_bytes,
+            tile_execs: self.tile_execs - earlier.tile_execs,
+            mvms: self.mvms - earlier.mvms,
+        }
+    }
+}
+
+/// Mean and sample standard deviation of a slice (bench reporting).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_known() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - 2.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(rmse(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn nll_standard_normal() {
+        // -log N(0; 0, 1) = 0.5 log 2pi
+        let nll = mean_nll(&[0.0], &[1.0], &[0.0]);
+        assert!((nll - 0.5 * LOG_2PI).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nll_penalizes_overconfidence() {
+        // Wrong mean with tiny variance >> wrong mean with matched variance.
+        let over = mean_nll(&[0.0], &[0.01], &[1.0]);
+        let calib = mean_nll(&[0.0], &[1.0], &[1.0]);
+        assert!(over > calib);
+    }
+
+    #[test]
+    fn accounting_counts() {
+        let acc = Accounting::default();
+        acc.add_to_device(100);
+        acc.add_from_device(50);
+        acc.note_tile(4096);
+        acc.note_tile(2048);
+        acc.note_mvm();
+        let s = acc.snapshot();
+        assert_eq!(s.bytes_to_device, 100);
+        assert_eq!(s.bytes_from_device, 50);
+        assert_eq!(s.peak_tile_bytes, 4096);
+        assert_eq!(s.tile_execs, 2);
+        assert_eq!(s.mvms, 1);
+    }
+
+    #[test]
+    fn mean_std_simple() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+}

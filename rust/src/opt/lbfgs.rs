@@ -1,0 +1,218 @@
+//! L-BFGS (Liu & Nocedal 1989) with two-loop recursion and Armijo
+//! backtracking line search.
+//!
+//! Used for the paper's pretraining phase: "10 steps of L-BFGS" on the
+//! training subset (SS5). The history size defaults to 10 (the classic
+//! choice and also the number of pretraining steps).
+
+use super::Objective;
+
+pub struct Lbfgs {
+    pub history: usize,
+    pub c1: f64,
+    pub max_ls_steps: usize,
+    s: Vec<Vec<f64>>,
+    y: Vec<Vec<f64>>,
+}
+
+pub struct LbfgsResult {
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub steps_taken: usize,
+    pub evals: usize,
+}
+
+impl Lbfgs {
+    pub fn new(history: usize) -> Self {
+        Lbfgs { history, c1: 1e-4, max_ls_steps: 20, s: vec![], y: vec![] }
+    }
+
+    /// Run up to `max_steps` iterations from `params`, updating in place.
+    pub fn minimize<O: Objective>(
+        &mut self,
+        obj: &mut O,
+        params: &mut [f64],
+        max_steps: usize,
+    ) -> LbfgsResult {
+        let n = params.len();
+        let (mut loss, mut grad) = obj.eval(params);
+        let mut evals = 1;
+        let mut steps_taken = 0;
+
+        'outer: for _ in 0..max_steps {
+            let gnorm = crate::linalg::norm2(&grad);
+            if gnorm < 1e-10 {
+                break;
+            }
+            // Try the L-BFGS direction first; on line-search failure fall
+            // back to (scaled) steepest descent with a cleared history —
+            // the standard restart strategy for nonconvex objectives.
+            let mut tried_sd = false;
+            loop {
+                let (dir, dd) = {
+                    let d = if tried_sd {
+                        grad.iter().map(|g| -g / gnorm.max(1e-300)).collect::<Vec<f64>>()
+                    } else {
+                        self.direction(&grad)
+                    };
+                    let dd = crate::linalg::dot(&d, &grad);
+                    if dd >= 0.0 {
+                        // Non-descent direction: force steepest descent.
+                        let d: Vec<f64> =
+                            grad.iter().map(|g| -g / gnorm.max(1e-300)).collect();
+                        let dd = -gnorm;
+                        (d, dd)
+                    } else {
+                        (d, dd)
+                    }
+                };
+
+                // Backtracking Armijo line search with greedy expansion:
+                // if the unit step already satisfies Armijo, double alpha
+                // while the loss keeps strictly improving (cheap stand-in
+                // for the Wolfe curvature condition; prevents valley creep
+                // on ill-scaled objectives).
+                let mut alpha = 1.0f64;
+                let mut accepted = false;
+                let x0 = params.to_vec();
+                for ls in 0..self.max_ls_steps {
+                    for i in 0..n {
+                        params[i] = x0[i] + alpha * dir[i];
+                    }
+                    let (mut l_new, mut g_new) = obj.eval(params);
+                    evals += 1;
+                    if ls == 0 && l_new.is_finite() && l_new <= loss + self.c1 * alpha * dd {
+                        // Expansion phase.
+                        for _ in 0..8 {
+                            let alpha2 = alpha * 2.0;
+                            let trial: Vec<f64> =
+                                (0..n).map(|i| x0[i] + alpha2 * dir[i]).collect();
+                            let (l2, g2) = obj.eval(&trial);
+                            evals += 1;
+                            if l2.is_finite() && l2 < l_new {
+                                alpha = alpha2;
+                                l_new = l2;
+                                g_new = g2;
+                                params.copy_from_slice(&trial);
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    if l_new.is_finite() && l_new <= loss + self.c1 * alpha * dd {
+                        // Curvature pair.
+                        let s: Vec<f64> = (0..n).map(|i| params[i] - x0[i]).collect();
+                        let yv: Vec<f64> = (0..n).map(|i| g_new[i] - grad[i]).collect();
+                        if crate::linalg::dot(&s, &yv) > 1e-10 {
+                            self.s.push(s);
+                            self.y.push(yv);
+                            if self.s.len() > self.history {
+                                self.s.remove(0);
+                                self.y.remove(0);
+                            }
+                        }
+                        loss = l_new;
+                        grad = g_new;
+                        accepted = true;
+                        break;
+                    }
+                    alpha *= 0.5;
+                }
+                if accepted {
+                    break;
+                }
+                params.copy_from_slice(&x0);
+                if tried_sd {
+                    break 'outer; // converged to line-search precision
+                }
+                self.s.clear();
+                self.y.clear();
+                tried_sd = true;
+            }
+            steps_taken += 1;
+        }
+        LbfgsResult { loss, grad_norm: crate::linalg::norm2(&grad), steps_taken, evals }
+    }
+
+    /// Two-loop recursion: H_k approx inverse Hessian applied to -grad.
+    fn direction(&self, grad: &[f64]) -> Vec<f64> {
+        let m = self.s.len();
+        let mut q: Vec<f64> = grad.to_vec();
+        if m == 0 {
+            return q.iter().map(|g| -g).collect();
+        }
+        let mut alphas = vec![0.0; m];
+        let mut rhos = vec![0.0; m];
+        for i in (0..m).rev() {
+            rhos[i] = 1.0 / crate::linalg::dot(&self.y[i], &self.s[i]);
+            alphas[i] = rhos[i] * crate::linalg::dot(&self.s[i], &q);
+            crate::linalg::axpy(-alphas[i], &self.y[i], &mut q);
+        }
+        // Initial scaling gamma = s.y / y.y of the newest pair.
+        let gamma = crate::linalg::dot(&self.s[m - 1], &self.y[m - 1])
+            / crate::linalg::dot(&self.y[m - 1], &self.y[m - 1]).max(1e-300);
+        crate::linalg::scale_vec(gamma, &mut q);
+        for i in 0..m {
+            let beta = rhos[i] * crate::linalg::dot(&self.y[i], &q);
+            crate::linalg::axpy(alphas[i] - beta, &self.s[i], &mut q);
+        }
+        q.iter().map(|v| -v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic_fast() {
+        let mut obj = |x: &[f64]| {
+            let loss: f64 = x.iter().enumerate().map(|(i, v)| (i as f64 + 1.0) * v * v).sum();
+            let grad: Vec<f64> = x.iter().enumerate().map(|(i, v)| 2.0 * (i as f64 + 1.0) * v).collect();
+            (loss, grad)
+        };
+        let mut x = vec![5.0, -3.0, 2.0, 1.0];
+        let r = Lbfgs::new(10).minimize(&mut obj, &mut x, 50);
+        assert!(r.loss < 1e-10, "loss={}", r.loss);
+    }
+
+    #[test]
+    fn rosenbrock_2d() {
+        let mut obj = |x: &[f64]| {
+            let (a, b) = (1.0, 100.0);
+            let loss = (a - x[0]).powi(2) + b * (x[1] - x[0] * x[0]).powi(2);
+            let g0 = -2.0 * (a - x[0]) - 4.0 * b * x[0] * (x[1] - x[0] * x[0]);
+            let g1 = 2.0 * b * (x[1] - x[0] * x[0]);
+            (loss, vec![g0, g1])
+        };
+        let mut x = vec![-1.2, 1.0];
+        let r = Lbfgs::new(10).minimize(&mut obj, &mut x, 200);
+        assert!((x[0] - 1.0).abs() < 1e-4 && (x[1] - 1.0).abs() < 1e-4,
+                "x={x:?} loss={}", r.loss);
+    }
+
+    #[test]
+    fn respects_max_steps() {
+        let mut obj = |x: &[f64]| (x[0] * x[0], vec![2.0 * x[0]]);
+        let mut x = vec![10.0];
+        let r = Lbfgs::new(5).minimize(&mut obj, &mut x, 3);
+        assert!(r.steps_taken <= 3);
+    }
+
+    #[test]
+    fn stops_on_nan_plateau_gracefully() {
+        // Objective returns NaN away from origin; line search should
+        // shrink and eventually give up without panicking.
+        let mut obj = |x: &[f64]| {
+            if x[0].abs() > 2.0 {
+                (f64::NAN, vec![f64::NAN])
+            } else {
+                (x[0] * x[0], vec![2.0 * x[0]])
+            }
+        };
+        let mut x = vec![1.9];
+        let r = Lbfgs::new(5).minimize(&mut obj, &mut x, 10);
+        assert!(r.loss.is_finite());
+        assert!(x[0].abs() < 1.9);
+    }
+}

@@ -1,0 +1,27 @@
+//! Optimizers for hyperparameter / variational-parameter learning.
+//!
+//! The paper's training recipes (SS5):
+//! * exact GP: 10 steps L-BFGS + 10 steps Adam (lr 0.1) on a 10k subset,
+//!   then 3 steps Adam on the full data;
+//! * exact GP (appendix Table 5): 100 steps Adam (lr 0.1);
+//! * SGPR: 100 iterations Adam (lr 0.1);
+//! * SVGP: 100 epochs Adam (lr 0.01), minibatch 1024.
+
+pub mod adam;
+pub mod lbfgs;
+
+pub use adam::Adam;
+pub use lbfgs::Lbfgs;
+
+/// An objective evaluated with its gradient: returns (loss, grad).
+/// Minimization convention everywhere (negative log marginal likelihood,
+/// negative ELBO).
+pub trait Objective {
+    fn eval(&mut self, params: &[f64]) -> (f64, Vec<f64>);
+}
+
+impl<F: FnMut(&[f64]) -> (f64, Vec<f64>)> Objective for F {
+    fn eval(&mut self, params: &[f64]) -> (f64, Vec<f64>) {
+        self(params)
+    }
+}

@@ -1,0 +1,183 @@
+//! The artifact manifest: what `aot.py` produced, keyed for lookup.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata for one AOT artifact (one HLO module / entry point).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub entry: String,  // mvm | mvmgrad | cross | svgp | sgpr
+    pub kind: String,   // matern32 | rbf
+    pub mode: String,   // shared | ard
+    pub flavor: String, // pallas | jnp
+    pub outputs: usize,
+    /// entry-specific dims: r/c/t/d for tiles, m/b/n for baselines.
+    pub dims: BTreeMap<String, usize>,
+    /// Input shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    pub fn dim(&self, key: &str) -> Option<usize> {
+        self.dims.get(key).copied()
+    }
+}
+
+/// Parsed manifest with lookup helpers.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profile: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let profile = j.get("profile").and_then(|p| p.as_str()).unwrap_or("?").to_string();
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts not a list"))? {
+            let mut dims = BTreeMap::new();
+            for key in ["r", "c", "t", "d", "m", "b", "n"] {
+                if let Some(v) = a.get(key).and_then(|v| v.as_usize()) {
+                    dims.insert(key.to_string(), v);
+                }
+            }
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not a list"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect()
+                })
+                .collect();
+            artifacts.push(ArtifactMeta {
+                name: a.req_str("name")?.to_string(),
+                file: dir.join(a.req_str("file")?),
+                entry: a.req_str("entry")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                mode: a.req_str("mode")?.to_string(),
+                flavor: a.req_str("flavor")?.to_string(),
+                outputs: a.req_usize("outputs")?,
+                dims,
+                inputs,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), profile, artifacts })
+    }
+
+    /// Find an artifact by entry/kind/mode/flavor plus exact dim filters.
+    pub fn find(
+        &self,
+        entry: &str,
+        kind: &str,
+        mode: &str,
+        flavor: &str,
+        dims: &[(&str, usize)],
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.entry == entry
+                && a.kind == kind
+                && a.mode == mode
+                && a.flavor == flavor
+                && dims.iter().all(|(k, v)| a.dim(k) == Some(*v))
+        })
+    }
+
+    /// Like `find` but with a contextual error.
+    pub fn require(
+        &self,
+        entry: &str,
+        kind: &str,
+        mode: &str,
+        flavor: &str,
+        dims: &[(&str, usize)],
+    ) -> Result<&ArtifactMeta> {
+        self.find(entry, kind, mode, flavor, dims).ok_or_else(|| {
+            anyhow!(
+                "no artifact entry={entry} kind={kind} mode={mode} flavor={flavor} \
+                 dims={dims:?} in {:?} (profile={}; re-run `make artifacts` with \
+                 EXACTGP_AOT_PROFILE=full?)",
+                self.dir,
+                self.profile
+            )
+        })
+    }
+
+    /// Available values of a dim across matching artifacts (e.g. the SGPR
+    /// n-pad menu).
+    pub fn dim_menu(&self, entry: &str, kind: &str, mode: &str, key: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == entry && a.kind == kind && a.mode == mode)
+            .filter_map(|a| a.dim(key))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+ "version": 1, "profile": "quick",
+ "tile": {"r": 512, "c": 2048},
+ "artifacts": [
+  {"name": "mvm__matern32_shared_jnp__x", "file": "a.hlo.txt",
+   "entry": "mvm", "kind": "matern32", "mode": "shared", "flavor": "jnp",
+   "r": 512, "c": 2048, "t": 16, "d": 32, "outputs": 1,
+   "inputs": [[512, 32], [2048, 32], [2048, 16], [2]]},
+  {"name": "sgpr__matern32_shared_jnp__x", "file": "b.hlo.txt",
+   "entry": "sgpr", "kind": "matern32", "mode": "shared", "flavor": "jnp",
+   "m": 512, "n": 4096, "d": 32, "outputs": 3,
+   "inputs": [[512, 32], [3], [4096, 32], [4096], [4096]]}
+ ]}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("exactgp_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m
+            .find("mvm", "matern32", "shared", "jnp", &[("t", 16), ("d", 32)])
+            .unwrap();
+        assert_eq!(a.dim("c"), Some(2048));
+        assert_eq!(a.inputs[2], vec![2048, 16]);
+        assert!(m.find("mvm", "rbf", "shared", "jnp", &[]).is_none());
+        assert!(m.require("mvm", "rbf", "shared", "jnp", &[]).is_err());
+        assert_eq!(m.dim_menu("sgpr", "matern32", "shared", "n"), vec![4096]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_names_make_artifacts() {
+        let err = match Manifest::load(Path::new("/nonexistent-xyz")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

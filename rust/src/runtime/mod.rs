@@ -1,0 +1,15 @@
+//! PJRT runtime: artifact manifest + HLO-text loading + execution.
+//!
+//! The AOT bridge (see `python/compile/aot.py` and DESIGN.md SS2): Python
+//! lowers every L2 entry point to HLO *text* once; at startup the Rust side
+//! reads `artifacts/manifest.json`, and lazily compiles the artifacts it
+//! needs with the PJRT CPU client (`xla` crate). HLO text — not serialized
+//! protos — is the interchange format because jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use pjrt::{Engine, Executable};

@@ -1,0 +1,264 @@
+//! Lanczos tridiagonalization and the LOVE-style predictive-variance cache
+//! (Pleiss et al. 2018; paper SS3 "Predictions").
+//!
+//! A rank-r Lanczos run on K^ (MVM access only) yields K^ ~= Q T Q^T with
+//! Q (n, r) orthonormal and T tridiagonal. The variance cache stores
+//! W = Q C^{-T} where T = C C^T, so that
+//!
+//! ```text
+//! Var[f*] ~= k** - || W^T k_* ||^2
+//! ```
+//!
+//! — an O(n r) dot product per test point, no solves at test time. The
+//! same cache also provides approximate solves for diagnostics.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{self, Mat};
+use crate::solvers::BatchMvm;
+use crate::util::rng::Rng;
+
+/// Lanczos factorization K^ ~= Q T Q^T.
+pub struct LanczosFactor {
+    pub q: Mat,          // (n, r)
+    pub diag: Vec<f64>,  // T diagonal (r)
+    pub off: Vec<f64>,   // T off-diagonal (r-1)
+}
+
+/// Run Lanczos with full reorthogonalization for `rank` steps starting
+/// from a random probe. Breakdown (invariant subspace found) returns a
+/// shorter factorization.
+pub fn lanczos<O: BatchMvm>(op: &O, rank: usize, rng: &mut Rng) -> Result<LanczosFactor> {
+    let n = op.n();
+    let rank = rank.min(n);
+    if rank == 0 {
+        bail!("lanczos: rank 0");
+    }
+    let mut q_cols: Vec<Vec<f64>> = Vec::with_capacity(rank);
+    let mut diag = Vec::with_capacity(rank);
+    let mut off = Vec::with_capacity(rank.saturating_sub(1));
+
+    let mut q = rng.normal_vec(n);
+    let nrm = linalg::norm2(&q);
+    for v in &mut q {
+        *v /= nrm;
+    }
+    q_cols.push(q);
+
+    for j in 0..rank {
+        let qj = &q_cols[j];
+        let mut w = op.mvm(&Mat::col_vec(qj)).col(0);
+        let alpha = linalg::dot(&w, qj);
+        diag.push(alpha);
+        linalg::axpy(-alpha, qj, &mut w);
+        if j > 0 {
+            let beta_prev: f64 = off[j - 1];
+            linalg::axpy(-beta_prev, &q_cols[j - 1], &mut w);
+        }
+        // Full reorthogonalization (twice is enough).
+        for _ in 0..2 {
+            for qi in &q_cols {
+                let c = linalg::dot(&w, qi);
+                if c != 0.0 {
+                    linalg::axpy(-c, qi, &mut w);
+                }
+            }
+        }
+        if j + 1 == rank {
+            break;
+        }
+        let beta = linalg::norm2(&w);
+        if beta < 1e-12 {
+            break; // invariant subspace: T is exact on the Krylov space
+        }
+        off.push(beta);
+        for v in &mut w {
+            *v /= beta;
+        }
+        q_cols.push(w);
+    }
+
+    let r = q_cols.len();
+    diag.truncate(r);
+    off.truncate(r.saturating_sub(1));
+    let mut q = Mat::zeros(n, r);
+    for (j, col) in q_cols.iter().enumerate() {
+        q.set_col(j, col);
+    }
+    Ok(LanczosFactor { q, diag, off })
+}
+
+/// The LOVE variance cache W = Q C^{-T} with T = C C^T.
+pub struct VarianceCache {
+    /// (n, r): Var[f*] ~= k** - ||W^T k_*||^2.
+    pub w: Mat,
+}
+
+impl VarianceCache {
+    /// Build from a Lanczos factorization (Cholesky of tridiagonal T is a
+    /// bidiagonal sweep).
+    pub fn from_lanczos(f: &LanczosFactor) -> Result<VarianceCache> {
+        let r = f.diag.len();
+        // Cholesky of tridiagonal T: C lower bidiagonal with diag c, sub s.
+        let mut c = vec![0.0f64; r];
+        let mut s = vec![0.0f64; r.saturating_sub(1)];
+        for i in 0..r {
+            let mut v = f.diag[i];
+            if i > 0 {
+                v -= s[i - 1] * s[i - 1];
+            }
+            if v <= 0.0 {
+                bail!("variance cache: T not positive definite at {i} ({v:.3e})");
+            }
+            c[i] = v.sqrt();
+            if i + 1 < r {
+                s[i] = f.off[i] / c[i];
+            }
+        }
+        // W = Q C^{-T}: solve C W^T-cols ... column w_j of W satisfies
+        // W C^T = Q  =>  for each row of W (length r): C w_row = q_row^T?
+        // Work column-wise: W[:, j] = (Q[:, j] - s_j * W[:, j+1]?) — do the
+        // standard back-substitution on columns: C^T is upper bidiagonal,
+        // W C^T = Q  =>  Q[:,0] = W[:,0] c_0;
+        //               Q[:,j] = W[:,j-1] s_{j-1} + W[:,j] c_j.
+        let n = f.q.rows;
+        let mut w = Mat::zeros(n, r);
+        for j in 0..r {
+            for i in 0..n {
+                let mut v = f.q[(i, j)];
+                if j > 0 {
+                    v -= w[(i, j - 1)] * s[j - 1];
+                }
+                w[(i, j)] = v / c[j];
+            }
+        }
+        Ok(VarianceCache { w })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.w.cols
+    }
+
+    /// Explained variance ||W^T k_*||^2 given k_* (covariances between the
+    /// test point and all training points).
+    pub fn explained(&self, kstar: &[f64]) -> f64 {
+        assert_eq!(kstar.len(), self.w.rows);
+        let mut s = 0.0;
+        for j in 0..self.w.cols {
+            let mut c = 0.0;
+            for i in 0..self.w.rows {
+                c += self.w[(i, j)] * kstar[i];
+            }
+            s += c * c;
+        }
+        s
+    }
+
+    /// Batched: rows of `kstar_block` are test points; returns per-row
+    /// explained variance. `kw = kstar_block @ W` may be precomputed by a
+    /// device backend; this native path is for tests/small cases.
+    pub fn explained_batch(&self, kstar_block: &Mat) -> Vec<f64> {
+        let kw = kstar_block.matmul(&self.w);
+        (0..kw.rows).map(|i| linalg::dot(kw.row(i), kw.row(i))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::DenseOp;
+
+    fn random_spd(n: usize, jitter: f64, rng: &mut Rng) -> Mat {
+        let g = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let mut a = g.t_matmul(&g);
+        a.scale(1.0 / n as f64);
+        a.add_diag(jitter);
+        a
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(31, 0);
+        let a = random_spd(40, 0.5, &mut rng);
+        let f = lanczos(&DenseOp { a }, 20, &mut rng).unwrap();
+        let qtq = f.q.t_matmul(&f.q);
+        let eye = Mat::eye(f.diag.len());
+        assert!(qtq.max_abs_diff(&eye) < 1e-8, "diff={}", qtq.max_abs_diff(&eye));
+    }
+
+    #[test]
+    fn full_rank_reproduces_operator() {
+        let mut rng = Rng::new(32, 0);
+        let n = 24;
+        let a = random_spd(n, 0.5, &mut rng);
+        let f = lanczos(&DenseOp { a: a.clone() }, n, &mut rng).unwrap();
+        // Q T Q^T == A when r = n.
+        let r = f.diag.len();
+        let mut t = Mat::zeros(r, r);
+        for i in 0..r {
+            t[(i, i)] = f.diag[i];
+            if i + 1 < r {
+                t[(i, i + 1)] = f.off[i];
+                t[(i + 1, i)] = f.off[i];
+            }
+        }
+        let rebuilt = f.q.matmul(&t).matmul(&f.q.transpose());
+        assert!(rebuilt.max_abs_diff(&a) < 1e-6, "diff={}", rebuilt.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn variance_cache_matches_exact_inverse_at_full_rank() {
+        let mut rng = Rng::new(33, 0);
+        let n = 30;
+        let a = random_spd(n, 0.8, &mut rng);
+        let f = lanczos(&DenseOp { a: a.clone() }, n, &mut rng).unwrap();
+        let cache = VarianceCache::from_lanczos(&f).unwrap();
+        let chol = crate::linalg::cholesky(&a).unwrap();
+        for trial in 0..5 {
+            let kstar = rng.normal_vec(n);
+            let exact = crate::linalg::dot(&kstar, &chol.solve_vec(&kstar));
+            let approx = cache.explained(&kstar);
+            assert!(
+                (exact - approx).abs() < 1e-6 * exact.abs().max(1.0),
+                "trial {trial}: exact={exact} approx={approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn low_rank_underestimates_explained_variance() {
+        // ||W^T k||^2 is monotone in rank and bounded by k^T A^{-1} k —
+        // so predictive variances are never negative.
+        let mut rng = Rng::new(34, 0);
+        let n = 40;
+        let a = random_spd(n, 0.3, &mut rng);
+        let chol = crate::linalg::cholesky(&a).unwrap();
+        let kstar = rng.normal_vec(n);
+        let exact = crate::linalg::dot(&kstar, &chol.solve_vec(&kstar));
+        let mut last = 0.0;
+        for r in [4, 10, 20, 40] {
+            let mut rng2 = Rng::new(35, 0); // same start vector across ranks
+            let f = lanczos(&DenseOp { a: a.clone() }, r, &mut rng2).unwrap();
+            let cache = VarianceCache::from_lanczos(&f).unwrap();
+            let e = cache.explained(&kstar);
+            assert!(e >= last - 1e-9, "rank {r}: {e} < {last}");
+            assert!(e <= exact + 1e-6, "rank {r}: {e} > exact {exact}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn explained_batch_matches_single() {
+        let mut rng = Rng::new(36, 0);
+        let n = 20;
+        let a = random_spd(n, 0.5, &mut rng);
+        let f = lanczos(&DenseOp { a }, 10, &mut rng).unwrap();
+        let cache = VarianceCache::from_lanczos(&f).unwrap();
+        let block = Mat::from_vec(3, n, rng.normal_vec(3 * n));
+        let batch = cache.explained_batch(&block);
+        for i in 0..3 {
+            let single = cache.explained(block.row(i));
+            assert!((batch[i] - single).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! BBMM solvers: everything that touches the kernel matrix does so through
+//! the `BatchMvm` trait — the "blackbox matrix-matrix multiplication"
+//! abstraction at the center of the paper.
+//!
+//! * `mbcg` — modified batched preconditioned conjugate gradients: solves
+//!   K^ U = B for a block of right-hand sides while recording the Lanczos
+//!   tridiagonal coefficients that give log|K^| by stochastic Lanczos
+//!   quadrature (Gardner et al. 2018; paper SS2-3).
+//! * `pivchol` — rank-k partial pivoted Cholesky of K (paper: k = 100).
+//! * `precond` — the (L_k L_k^T + sigma^2 I)^{-1} Woodbury preconditioner,
+//!   its log-determinant, and N(0, P) probe sampling.
+//! * `lanczos` — LOVE-style predictive-variance cache (Pleiss et al. 2018).
+
+pub mod lanczos;
+pub mod mbcg;
+pub mod pivchol;
+pub mod precond;
+
+use crate::linalg::Mat;
+
+/// A symmetric positive-definite operator accessed only through batched
+/// matrix-vector multiplication: Y = K^ V with V of shape (n, t).
+///
+/// Implementations: `DenseOp` (tests, Cholesky-oracle comparisons) and
+/// `exec::PartitionedKernelOp` (the production partitioned/distributed
+/// kernel operator).
+pub trait BatchMvm {
+    fn n(&self) -> usize;
+    fn mvm(&self, v: &Mat) -> Mat;
+}
+
+/// Dense in-memory operator (tests and small problems only).
+pub struct DenseOp {
+    pub a: Mat,
+}
+
+impl BatchMvm for DenseOp {
+    fn n(&self) -> usize {
+        self.a.rows
+    }
+
+    fn mvm(&self, v: &Mat) -> Mat {
+        self.a.matmul(v)
+    }
+}
+
+/// Preconditioner interface for mBCG. `apply` computes P^{-1} R
+/// column-wise; `logdet` is log|P|; `sample_probe` draws z ~ N(0, P).
+pub trait Preconditioner {
+    fn apply(&self, r: &Mat) -> Mat;
+    fn logdet(&self) -> f64;
+    fn sample_probe(&self, rng: &mut crate::util::rng::Rng) -> Vec<f64>;
+}
+
+/// Identity "preconditioner" (P = I): plain CG, N(0, I) probes.
+pub struct IdentityPrecond {
+    pub n: usize,
+}
+
+impl Preconditioner for IdentityPrecond {
+    fn apply(&self, r: &Mat) -> Mat {
+        r.clone()
+    }
+
+    fn logdet(&self) -> f64 {
+        0.0
+    }
+
+    fn sample_probe(&self, rng: &mut crate::util::rng::Rng) -> Vec<f64> {
+        rng.normal_vec(self.n)
+    }
+}

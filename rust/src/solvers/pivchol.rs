@@ -1,0 +1,241 @@
+//! Partial pivoted Cholesky decomposition (Harbrecht et al. 2012; the
+//! preconditioner of Gardner et al. 2018, used at rank k = 100 here —
+//! paper SS3 "Preconditioning").
+//!
+//! Produces L (k, n; row-major, row i is the i-th factor vector) such that
+//! K ~= L^T L ... stored as `rows: Vec<Vec<f64>>` so that
+//! K ~= sum_i rows[i] rows[i]^T. Only k kernel *rows* are ever computed —
+//! an O(nk) space and O(nk^2 + nk d) time dependence, evaluated natively
+//! in Rust (no device round-trips for k << n).
+
+use crate::kernels::KernelEval;
+
+/// Access to kernel rows — implemented by the native evaluator; a trait so
+/// tests can count row accesses.
+pub trait KernelRows {
+    fn n(&self) -> usize;
+    /// diag(K) (without noise).
+    fn diag(&self) -> Vec<f64>;
+    /// K[i, :] (without noise).
+    fn row(&self, i: usize) -> Vec<f64>;
+}
+
+/// Native kernel-row provider over a flat (n, d) dataset.
+pub struct NativeKernelRows<'a> {
+    pub eval: &'a KernelEval,
+    pub x: &'a [f64],
+    pub d: usize,
+}
+
+impl KernelRows for NativeKernelRows<'_> {
+    fn n(&self) -> usize {
+        self.x.len() / self.d
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        vec![self.eval.outputscale; self.n()]
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.n()];
+        self.eval.row(&self.x[i * self.d..(i + 1) * self.d], self.x, self.d, &mut out);
+        out
+    }
+}
+
+/// The rank-k factor. `rows[i]` has length n; K ~= sum_i rows[i] rows[i]^T.
+pub struct PivotedCholesky {
+    pub n: usize,
+    pub rows: Vec<Vec<f64>>,
+    /// Residual trace after the last accepted pivot (error indicator:
+    /// tr(K - L_k L_k^T)).
+    pub residual_trace: f64,
+    /// Pivot order chosen.
+    pub pivots: Vec<usize>,
+}
+
+/// Compute the rank-`k` partial pivoted Cholesky of K.
+///
+/// Stops early when the residual trace falls below `rel_tol * tr(K)`.
+pub fn pivoted_cholesky<R: KernelRows>(kr: &R, k: usize, rel_tol: f64) -> PivotedCholesky {
+    let n = kr.n();
+    let mut d = kr.diag();
+    let trace0: f64 = d.iter().sum();
+    let mut rows: Vec<Vec<f64>> = Vec::with_capacity(k.min(n));
+    let mut pivots = Vec::with_capacity(k.min(n));
+
+    for _ in 0..k.min(n) {
+        // Pivot: largest remaining diagonal.
+        let (piv, &dmax) = d
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !pivots.contains(i))
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if dmax <= 0.0 {
+            break;
+        }
+
+        // l = (K[piv, :] - sum_j rows[j][piv] * rows[j]) / sqrt(dmax)
+        let mut l = kr.row(piv);
+        for prev in &rows {
+            let c = prev[piv];
+            if c != 0.0 {
+                crate::linalg::axpy(-c, prev, &mut l);
+            }
+        }
+        let inv = 1.0 / dmax.sqrt();
+        for v in &mut l {
+            *v *= inv;
+        }
+        // Numerical hygiene: the pivot entry is exactly sqrt(dmax).
+        l[piv] = dmax.sqrt();
+
+        // Update the residual diagonal.
+        for i in 0..n {
+            d[i] -= l[i] * l[i];
+        }
+        d[piv] = 0.0;
+
+        pivots.push(piv);
+        rows.push(l);
+
+        let resid: f64 = d.iter().map(|&x| x.max(0.0)).sum();
+        if resid <= rel_tol * trace0 {
+            return PivotedCholesky { n, rows, residual_trace: resid, pivots };
+        }
+    }
+    let resid: f64 = d.iter().map(|&x| x.max(0.0)).sum();
+    PivotedCholesky { n, rows, residual_trace: resid, pivots }
+}
+
+impl PivotedCholesky {
+    pub fn rank(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// y = L_k^T v  (k-vector from n-vector): y_i = rows[i] . v
+    pub fn lt_matvec(&self, v: &[f64]) -> Vec<f64> {
+        self.rows.iter().map(|r| crate::linalg::dot(r, v)).collect()
+    }
+
+    /// y = L_k w  (n-vector from k-vector): sum_i w_i rows[i]
+    pub fn l_matvec(&self, w: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        for (i, r) in self.rows.iter().enumerate() {
+            if w[i] != 0.0 {
+                crate::linalg::axpy(w[i], r, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Dense reconstruction L_k L_k^T (tests only).
+    pub fn reconstruct(&self) -> crate::linalg::Mat {
+        let mut m = crate::linalg::Mat::zeros(self.n, self.n);
+        for r in &self.rows {
+            for i in 0..self.n {
+                if r[i] == 0.0 {
+                    continue;
+                }
+                for j in 0..self.n {
+                    m[(i, j)] += r[i] * r[j];
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Hypers, KernelEval, KernelKind};
+    use crate::util::rng::Rng;
+
+    fn toy_kernel(n: usize, d: usize, seed: u64) -> (Vec<f64>, KernelEval) {
+        let mut rng = Rng::new(seed, 0);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let h = Hypers { log_lengthscales: vec![0.3], log_outputscale: 0.2, log_noise: 0.0 };
+        (x, KernelEval::new(KernelKind::Matern32, &h))
+    }
+
+    #[test]
+    fn full_rank_reconstructs_exactly() {
+        let (x, eval) = toy_kernel(24, 3, 1);
+        let kr = NativeKernelRows { eval: &eval, x: &x, d: 3 };
+        let pc = pivoted_cholesky(&kr, 24, 0.0);
+        let k_true = eval.cross(&x, &x, 3);
+        let k_approx = pc.reconstruct();
+        assert!(k_true.max_abs_diff(&k_approx) < 1e-7, "diff={}", k_true.max_abs_diff(&k_approx));
+    }
+
+    #[test]
+    fn approximation_error_decreases_with_rank() {
+        let (x, eval) = toy_kernel(60, 2, 2);
+        let kr = NativeKernelRows { eval: &eval, x: &x, d: 2 };
+        let k_true = eval.cross(&x, &x, 2);
+        let mut last = f64::INFINITY;
+        for k in [2, 8, 20, 40] {
+            let pc = pivoted_cholesky(&kr, k, 0.0);
+            let err = k_true.max_abs_diff(&pc.reconstruct());
+            assert!(err <= last * 1.5 + 1e-9, "rank {k}: err {err} > last {last}");
+            last = err;
+        }
+        assert!(last < 0.1);
+    }
+
+    #[test]
+    fn residual_trace_matches_actual() {
+        let (x, eval) = toy_kernel(40, 2, 3);
+        let kr = NativeKernelRows { eval: &eval, x: &x, d: 2 };
+        let pc = pivoted_cholesky(&kr, 10, 0.0);
+        let resid = eval.cross(&x, &x, 2).sub(&pc.reconstruct());
+        let tr: f64 = (0..40).map(|i| resid[(i, i)]).sum();
+        assert!((tr - pc.residual_trace).abs() < 1e-8, "tr={tr} vs {}", pc.residual_trace);
+    }
+
+    #[test]
+    fn matvecs_match_reconstruction() {
+        let (x, eval) = toy_kernel(30, 2, 4);
+        let kr = NativeKernelRows { eval: &eval, x: &x, d: 2 };
+        let pc = pivoted_cholesky(&kr, 8, 0.0);
+        let mut rng = Rng::new(9, 0);
+        let v = rng.normal_vec(30);
+        // L (L^T v) == (L L^T) v
+        let fast = pc.l_matvec(&pc.lt_matvec(&v));
+        let dense = pc.reconstruct().matvec(&v);
+        for i in 0..30 {
+            assert!((fast[i] - dense[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pivots_are_distinct() {
+        let (x, eval) = toy_kernel(50, 3, 5);
+        let kr = NativeKernelRows { eval: &eval, x: &x, d: 3 };
+        let pc = pivoted_cholesky(&kr, 20, 0.0);
+        let mut p = pc.pivots.clone();
+        p.sort_unstable();
+        p.dedup();
+        assert_eq!(p.len(), pc.pivots.len());
+    }
+
+    #[test]
+    fn early_stop_on_tolerance() {
+        // Clustered data: low numerical rank => early exit well before k.
+        let mut rng = Rng::new(6, 0);
+        let n = 64;
+        let center: Vec<f64> = rng.normal_vec(2);
+        let x: Vec<f64> = (0..n)
+            .flat_map(|_| {
+                vec![center[0] + 1e-4 * rng.normal(), center[1] + 1e-4 * rng.normal()]
+            })
+            .collect();
+        let h = Hypers::default_init(None);
+        let eval = KernelEval::new(KernelKind::Rbf, &h);
+        let kr = NativeKernelRows { eval: &eval, x: &x, d: 2 };
+        let pc = pivoted_cholesky(&kr, 50, 1e-6);
+        assert!(pc.rank() < 20, "rank={}", pc.rank());
+    }
+}

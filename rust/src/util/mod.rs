@@ -1,0 +1,5 @@
+//! Shared utilities: RNG, JSON, property-testing helper.
+
+pub mod json;
+pub mod quickcheck;
+pub mod rng;

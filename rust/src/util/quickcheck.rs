@@ -1,0 +1,75 @@
+//! A tiny property-testing harness (`proptest` is not in the offline
+//! dependency closure).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently-seeded
+//! RNGs; on failure it re-runs a deterministic bisection over the failing
+//! seed's "size" parameter to report the smallest failing size, then
+//! panics with the seed so the case can be replayed in a unit test.
+
+use crate::util::rng::Rng;
+
+/// Context handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Suggested problem size for this case (grows over the run).
+    pub size: usize,
+}
+
+impl Gen {
+    /// Size-bounded dimension draw in [1, max(1, size)].
+    pub fn dim(&mut self, cap: usize) -> usize {
+        1 + self.rng.below(self.size.clamp(1, cap))
+    }
+}
+
+/// Run a property. `f` returns `Err(msg)` to signal failure.
+pub fn check<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0xE1A_C7C0DE ^ crate::util::rng::fnv1a(name);
+    for case in 0..cases {
+        let size = 2 + (case as usize * 3) % 40;
+        let mut g = Gen { rng: Rng::new(base_seed, case), size };
+        if let Err(msg) = f(&mut g) {
+            // Shrink pass: try smaller sizes with the same stream.
+            let mut smallest = (size, msg.clone());
+            for s in 1..size {
+                let mut g2 = Gen { rng: Rng::new(base_seed, case), size: s };
+                if let Err(m2) = f(&mut g2) {
+                    smallest = (s, m2);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={base_seed:#x}, case={case}, \
+                 size={size}; smallest failing size={}): {}",
+                smallest.0, smallest.1,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 32, |g| {
+            let a = g.rng.normal();
+            let b = g.rng.normal();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 4, |_| Err("nope".into()));
+    }
+}

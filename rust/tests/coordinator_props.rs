@@ -1,0 +1,182 @@
+//! Property tests over coordinator invariants (custom quickcheck harness;
+//! proptest is not in the offline dependency closure).
+
+use std::sync::Arc;
+
+use exactgp::exec::{native::NativeBackend, pool::DevicePool, BackendFactory, PaddedData,
+                    PartitionedKernelOp, TileBackend, TileSpec};
+use exactgp::kernels::{Hypers, KernelKind};
+use exactgp::linalg::Mat;
+use exactgp::metrics::Accounting;
+use exactgp::partition::Plan;
+use exactgp::solvers::BatchMvm;
+use exactgp::util::quickcheck::check;
+
+fn native_pool(spec: TileSpec, workers: usize) -> Arc<DevicePool> {
+    let factory: BackendFactory = Arc::new(move |_| {
+        Ok(Box::new(NativeBackend::new(KernelKind::Matern32, false, spec))
+            as Box<dyn TileBackend>)
+    });
+    Arc::new(DevicePool::new(workers, factory).unwrap())
+}
+
+#[test]
+fn prop_partition_plans_cover_disjointly() {
+    check("plan-cover", 100, |g| {
+        let n = 1 + g.rng.below(100_000);
+        let budget = 1 << (10 + g.rng.below(16));
+        let plan = Plan::with_memory_budget(n, n, budget, 16, 8);
+        let mut next = 0;
+        for p in &plan.partitions {
+            if p.start != next || p.is_empty() {
+                return Err(format!("bad partition at {}", p.start));
+            }
+            next = p.end;
+        }
+        if next != n {
+            return Err(format!("cover ends at {next} != {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mvm_invariant_to_workers_and_partitioning() {
+    // The coordinator's core routing invariant: the answer never depends
+    // on how work is distributed.
+    let spec = TileSpec { r: 4, c: 8, t: 2, d: 2 };
+    check("mvm-routing-invariance", 12, |g| {
+        let n = 5 + g.rng.below(60);
+        let x: Vec<f64> = (0..n * 2).map(|_| g.rng.normal()).collect();
+        let v = Mat::from_vec(n, 2, g.rng.normal_vec(n * 2));
+        let hypers = Hypers::default_init(None);
+        let mut outs: Vec<Mat> = Vec::new();
+        for (workers, rpp_tiles) in [(1, 1), (2, 2), (3, 1), (4, 4)] {
+            let data = Arc::new(PaddedData::new(&x, 2, &spec));
+            let plan = Plan::with_rows(data.n_pad, data.n_pad, spec.r * rpp_tiles);
+            let op = PartitionedKernelOp::square(
+                data,
+                native_pool(spec, workers),
+                plan,
+                spec,
+                hypers.clone(),
+                Arc::new(Accounting::default()),
+            );
+            outs.push(op.mvm(&v));
+        }
+        for o in &outs[1..] {
+            if o.max_abs_diff(&outs[0]) > 1e-10 {
+                return Err(format!("diff {}", o.max_abs_diff(&outs[0])));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mvm_linear_in_rhs() {
+    // K(aV1 + bV2) == a K V1 + b K V2 — exercised through the whole
+    // padding/chunking/dispatch stack.
+    let spec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
+    check("mvm-linearity", 10, |g| {
+        let n = 6 + g.rng.below(40);
+        let x: Vec<f64> = (0..n * 3).map(|_| g.rng.normal()).collect();
+        let data = Arc::new(PaddedData::new(&x, 3, &spec));
+        let plan = Plan::with_rows(data.n_pad, data.n_pad, spec.r);
+        let op = PartitionedKernelOp::square(
+            data,
+            native_pool(spec, 2),
+            plan,
+            spec,
+            Hypers::default_init(None),
+            Arc::new(Accounting::default()),
+        );
+        let v1 = Mat::from_vec(n, 2, g.rng.normal_vec(n * 2));
+        let v2 = Mat::from_vec(n, 2, g.rng.normal_vec(n * 2));
+        let (a, b) = (g.rng.normal(), g.rng.normal());
+        let mut combo = Mat::zeros(n, 2);
+        for i in 0..n {
+            for j in 0..2 {
+                combo[(i, j)] = a * v1[(i, j)] + b * v2[(i, j)];
+            }
+        }
+        let lhs = op.mvm(&combo);
+        let r1 = op.mvm(&v1);
+        let r2 = op.mvm(&v2);
+        let mut rhs = Mat::zeros(n, 2);
+        for i in 0..n {
+            for j in 0..2 {
+                rhs[(i, j)] = a * r1[(i, j)] + b * r2[(i, j)];
+            }
+        }
+        if lhs.max_abs_diff(&rhs) > 1e-5 * (1.0 + rhs.frob_norm()) {
+            return Err(format!("nonlinear: {}", lhs.max_abs_diff(&rhs)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mvm_output_psd_quadform() {
+    // v^T K^ v > 0 for v != 0 (K^ SPD), through the full stack.
+    let spec = TileSpec { r: 4, c: 4, t: 1, d: 2 };
+    check("mvm-psd", 16, |g| {
+        let n = 3 + g.rng.below(30);
+        let x: Vec<f64> = (0..n * 2).map(|_| g.rng.normal()).collect();
+        let data = Arc::new(PaddedData::new(&x, 2, &spec));
+        let plan = Plan::with_rows(data.n_pad, data.n_pad, spec.r);
+        let op = PartitionedKernelOp::square(
+            data,
+            native_pool(spec, 1),
+            plan,
+            spec,
+            Hypers::default_init(None),
+            Arc::new(Accounting::default()),
+        );
+        let v = g.rng.normal_vec(n);
+        let kv = op.mvm(&Mat::col_vec(&v));
+        let quad: f64 = (0..n).map(|i| v[i] * kv[(i, 0)]).sum();
+        if quad <= 0.0 {
+            return Err(format!("v^T K v = {quad}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_overrides_consistent() {
+    check("config-set", 40, |g| {
+        let mut cfg = exactgp::config::Config::default();
+        let probes = 1 + g.rng.below(64);
+        cfg.set("solver.probes", &probes.to_string()).map_err(|e| e.to_string())?;
+        if cfg.probes != probes {
+            return Err("probes not applied".into());
+        }
+        if cfg.set("nope.nope", "1").is_ok() {
+            return Err("unknown key accepted".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_split_sizes() {
+    check("split-sizes", 20, |g| {
+        let n = 90 + g.rng.below(4000);
+        let raw = exactgp::data::RawData {
+            name: "p".into(),
+            d: 2,
+            x: g.rng.normal_vec(n * 2),
+            y: g.rng.normal_vec(n),
+        };
+        let ds = raw.prepare(32, &mut g.rng);
+        let total = ds.n_train() + ds.val_y.len() + ds.n_test();
+        if total != n {
+            return Err(format!("{total} != {n}"));
+        }
+        if ds.n_train() != n * 4 / 9 || ds.val_y.len() != n * 2 / 9 {
+            return Err("wrong fractions".into());
+        }
+        Ok(())
+    });
+}

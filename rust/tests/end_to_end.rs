@@ -1,0 +1,143 @@
+//! End-to-end integration: the full coordinator pipeline over the PJRT
+//! backend, checked for correctness (vs the Cholesky oracle), calibration,
+//! and the paper's qualitative claims at test scale.
+//!
+//! Self-skips when artifacts are missing.
+
+use exactgp::config::{Backend, Config};
+use exactgp::coordinator::{self, Model};
+use exactgp::data::synthetic::Scale;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn smoke_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scale = Scale { train_cap: 768 };
+    cfg.backend = Backend::Pjrt;
+    cfg
+}
+
+#[test]
+fn exact_gp_beats_mean_predictor_on_suite_sample() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = smoke_cfg();
+    for name in ["poletele", "kin40k", "3droad"] {
+        let ds = coordinator::load_dataset(&cfg, name, 0).unwrap();
+        let r = coordinator::run_model(&cfg, Model::ExactBbmm, &ds, 0).unwrap();
+        assert!(r.rmse < 0.85, "{name}: rmse={} (mean predictor = 1.0)", r.rmse);
+        assert!(r.nll.is_finite());
+    }
+}
+
+#[test]
+fn exact_gp_matches_cholesky_gp_quality() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // The BBMM exact GP and the O(n^3) Cholesky GP are the *same model*;
+    // their test RMSE must agree closely when trained with the same
+    // recipe at small n.
+    let mut cfg = smoke_cfg();
+    cfg.scale = Scale { train_cap: 512 };
+    cfg.predict_tol = 1e-6;
+    cfg.variance_rank = 256;
+    let ds = coordinator::load_dataset(&cfg, "bike", 0).unwrap();
+    let exact = coordinator::run_model(&cfg, Model::ExactBbmm, &ds, 0).unwrap();
+    let chol = coordinator::run_model(&cfg, Model::Cholesky, &ds, 0).unwrap();
+    assert!(
+        (exact.rmse - chol.rmse).abs() < 0.1,
+        "bbmm={} chol={}",
+        exact.rmse,
+        chol.rmse
+    );
+}
+
+#[test]
+fn exact_gp_not_worse_than_approximations() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // The paper's headline (Table 1 shape): exact <= approx error, with
+    // a small tolerance for trial noise at smoke scale.
+    let cfg = smoke_cfg();
+    let ds = coordinator::load_dataset(&cfg, "kin40k", 0).unwrap();
+    let exact = coordinator::run_model(&cfg, Model::ExactBbmm, &ds, 0).unwrap();
+    let sgpr = coordinator::run_model(&cfg, Model::Sgpr, &ds, 0).unwrap();
+    let svgp = coordinator::run_model(&cfg, Model::Svgp, &ds, 0).unwrap();
+    assert!(
+        exact.rmse <= sgpr.rmse * 1.10,
+        "exact {} vs sgpr {}",
+        exact.rmse,
+        sgpr.rmse
+    );
+    assert!(
+        exact.rmse <= svgp.rmse * 1.10,
+        "exact {} vs svgp {}",
+        exact.rmse,
+        svgp.rmse
+    );
+}
+
+#[test]
+fn more_data_does_not_hurt() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Figure 4 shape: exact-GP error decreases (or at worst stagnates)
+    // as training data grows.
+    let mut cfg = smoke_cfg();
+    cfg.scale = Scale { train_cap: 1024 };
+    let ds = coordinator::load_dataset(&cfg, "3droad", 0).unwrap();
+    let mut rng = exactgp::util::rng::Rng::new(3, 0);
+    let small = ds.subsample_train(256, &mut rng);
+    let r_small = coordinator::run_model(&cfg, Model::ExactBbmm, &small, 0).unwrap();
+    let r_full = coordinator::run_model(&cfg, Model::ExactBbmm, &ds, 0).unwrap();
+    assert!(
+        r_full.rmse <= r_small.rmse * 1.05,
+        "full {} vs small {}",
+        r_full.rmse,
+        r_small.rmse
+    );
+}
+
+#[test]
+fn ard_pipeline_runs() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = smoke_cfg();
+    cfg.ard = true;
+    cfg.scale = Scale { train_cap: 512 };
+    let ds = coordinator::load_dataset(&cfg, "protein", 0).unwrap();
+    let r = coordinator::run_model(&cfg, Model::ExactBbmm, &ds, 0).unwrap();
+    assert!(r.rmse < 1.0, "ard rmse={}", r.rmse);
+}
+
+#[test]
+fn results_json_roundtrips() {
+    let mut cfg = smoke_cfg();
+    cfg.scale = Scale { train_cap: 256 };
+    cfg.results_dir = std::env::temp_dir()
+        .join("exactgp_e2e_results")
+        .to_string_lossy()
+        .into_owned();
+    let ds = coordinator::load_dataset(&cfg, "elevators", 0).unwrap();
+    let r = coordinator::run_model(&cfg, Model::Cholesky, &ds, 0).unwrap();
+    let path = coordinator::write_results(&cfg, "test_exp", &[r]).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = exactgp::util::json::Json::parse(&text).unwrap();
+    assert_eq!(j.req_str("experiment").unwrap(), "test_exp");
+    let rows = j.req("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert!(rows[0].req("rmse").unwrap().as_f64().unwrap() > 0.0);
+    std::fs::remove_dir_all(&cfg.results_dir).ok();
+}

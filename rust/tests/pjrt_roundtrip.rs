@@ -1,0 +1,151 @@
+//! Integration: the AOT bridge end to end.
+//!
+//! Loads the real `artifacts/` manifest, compiles the HLO with the PJRT
+//! CPU client inside pool workers, and checks the partitioned kernel
+//! operator's numerics against the pure-Rust native backend — the same
+//! tile contract computed by two completely independent stacks
+//! (jax/XLA vs hand-written Rust).
+//!
+//! Requires `make artifacts` (any profile). Tests self-skip when the
+//! manifest is missing so `cargo test` stays runnable pre-AOT.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use exactgp::config::{Backend, Config, Flavor};
+use exactgp::exec::{backend_factory, PaddedData, PartitionedKernelOp, TileSpec};
+use exactgp::exec::pool::DevicePool;
+use exactgp::kernels::{Hypers, KernelKind};
+use exactgp::linalg::Mat;
+use exactgp::metrics::Accounting;
+use exactgp::partition::Plan;
+use exactgp::solvers::BatchMvm;
+use exactgp::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+fn build_op(flavor: Flavor, workers: usize, hypers: Hypers, x: &[f64], d: usize)
+    -> anyhow::Result<PartitionedKernelOp>
+{
+    let spec = TileSpec::PROD;
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Pjrt;
+    cfg.flavor = flavor;
+    let factory = backend_factory(&cfg, KernelKind::Matern32, false, spec.d, spec)?;
+    let pool = Arc::new(DevicePool::new(workers, factory)?);
+    let data = Arc::new(PaddedData::new(x, d, &spec));
+    let plan = Plan::with_rows(data.n_pad, data.n_pad, spec.r);
+    Ok(PartitionedKernelOp::square(
+        data,
+        pool,
+        plan,
+        spec,
+        hypers,
+        Arc::new(Accounting::default()),
+    ))
+}
+
+fn native_op(workers: usize, hypers: Hypers, x: &[f64], d: usize) -> PartitionedKernelOp {
+    let spec = TileSpec::PROD;
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    let factory = backend_factory(&cfg, KernelKind::Matern32, false, spec.d, spec).unwrap();
+    let pool = Arc::new(DevicePool::new(workers, factory).unwrap());
+    let data = Arc::new(PaddedData::new(x, d, &spec));
+    let plan = Plan::with_rows(data.n_pad, data.n_pad, spec.r);
+    PartitionedKernelOp::square(data, pool, plan, spec, hypers, Arc::new(Accounting::default()))
+}
+
+#[test]
+fn pjrt_jnp_mvm_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(61, 0);
+    let (n, d) = (700, 5);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let hypers = Hypers {
+        log_lengthscales: vec![0.25],
+        log_outputscale: 0.1,
+        log_noise: (0.2f64).ln(),
+    };
+    let v = Mat::from_vec(n, 3, rng.normal_vec(n * 3));
+
+    let pjrt = build_op(Flavor::Jnp, 1, hypers.clone(), &x, d).unwrap();
+    let native = native_op(1, hypers, &x, d);
+    let a = pjrt.mvm(&v);
+    let b = native.mvm(&v);
+    let scale = b.frob_norm() / (b.rows as f64).sqrt();
+    assert!(
+        a.max_abs_diff(&b) < 1e-3 * scale.max(1.0),
+        "pjrt vs native diff = {}",
+        a.max_abs_diff(&b)
+    );
+}
+
+#[test]
+fn pjrt_pallas_matches_jnp_flavor() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(62, 0);
+    let (n, d) = (600, 4);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let hypers = Hypers {
+        log_lengthscales: vec![0.0],
+        log_outputscale: 0.0,
+        log_noise: (0.1f64).ln(),
+    };
+    let v = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+    let jnp = build_op(Flavor::Jnp, 1, hypers.clone(), &x, d).unwrap();
+    let pallas = build_op(Flavor::Pallas, 1, hypers, &x, d).unwrap();
+    let a = jnp.mvm(&v);
+    let b = pallas.mvm(&v);
+    assert!(a.max_abs_diff(&b) < 1e-3, "pallas vs jnp diff = {}", a.max_abs_diff(&b));
+}
+
+#[test]
+fn pjrt_grads_match_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(63, 0);
+    let (n, d) = (520, 3);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let hypers = Hypers {
+        log_lengthscales: vec![-0.2],
+        log_outputscale: 0.3,
+        log_noise: (0.15f64).ln(),
+    };
+    let v = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+    let pjrt = build_op(Flavor::Jnp, 1, hypers.clone(), &x, d).unwrap();
+    let native = native_op(1, hypers, &x, d);
+    let (akv, ag) = pjrt.apply_grads(&v);
+    let (bkv, bg) = native.apply_grads(&v);
+    assert!(akv.max_abs_diff(&bkv) < 2e-3, "kv diff {}", akv.max_abs_diff(&bkv));
+    assert_eq!(ag.len(), bg.len());
+    for (x, y) in ag.iter().zip(&bg) {
+        assert!(x.max_abs_diff(y) < 2e-3, "grad diff {}", x.max_abs_diff(y));
+    }
+}
+
+#[test]
+fn pjrt_multi_worker_consistent() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(64, 0);
+    let (n, d) = (900, 4);
+    let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let hypers = Hypers::default_init(None);
+    let v = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+    let one = build_op(Flavor::Jnp, 1, hypers.clone(), &x, d).unwrap().mvm(&v);
+    let four = build_op(Flavor::Jnp, 4, hypers, &x, d).unwrap().mvm(&v);
+    assert!(one.max_abs_diff(&four) < 1e-12, "diff {}", one.max_abs_diff(&four));
+}
