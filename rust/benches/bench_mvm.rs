@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use exactgp::bench_harness::{time_fn, BenchEnv};
+use exactgp::bench_harness::{quick_requested, time_fn, BenchEnv};
 use exactgp::config::{Backend, Flavor};
 use exactgp::coordinator::print_table;
 use exactgp::exec::{backend_factory, pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
@@ -25,13 +25,16 @@ fn tile_flops(spec: &TileSpec) -> f64 {
 
 fn main() {
     let env = BenchEnv::from_env(&[]);
+    let quick = quick_requested();
     let spec = TileSpec::PROD;
     let d = 8;
     let mut rng = Rng::new(3, 0);
     let mut rows = Vec::new();
+    let reps = if quick { 1 } else { 3 };
 
     let ns: Vec<usize> = match std::env::var("EXACTGP_BENCH_N") {
         Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
+        Err(_) if quick => vec![2048],
         Err(_) => vec![2048, 8192],
     };
 
@@ -64,7 +67,7 @@ fn main() {
                 Hypers::default_init(None),
                 Arc::new(Accounting::default()),
             );
-            let stats = time_fn(1, 3, || {
+            let stats = time_fn(if quick { 0 } else { 1 }, reps, || {
                 let _ = op.apply_raw(&v);
             });
             rows.push(vec![
@@ -81,6 +84,55 @@ fn main() {
         &["size", "backend", "time/MVM", "GFLOP/s (best)"],
         &rows,
     );
+
+    // Native worker scaling at the largest n: the acceptance target is
+    // >= 2x throughput with 4 workers vs the single-threaded baseline on
+    // a multi-core host.
+    {
+        let n = *ns.last().unwrap_or(&8192);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let data = Arc::new(PaddedData::new(&x, d, &spec));
+        let v = Mat::from_vec(n, spec.t, rng.normal_vec(n * spec.t));
+        let mut rows_w = Vec::new();
+        let mut base = f64::NAN;
+        for workers in [1usize, 2, 4] {
+            let mut cfg = env.cfg.clone();
+            cfg.backend = Backend::Native;
+            cfg.workers = workers;
+            let Ok(factory) = backend_factory(&cfg, cfg.kernel, false, spec.d, spec) else {
+                break;
+            };
+            let Ok(pool) = DevicePool::new(workers, factory) else { break };
+            let op = PartitionedKernelOp::square(
+                data.clone(),
+                Arc::new(pool),
+                Plan::with_rows(data.n_pad, data.n_pad, spec.r),
+                spec,
+                Hypers::default_init(None),
+                Arc::new(Accounting::default()),
+            );
+            let stats = time_fn(if quick { 0 } else { 1 }, reps, || {
+                let _ = op.apply_raw(&v);
+            });
+            if workers == 1 {
+                base = stats.mean;
+            }
+            rows_w.push(vec![
+                workers.to_string(),
+                stats.fmt_seconds(),
+                format!("{:.2}x", base / stats.mean),
+            ]);
+        }
+        print_table(
+            &format!("Native MVM scaling with workers (n={n}, t={})", spec.t),
+            &["workers", "time/MVM", "speedup vs 1 worker"],
+            &rows_w,
+        );
+    }
+
+    if quick {
+        return; // smoke run: skip the PJRT partition-overhead sweep
+    }
 
     // Partition-count overhead at fixed n (the O(n)-memory knob).
     let n = *ns.last().unwrap_or(&8192);

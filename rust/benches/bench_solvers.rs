@@ -93,7 +93,7 @@ fn main() {
                 bb.set_col(j, &p.sample_probe(&mut rng2));
             }
             let res = mbcg(&op, &p, &bb, 1e-8, 4000, 0);
-            let est = logdet_from_tridiags(&res.tridiags, n, p.logdet());
+            let est = logdet_from_tridiags(&res.tridiags, n, p.logdet()).unwrap();
             errs.push((est - truth_logdet).abs() / truth_logdet.abs());
         }
         let (m, s) = exactgp::metrics::mean_std(&errs);

@@ -91,6 +91,15 @@ impl BenchEnv {
     }
 }
 
+/// True when a bench was invoked as a CI smoke run: either
+/// `cargo bench --bench <name> -- --quick` or EXACTGP_BENCH_QUICK=1.
+/// Benches honoring it shrink problem sizes and repetition counts so the
+/// smoke target finishes in seconds.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("EXACTGP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
 /// mean +/- std formatting for table cells.
 pub fn pm(mean: f64, std: f64) -> String {
     format!("{mean:.3} +/- {std:.3}")

@@ -220,11 +220,11 @@ impl PartitionedKernelOp {
             let padded = Arc::new(self.pad_rhs(v, chunk.clone()));
             let theta = Arc::new(self.theta_padded());
             let results = self.run_jobs(pool::JobKind::Mvm, padded, theta);
-            for (p, res) in self.plan.partitions.iter().zip(&results) {
-                let rows = p.len().min(self.row_data.n.saturating_sub(p.start));
+            for &(start, len, ref res) in &results {
+                let rows = len.min(self.row_data.n.saturating_sub(start));
                 for i in 0..rows {
                     for (jj, j) in chunk.clone().enumerate() {
-                        out[(p.start + i, j)] += res[i * self.spec.t + jj];
+                        out[(start + i, j)] += res[i * self.spec.t + jj];
                     }
                 }
             }
@@ -246,14 +246,14 @@ impl PartitionedKernelOp {
             let padded = Arc::new(self.pad_rhs(v, chunk.clone()));
             let theta = Arc::new(self.theta_padded());
             let results = self.run_jobs(pool::JobKind::MvmGrads { nl }, padded, theta);
-            for (p, res) in self.plan.partitions.iter().zip(&results) {
-                let rows = p.len().min(self.row_data.n.saturating_sub(p.start));
-                let stride = p.len() * t;
+            for &(start, len, ref res) in &results {
+                let rows = len.min(self.row_data.n.saturating_sub(start));
+                let stride = len * t;
                 for i in 0..rows {
                     for (jj, j) in chunk.clone().enumerate() {
-                        kv[(p.start + i, j)] += res[i * t + jj];
+                        kv[(start + i, j)] += res[i * t + jj];
                         for g in 0..n_ls {
-                            gs[g][(p.start + i, j)] +=
+                            gs[g][(start + i, j)] +=
                                 res[stride * (1 + g) + i * t + jj];
                         }
                     }
@@ -264,26 +264,60 @@ impl PartitionedKernelOp {
         (kv, gs)
     }
 
+    /// Job row-ranges for one MVM: the plan's partitions, sub-split along
+    /// tile-height boundaries when there are fewer partitions than pool
+    /// workers — a single memory-budget partition must not serialize the
+    /// whole MVM onto one worker. Per-row results are identical however
+    /// rows are grouped (each output row accumulates its own column-tile
+    /// stream), so the split never changes the answer.
+    fn job_ranges(&self) -> Vec<(usize, usize)> {
+        let workers = self.pool.workers;
+        let base: Vec<(usize, usize)> =
+            self.plan.partitions.iter().map(|p| (p.start, p.len())).collect();
+        if workers <= 1 || base.is_empty() || base.len() >= workers {
+            return base;
+        }
+        let align = self.spec.r.max(1);
+        let per_partition = workers.div_ceil(base.len());
+        let mut out = Vec::new();
+        for (start, len) in base {
+            let total_tiles = len.div_ceil(align).max(1);
+            let chunks = per_partition.min(total_tiles);
+            let base_tiles = total_tiles / chunks;
+            let extra = total_tiles % chunks;
+            let mut s = start;
+            for ci in 0..chunks {
+                let tiles = base_tiles + usize::from(ci < extra);
+                let l = (tiles * align).min(start + len - s);
+                out.push((s, l));
+                s += l;
+            }
+            debug_assert_eq!(s, start + len);
+        }
+        out
+    }
+
+    /// Dispatch one batched MVM to the pool; returns per-job
+    /// (row_start, row_len, accumulated f64 block) in row order.
     fn run_jobs(
         &self,
         kind: pool::JobKind,
         v: Arc<Vec<f32>>,
         theta: Arc<Vec<f32>>,
-    ) -> Vec<Vec<f64>> {
+    ) -> Vec<(usize, usize, Vec<f64>)> {
         // The RHS travels to each *device* once per MVM — O(n w), the
         // paper's communication model (SS3, "Distributed MVMs in Parallel").
         self.acct
             .add_to_device((v.len() * 4) as u64 * self.pool.workers as u64);
-        let jobs: Vec<pool::Job> = self
-            .plan
-            .partitions
+        let ranges = self.job_ranges();
+        let jobs: Vec<pool::Job> = ranges
             .iter()
             .enumerate()
-            .map(|(id, p)| pool::Job {
+            .map(|(id, &(start, len))| pool::Job {
                 id,
                 kind,
-                row_start: p.start,
-                row_len: p.len(),
+                row_start: start,
+                row_len: len,
                 row_data: self.row_data.clone(),
                 col_data: self.col_data.clone(),
                 col_limit: self.col_data.n, // skip all-padding column tiles
@@ -292,7 +326,12 @@ impl PartitionedKernelOp {
                 acct: self.acct.clone(),
             })
             .collect();
-        self.pool.run(jobs)
+        let results = self.pool.run(jobs);
+        ranges
+            .into_iter()
+            .zip(results)
+            .map(|((start, len), res)| (start, len, res))
+            .collect()
     }
 }
 
@@ -458,6 +497,28 @@ mod tests {
             }
         }
         let _ = kv;
+    }
+
+    #[test]
+    fn single_partition_splits_across_workers() {
+        // A one-partition plan (big memory budget) must still fan the MVM
+        // out across pool workers, tile-aligned, without changing results.
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let n = 40; // n_pad = 40 -> 5 row tiles
+        let mut rng = Rng::new(58, 0);
+        let v = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+        let (op1, _) = toy_op(n, 2, false, 1, spec, 1024);
+        let (op4, _) = toy_op(n, 2, false, 4, spec, 1024);
+        assert_eq!(op4.plan.p(), 1);
+        let ranges = op4.job_ranges();
+        assert_eq!(ranges.len(), 4, "ranges={ranges:?}");
+        for &(s, l) in &ranges {
+            assert!(l > 0 && s % spec.r == 0, "unaligned job {s}+{l}");
+        }
+        assert_eq!(ranges.iter().map(|&(_, l)| l).sum::<usize>(), op4.row_data.n_pad);
+        let a = op1.mvm(&v);
+        let b = op4.mvm(&v);
+        assert!(a.max_abs_diff(&b) < 1e-12, "diff={}", a.max_abs_diff(&b));
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub struct NativeBackend {
     xr_s: Vec<f32>,
     xc_s: Vec<f32>,
     v_s: Vec<f32>,
+    rho_s: Vec<f32>,
 }
 
 impl NativeBackend {
@@ -33,6 +34,7 @@ impl NativeBackend {
             xr_s: vec![0.0; spec.r * spec.d],
             xc_s: vec![0.0; spec.c * spec.d],
             v_s: vec![0.0; spec.c * spec.t],
+            rho_s: vec![0.0; spec.c],
         }
     }
 
@@ -65,17 +67,53 @@ impl NativeBackend {
     #[inline]
     fn rho_e(&self, r2: f32) -> (f32, f32) {
         match self.kind {
-            KernelKind::Matern32 => {
-                let u = (3.0 * r2).sqrt();
-                let e = (-u).exp();
-                ((1.0 + u) * e, e)
-            }
-            KernelKind::Rbf => {
-                let rho = (-0.5 * r2).exp();
-                (rho, rho)
-            }
+            KernelKind::Matern32 => matern32_rho_e(r2),
+            KernelKind::Rbf => rbf_rho_e(r2),
         }
     }
+}
+
+/// (correlation, shared exponential factor) for Matern-3/2 at scaled r^2 —
+/// the single source of the kernel math for both the per-element
+/// `rho_e` path (mvm_grads) and the hoisted per-kind loops in `mvm`.
+#[inline]
+fn matern32_rho_e(r2: f32) -> (f32, f32) {
+    let u = (3.0 * r2).sqrt();
+    let e = (-u).exp();
+    ((1.0 + u) * e, e)
+}
+
+/// (correlation, shared exponential factor) for RBF at scaled r^2.
+#[inline]
+fn rbf_rho_e(r2: f32) -> (f32, f32) {
+    let rho = (-0.5 * r2).exp();
+    (rho, rho)
+}
+
+/// Squared distance between two feature rows, 4-lane unrolled.
+#[inline]
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [0.0f32; 4];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
 }
 
 impl TileBackend for NativeBackend {
@@ -86,21 +124,35 @@ impl TileBackend for NativeBackend {
     fn mvm(&mut self, xr: &[f32], xc: &[f32], v: &[f32], theta: &[f32]) -> Result<Vec<f32>> {
         let TileSpec { r, c, t, d } = self.spec;
         self.scale_inputs(xr, xc, v, theta);
+        let kind = self.kind;
         let mut out = vec![0.0f32; r * t];
+        // Three passes per tile row, each over contiguous memory with the
+        // kernel-kind branch hoisted out of the element loops: distances
+        // into the rho scratch, distance -> correlation in place, then the
+        // (c, t) matvec accumulation.
         for i in 0..r {
             let a = &self.xr_s[i * d..(i + 1) * d];
+            for jc in 0..c {
+                self.rho_s[jc] = sq_dist(a, &self.xc_s[jc * d..(jc + 1) * d]);
+            }
+            match kind {
+                KernelKind::Matern32 => {
+                    for rho in &mut self.rho_s {
+                        *rho = matern32_rho_e(*rho).0;
+                    }
+                }
+                KernelKind::Rbf => {
+                    for rho in &mut self.rho_s {
+                        *rho = rbf_rho_e(*rho).0;
+                    }
+                }
+            }
             let orow = &mut out[i * t..(i + 1) * t];
             for jc in 0..c {
-                let b = &self.xc_s[jc * d..(jc + 1) * d];
-                let mut r2 = 0.0f32;
-                for k in 0..d {
-                    let diff = a[k] - b[k];
-                    r2 += diff * diff;
-                }
-                let (rho, _) = self.rho_e(r2);
+                let w = self.rho_s[jc];
                 let vrow = &self.v_s[jc * t..(jc + 1) * t];
                 for j in 0..t {
-                    orow[j] += rho * vrow[j];
+                    orow[j] += w * vrow[j];
                 }
             }
         }
@@ -123,11 +175,7 @@ impl TileBackend for NativeBackend {
             let a = &self.xr_s[i * d..(i + 1) * d];
             for jc in 0..c {
                 let b = &self.xc_s[jc * d..(jc + 1) * d];
-                let mut r2 = 0.0f32;
-                for k in 0..d {
-                    let diff = a[k] - b[k];
-                    r2 += diff * diff;
-                }
+                let r2 = sq_dist(a, b);
                 let (rho, e) = self.rho_e(r2);
                 let vrow = &self.v_s[jc * t..(jc + 1) * t];
                 for j in 0..t {

@@ -204,39 +204,37 @@ impl ExactGp {
         let noise = self.hypers.noise();
         let mut grad = vec![0.0; n_ls + 2];
 
-        let col_dot = |m: &Mat, j: usize, v2: &[f64]| -> f64 {
-            (0..m.rows).map(|i| m[(i, j)] * v2[i]).sum()
-        };
-
         // Solve terms: -u0^T dK^ u0 ; trace terms: (1/t) sum u_j^T dK^ w_j.
+        // u0 is column 0 of U, so every pairing is a matching-column dot
+        // (Mat::col_dot — contiguous-row slab walk, no column copies).
         for l in 0..n_ls {
-            let solve_term = col_dot(&gls[l], 0, &u0);
+            let solve_term = gls[l].col_dot(&res.u, 0);
             let mut tr = 0.0;
             for j in 0..t {
-                tr += col_dot(&gls[l], 1 + j, &res.u.col(1 + j));
+                tr += gls[l].col_dot(&res.u, 1 + j);
             }
             grad[l] = 0.5 * (tr / t as f64 - solve_term);
         }
         // Outputscale: dK/dlog_os = K (KV columns are K V, no noise).
         {
-            let solve_term = col_dot(&kv, 0, &u0);
+            let solve_term = kv.col_dot(&res.u, 0);
             let mut tr = 0.0;
             for j in 0..t {
-                tr += col_dot(&kv, 1 + j, &res.u.col(1 + j));
+                tr += kv.col_dot(&res.u, 1 + j);
             }
             grad[n_ls] = 0.5 * (tr / t as f64 - solve_term);
         }
-        // Noise: dK^/dlog_noise = sigma^2 I.
+        // Noise: dK^/dlog_noise = sigma^2 I. U's probe block is offset one
+        // column from W; slice it out as a contiguous slab and take the
+        // per-column dots in one pass.
         {
             let solve_term = crate::linalg::dot(&u0, &u0);
-            let mut tr = 0.0;
-            for j in 0..t {
-                tr += crate::linalg::dot(&res.u.col(1 + j), &w.col(j));
-            }
+            let u_probes = res.u.cols_range(1..1 + t);
+            let tr: f64 = crate::linalg::col_dots(&u_probes, &w).iter().sum();
             grad[n_ls + 1] = 0.5 * noise * (tr / t as f64 - solve_term);
         }
 
-        let logdet = logdet_from_tridiags(&res.tridiags, n, precond.logdet());
+        let logdet = logdet_from_tridiags(&res.tridiags, n, precond.logdet())?;
         let nll = 0.5 * (crate::linalg::dot(&self.y, &u0) + logdet + n as f64 * LOG_2PI);
         Ok((nll, grad, res.stats.iterations))
     }

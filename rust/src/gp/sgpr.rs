@@ -280,7 +280,7 @@ mod tests {
     use super::*;
 
     fn artifacts_available() -> bool {
-        std::path::Path::new("artifacts/manifest.json").exists()
+        cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists()
     }
 
     fn toy_ds(n_total: usize, d: usize, seed: u64) -> Dataset {

@@ -234,7 +234,7 @@ mod tests {
     use super::*;
 
     fn artifacts_available() -> bool {
-        std::path::Path::new("artifacts/manifest.json").exists()
+        cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists()
     }
 
     #[test]

@@ -1,15 +1,25 @@
 //! Dense linear algebra substrate.
 //!
-//! No LAPACK/BLAS/ndarray in the offline dependency closure, so the small
-//! dense problems the coordinator owns are implemented here:
+//! No LAPACK/BLAS/ndarray in the offline dependency closure, so the dense
+//! kernels the coordinator owns are implemented here:
 //!
-//! * Cholesky factorization + triangular solves — the O(n^3) baseline GP
-//!   (`gp::cholesky`), the m x m inducing-point systems (SGPR/SVGP
-//!   prediction), and the k x k Woodbury core of the pivoted-Cholesky
-//!   preconditioner;
-//! * symmetric tridiagonal eigensolver (implicit-shift QL) — turning the
-//!   mBCG Lanczos coefficients into log-determinant quadrature (BBMM);
-//! * the usual vector/matrix kit (gemm, gemv, dots, norms).
+//! * a cache-tiled gemm: `Mat::matmul` / `Mat::t_matmul` work in
+//!   `BLOCK` x `BLOCK` (64 x 64) tiles, packing the right-hand tile
+//!   *transposed* into a contiguous scratch buffer so the innermost kernel
+//!   is a straight dot product over two contiguous slabs (unrolled 4-wide,
+//!   f64 accumulators, fixed association order — deterministic results
+//!   independent of matrix shape);
+//! * column-slab helpers for the batched solvers: `col_dots` /
+//!   `col_norms` / `axpy_cols` stream whole rows (contiguous in the
+//!   row-major layout) and update every column of a block at once, which
+//!   is what lets `solvers::mbcg` run its per-iteration vector work
+//!   without strided per-element column loops;
+//! * Cholesky factorization + triangular solves (`chol`) — the O(n^3)
+//!   baseline GP, the m x m inducing-point systems (SGPR/SVGP), and the
+//!   k x k Woodbury core of the pivoted-Cholesky preconditioner;
+//! * a symmetric tridiagonal eigensolver (`eig`, implicit-shift QL) —
+//!   turning the mBCG Lanczos coefficients into log-determinant
+//!   quadrature (BBMM).
 //!
 //! Everything is f64: these paths are small, and keeping the *solver state*
 //! in f64 while the kernel tiles run in f32 mirrors the paper's setup (GPU
@@ -20,6 +30,10 @@ pub mod eig;
 
 pub use chol::{cholesky, solve_lower, solve_lower_transpose, solve_psd, CholeskyFactor};
 pub use eig::tridiag_eig;
+
+/// Gemm tile edge: 64 x 64 f64 tiles are 32 KiB — two of them (packed
+/// operand + output rows) sit comfortably in L1/L2.
+const BLOCK: usize = 64;
 
 /// Dense row-major f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -82,6 +96,35 @@ impl Mat {
         }
     }
 
+    /// Contiguous copy of columns `[lo, hi)` — a column slab.
+    pub fn cols_range(&self, r: std::ops::Range<usize>) -> Mat {
+        let (lo, hi) = (r.start, r.end);
+        assert!(lo <= hi && hi <= self.cols, "cols_range {lo}..{hi} of {}", self.cols);
+        let w = hi - lo;
+        let mut out = Mat::zeros(self.rows, w);
+        for i in 0..self.rows {
+            let src = &self.data[i * self.cols + lo..i * self.cols + hi];
+            out.data[i * w..(i + 1) * w].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// sum_i self[i, j] * other[i, j] — dot product of matching columns.
+    pub fn col_dot(&self, other: &Mat, j: usize) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert!(j < self.cols && j < other.cols);
+        let mut s = 0.0;
+        for i in 0..self.rows {
+            s += self.data[i * self.cols + j] * other.data[i * other.cols + j];
+        }
+        s
+    }
+
+    /// Euclidean norm of column `j`.
+    pub fn col_norm(&self, j: usize) -> f64 {
+        self.col_dot(self, j).sqrt()
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -92,40 +135,88 @@ impl Mat {
         t
     }
 
-    /// self @ other (naive ikj-ordered gemm — cache-friendly for row-major).
+    /// self @ other — blocked, transpose-packed gemm.
+    ///
+    /// Tiles over (k, j); each `other` tile is packed transposed so that
+    /// out(i, j) accumulates as a dot product over two contiguous slabs.
+    /// Accumulation order per output element is fixed (k-blocks in order,
+    /// 4-lane unrolled dot inside a block), so results are deterministic.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul dims {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            for (k, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul dims {}x{} @ {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || k == 0 || n == 0 {
+            return out;
+        }
+        // pack[jj * kb + kk] = other[k0 + kk, j0 + jj]
+        let mut pack = vec![0.0f64; BLOCK * BLOCK];
+        for k0 in (0..k).step_by(BLOCK) {
+            let kb = BLOCK.min(k - k0);
+            for j0 in (0..n).step_by(BLOCK) {
+                let jb = BLOCK.min(n - j0);
+                for kk in 0..kb {
+                    let brow = &other.data[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jb];
+                    for (jj, &b) in brow.iter().enumerate() {
+                        pack[jj * kb + kk] = b;
+                    }
                 }
-                let brow = other.row(k);
-                let orow = out.row_mut(i);
-                for j in 0..other.cols {
-                    orow[j] += a * brow[j];
+                for i in 0..m {
+                    let arow = &self.data[i * k + k0..i * k + k0 + kb];
+                    let orow = &mut out.data[i * n + j0..i * n + j0 + jb];
+                    for (jj, o) in orow.iter_mut().enumerate() {
+                        *o += dot(arow, &pack[jj * kb..(jj + 1) * kb]);
+                    }
                 }
             }
         }
         out
     }
 
-    /// self^T @ other without materializing the transpose.
+    /// self^T @ other without materializing the transpose (same blocked,
+    /// transpose-packed scheme as `matmul`; both operands are packed since
+    /// both are walked column-wise).
     pub fn t_matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows);
-        let mut out = Mat::zeros(self.cols, other.cols);
-        for k in 0..self.rows {
-            let arow = self.row(k);
-            let brow = other.row(k);
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || k == 0 || n == 0 {
+            return out;
+        }
+        // apack[ii * kb + kk] = self[k0 + kk, i0 + ii]
+        // bpack[jj * kb + kk] = other[k0 + kk, j0 + jj]
+        let mut apack = vec![0.0f64; BLOCK * BLOCK];
+        let mut bpack = vec![0.0f64; BLOCK * BLOCK];
+        for k0 in (0..k).step_by(BLOCK) {
+            let kb = BLOCK.min(k - k0);
+            for i0 in (0..m).step_by(BLOCK) {
+                let ib = BLOCK.min(m - i0);
+                for kk in 0..kb {
+                    let arow = &self.data[(k0 + kk) * m + i0..(k0 + kk) * m + i0 + ib];
+                    for (ii, &a) in arow.iter().enumerate() {
+                        apack[ii * kb + kk] = a;
+                    }
                 }
-                let orow = out.row_mut(i);
-                for j in 0..other.cols {
-                    orow[j] += a * brow[j];
+                for j0 in (0..n).step_by(BLOCK) {
+                    let jb = BLOCK.min(n - j0);
+                    for kk in 0..kb {
+                        let brow =
+                            &other.data[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jb];
+                        for (jj, &b) in brow.iter().enumerate() {
+                            bpack[jj * kb + kk] = b;
+                        }
+                    }
+                    for ii in 0..ib {
+                        let acol = &apack[ii * kb..(ii + 1) * kb];
+                        let orow =
+                            &mut out.data[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + jb];
+                        for (jj, o) in orow.iter_mut().enumerate() {
+                            *o += dot(acol, &bpack[jj * kb..(jj + 1) * kb]);
+                        }
+                    }
                 }
             }
         }
@@ -250,6 +341,51 @@ pub fn scale_vec(a: f64, x: &mut [f64]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Column-slab kit: every-column-at-once operations over contiguous rows.
+// These are the mBCG building blocks — one streaming pass over the (n, t)
+// block updates all t columns, instead of t strided passes.
+// ---------------------------------------------------------------------------
+
+/// Per-column dot products diag(A^T B): acc[j] = sum_i a[i, j] * b[i, j].
+pub fn col_dots(a: &Mat, b: &Mat) -> Vec<f64> {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let t = a.cols;
+    let mut acc = vec![0.0f64; t];
+    if t == 0 {
+        return acc;
+    }
+    for (ar, br) in a.data.chunks_exact(t).zip(b.data.chunks_exact(t)) {
+        for j in 0..t {
+            acc[j] += ar[j] * br[j];
+        }
+    }
+    acc
+}
+
+/// Per-column Euclidean norms.
+pub fn col_norms(a: &Mat) -> Vec<f64> {
+    col_dots(a, a).into_iter().map(f64::sqrt).collect()
+}
+
+/// y[:, j] += alpha[j] * x[:, j] for every column in one contiguous pass.
+/// A zero `alpha[j]` leaves that column exactly unchanged.
+pub fn axpy_cols(alpha: &[f64], x: &Mat, y: &mut Mat) {
+    assert_eq!((x.rows, x.cols), (y.rows, y.cols));
+    assert_eq!(alpha.len(), x.cols);
+    let t = x.cols;
+    if t == 0 {
+        return;
+    }
+    for (yr, xr) in y.data.chunks_exact_mut(t).zip(x.data.chunks_exact(t)) {
+        for j in 0..t {
+            if alpha[j] != 0.0 {
+                yr[j] += alpha[j] * xr[j];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,13 +407,46 @@ mod tests {
     }
 
     #[test]
+    fn matmul_matches_naive_across_block_boundaries() {
+        // Shapes straddling the 64-tile edges exercise every partial-tile
+        // path of the blocked gemm.
+        let mut rng = crate::util::rng::Rng::new(8, 0);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (63, 64, 65), (70, 129, 66)] {
+            let a = Mat::from_vec(m, k, rng.normal_vec(m * k));
+            let b = Mat::from_vec(k, n, rng.normal_vec(k * n));
+            let fast = a.matmul(&b);
+            let mut naive = Mat::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for kk in 0..k {
+                        s += a[(i, kk)] * b[(kk, j)];
+                    }
+                    naive[(i, j)] = s;
+                }
+            }
+            assert!(
+                fast.max_abs_diff(&naive) < 1e-10 * (k as f64),
+                "({m},{k},{n}): diff={}",
+                fast.max_abs_diff(&naive)
+            );
+        }
+    }
+
+    #[test]
     fn t_matmul_matches_explicit_transpose() {
         let mut rng = crate::util::rng::Rng::new(1, 0);
-        let a = Mat::from_vec(5, 3, rng.normal_vec(15));
-        let b = Mat::from_vec(5, 4, rng.normal_vec(20));
-        let fast = a.t_matmul(&b);
-        let slow = a.transpose().matmul(&b);
-        assert!(fast.max_abs_diff(&slow) < 1e-12);
+        for (k, m, n) in [(5, 3, 4), (64, 64, 64), (100, 65, 33)] {
+            let a = Mat::from_vec(k, m, rng.normal_vec(k * m));
+            let b = Mat::from_vec(k, n, rng.normal_vec(k * n));
+            let fast = a.t_matmul(&b);
+            let slow = a.transpose().matmul(&b);
+            assert!(
+                fast.max_abs_diff(&slow) < 1e-10,
+                "({k},{m},{n}): diff={}",
+                fast.max_abs_diff(&slow)
+            );
+        }
     }
 
     #[test]
@@ -308,5 +477,63 @@ mod tests {
         let m = Mat::from_rows(vec![vec![1.5, -2.25], vec![0.0, 3.0]]);
         let back = Mat::from_f32(2, 2, &m.to_f32());
         assert!(m.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    fn cols_range_copies_slab() {
+        let mut rng = crate::util::rng::Rng::new(4, 0);
+        let a = Mat::from_vec(5, 7, rng.normal_vec(35));
+        let slab = a.cols_range(2..5);
+        assert_eq!((slab.rows, slab.cols), (5, 3));
+        for i in 0..5 {
+            for j in 0..3 {
+                assert_eq!(slab[(i, j)], a[(i, 2 + j)]);
+            }
+        }
+        let empty = a.cols_range(3..3);
+        assert_eq!(empty.cols, 0);
+    }
+
+    #[test]
+    fn col_slab_kit_matches_per_column_loops() {
+        let mut rng = crate::util::rng::Rng::new(5, 0);
+        let a = Mat::from_vec(9, 4, rng.normal_vec(36));
+        let b = Mat::from_vec(9, 4, rng.normal_vec(36));
+        let dots = col_dots(&a, &b);
+        let norms = col_norms(&a);
+        for j in 0..4 {
+            let want: f64 = (0..9).map(|i| a[(i, j)] * b[(i, j)]).sum();
+            assert!((dots[j] - want).abs() < 1e-12);
+            assert!((a.col_dot(&b, j) - want).abs() < 1e-12);
+            let wn: f64 = (0..9).map(|i| a[(i, j)] * a[(i, j)]).sum::<f64>().sqrt();
+            assert!((norms[j] - wn).abs() < 1e-12);
+            assert!((a.col_norm(j) - wn).abs() < 1e-12);
+        }
+
+        let alpha = [0.5, 0.0, -2.0, 1.25];
+        let mut y = b.clone();
+        axpy_cols(&alpha, &a, &mut y);
+        for i in 0..9 {
+            for j in 0..4 {
+                let want = b[(i, j)] + alpha[j] * a[(i, j)];
+                assert!((y[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+        // Zero alpha leaves the column bitwise untouched.
+        for i in 0..9 {
+            assert_eq!(y[(i, 1)], b[(i, 1)]);
+        }
+    }
+
+    #[test]
+    fn col_dot_across_different_width_mats() {
+        // col_dot pairs column j of self with column j of other even when
+        // the two matrices have different widths (used by gp::exact for
+        // gradient traces).
+        let mut rng = crate::util::rng::Rng::new(6, 0);
+        let a = Mat::from_vec(6, 5, rng.normal_vec(30));
+        let b = Mat::from_vec(6, 3, rng.normal_vec(18));
+        let want: f64 = (0..6).map(|i| a[(i, 2)] * b[(i, 2)]).sum();
+        assert!((a.col_dot(&b, 2) - want).abs() < 1e-12);
     }
 }

@@ -17,9 +17,14 @@
 //! the whole procedure map onto partitioned/distributed matmuls.
 //!
 //! Storage is exactly the paper's 4n-per-RHS vectors (u, r, p, z) plus the
-//! preconditioner; the kernel matrix itself is never formed.
+//! preconditioner; the kernel matrix itself is never formed. All
+//! per-iteration vector work (column dots, norms, the u/r/p updates) runs
+//! through the column-slab kit in `linalg` — one contiguous pass over each
+//! (n, t) block per operation instead of t strided column loops.
 
-use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::{axpy_cols, col_dots, col_norms, Mat};
 use crate::solvers::{BatchMvm, Preconditioner};
 
 /// Convergence / iteration report for one mBCG call.
@@ -37,6 +42,8 @@ pub struct MbcgResult {
     pub u: Mat,
     /// Lanczos tridiagonals for the columns requested in `track_tridiag`:
     /// (diag, offdiag) pairs, sized by the iterations that column ran.
+    /// Invariant (held by construction): off.len() == diag.len() - 1
+    /// whenever diag is non-empty.
     pub tridiags: Vec<(Vec<f64>, Vec<f64>)>,
     pub stats: MbcgStats,
 }
@@ -57,20 +64,24 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
     let t = b.cols;
     assert_eq!(op.n(), n);
 
-    let b_norms: Vec<f64> = (0..t).map(|j| col_norm(b, j)).collect();
+    let b_norms = col_norms(b);
 
     let mut u = Mat::zeros(n, t);
     let mut r = b.clone(); // r = B - K^ U = B at U = 0
-    let mut z = precond.apply(&r);
-    let mut p = z.clone();
-    let mut rz: Vec<f64> = (0..t).map(|j| col_dot(&r, &z, j)).collect();
+    let z0 = precond.apply(&r);
+    let mut rz = col_dots(&r, &z0);
+    let mut p = z0;
 
-    // Per-column state.
+    // Per-column state. A column that converges at iteration m has
+    // recorded exactly m alphas and m-1 betas: beta_k (computed in the
+    // z-phase after alpha_k) is held in `pending_beta` and only committed
+    // once alpha_{k+1} exists — the tridiagonal invariant by construction.
     let mut active: Vec<bool> = (0..t)
         .map(|j| b_norms[j] > 0.0) // zero RHS is already solved
         .collect();
     let mut alphas: Vec<Vec<f64>> = vec![Vec::new(); t];
     let mut betas: Vec<Vec<f64>> = vec![Vec::new(); t];
+    let mut pending_beta = vec![0.0f64; t];
     let mut rel_res: Vec<f64> = (0..t)
         .map(|j| if b_norms[j] > 0.0 { 1.0 } else { 0.0 })
         .collect();
@@ -84,29 +95,41 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
 
         // The single batched MVM of this iteration.
         let v = op.mvm(&p);
+        let pv = col_dots(&p, &v);
 
-        let mut z_next_needed = false;
-        let mut alpha = vec![0.0; t];
+        let mut alpha = vec![0.0f64; t];
         for j in 0..t {
             if !active[j] {
                 continue;
             }
-            let pv = col_dot(&p, &v, j);
-            if !(pv.is_finite()) || pv.abs() < 1e-300 {
+            if !pv[j].is_finite() || pv[j].abs() < 1e-300 {
                 active[j] = false;
                 continue;
             }
-            alpha[j] = rz[j] / pv;
-            alphas[j].push(alpha[j]);
-            // u_j += alpha p_j ; r_j -= alpha v_j
-            for i in 0..n {
-                u[(i, j)] += alpha[j] * p[(i, j)];
-                r[(i, j)] -= alpha[j] * v[(i, j)];
+            alpha[j] = rz[j] / pv[j];
+            if !alphas[j].is_empty() {
+                betas[j].push(pending_beta[j]);
             }
-            rel_res[j] = col_norm(&r, j) / b_norms[j];
+            alphas[j].push(alpha[j]);
+        }
+
+        // u += P diag(alpha); r -= V diag(alpha). Inactive columns have
+        // alpha = 0 and are left exactly untouched.
+        axpy_cols(&alpha, &p, &mut u);
+        let neg_alpha: Vec<f64> = alpha.iter().map(|a| -a).collect();
+        axpy_cols(&neg_alpha, &v, &mut r);
+
+        let r_norms = col_norms(&r);
+        let mut z_next_needed = false;
+        for j in 0..t {
+            if !active[j] {
+                continue;
+            }
+            rel_res[j] = r_norms[j] / b_norms[j];
             if rel_res[j] <= tol {
                 active[j] = false;
-                // A final beta is not needed for the tridiagonal.
+                // The pending beta is never committed: the tridiagonal of
+                // a column converging at iteration m stops at alpha_m.
             } else {
                 z_next_needed = true;
             }
@@ -117,26 +140,33 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
         }
 
         let z_new = precond.apply(&r);
+        let rz_new = col_dots(&r, &z_new);
+        let mut beta = vec![0.0f64; t];
         for j in 0..t {
             if !active[j] {
                 continue;
             }
-            let rz_new = col_dot(&r, &z_new, j);
-            let beta = rz_new / rz[j];
-            betas[j].push(beta);
-            rz[j] = rz_new;
-            for i in 0..n {
-                p[(i, j)] = z_new[(i, j)] + beta * p[(i, j)];
+            beta[j] = rz_new[j] / rz[j];
+            pending_beta[j] = beta[j];
+            rz[j] = rz_new[j];
+        }
+        // p = z_new + p diag(beta) on active columns only (one contiguous
+        // pass over the rows; inactive columns keep their direction).
+        for (pr, zr) in p.data.chunks_exact_mut(t).zip(z_new.data.chunks_exact(t)) {
+            for j in 0..t {
+                if active[j] {
+                    pr[j] = zr[j] + beta[j] * pr[j];
+                }
             }
         }
-        z = z_new;
-        let _ = &z;
     }
 
-    // Assemble tridiagonals for tracked columns.
+    // Assemble tridiagonals for tracked columns. betas[j] has exactly
+    // alphas[j].len() - 1 entries by construction (see above).
     let mut tridiags = Vec::new();
     for j in track_from..t {
         let m = alphas[j].len();
+        debug_assert_eq!(betas[j].len(), m.saturating_sub(1));
         let mut diag = Vec::with_capacity(m);
         let mut off = Vec::with_capacity(m.saturating_sub(1));
         for i in 0..m {
@@ -145,14 +175,9 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
                 dii += betas[j][i - 1] / alphas[j][i - 1];
             }
             diag.push(dii);
-            if i + 1 < m && i < betas[j].len() {
+            if i + 1 < m {
                 off.push(betas[j][i].max(0.0).sqrt() / alphas[j][i].abs());
             }
-        }
-        // off must have length m-1; truncate/pad defensively.
-        off.truncate(m.saturating_sub(1));
-        while off.len() + 1 < m {
-            off.push(0.0);
         }
         tridiags.push((diag, off));
     }
@@ -165,47 +190,31 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
     }
 }
 
-fn col_dot(a: &Mat, b: &Mat, j: usize) -> f64 {
-    let mut s = 0.0;
-    for i in 0..a.rows {
-        s += a[(i, j)] * b[(i, j)];
-    }
-    s
-}
-
-fn col_norm(a: &Mat, j: usize) -> f64 {
-    col_dot(a, a, j).sqrt()
-}
-
 /// Stochastic Lanczos quadrature: turn mBCG tridiagonals into the BBMM
 /// log-determinant estimate  log|K^| ~= log|P| + (n/t) sum_j e1' log(T_j) e1.
+///
+/// Errors if any probe column contributes no quadrature (no CG iterations
+/// recorded, or the tridiagonal eigensolve fails): silently dropping
+/// columns and rescaling by n/used would bias the estimate.
 pub fn logdet_from_tridiags(
     tridiags: &[(Vec<f64>, Vec<f64>)],
     n: usize,
     precond_logdet: f64,
-) -> f64 {
+) -> Result<f64> {
     let t = tridiags.len();
     if t == 0 {
-        return precond_logdet;
+        return Ok(precond_logdet);
     }
     let mut acc = 0.0;
-    let mut used = 0;
-    for (diag, off) in tridiags {
+    for (j, (diag, off)) in tridiags.iter().enumerate() {
         if diag.is_empty() {
-            continue;
+            bail!("logdet estimator: probe column {j} recorded no CG iterations");
         }
-        match crate::linalg::eig::quadrature(diag, off, |x| x.ln(), 1e-12) {
-            Ok(q) => {
-                acc += q;
-                used += 1;
-            }
-            Err(_) => {}
-        }
+        let q = crate::linalg::eig::quadrature(diag, off, |x| x.ln(), 1e-12)
+            .with_context(|| format!("logdet quadrature failed for probe column {j}"))?;
+        acc += q;
     }
-    if used == 0 {
-        return precond_logdet;
-    }
-    precond_logdet + (n as f64 / used as f64) * acc
+    Ok(precond_logdet + (n as f64 / t as f64) * acc)
 }
 
 #[cfg(test)]
@@ -281,7 +290,7 @@ mod tests {
         }
         let op = DenseOp { a };
         let res = mbcg(&op, &IdentityPrecond { n }, &b, 1e-10, 600, 0);
-        let est = logdet_from_tridiags(&res.tridiags, n, 0.0);
+        let est = logdet_from_tridiags(&res.tridiags, n, 0.0).unwrap();
         let rel_err = (est - true_logdet).abs() / true_logdet.abs().max(1.0);
         assert!(rel_err < 0.08, "est={est} true={true_logdet} rel={rel_err}");
     }
@@ -333,5 +342,69 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn tridiag_shape_invariant_under_truncation() {
+        // Under max_iters truncation AND under per-column convergence at
+        // different iteration counts, every tracked tridiagonal satisfies
+        // off.len() == diag.len() - 1 with no padding.
+        let mut rng = Rng::new(18, 0);
+        let n = 96;
+        let a = random_spd(n, 1e-5, &mut rng); // ill-conditioned: slow CG
+        let op = DenseOp { a };
+        let b = Mat::from_vec(n, 3, rng.normal_vec(n * 3));
+        for (tol, iters) in [(1e-14, 7), (1e-2, 400), (0.5, 400)] {
+            let res = mbcg(&op, &IdentityPrecond { n }, &b, tol, iters, 0);
+            assert_eq!(res.tridiags.len(), 3);
+            for (diag, off) in &res.tridiags {
+                assert!(!diag.is_empty());
+                assert_eq!(off.len(), diag.len() - 1, "tol={tol} iters={iters}");
+            }
+        }
+    }
+
+    #[test]
+    fn tridiag_eigenvalues_match_operator_spectrum() {
+        // Regression for the tridiagonal assembly: on a diagonal operator
+        // the spectrum is known exactly, and a full-depth mBCG run's
+        // recovered T must have Ritz values at the operator's eigenvalues
+        // (plain CG, identity preconditioner => T tridiagonalizes K^ on
+        // the Krylov space, which is the full space at m = n).
+        let n = 12;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 1.0 + i as f64; // eigenvalues 1, 2, ..., 12
+        }
+        let op = DenseOp { a };
+        let mut rng = Rng::new(17, 0);
+        let b = Mat::from_vec(n, 1, rng.normal_vec(n));
+        // tol below what m < n iterations can reach on 12 separated
+        // eigenvalues, max_iters = n: the run goes exactly full depth.
+        let res = mbcg(&op, &IdentityPrecond { n }, &b, 1e-12, n, 0);
+        let (diag, off) = &res.tridiags[0];
+        assert_eq!(off.len(), diag.len() - 1);
+        let (ritz, _) = crate::linalg::tridiag_eig(diag, off).unwrap();
+        assert_eq!(ritz.len(), n, "expected a full-depth Lanczos run");
+        for &th in &ritz {
+            let nearest = (0..n)
+                .map(|i| (th - (1.0 + i as f64)).abs())
+                .fold(f64::INFINITY, f64::min);
+            assert!(nearest < 1e-5, "Ritz value {th} not near any eigenvalue");
+        }
+        // The extremal eigenvalues are resolved tightly.
+        assert!((ritz.first().unwrap() - 1.0).abs() < 1e-7, "min {:?}", ritz.first());
+        assert!((ritz.last().unwrap() - n as f64).abs() < 1e-7, "max {:?}", ritz.last());
+    }
+
+    #[test]
+    fn logdet_errors_instead_of_rescaling() {
+        // A probe column with an empty tridiagonal must be a hard error,
+        // not a silent n/used rescale.
+        let tridiags = vec![(vec![2.0], vec![]), (vec![], vec![])];
+        let err = logdet_from_tridiags(&tridiags, 10, 0.0).unwrap_err();
+        assert!(format!("{err}").contains("probe column 1"), "{err}");
+        // And an empty track set is still fine (returns log|P|).
+        assert_eq!(logdet_from_tridiags(&[], 10, 1.5).unwrap(), 1.5);
     }
 }

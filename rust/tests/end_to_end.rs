@@ -8,8 +8,10 @@ use exactgp::config::{Backend, Config};
 use exactgp::coordinator::{self, Model};
 use exactgp::data::synthetic::Scale;
 
+/// The PJRT pipeline needs both the artifacts and a build with the real
+/// `xla`-backed engine (the default build substitutes a stub).
 fn artifacts_available() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists()
 }
 
 fn smoke_cfg() -> Config {

@@ -1,0 +1,96 @@
+//! Partition-plan edge cases: n not divisible by the worker count, a
+//! single worker, and more workers than rows. In every configuration the
+//! partitioned MVM must agree bit-for-bit-close (<= 1e-10) with a
+//! reference single-worker, single-partition run — per-row accumulation
+//! order is independent of how rows are grouped into jobs — and with the
+//! f64 dense oracle to f32 tile precision.
+
+use std::sync::Arc;
+
+use exactgp::exec::{
+    native::NativeBackend, pool::DevicePool, BackendFactory, PaddedData, PartitionedKernelOp,
+    TileBackend, TileSpec,
+};
+use exactgp::kernels::{Hypers, KernelEval, KernelKind};
+use exactgp::linalg::Mat;
+use exactgp::metrics::Accounting;
+use exactgp::partition::Plan;
+use exactgp::solvers::{BatchMvm, DenseOp};
+use exactgp::util::rng::Rng;
+
+const SPEC: TileSpec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
+
+fn hypers() -> Hypers {
+    Hypers {
+        log_lengthscales: vec![0.15],
+        log_outputscale: 0.1,
+        log_noise: (0.3f64).ln(),
+    }
+}
+
+fn build_op(x: &[f64], workers: usize, rows_per_partition: usize) -> PartitionedKernelOp {
+    let factory: BackendFactory = Arc::new(move |_| {
+        Ok(Box::new(NativeBackend::new(KernelKind::Matern32, false, SPEC))
+            as Box<dyn TileBackend>)
+    });
+    let pool = Arc::new(DevicePool::new(workers, factory).unwrap());
+    let data = Arc::new(PaddedData::new(x, SPEC.d, &SPEC));
+    let plan = Plan::with_rows(data.n_pad, data.n_pad, rows_per_partition);
+    PartitionedKernelOp::square(
+        data,
+        pool,
+        plan,
+        SPEC,
+        hypers(),
+        Arc::new(Accounting::default()),
+    )
+}
+
+/// Reference: one worker, one partition — plus the dense f64 oracle.
+fn check_config(n: usize, workers: usize, rows_per_partition: usize) {
+    let mut rng = Rng::new(97, n as u64);
+    let x: Vec<f64> = (0..n * SPEC.d).map(|_| rng.normal()).collect();
+    let v = Mat::from_vec(n, SPEC.t, rng.normal_vec(n * SPEC.t));
+
+    let reference = build_op(&x, 1, usize::MAX / 2).mvm(&v);
+    let got = build_op(&x, workers, rows_per_partition).mvm(&v);
+    assert!(
+        got.max_abs_diff(&reference) < 1e-10,
+        "n={n} workers={workers} rpp={rows_per_partition}: diff vs reference = {}",
+        got.max_abs_diff(&reference)
+    );
+
+    // Dense oracle (f64 kernel evaluation wrapped in DenseOp): the tile
+    // path computes in f32, so the agreement bound is f32-scale.
+    let eval = KernelEval::new(KernelKind::Matern32, &hypers());
+    let dense = DenseOp { a: eval.gram_with_noise(&x, SPEC.d, hypers().noise()) };
+    let want = dense.mvm(&v);
+    let scale = want.frob_norm() / (want.rows as f64).sqrt();
+    assert!(
+        got.max_abs_diff(&want) < 1e-4 * scale.max(1.0),
+        "n={n} workers={workers}: diff vs dense oracle = {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn n_not_divisible_by_worker_count() {
+    // 45 rows over 4 workers (45 % 4 != 0), small partitions.
+    check_config(45, 4, SPEC.r);
+    // ... and a partition size that does not divide n_pad either.
+    check_config(45, 3, SPEC.r * 3);
+}
+
+#[test]
+fn single_worker() {
+    check_config(33, 1, SPEC.r);
+    check_config(33, 1, 1024);
+}
+
+#[test]
+fn more_workers_than_rows() {
+    // 5 true rows (padded to one column tile), 8 workers: most workers
+    // idle, results unchanged.
+    check_config(5, 8, SPEC.r);
+    check_config(3, 6, 1024);
+}

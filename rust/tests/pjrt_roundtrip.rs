@@ -22,8 +22,10 @@ use exactgp::partition::Plan;
 use exactgp::solvers::BatchMvm;
 use exactgp::util::rng::Rng;
 
+/// PJRT needs both the compiled artifacts on disk and a build with the
+/// real `xla`-backed engine (the default build substitutes a stub).
 fn artifacts_available() -> bool {
-    Path::new("artifacts/manifest.json").exists()
+    cfg!(feature = "xla") && Path::new("artifacts/manifest.json").exists()
 }
 
 fn build_op(flavor: Flavor, workers: usize, hypers: Hypers, x: &[f64], d: usize)

@@ -1,0 +1,257 @@
+//! In-tree, dependency-free reimplementation of the subset of the `anyhow`
+//! API this workspace uses. The repo must build in fully offline
+//! environments (no crates.io access), so the crate is vendored as a path
+//! dependency rather than resolved from a registry.
+//!
+//! Covered surface (everything `rust/src` + examples + benches touch):
+//! `Error`, `Result<T>` (with the `E = Error` default), the `anyhow!`,
+//! `bail!` and `ensure!` macros, the `Context` trait (on `Result<_, E>`
+//! for std errors, on `Result<_, Error>`, and on `Option<_>`), a blanket
+//! `From<E: std::error::Error>` so `?` converts freely, and Display with
+//! the `{:#}` alternate form printing the whole context chain
+//! ("outermost: ...: root cause"), matching real anyhow.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with a default error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    Message(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+/// A dynamic error with a chain of context messages.
+pub struct Error {
+    /// Context frames, innermost first (index 0 wraps `repr` directly).
+    context: Vec<String>,
+    repr: Repr,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { context: Vec::new(), repr: Repr::Message(message.to_string()) }
+    }
+
+    /// Wrap a standard error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { context: Vec::new(), repr: Repr::Boxed(Box::new(error)) }
+    }
+
+    /// Attach an outer context message (most recent = outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The chain of messages from outermost context to root cause.
+    fn chain_strings(&self) -> Vec<String> {
+        let mut parts: Vec<String> = self.context.iter().rev().cloned().collect();
+        match &self.repr {
+            Repr::Message(m) => parts.push(m.clone()),
+            Repr::Boxed(e) => {
+                parts.push(e.to_string());
+                let mut src = e.source();
+                while let Some(s) = src {
+                    parts.push(s.to_string());
+                    src = s.source();
+                }
+            }
+        }
+        parts
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first, ": "-separated.
+            return write!(f, "{}", self.chain_strings().join(": "));
+        }
+        // `{}`: the outermost message only, like real anyhow.
+        match self.context.last() {
+            Some(c) => write!(f, "{c}"),
+            None => match &self.repr {
+                Repr::Message(m) => write!(f, "{m}"),
+                Repr::Boxed(e) => write!(f, "{e}"),
+            },
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        write!(f, "{}", chain[0])?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any standard error. This coexists with the
+// reflexive `From<Error> for Error` because `Error` deliberately does
+// not implement `std::error::Error` (the same trick real anyhow uses).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+mod private {
+    /// Type-level markers keeping the `Context` impls from unifying.
+    pub struct ErrorMarker;
+    pub struct OptionMarker;
+}
+
+/// Attach context to errors, like `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, private::ErrorMarker> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, private::OptionMarker> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an `Error` from a format string (or any Display value).
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(::std::format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Error::new(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<i32> {
+            let v: i32 = "17".parse()?;
+            Ok(v)
+        }
+        assert_eq!(f().unwrap(), 17);
+    }
+
+    #[test]
+    fn context_on_result_error_and_option() {
+        let r: Result<(), Error> = Err(anyhow!("inner {}", 3));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 3");
+
+        let o: Option<u8> = None;
+        let e = o.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+
+        let io: Result<(), std::io::Error> = Err(io_err());
+        let e = io.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: missing");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).is_err());
+        assert!(format!("{}", f(99).unwrap_err()).contains("too big"));
+    }
+}
