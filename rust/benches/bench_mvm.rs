@@ -2,7 +2,9 @@
 //! partition counts — the hot path underneath every experiment.
 //!
 //! Reports wall time per full K(X,X) @ V (V is a t=16 block), effective
-//! GFLOP/s (counting the fused dist+cov+matvec tile math), and the
+//! GFLOP/s (counting the fused dist+cov+matvec tile math), the
+//! cached-vs-streaming kernel-block comparison (cold fill, warm replay,
+//! bitwise check — summarized to results/BENCH_mvm.json), and the
 //! partitioning overhead (p=1 vs p=many at fixed n).
 
 use std::sync::Arc;
@@ -15,6 +17,7 @@ use exactgp::kernels::Hypers;
 use exactgp::linalg::Mat;
 use exactgp::metrics::Accounting;
 use exactgp::partition::Plan;
+use exactgp::util::json::{arr, num, obj, s, Json};
 use exactgp::util::rng::Rng;
 
 fn tile_flops(spec: &TileSpec) -> f64 {
@@ -128,6 +131,138 @@ fn main() {
             &["workers", "time/MVM", "speedup vs 1 worker"],
             &rows_w,
         );
+    }
+
+    // Cached-vs-streaming sweep (the kernel-block cache): every training
+    // step's mBCG solve issues tens of MVMs at fixed hyperparameters, so
+    // after the first MVM fills the worker-resident rho blocks, the rest
+    // reduce to blocked gemm. Targets: >= 3x warm speedup when the cache
+    // fits the budget, bitwise-identical outputs, <= 5% cold overhead.
+    {
+        let n = if quick { 2048 } else { *ns.last().unwrap_or(&8192) };
+        let workers = env.cfg.workers.max(1);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let data = Arc::new(PaddedData::new(&x, d, &spec));
+        let v = Mat::from_vec(n, spec.t, rng.normal_vec(n * spec.t));
+        let mut cfg = env.cfg.clone();
+        cfg.backend = Backend::Native;
+        cfg.workers = workers;
+        // A budget that holds the whole operator resident.
+        let full_budget =
+            (data.n_pad / spec.r) * (data.n_pad / spec.c).max(1) * spec.r * spec.c * 4;
+        let mk_op = |budget: usize| -> PartitionedKernelOp {
+            let factory =
+                backend_factory(&cfg, cfg.kernel, false, spec.d, spec).expect("native");
+            let pool = DevicePool::new(workers, factory).expect("pool");
+            PartitionedKernelOp::square(
+                data.clone(),
+                Arc::new(pool),
+                Plan::with_rows(data.n_pad, data.n_pad, (spec.r * 4).min(data.n_pad)),
+                spec,
+                Hypers::default_init(None),
+                Arc::new(Accounting::default()),
+            )
+            .with_cache_budget(budget)
+        };
+        let cache_reps = if quick { 2 } else { 3 };
+        // Cold: bump the generation before each rep so every measured MVM
+        // re-materializes its blocks (what the first solve iteration pays).
+        let time_cold = |op: &mut PartitionedKernelOp, reps: usize| -> f64 {
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let h = op.hypers.clone();
+                op.set_hypers(h);
+                let t0 = std::time::Instant::now();
+                let _ = op.apply_raw(&v);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            best
+        };
+        let mut streaming = mk_op(0);
+        let mut cached = mk_op(full_budget);
+        let stream_cold = time_cold(&mut streaming, cache_reps);
+        let cached_cold = time_cold(&mut cached, cache_reps);
+        // Warm: blocks resident from the cold pass; iterations 2..m of a
+        // solve see exactly this.
+        let stream_warm = time_fn(0, cache_reps, || {
+            let _ = streaming.apply_raw(&v);
+        })
+        .min;
+        let cached_warm = time_fn(0, cache_reps, || {
+            let _ = cached.apply_raw(&v);
+        })
+        .min;
+        let bitwise = streaming.apply_raw(&v).data == cached.apply_raw(&v).data;
+        let speedup = stream_warm / cached_warm;
+        let cold_overhead = cached_cold / stream_cold - 1.0;
+        let fmt_s = |x: f64| {
+            if x < 1e-3 {
+                format!("{:.1}us", x * 1e6)
+            } else if x < 1.0 {
+                format!("{:.1}ms", x * 1e3)
+            } else {
+                format!("{x:.2}s")
+            }
+        };
+        print_table(
+            &format!(
+                "Kernel-block cache at n={n} (native, {workers} workers, t={} RHS)",
+                spec.t
+            ),
+            &["mode", "cold MVM", "warm MVM", "warm speedup", "bitwise"],
+            &[
+                vec![
+                    "streaming".into(),
+                    fmt_s(stream_cold),
+                    fmt_s(stream_warm),
+                    "1.00x".into(),
+                    "-".into(),
+                ],
+                vec![
+                    "cached".into(),
+                    fmt_s(cached_cold),
+                    fmt_s(cached_warm),
+                    format!("{speedup:.2}x"),
+                    bitwise.to_string(),
+                ],
+            ],
+        );
+        // Persist the perf trajectory: CI uploads results/BENCH_mvm.json.
+        let doc = obj(vec![
+            ("bench", s("bench_mvm")),
+            ("mode", s(if quick { "quick" } else { "full" })),
+            ("n", num(n as f64)),
+            ("workers", num(workers as f64)),
+            ("rhs_t", num(spec.t as f64)),
+            ("cache_budget_bytes", num(full_budget as f64)),
+            ("streaming_cold_s", num(stream_cold)),
+            ("streaming_warm_s", num(stream_warm)),
+            ("cached_cold_s", num(cached_cold)),
+            ("cached_warm_s", num(cached_warm)),
+            ("warm_speedup", num(speedup)),
+            ("cold_overhead_frac", num(cold_overhead)),
+            ("bitwise_identical", Json::Bool(bitwise)),
+            (
+                "sweep",
+                arr(rows.iter().map(|r| {
+                    obj(vec![
+                        ("size", s(&r[0])),
+                        ("backend", s(&r[1])),
+                        ("time", s(&r[2])),
+                        ("gflops", s(&r[3])),
+                    ])
+                })),
+            ),
+        ]);
+        if std::fs::create_dir_all(&env.cfg.results_dir).is_ok() {
+            let path =
+                std::path::Path::new(&env.cfg.results_dir).join("BENCH_mvm.json");
+            if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+                eprintln!("could not write {}: {e}", path.display());
+            } else {
+                println!("wrote {}", path.display());
+            }
+        }
     }
 
     if quick {

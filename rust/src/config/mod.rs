@@ -97,6 +97,14 @@ pub struct Config {
     /// Rows per kernel partition (the paper reports p = #partitions;
     /// we plan by rows-per-partition against a memory budget).
     pub partition_memory_mb: usize,
+    /// Hold materialized correlation blocks on workers across solver
+    /// iterations at fixed hyperparameters (invalidated when hypers move).
+    pub cache_kernel_blocks: bool,
+    /// Byte budget (MiB, across all workers) for cached kernel blocks;
+    /// tiles beyond the budget stream tile-by-tile as before. This is the
+    /// resident half of the memory split — `partition_memory_mb` governs
+    /// the transient per-partition strips.
+    pub cache_memory_mb: usize,
 
     // experiment control
     pub scale: Scale,
@@ -134,6 +142,8 @@ impl Default for Config {
             flavor: Flavor::Pallas,
             workers: 1,
             partition_memory_mb: 256,
+            cache_kernel_blocks: true,
+            cache_memory_mb: 256,
             scale: Scale::DEFAULT,
             trials: 1,
             seed: 0,
@@ -194,6 +204,8 @@ impl Config {
             "exec.flavor" => self.flavor = Flavor::parse(v)?,
             "exec.workers" => self.workers = v.parse()?,
             "exec.partition_memory_mb" => self.partition_memory_mb = v.parse()?,
+            "exec.cache_kernel_blocks" => self.cache_kernel_blocks = parse_bool(v)?,
+            "exec.cache_memory_mb" => self.cache_memory_mb = v.parse()?,
             "run.scale" => {
                 self.scale = Scale::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad scale {v:?}"))?
@@ -259,6 +271,10 @@ mod tests {
         c.set("exec.backend", "native").unwrap();
         c.set("model.ard", "true").unwrap();
         c.set("run.scale", "smoke").unwrap();
+        c.set("exec.cache_kernel_blocks", "false").unwrap();
+        c.set("exec.cache_memory_mb", "64").unwrap();
+        assert!(!c.cache_kernel_blocks);
+        assert_eq!(c.cache_memory_mb, 64);
         assert_eq!(c.probes, 16);
         assert_eq!(c.backend, Backend::Native);
         assert!(c.ard);

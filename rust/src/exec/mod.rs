@@ -27,7 +27,7 @@ use crate::config::{Backend, Config, Flavor};
 use crate::kernels::{Hypers, KernelKind};
 use crate::linalg::Mat;
 use crate::metrics::Accounting;
-use crate::partition::Plan;
+use crate::partition::{CacheBudget, Plan};
 use crate::runtime::Manifest;
 use crate::solvers::BatchMvm;
 
@@ -73,6 +73,32 @@ pub trait TileBackend {
 
     /// Number of lengthscale-gradient outputs (1 shared, d ARD).
     fn n_ls_grads(&self) -> usize;
+
+    /// Whether this backend can materialize correlation blocks for the
+    /// worker-resident cache (`materialize_tile` / `mvm_cached`).
+    fn supports_cache(&self) -> bool {
+        false
+    }
+
+    /// Materialize the (r, c) correlation block rho(xr, xc) into `out`
+    /// (f32, row-major; outputscale NOT applied — it is folded into the
+    /// RHS by `mvm_cached`, mirroring the streaming `mvm` path).
+    fn materialize_tile(
+        &mut self,
+        _xr: &[f32],
+        _xc: &[f32],
+        _theta: &[f32],
+        _out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::bail!("tile backend does not support block materialization")
+    }
+
+    /// K(xr, xc) @ v against a previously materialized correlation block:
+    /// gemm-only, no kernel evaluation. Must produce bitwise-identical f32
+    /// output to `mvm` on the same tile.
+    fn mvm_cached(&mut self, _rho: &[f32], _v: &[f32], _theta: &[f32]) -> Result<Vec<f32>> {
+        anyhow::bail!("tile backend does not support cached MVMs")
+    }
 }
 
 /// Factory that builds one backend per worker thread (PJRT objects are not
@@ -108,6 +134,11 @@ impl PaddedData {
     }
 }
 
+/// Process-unique operator ids: worker caches key their blocks by
+/// (op_id, generation) so blocks from one operator (or one hyperparameter
+/// setting) are never served to another.
+static OP_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
 /// The partitioned kernel operator (possibly rectangular:
 /// rows = `row_data`, columns = `col_data`).
 pub struct PartitionedKernelOp {
@@ -121,6 +152,14 @@ pub struct PartitionedKernelOp {
     pub noise: f64,
     pub square: bool,
     pub acct: Arc<Accounting>,
+    /// Process-unique identity for worker-cache keying.
+    pub op_id: u64,
+    /// Hyperparameter generation: bumped by `set_hypers`, so worker-cached
+    /// correlation blocks from a previous setting are never reused.
+    pub generation: u64,
+    /// Byte budget for worker-resident correlation blocks (0 = stream
+    /// every tile, the pre-cache behavior).
+    pub cache_budget_bytes: usize,
 }
 
 impl PartitionedKernelOp {
@@ -144,6 +183,9 @@ impl PartitionedKernelOp {
             noise,
             square: true,
             acct,
+            op_id: OP_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            generation: 0,
+            cache_budget_bytes: 0,
         }
     }
 
@@ -167,12 +209,30 @@ impl PartitionedKernelOp {
             noise: 0.0,
             square: false,
             acct,
+            op_id: OP_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            generation: 0,
+            cache_budget_bytes: 0,
         }
+    }
+
+    /// Enable the worker-resident kernel-block cache with a byte budget
+    /// (0 disables; tiles beyond the budget stream as before).
+    pub fn with_cache_budget(mut self, bytes: usize) -> Self {
+        self.cache_budget_bytes = bytes;
+        self
     }
 
     pub fn set_hypers(&mut self, h: Hypers) {
         self.noise = if self.square { h.noise() } else { 0.0 };
         self.hypers = h;
+        // Invalidate every worker-cached correlation block: stale blocks
+        // carry the old lengthscales and must never be served again. The
+        // bump is deliberately unconditional — rho depends only on the
+        // lengthscales (outputscale is folded into the RHS, noise is added
+        // outside apply_raw), but real optimizer steps move all hypers at
+        // once, so conditional keying would buy nothing while making
+        // "set_hypers == invalidate" harder to reason about.
+        self.generation += 1;
     }
 
     pub fn n_rows(&self) -> usize {
@@ -297,6 +357,46 @@ impl PartitionedKernelOp {
         out
     }
 
+    /// Per-job cache quotas: how many leading (row-tile x col-tile) blocks
+    /// of each job's strip the worker may hold resident. The global block
+    /// budget (`partition::CacheBudget`) is split proportionally to each
+    /// job's tile count — deterministic, so repeated MVMs on the same
+    /// operator fill and then hit exactly the same blocks — and only MVM
+    /// jobs cache (gradient tiles need the distance factors, not just rho).
+    fn cache_quotas(&self, ranges: &[(usize, usize)], kind: pool::JobKind) -> Vec<usize> {
+        if self.cache_budget_bytes == 0 || !matches!(kind, pool::JobKind::Mvm) {
+            return vec![0; ranges.len()];
+        }
+        let col_tiles = self.col_data.n.div_ceil(self.spec.c).max(1);
+        let tiles: Vec<usize> =
+            ranges.iter().map(|&(_, len)| len.div_ceil(self.spec.r) * col_tiles).collect();
+        let total: usize = tiles.iter().sum();
+        let budget =
+            CacheBudget::plan(total, self.spec.r, self.spec.c, self.cache_budget_bytes);
+        let mut quotas: Vec<usize> =
+            tiles.iter().map(|&t| budget.max_blocks * t / total.max(1)).collect();
+        // Hand out the rounding leftovers one block at a time to jobs with
+        // unmet demand (sum(tiles) = total >= max_blocks, so this stops).
+        let mut left = budget.max_blocks.saturating_sub(quotas.iter().sum());
+        while left > 0 {
+            let mut gave = false;
+            for (q, &t) in quotas.iter_mut().zip(&tiles) {
+                if left == 0 {
+                    break;
+                }
+                if *q < t {
+                    *q += 1;
+                    left -= 1;
+                    gave = true;
+                }
+            }
+            if !gave {
+                break;
+            }
+        }
+        quotas
+    }
+
     /// Dispatch one batched MVM to the pool; returns per-job
     /// (row_start, row_len, accumulated f64 block) in row order.
     fn run_jobs(
@@ -310,6 +410,7 @@ impl PartitionedKernelOp {
         self.acct
             .add_to_device((v.len() * 4) as u64 * self.pool.workers as u64);
         let ranges = self.job_ranges();
+        let quotas = self.cache_quotas(&ranges, kind);
         let jobs: Vec<pool::Job> = ranges
             .iter()
             .enumerate()
@@ -324,6 +425,9 @@ impl PartitionedKernelOp {
                 v: v.clone(),
                 theta: theta.clone(),
                 acct: self.acct.clone(),
+                op_id: self.op_id,
+                generation: self.generation,
+                cache_tiles: quotas[id],
             })
             .collect();
         let results = self.pool.run(jobs);
@@ -519,6 +623,39 @@ mod tests {
         let a = op1.mvm(&v);
         let b = op4.mvm(&v);
         assert!(a.max_abs_diff(&b) < 1e-12, "diff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn cache_quotas_split_budget_proportionally() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let n = 32; // n_pad = 32: 4 row tiles x 4 col tiles
+        let (mut op, _) = toy_op(n, 2, false, 2, spec, 16);
+        let block = spec.r * spec.c * 4;
+        // 2 jobs x (2 row tiles * 4 col tiles) = 8 tiles each, 16 total.
+        let ranges = op.job_ranges();
+        assert_eq!(ranges.len(), 2);
+        op.cache_budget_bytes = 5 * block;
+        let q = op.cache_quotas(&ranges, pool::JobKind::Mvm);
+        assert_eq!(q.iter().sum::<usize>(), 5, "whole budget must be handed out");
+        assert_eq!(q, vec![3, 2], "proportional split + round-robin leftover");
+        // Gradient jobs never cache (they need the distance factors).
+        assert_eq!(op.cache_quotas(&ranges, pool::JobKind::MvmGrads { nl: 1 }), vec![0, 0]);
+        // Zero budget: streaming only.
+        op.cache_budget_bytes = 0;
+        assert_eq!(op.cache_quotas(&ranges, pool::JobKind::Mvm), vec![0, 0]);
+        // Covering budget: every tile resident, quota capped at demand.
+        op.cache_budget_bytes = 100 * block;
+        assert_eq!(op.cache_quotas(&ranges, pool::JobKind::Mvm), vec![8, 8]);
+    }
+
+    #[test]
+    fn set_hypers_bumps_generation() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let (mut op, _) = toy_op(16, 2, false, 1, spec, 8);
+        assert_eq!(op.generation, 0);
+        let h = op.hypers.clone();
+        op.set_hypers(h);
+        assert_eq!(op.generation, 1);
     }
 
     #[test]

@@ -38,16 +38,13 @@ impl NativeBackend {
         }
     }
 
-    /// Fold theta into scaled copies of the inputs.
-    fn scale_inputs(&mut self, xr: &[f32], xc: &[f32], v: &[f32], theta: &[f32]) {
+    /// Fold the lengthscales into scaled copies of the tile inputs.
+    fn scale_x(&mut self, xr: &[f32], xc: &[f32], theta: &[f32]) {
         let d = self.spec.d;
-        let (inv, os): (Vec<f32>, f32) = if self.ard {
-            (
-                (0..d).map(|i| (-theta[i]).exp()).collect(),
-                theta[d].exp(),
-            )
+        let inv: Vec<f32> = if self.ard {
+            (0..d).map(|i| (-theta[i]).exp()).collect()
         } else {
-            (vec![(-theta[0]).exp(); d], theta[1].exp())
+            vec![(-theta[0]).exp(); d]
         };
         for (o, chunk) in self.xr_s.chunks_mut(d).zip(xr.chunks(d)) {
             for j in 0..d {
@@ -59,9 +56,20 @@ impl NativeBackend {
                 o[j] = chunk[j] * inv[j];
             }
         }
+    }
+
+    /// Fold the outputscale into a scaled copy of the RHS block.
+    fn scale_v(&mut self, v: &[f32], theta: &[f32]) {
+        let os = if self.ard { theta[self.spec.d].exp() } else { theta[1].exp() };
         for (o, &x) in self.v_s.iter_mut().zip(v) {
             *o = x * os;
         }
+    }
+
+    /// Fold theta into scaled copies of the inputs.
+    fn scale_inputs(&mut self, xr: &[f32], xc: &[f32], v: &[f32], theta: &[f32]) {
+        self.scale_x(xr, xc, theta);
+        self.scale_v(v, theta);
     }
 
     #[inline]
@@ -88,6 +96,25 @@ fn matern32_rho_e(r2: f32) -> (f32, f32) {
 fn rbf_rho_e(r2: f32) -> (f32, f32) {
     let rho = (-0.5 * r2).exp();
     (rho, rho)
+}
+
+/// Accumulate one tile row of the matvec: orow[j] += rho[jc] * v_s[jc*t+j].
+///
+/// Shared by the streaming `mvm` (rho freshly computed into the scratch
+/// row) and the cached `mvm_cached` (rho read from a materialized block):
+/// both run this exact f32 op sequence, which is what makes cached and
+/// streaming tile outputs bitwise-identical. (The f64 blocked gemm in
+/// `linalg` accumulates in a different order, so it is deliberately NOT
+/// used here — bitwise result-invariance wins over slab packing at these
+/// tile sizes.)
+#[inline]
+fn accum_row(rho_row: &[f32], v_s: &[f32], orow: &mut [f32], t: usize) {
+    for (jc, &w) in rho_row.iter().enumerate() {
+        let vrow = &v_s[jc * t..(jc + 1) * t];
+        for j in 0..t {
+            orow[j] += w * vrow[j];
+        }
+    }
 }
 
 /// Squared distance between two feature rows, 4-lane unrolled.
@@ -147,14 +174,58 @@ impl TileBackend for NativeBackend {
                     }
                 }
             }
-            let orow = &mut out[i * t..(i + 1) * t];
-            for jc in 0..c {
-                let w = self.rho_s[jc];
-                let vrow = &self.v_s[jc * t..(jc + 1) * t];
-                for j in 0..t {
-                    orow[j] += w * vrow[j];
+            accum_row(&self.rho_s, &self.v_s, &mut out[i * t..(i + 1) * t], t);
+        }
+        Ok(out)
+    }
+
+    fn supports_cache(&self) -> bool {
+        true
+    }
+
+    fn materialize_tile(
+        &mut self,
+        xr: &[f32],
+        xc: &[f32],
+        theta: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let TileSpec { r, c, d, .. } = self.spec;
+        anyhow::ensure!(out.len() == r * c, "rho block len {} != {}", out.len(), r * c);
+        self.scale_x(xr, xc, theta);
+        // Same two passes as the streaming `mvm` (distances, then
+        // distance -> correlation in place), writing the correlation row
+        // into the block instead of the per-row scratch: the stored rho
+        // values are bit-for-bit the ones `mvm` would recompute.
+        for i in 0..r {
+            let a = &self.xr_s[i * d..(i + 1) * d];
+            let orow = &mut out[i * c..(i + 1) * c];
+            for (jc, o) in orow.iter_mut().enumerate() {
+                *o = sq_dist(a, &self.xc_s[jc * d..(jc + 1) * d]);
+            }
+            match self.kind {
+                KernelKind::Matern32 => {
+                    for rho in orow.iter_mut() {
+                        *rho = matern32_rho_e(*rho).0;
+                    }
+                }
+                KernelKind::Rbf => {
+                    for rho in orow.iter_mut() {
+                        *rho = rbf_rho_e(*rho).0;
+                    }
                 }
             }
+        }
+        Ok(())
+    }
+
+    fn mvm_cached(&mut self, rho: &[f32], v: &[f32], theta: &[f32]) -> Result<Vec<f32>> {
+        let TileSpec { r, c, t, .. } = self.spec;
+        anyhow::ensure!(rho.len() == r * c, "rho block len {} != {}", rho.len(), r * c);
+        self.scale_v(v, theta);
+        let mut out = vec![0.0f32; r * t];
+        for i in 0..r {
+            accum_row(&rho[i * c..(i + 1) * c], &self.v_s, &mut out[i * t..(i + 1) * t], t);
         }
         Ok(out)
     }
@@ -315,6 +386,36 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_tile_path_is_bitwise_identical() {
+        // materialize_tile + mvm_cached must reproduce the streaming mvm
+        // exactly (same f32 op sequence), for every kernel/ard combination.
+        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
+            for ard in [false, true] {
+                let spec = TileSpec { r: 4, c: 8, t: 3, d: 5 };
+                let mut rng = Rng::new(44, 0);
+                let xr: Vec<f32> =
+                    (0..spec.r * spec.d).map(|_| rng.normal() as f32).collect();
+                let xc: Vec<f32> =
+                    (0..spec.c * spec.d).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> =
+                    (0..spec.c * spec.t).map(|_| rng.normal() as f32).collect();
+                let theta: Vec<f32> = if ard {
+                    (0..spec.d + 1).map(|_| (rng.normal() * 0.3) as f32).collect()
+                } else {
+                    vec![0.2, -0.1]
+                };
+                let mut be = NativeBackend::new(kind, ard, spec);
+                assert!(be.supports_cache());
+                let stream = be.mvm(&xr, &xc, &v, &theta).unwrap();
+                let mut rho = vec![0.0f32; spec.r * spec.c];
+                be.materialize_tile(&xr, &xc, &theta, &mut rho).unwrap();
+                let cached = be.mvm_cached(&rho, &v, &theta).unwrap();
+                assert_eq!(stream, cached, "{kind:?} ard={ard}");
             }
         }
     }

@@ -2,12 +2,25 @@
 //!
 //! Each worker owns a private `TileBackend` (its own PJRT client +
 //! compiled executables — PJRT handles are not `Send`, and per-device
-//! isolation is exactly the paper's setup). Row-partition jobs go through
-//! a shared queue; a worker streams the partition's kernel strip tile by
-//! tile, accumulating K^(X^(l), X) V locally in f64, and ships back only
-//! the (rows x t) result — O(n) communication per MVM.
+//! isolation is exactly the paper's setup) plus a resident kernel-block
+//! cache. Row-partition jobs are routed *stickily* (job id modulo worker
+//! count) so the worker that materialized a row range's correlation
+//! blocks is the one that sees that range again on the next MVM of the
+//! same solve; a worker streams its partition's kernel strip tile by
+//! tile — or replays cached blocks gemm-only — accumulating
+//! K^(X^(l), X) V locally in f64, and ships back only the (rows x t)
+//! result — O(n) communication per MVM.
+//!
+//! Cache protocol: a job carries (op_id, generation, cache_tiles). The
+//! worker keeps blocks for exactly one (op_id, generation) at a time;
+//! a cached job with a different identity clears the stale blocks first
+//! (set_hypers bumps the generation, so stale-lengthscale blocks can
+//! never be served). Blocks are the leading `cache_tiles` tiles of the
+//! job's fixed traversal order, so fills and hits are deterministic and
+//! the byte budget is enforced by construction. Streaming jobs
+//! (cache_tiles = 0) leave the cache untouched.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -36,6 +49,13 @@ pub struct Job {
     pub v: Arc<Vec<f32>>,
     pub theta: Arc<Vec<f32>>,
     pub acct: Arc<Accounting>,
+    /// Cache identity: which operator issued this job...
+    pub op_id: u64,
+    /// ...at which hyperparameter generation.
+    pub generation: u64,
+    /// Leading (row-tile x col-tile) blocks of this job's strip the worker
+    /// may hold resident (0 = streaming only).
+    pub cache_tiles: usize,
 }
 
 enum Message {
@@ -43,10 +63,32 @@ enum Message {
     Shutdown,
 }
 
+type WorkQueue = Arc<(Mutex<VecDeque<Message>>, Condvar)>;
+
+/// One cached strip: the leading `filled` blocks (each spec.r * spec.c
+/// f32 correlations) of a job's tile traversal.
+#[derive(Default)]
+struct CachedStrip {
+    filled: usize,
+    data: Vec<f32>,
+}
+
+/// Worker-resident cache: strips for one (op_id, generation), keyed by
+/// the job's row_start (job row ranges are disjoint per operator).
+#[derive(Default)]
+struct WorkerCache {
+    op_id: u64,
+    generation: u64,
+    strips: HashMap<usize, CachedStrip>,
+}
+
 /// Worker pool. `run` is synchronous: submit all jobs, wait for all
-/// results, return them ordered by job id.
+/// results, return them ordered by job id. Jobs are routed to worker
+/// `id % workers` — the routing must be sticky (not work-stealing) so a
+/// row range lands on the worker holding its cached blocks; per-row
+/// results are identical however jobs are routed.
 pub struct DevicePool {
-    queue: Arc<(Mutex<VecDeque<Message>>, Condvar)>,
+    queues: Vec<WorkQueue>,
     results_rx: Mutex<mpsc::Receiver<(usize, anyhow::Result<Vec<f64>>)>>,
     results_tx: mpsc::Sender<(usize, anyhow::Result<Vec<f64>>)>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -56,13 +98,15 @@ pub struct DevicePool {
 impl DevicePool {
     pub fn new(workers: usize, factory: BackendFactory) -> anyhow::Result<DevicePool> {
         assert!(workers > 0);
-        let queue = Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+        let queues: Vec<WorkQueue> = (0..workers)
+            .map(|_| Arc::new((Mutex::new(VecDeque::new()), Condvar::new())))
+            .collect();
         let (results_tx, results_rx) = mpsc::channel();
         let mut handles = Vec::with_capacity(workers);
         // Surface backend construction errors synchronously.
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
         for wid in 0..workers {
-            let queue = queue.clone();
+            let queue = queues[wid].clone();
             let tx = results_tx.clone();
             let factory = factory.clone();
             let ready = ready_tx.clone();
@@ -77,6 +121,7 @@ impl DevicePool {
                         return;
                     }
                 };
+                let mut cache = WorkerCache::default();
                 loop {
                     let msg = {
                         let (lock, cv) = &*queue;
@@ -92,7 +137,7 @@ impl DevicePool {
                         Message::Shutdown => break,
                         Message::Work(job) => {
                             let id = job.id;
-                            let out = run_partition(&mut *backend, &job);
+                            let out = run_partition(&mut *backend, &job, &mut cache);
                             let _ = tx.send((id, out));
                         }
                     }
@@ -104,7 +149,7 @@ impl DevicePool {
             ready_rx.recv().expect("worker init channel")?;
         }
         Ok(DevicePool {
-            queue,
+            queues,
             results_rx: Mutex::new(results_rx),
             results_tx,
             handles,
@@ -116,13 +161,10 @@ impl DevicePool {
     /// artifacts / shape mismatches — programming errors, not data).
     pub fn run(&self, jobs: Vec<Job>) -> Vec<Vec<f64>> {
         let n = jobs.len();
-        {
-            let (lock, cv) = &*self.queue;
-            let mut q = lock.lock().unwrap();
-            for j in jobs {
-                q.push_back(Message::Work(j));
-            }
-            cv.notify_all();
+        for j in jobs {
+            let (lock, cv) = &*self.queues[j.id % self.workers];
+            lock.lock().unwrap().push_back(Message::Work(j));
+            cv.notify_one();
         }
         let mut out: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
         let rx = self.results_rx.lock().unwrap();
@@ -136,13 +178,10 @@ impl DevicePool {
 
 impl Drop for DevicePool {
     fn drop(&mut self) {
-        let (lock, cv) = &*self.queue;
-        {
-            let mut q = lock.lock().unwrap();
-            for _ in 0..self.handles.len() {
-                q.push_back(Message::Shutdown);
-            }
-            cv.notify_all();
+        for q in &self.queues {
+            let (lock, cv) = &**q;
+            lock.lock().unwrap().push_back(Message::Shutdown);
+            cv.notify_one();
         }
         let _ = &self.results_tx;
         for h in self.handles.drain(..) {
@@ -151,12 +190,19 @@ impl Drop for DevicePool {
     }
 }
 
-/// Process one row partition on a worker: stream column tiles, accumulate
+/// Process one row partition on a worker: stream column tiles — or replay
+/// worker-cached correlation blocks gemm-only — accumulating
 /// K(X^(l), :) V in f64. Output layout: [kv (rows*t)] for Mvm, or
 /// [kv | g_0 | g_1 | ...] each (rows*t) for MvmGrads.
+///
+/// Cached and streaming tiles produce bitwise-identical f32 outputs
+/// (`TileBackend::mvm_cached` contract), and the f64 accumulation
+/// traversal order below is the same either way, so enabling the cache
+/// never changes an MVM result.
 fn run_partition(
     backend: &mut dyn crate::exec::TileBackend,
     job: &Job,
+    cache: &mut WorkerCache,
 ) -> anyhow::Result<Vec<f64>> {
     let spec = backend.spec();
     let t = spec.t;
@@ -174,13 +220,36 @@ fn run_partition(
     // per device per MVM by `PartitionedKernelOp::run_jobs` (the paper's
     // model: "supply each device with a new right-hand-side vector v"),
     // and X tiles are device-resident (uploaded once), so neither is
-    // charged per partition.
+    // charged per partition. Cached rho blocks are likewise
+    // device-resident and move no bytes.
     job.acct.add_to_device(job.theta.len() as u64 * 4);
+
+    // Reconcile the cache identity: blocks materialized for another
+    // operator or an older hyper generation are dead — clear them before
+    // any lookup so they can never be served.
+    let block = spec.r * spec.c;
+    let use_cache =
+        job.cache_tiles > 0 && matches!(job.kind, JobKind::Mvm) && backend.supports_cache();
+    if use_cache && (cache.op_id != job.op_id || cache.generation != job.generation) {
+        cache.strips.clear();
+        cache.op_id = job.op_id;
+        cache.generation = job.generation;
+    }
+    let mut strip = if use_cache {
+        let mut s = cache.strips.remove(&job.row_start).unwrap_or_default();
+        if s.data.len() < job.cache_tiles * block {
+            s.data.resize(job.cache_tiles * block, 0.0);
+        }
+        s
+    } else {
+        CachedStrip::default()
+    };
 
     // Partitions need not be tile-aligned (memory budgets can give
     // rows-per-partition < tile height); clamp the row block to the padded
     // data and zero-fill the overhang in a scratch tile.
     let mut xr_scratch = vec![0.0f32; spec.r * job.row_data.d_pad];
+    let mut tile_idx = 0usize;
     let mut row = job.row_start;
     while row < job.row_start + job.row_len {
         let avail = job.row_data.n_pad.saturating_sub(row).min(spec.r);
@@ -200,7 +269,21 @@ fn run_partition(
                 .note_tile((spec.r * spec.c * 4 + spec.c * t * 4 + spec.r * t * 4) as u64);
             match job.kind {
                 JobKind::Mvm => {
-                    let kv = backend.mvm(xr, xc, vt, &job.theta)?;
+                    let kv = if use_cache && tile_idx < job.cache_tiles {
+                        let rho = &mut strip.data[tile_idx * block..(tile_idx + 1) * block];
+                        if tile_idx >= strip.filled {
+                            // Fills happen in traversal order, so `filled`
+                            // is always a prefix count.
+                            backend.materialize_tile(xr, xc, &job.theta, rho)?;
+                            strip.filled = tile_idx + 1;
+                            job.acct.note_cache_fill();
+                        } else {
+                            job.acct.note_cache_hit();
+                        }
+                        backend.mvm_cached(rho, vt, &job.theta)?
+                    } else {
+                        backend.mvm(xr, xc, vt, &job.theta)?
+                    };
                     let base = (row - job.row_start) * t;
                     for i in 0..spec.r {
                         if row + i >= job.row_start + job.row_len {
@@ -233,8 +316,12 @@ fn run_partition(
                 }
             }
             col += spec.c;
+            tile_idx += 1;
         }
         row += spec.r;
+    }
+    if use_cache {
+        cache.strips.insert(job.row_start, strip);
     }
     job.acct.add_from_device((acc.len() * 8) as u64);
     Ok(acc)

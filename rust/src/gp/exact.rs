@@ -77,9 +77,16 @@ pub struct ExactGp {
     x: Vec<f64>,
     y: Vec<f64>,
     d: usize,
-    // Prediction caches (paper SS3 "Predictions").
-    mean_cache: Option<Vec<f64>>,
-    var_cache: Option<VarianceCache>,
+    /// The persistent training operator: kept across `nll_and_grad` calls
+    /// so its worker-cached kernel blocks survive within a step (the mBCG
+    /// solve's tens of MVMs) and are invalidated — by a `set_hypers`
+    /// generation bump — exactly when the hyperparameters move.
+    op: Option<PartitionedKernelOp>,
+    /// The prediction cache (paper SS3 "Predictions"): the combined RHS
+    /// [a | W] (mean solve a = K^{-1} y, LOVE variance projection W),
+    /// built once at precompute time so `predict` never re-copies the
+    /// variance cache column by column — and the only resident copy.
+    pred_rhs: Option<Mat>,
     pub step_log: Vec<StepLog>,
     pub pretrain_seconds: f64,
     pub train_seconds: f64,
@@ -117,8 +124,8 @@ impl ExactGp {
             x: ds.train_x.clone(),
             y: ds.train_y.clone(),
             d: ds.d,
-            mean_cache: None,
-            var_cache: None,
+            op: None,
+            pred_rhs: None,
             step_log: vec![],
             pretrain_seconds: 0.0,
             train_seconds: 0.0,
@@ -147,16 +154,40 @@ impl ExactGp {
         &self.acct
     }
 
-    /// The square K^ operator at the current hyperparameters.
-    fn op(&self) -> PartitionedKernelOp {
-        PartitionedKernelOp::square(
-            self.data.clone(),
-            self.pool.clone(),
-            Self::plan_for(&self.cfg, &self.data, &self.spec),
-            self.spec,
-            self.hypers.clone(),
-            self.acct.clone(),
-        )
+    /// Worker-cache byte budget from the config (0 = caching disabled).
+    fn cache_budget_bytes(&self) -> usize {
+        if self.cfg.cache_kernel_blocks {
+            self.cfg.cache_memory_mb << 20
+        } else {
+            0
+        }
+    }
+
+    /// Bring the persistent square K^ operator up to the current
+    /// hyperparameters: built once, then `set_hypers` bumps the worker
+    /// cache generation whenever the hypers have actually moved.
+    fn ensure_op(&mut self) {
+        match self.op.as_mut() {
+            Some(op) => {
+                if op.hypers != self.hypers {
+                    op.set_hypers(self.hypers.clone());
+                }
+            }
+            None => {
+                let budget = self.cache_budget_bytes();
+                self.op = Some(
+                    PartitionedKernelOp::square(
+                        self.data.clone(),
+                        self.pool.clone(),
+                        Self::plan_for(&self.cfg, &self.data, &self.spec),
+                        self.spec,
+                        self.hypers.clone(),
+                        self.acct.clone(),
+                    )
+                    .with_cache_budget(budget),
+                );
+            }
+        }
     }
 
     /// Build the rank-k pivoted-Cholesky preconditioner at the current
@@ -172,10 +203,14 @@ impl ExactGp {
     }
 
     /// One BBMM evaluation: NLL estimate + gradient w.r.t. log-hypers.
-    pub fn nll_and_grad(&self, rng: &mut Rng) -> Result<(f64, Vec<f64>, usize)> {
+    /// The persistent operator is reused across the mBCG solve and the
+    /// gradient MVM batch, so every solve iteration after the first runs
+    /// gemm-only against the worker-cached kernel blocks.
+    pub fn nll_and_grad(&mut self, rng: &mut Rng) -> Result<(f64, Vec<f64>, usize)> {
         let n = self.n();
         let t = self.cfg.probes;
-        let op = self.op();
+        self.ensure_op();
+        let op = self.op.as_ref().unwrap();
         let precond = self.preconditioner()?;
 
         // RHS block: [y | z_1 .. z_t], z_j ~ N(0, P).
@@ -188,7 +223,7 @@ impl ExactGp {
             b.set_col(1 + j, &probe);
         }
 
-        let res = mbcg(&op, &precond, &b, self.cfg.train_tol, self.cfg.max_cg_iters, 1);
+        let res = mbcg(op, &precond, &b, self.cfg.train_tol, self.cfg.max_cg_iters, 1);
         let u0 = res.u.col(0);
         let w = precond.apply(&z); // P^{-1} z_j
 
@@ -298,24 +333,38 @@ impl ExactGp {
             self.step_log.push(StepLog { step, nll, cg_iters: iters, seconds: dt });
         }
         self.train_seconds = sw.total();
-        self.mean_cache = None;
-        self.var_cache = None;
+        self.pred_rhs = None;
         Ok(())
     }
 
     /// Precompute prediction caches: a = K^{-1} y at tight tolerance and
-    /// the rank-r LOVE variance cache (paper SS3 "Predictions").
+    /// the rank-r LOVE variance cache (paper SS3 "Predictions"). The mean
+    /// solve and the Lanczos recursion share the persistent operator, so
+    /// the Lanczos MVMs replay the blocks the solve materialized.
     pub fn precompute(&mut self, rng: &mut Rng) -> Result<()> {
         let sw = Stopwatch::start();
-        let op = self.op();
-        let precond = self.preconditioner()?;
-        let b = Mat::col_vec(&self.y);
-        let res = mbcg(&op, &precond, &b, self.cfg.predict_tol, self.cfg.max_cg_iters, 1);
-        self.mean_cache = Some(res.u.col(0));
-
-        let rank = self.cfg.variance_rank.min(self.n());
-        let f = lanczos(&op, rank, rng)?;
-        self.var_cache = Some(VarianceCache::from_lanczos(&f)?);
+        self.ensure_op();
+        let (a, cache) = {
+            let op = self.op.as_ref().unwrap();
+            let precond = self.preconditioner()?;
+            let b = Mat::col_vec(&self.y);
+            let res =
+                mbcg(op, &precond, &b, self.cfg.predict_tol, self.cfg.max_cg_iters, 1);
+            let rank = self.cfg.variance_rank.min(self.n());
+            let f = lanczos(op, rank, rng)?;
+            (res.u.col(0), VarianceCache::from_lanczos(&f)?)
+        };
+        // Build the combined prediction RHS V = [a | W] once, with whole-row
+        // copies (W's rows are contiguous), so predict() never walks W
+        // element by element again.
+        let n = self.n();
+        let r = cache.w.cols;
+        let mut v = Mat::zeros(n, 1 + r);
+        v.set_col(0, &a);
+        for i in 0..n {
+            v.row_mut(i)[1..].copy_from_slice(cache.w.row(i));
+        }
+        self.pred_rhs = Some(v);
         self.precompute_seconds = sw.total();
         Ok(())
     }
@@ -324,13 +373,20 @@ impl ExactGp {
     /// partitioned MVM for the means and one K(X*,X) @ W product for the
     /// variances — no linear solves at test time.
     pub fn predict(&self, xstar: &[f64]) -> Result<super::Predictions> {
-        let a = self
-            .mean_cache
+        // Means and the variance projection in one batched RHS:
+        // V = [a | W] -> K(X*, X) [a | W]; V was assembled at precompute
+        // time and is reused verbatim across predict calls.
+        let v = self
+            .pred_rhs
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("call precompute() before predict()"))?;
-        let cache = self.var_cache.as_ref().unwrap();
         let s = xstar.len() / self.d;
         let test_data = Arc::new(PaddedData::new(xstar, self.d, &self.spec));
+        // A multi-chunk RHS (1 + r columns over t-wide chunks) replays
+        // each test-train block instead of re-evaluating the kernel; a
+        // single-chunk RHS applies each block exactly once, so caching
+        // would be pure write-out overhead — stream it.
+        let budget = if v.cols > self.spec.t { self.cache_budget_bytes() } else { 0 };
         let rect = PartitionedKernelOp::rect(
             test_data,
             self.data.clone(),
@@ -338,18 +394,10 @@ impl ExactGp {
             self.spec,
             self.hypers.clone(),
             self.acct.clone(),
-        );
-        // Means and the variance projection in one batched RHS:
-        // V = [a | W] -> K(X*, X) [a | W].
-        let r = cache.w.cols;
-        let mut v = Mat::zeros(self.n(), 1 + r);
-        v.set_col(0, a);
-        for j in 0..r {
-            for i in 0..self.n() {
-                v[(i, 1 + j)] = cache.w[(i, j)];
-            }
-        }
-        let kv = rect.apply_raw(&v);
+        )
+        .with_cache_budget(budget);
+        let r = v.cols - 1;
+        let kv = rect.apply_raw(v);
         let os = self.hypers.outputscale();
         let mut mean = Vec::with_capacity(s);
         let mut var = Vec::with_capacity(s);
@@ -408,7 +456,7 @@ mod tests {
         cfg.probes = 64; // tight stochastic estimates for the comparison
         cfg.train_tol = 1e-9;
         cfg.precond_rank = 30;
-        let gp = native_gp(&cfg, &ds, 2);
+        let mut gp = native_gp(&cfg, &ds, 2);
         let mut rng = Rng::new(82, 0);
         let (nll, grad, _) = gp.nll_and_grad(&mut rng).unwrap();
         let (nll_true, grad_true) = crate::gp::cholesky::nll_and_grad(
@@ -430,6 +478,32 @@ mod tests {
                 grad_true[i]
             );
         }
+    }
+
+    #[test]
+    fn persistent_op_reuses_and_invalidates_kernel_blocks() {
+        let ds = toy_dataset(200, 2, 90);
+        let mut cfg = Config::default();
+        cfg.probes = 4;
+        cfg.precond_rank = 10;
+        cfg.train_tol = 1e-8; // force several mBCG iterations per solve
+        let mut gp = native_gp(&cfg, &ds, 2);
+        let mut rng = Rng::new(91, 0);
+        let _ = gp.nll_and_grad(&mut rng).unwrap();
+        let snap = gp.accounting().snapshot();
+        assert!(snap.cache_fills > 0, "no kernel blocks were materialized");
+        assert!(snap.cache_hits > 0, "solve iterations never hit the cache");
+        let gen0 = gp.op.as_ref().unwrap().generation;
+        // Unchanged hypers: the operator (and its blocks) stay valid.
+        let _ = gp.nll_and_grad(&mut rng).unwrap();
+        assert_eq!(gp.op.as_ref().unwrap().generation, gen0);
+        // Moved hypers: generation bump, stale blocks refilled from scratch.
+        gp.hypers.log_lengthscales[0] += 0.1;
+        let before = gp.accounting().snapshot();
+        let _ = gp.nll_and_grad(&mut rng).unwrap();
+        let delta = gp.accounting().snapshot().delta(&before);
+        assert!(gp.op.as_ref().unwrap().generation > gen0);
+        assert!(delta.cache_fills > 0, "stale blocks were not refilled");
     }
 
     #[test]

@@ -38,7 +38,7 @@ impl KernelKind {
 /// `log_lengthscales` has length 1 (shared across dimensions — Table 1) or
 /// d (independent/ARD — Table 3). `log_outputscale` is log s^2,
 /// `log_noise` is log sigma^2.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Hypers {
     pub log_lengthscales: Vec<f64>,
     pub log_outputscale: f64,

@@ -73,6 +73,12 @@ pub struct Accounting {
     pub tile_execs: AtomicU64,
     /// Number of full kernel MVMs performed.
     pub mvms: AtomicU64,
+    /// Kernel-block cache: correlation blocks materialized into a worker
+    /// cache (each fill also serves that tile's MVM).
+    pub cache_fills: AtomicU64,
+    /// Kernel-block cache: tile MVMs served from a cached block (kernel
+    /// evaluation skipped entirely).
+    pub cache_hits: AtomicU64,
 }
 
 impl Accounting {
@@ -93,6 +99,14 @@ impl Accounting {
         self.mvms.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn note_cache_fill(&self) {
+        self.cache_fills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> AccountingSnapshot {
         AccountingSnapshot {
             bytes_to_device: self.bytes_to_device.load(Ordering::Relaxed),
@@ -100,6 +114,8 @@ impl Accounting {
             peak_tile_bytes: self.peak_tile_bytes.load(Ordering::Relaxed),
             tile_execs: self.tile_execs.load(Ordering::Relaxed),
             mvms: self.mvms.load(Ordering::Relaxed),
+            cache_fills: self.cache_fills.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
         }
     }
 
@@ -109,6 +125,8 @@ impl Accounting {
         self.peak_tile_bytes.store(0, Ordering::Relaxed);
         self.tile_execs.store(0, Ordering::Relaxed);
         self.mvms.store(0, Ordering::Relaxed);
+        self.cache_fills.store(0, Ordering::Relaxed);
+        self.cache_hits.store(0, Ordering::Relaxed);
     }
 }
 
@@ -119,6 +137,8 @@ pub struct AccountingSnapshot {
     pub peak_tile_bytes: u64,
     pub tile_execs: u64,
     pub mvms: u64,
+    pub cache_fills: u64,
+    pub cache_hits: u64,
 }
 
 impl AccountingSnapshot {
@@ -129,6 +149,8 @@ impl AccountingSnapshot {
             peak_tile_bytes: self.peak_tile_bytes,
             tile_execs: self.tile_execs - earlier.tile_execs,
             mvms: self.mvms - earlier.mvms,
+            cache_fills: self.cache_fills - earlier.cache_fills,
+            cache_hits: self.cache_hits - earlier.cache_hits,
         }
     }
 }

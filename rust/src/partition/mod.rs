@@ -79,6 +79,46 @@ impl Plan {
     }
 }
 
+/// Budget accounting for the worker-resident kernel-block cache: how many
+/// materialized (tile_r x tile_c) f32 correlation blocks fit in a byte
+/// budget, against how many the full operator needs. Whatever does not fit
+/// streams tile-by-tile exactly as before, so the O(n)-memory guarantee of
+/// the partitioned scheme degrades gracefully instead of breaking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheBudget {
+    /// Bytes per cached correlation block (tile_r * tile_c * 4).
+    pub block_bytes: usize,
+    /// Blocks needed to cache the entire operator.
+    pub total_blocks: usize,
+    /// Blocks the budget admits (<= total_blocks).
+    pub max_blocks: usize,
+}
+
+impl CacheBudget {
+    /// Plan a cache over an operator that traverses `total_blocks` kernel
+    /// tiles of `tile_r` x `tile_c` f32 correlations under `budget_bytes`.
+    pub fn plan(
+        total_blocks: usize,
+        tile_r: usize,
+        tile_c: usize,
+        budget_bytes: usize,
+    ) -> CacheBudget {
+        let block_bytes = tile_r * tile_c * 4;
+        let max_blocks = (budget_bytes / block_bytes.max(1)).min(total_blocks);
+        CacheBudget { block_bytes, total_blocks, max_blocks }
+    }
+
+    /// True when every kernel block of the operator fits in the budget.
+    pub fn covers_all(&self) -> bool {
+        self.max_blocks >= self.total_blocks
+    }
+
+    /// Resident bytes when the cache is fully populated.
+    pub fn bytes_used(&self) -> usize {
+        self.max_blocks * self.block_bytes
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +171,36 @@ mod tests {
         let plan = Plan::with_memory_budget(1000, 1000, 1, 16, 512);
         assert_eq!(plan.rows_per_partition, 1);
         assert_eq!(plan.p(), 1000);
+    }
+
+    #[test]
+    fn cache_budget_counts_blocks() {
+        // 8x8 f32 blocks are 256 bytes; a 1 KiB budget holds 4 of 10.
+        let cb = CacheBudget::plan(10, 8, 8, 1024);
+        assert_eq!(cb.block_bytes, 256);
+        assert_eq!(cb.max_blocks, 4);
+        assert!(!cb.covers_all());
+        assert_eq!(cb.bytes_used(), 1024);
+        // A budget beyond the operator size caps at total_blocks.
+        let all = CacheBudget::plan(10, 8, 8, 1 << 20);
+        assert_eq!(all.max_blocks, 10);
+        assert!(all.covers_all());
+        // Zero budget => streaming only.
+        assert_eq!(CacheBudget::plan(10, 8, 8, 0).max_blocks, 0);
+    }
+
+    #[test]
+    fn million_points_cache_respects_budget() {
+        // At n = 2^20 with PROD tiles (512 x 2048), the full operator is
+        // 4 TiB of correlation blocks; a 256 MiB cache holds only a slice
+        // of them and the rest must stream.
+        let n: usize = 1 << 20;
+        let (r, c) = (512, 2048);
+        let total = (n / r) * (n / c);
+        let cb = CacheBudget::plan(total, r, c, 256 << 20);
+        assert!(!cb.covers_all());
+        assert!(cb.bytes_used() <= 256 << 20);
+        assert!(cb.max_blocks > 0);
     }
 
     #[test]

@@ -63,13 +63,17 @@ pub fn pivoted_cholesky<R: KernelRows>(kr: &R, k: usize, rel_tol: f64) -> Pivote
     let trace0: f64 = d.iter().sum();
     let mut rows: Vec<Vec<f64>> = Vec::with_capacity(k.min(n));
     let mut pivots = Vec::with_capacity(k.min(n));
+    // O(1) used-pivot lookup: the argmax below runs k times over n
+    // candidates, and a `pivots.contains` scan inside it would cost an
+    // extra O(n k^2) at the paper's k = 100, n = 10^6.
+    let mut used = vec![false; n];
 
     for _ in 0..k.min(n) {
         // Pivot: largest remaining diagonal.
         let (piv, &dmax) = d
             .iter()
             .enumerate()
-            .filter(|(i, _)| !pivots.contains(i))
+            .filter(|&(i, _)| !used[i])
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .unwrap();
         if dmax <= 0.0 {
@@ -97,6 +101,7 @@ pub fn pivoted_cholesky<R: KernelRows>(kr: &R, k: usize, rel_tol: f64) -> Pivote
         }
         d[piv] = 0.0;
 
+        used[piv] = true;
         pivots.push(piv);
         rows.push(l);
 

@@ -47,26 +47,50 @@ impl PivCholPrecond {
     pub fn rank(&self) -> usize {
         self.pc.rank()
     }
-
-    fn apply_vec(&self, r: &[f64]) -> Vec<f64> {
-        // t = L^T r (k); s = M^{-1} t (k); out = (r - L s) / sigma^2
-        let t = self.pc.lt_matvec(r);
-        let s = self.core.solve_vec(&t);
-        let mut out = r.to_vec();
-        let ls = self.pc.l_matvec(&s);
-        for i in 0..self.n {
-            out[i] = (out[i] - ls[i]) / self.noise;
-        }
-        out
-    }
 }
 
 impl Preconditioner for PivCholPrecond {
+    /// P^{-1} R for the whole (n, t) block at once: T = L^T R, S = M^{-1} T,
+    /// out = (R - L S) / sigma^2. Every pass walks contiguous rows of the
+    /// row-major block and updates all t columns per row (the same slab
+    /// idiom as `linalg::col_dots` / `axpy_cols`) — this runs every mBCG
+    /// iteration, and the old per-column path allocated four vectors per
+    /// column per call.
     fn apply(&self, r: &Mat) -> Mat {
-        let mut out = Mat::zeros(r.rows, r.cols);
-        for j in 0..r.cols {
-            let col = self.apply_vec(&r.col(j));
-            out.set_col(j, &col);
+        let t = r.cols;
+        let k = self.pc.rank();
+        if t == 0 {
+            return r.clone();
+        }
+        assert_eq!(r.rows, self.n);
+        // T = L^T R (k, t): factor i against every column in one pass.
+        let mut tm = Mat::zeros(k, t);
+        for (i, lrow) in self.pc.rows.iter().enumerate() {
+            let trow = &mut tm.data[i * t..(i + 1) * t];
+            for (rr, &w) in r.data.chunks_exact(t).zip(lrow.iter()) {
+                if w != 0.0 {
+                    for j in 0..t {
+                        trow[j] += w * rr[j];
+                    }
+                }
+            }
+        }
+        // S = M^{-1} T (k, t), the k x k core factored at construction.
+        let s = self.core.solve_mat(&tm);
+        // out = (R - L S) / sigma^2, again streaming whole rows.
+        let mut out = r.clone();
+        for (i, lrow) in self.pc.rows.iter().enumerate() {
+            let srow = &s.data[i * t..(i + 1) * t];
+            for (or, &w) in out.data.chunks_exact_mut(t).zip(lrow.iter()) {
+                if w != 0.0 {
+                    for j in 0..t {
+                        or[j] -= w * srow[j];
+                    }
+                }
+            }
+        }
+        for x in &mut out.data {
+            *x /= self.noise;
         }
         out
     }

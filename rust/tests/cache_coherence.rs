@@ -1,0 +1,176 @@
+//! Kernel-block cache coherence: a cached operator must be *observably
+//! identical* to a streaming one — bitwise-equal MVM results across worker
+//! counts and partition shapes, correct invalidation when `set_hypers`
+//! bumps the generation, and graceful streaming of whatever exceeds the
+//! byte budget (including the unaligned edge sizes of partition_edge.rs).
+
+use std::sync::Arc;
+
+use exactgp::exec::{
+    native::NativeBackend, pool::DevicePool, BackendFactory, PaddedData, PartitionedKernelOp,
+    TileBackend, TileSpec,
+};
+use exactgp::kernels::{Hypers, KernelKind};
+use exactgp::linalg::Mat;
+use exactgp::metrics::Accounting;
+use exactgp::partition::Plan;
+use exactgp::solvers::BatchMvm;
+use exactgp::util::rng::Rng;
+
+const SPEC: TileSpec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
+
+fn hypers() -> Hypers {
+    Hypers {
+        log_lengthscales: vec![0.15],
+        log_outputscale: 0.1,
+        log_noise: (0.3f64).ln(),
+    }
+}
+
+fn build_op(
+    x: &[f64],
+    workers: usize,
+    rows_per_partition: usize,
+    cache_budget: usize,
+) -> PartitionedKernelOp {
+    let factory: BackendFactory = Arc::new(move |_| {
+        Ok(Box::new(NativeBackend::new(KernelKind::Matern32, false, SPEC))
+            as Box<dyn TileBackend>)
+    });
+    let pool = Arc::new(DevicePool::new(workers, factory).unwrap());
+    let data = Arc::new(PaddedData::new(x, SPEC.d, &SPEC));
+    let plan = Plan::with_rows(data.n_pad, data.n_pad, rows_per_partition);
+    PartitionedKernelOp::square(
+        data,
+        pool,
+        plan,
+        SPEC,
+        hypers(),
+        Arc::new(Accounting::default()),
+    )
+    .with_cache_budget(cache_budget)
+}
+
+fn toy(n: usize) -> (Vec<f64>, Mat) {
+    let mut rng = Rng::new(101, n as u64);
+    let x: Vec<f64> = (0..n * SPEC.d).map(|_| rng.normal()).collect();
+    let v = Mat::from_vec(n, SPEC.t, rng.normal_vec(n * SPEC.t));
+    (x, v)
+}
+
+#[test]
+fn cached_matches_streaming_bitwise_across_worker_counts() {
+    // n = 45 deliberately misaligns with every tile dimension.
+    let (x, v) = toy(45);
+    let reference = build_op(&x, 1, usize::MAX / 2, 0).mvm(&v);
+    for workers in [1usize, 2, 4] {
+        for rpp in [SPEC.r, SPEC.r * 3, 1024] {
+            let op = build_op(&x, workers, rpp, 64 << 20);
+            let cold = op.mvm(&v);
+            let warm = op.mvm(&v);
+            // Bitwise: the cached gemm replays the exact f32 op sequence
+            // of the streaming path, and the f64 tile traversal order is
+            // unchanged, so even the last ulp must agree.
+            assert_eq!(
+                cold.data, reference.data,
+                "cold cache != streaming (workers={workers} rpp={rpp})"
+            );
+            assert_eq!(
+                warm.data, reference.data,
+                "warm cache != streaming (workers={workers} rpp={rpp})"
+            );
+            let snap = op.acct.snapshot();
+            assert!(snap.cache_fills > 0, "budget was granted but nothing cached");
+            assert!(snap.cache_hits > 0, "second MVM never hit the cache");
+        }
+    }
+}
+
+#[test]
+fn warm_mvm_serves_every_tile_from_cache() {
+    let (x, v) = toy(64);
+    let op = build_op(&x, 2, SPEC.r * 2, 64 << 20);
+    let _ = op.mvm(&v);
+    let fills = op.acct.snapshot().cache_fills;
+    assert!(fills > 0);
+    let before = op.acct.snapshot();
+    let _ = op.mvm(&v);
+    let delta = op.acct.snapshot().delta(&before);
+    assert_eq!(delta.cache_fills, 0, "warm MVM re-materialized blocks");
+    assert_eq!(delta.cache_hits, fills, "warm MVM must hit every cached tile");
+}
+
+#[test]
+fn set_hypers_invalidates_stale_blocks() {
+    let (x, v) = toy(40);
+    let mut op = build_op(&x, 2, SPEC.r * 2, 64 << 20);
+    let old = op.mvm(&v);
+    let gen0 = op.generation;
+
+    // Move the lengthscale: every cached rho block is now stale.
+    let mut h2 = hypers();
+    h2.log_lengthscales[0] = 0.6;
+    op.set_hypers(h2.clone());
+    assert!(op.generation > gen0, "set_hypers must bump the generation");
+
+    let before = op.acct.snapshot();
+    let got = op.mvm(&v);
+    let delta = op.acct.snapshot().delta(&before);
+    assert!(delta.cache_fills > 0, "stale blocks were not refilled");
+
+    // A streaming op built directly at the new hypers is the ground truth;
+    // serving any stale-generation block would break this bitwise match.
+    let mut fresh = build_op(&x, 1, usize::MAX / 2, 0);
+    fresh.set_hypers(h2);
+    let want = fresh.mvm(&v);
+    assert_eq!(got.data, want.data, "cached MVM after set_hypers is stale");
+    assert!(got.max_abs_diff(&old) > 1e-6, "hyper move should change results");
+}
+
+#[test]
+fn over_budget_datasets_stream_the_tail() {
+    // Budget for exactly 3 correlation blocks; n = 45 needs
+    // ceil(48/4) * ceil(48/8) = 72. Everything past the quota streams,
+    // and the results stay bitwise-identical to full streaming.
+    let (x, v) = toy(45);
+    let block_bytes = SPEC.r * SPEC.c * 4;
+    let reference = build_op(&x, 1, usize::MAX / 2, 0).mvm(&v);
+    for workers in [1usize, 3] {
+        let op = build_op(&x, workers, SPEC.r * 2, 3 * block_bytes);
+        let cold = op.mvm(&v);
+        let warm = op.mvm(&v);
+        assert_eq!(cold.data, reference.data, "over-budget cold run diverged");
+        assert_eq!(warm.data, reference.data, "over-budget warm run diverged");
+        let snap = op.acct.snapshot();
+        assert!(snap.cache_fills <= 3, "budget exceeded: {} fills", snap.cache_fills);
+        assert!(snap.cache_fills > 0, "no blocks cached despite budget");
+        assert_eq!(snap.cache_hits, snap.cache_fills, "each cached block hits once");
+    }
+}
+
+#[test]
+fn zero_budget_never_touches_the_cache() {
+    let (x, v) = toy(33);
+    let op = build_op(&x, 2, SPEC.r, 0);
+    let _ = op.mvm(&v);
+    let _ = op.mvm(&v);
+    let snap = op.acct.snapshot();
+    assert_eq!(snap.cache_fills, 0);
+    assert_eq!(snap.cache_hits, 0);
+}
+
+#[test]
+fn gradient_mvms_share_the_pool_without_corrupting_cached_results() {
+    // Interleave cached MVMs with (streaming) gradient MVMs on the same
+    // pool: the gradient jobs must leave the cached blocks untouched.
+    let (x, v) = toy(40);
+    let op = build_op(&x, 2, SPEC.r * 2, 64 << 20);
+    let first = op.mvm(&v);
+    let _ = op.apply_grads(&v);
+    let before = op.acct.snapshot();
+    let second = op.mvm(&v);
+    let delta = op.acct.snapshot().delta(&before);
+    assert_eq!(first.data, second.data);
+    assert_eq!(delta.cache_fills, 0, "gradient jobs evicted cached blocks");
+    assert!(delta.cache_hits > 0);
+}
