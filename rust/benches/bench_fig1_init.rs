@@ -11,10 +11,8 @@ fn main() {
     let mut env = BenchEnv::from_env(&["bike", "kin40k", "3droad"]);
     // 100 Adam steps at paper fidelity is available via
     // EXACTGP_BENCH_FULL_ADAM; default keeps `cargo bench` tractable.
-    env.cfg.full_adam_steps = std::env::var("EXACTGP_BENCH_FULL_ADAM")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(25);
+    env.cfg.full_adam_steps =
+        exactgp::bench_harness::env_usize("EXACTGP_BENCH_FULL_ADAM").unwrap_or(25);
 
     let mut rows = Vec::new();
     let mut reports = Vec::new();

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use exactgp::bench_harness::{quick_requested, time_fn, BenchEnv};
+use exactgp::bench_harness::{time_fn, BenchEnv};
 use exactgp::config::{Backend, Flavor};
 use exactgp::coordinator::print_table;
 use exactgp::exec::{backend_factory, pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
@@ -28,18 +28,14 @@ fn tile_flops(spec: &TileSpec) -> f64 {
 
 fn main() {
     let env = BenchEnv::from_env(&[]);
-    let quick = quick_requested();
+    let quick = env.quick;
     let spec = TileSpec::PROD;
     let d = 8;
     let mut rng = Rng::new(3, 0);
     let mut rows = Vec::new();
     let reps = if quick { 1 } else { 3 };
 
-    let ns: Vec<usize> = match std::env::var("EXACTGP_BENCH_N") {
-        Ok(s) => s.split(',').filter_map(|x| x.parse().ok()).collect(),
-        Err(_) if quick => vec![2048],
-        Err(_) => vec![2048, 8192],
-    };
+    let ns = env.sizes(&[2048, 8192], &[2048]);
 
     for &n in &ns {
         let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();

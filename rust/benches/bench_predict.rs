@@ -1,0 +1,184 @@
+//! Batched-prediction throughput: the serving-side hot path underneath
+//! `ExactGp::predict` (paper SS3 "Predictions" + Table 2's right-hand
+//! columns).
+//!
+//! Benches `exec::CrossKernelOp` directly — K(X*, X) @ [a | W] over a
+//! synthetic training set — so no GP training is needed: prediction cost
+//! depends only on the shapes, not the cache contents. Reports
+//!
+//! * batched vs per-point prediction (the acceptance target: batched wins
+//!   by >= 5x on a 10k-train / 1k-test case, in `--quick` too), with a
+//!   bitwise cross-check that both paths produce identical rows;
+//! * a chunk-size x worker-count sweep (points/s), showing the
+//!   latency/parallelism tradeoff: one chunk is one pool dispatch, and
+//!   chunks shorter than workers x tile height cannot use every worker.
+//!
+//! Writes `results/BENCH_predict.json` (uploaded by CI next to
+//! `BENCH_mvm.json`). Knobs: `EXACTGP_BENCH_N` (train sizes),
+//! `EXACTGP_BENCH_WORKERS`, `--quick` / `EXACTGP_BENCH_QUICK=1`.
+
+use std::sync::Arc;
+
+use exactgp::bench_harness::{time_fn, BenchEnv};
+use exactgp::config::Backend;
+use exactgp::coordinator::print_table;
+use exactgp::exec::{backend_factory, pool::DevicePool, CrossKernelOp, PaddedData, TileSpec};
+use exactgp::kernels::Hypers;
+use exactgp::linalg::Mat;
+use exactgp::metrics::Accounting;
+use exactgp::util::json::{arr, num, obj, s, Json};
+use exactgp::util::rng::Rng;
+
+fn native_pool(env: &BenchEnv, spec: TileSpec, workers: usize) -> Arc<DevicePool> {
+    let mut cfg = env.cfg.clone();
+    cfg.backend = Backend::Native;
+    cfg.workers = workers;
+    let factory =
+        backend_factory(&cfg, cfg.kernel, false, spec.d, spec).expect("native backend");
+    Arc::new(DevicePool::new(workers, factory).expect("pool"))
+}
+
+fn cross_op(
+    env: &BenchEnv,
+    train: &Arc<PaddedData>,
+    spec: TileSpec,
+    workers: usize,
+    chunk: usize,
+) -> CrossKernelOp {
+    // Budget large enough to hold a full chunk strip resident: the multi-
+    // pass [a | W] RHS replays each test-train block gemm-only.
+    CrossKernelOp::new(
+        train.clone(),
+        native_pool(env, spec, workers),
+        spec,
+        Hypers::default_init(None),
+        Arc::new(Accounting::default()),
+    )
+    .with_cache_budget(256 << 20)
+    .with_chunk_rows(chunk)
+}
+
+fn main() {
+    let env = BenchEnv::from_env(&[]);
+    let quick = env.quick;
+    let spec = TileSpec::PROD;
+    let d = 8;
+    let n_train = env.sizes(&[10_240], &[10_240]).first().copied().unwrap_or(10_240);
+    let n_test = if quick { 1024 } else { 2048 };
+    // RHS width: 1 mean column + r LOVE variance columns (r = 16 keeps the
+    // quick run to two t-passes; the full run uses the default rank 64).
+    let rhs_cols = if quick { 17 } else { 65 };
+    let workers_max = env.cfg.workers.max(1);
+
+    let mut rng = Rng::new(7, 0);
+    let xs: Vec<f64> = (0..n_train * d).map(|_| rng.normal()).collect();
+    let xt: Vec<f64> = (0..n_test * d).map(|_| rng.normal()).collect();
+    let train = Arc::new(PaddedData::new(&xs, d, &spec));
+    let v = Mat::from_vec(n_train, rhs_cols, rng.normal_vec(n_train * rhs_cols));
+
+    // --- batched vs per-point -------------------------------------------
+    let mut batched_op = cross_op(&env, &train, spec, workers_max, 0);
+    let t0 = std::time::Instant::now();
+    let batched = batched_op.apply(&xt, d, &v);
+    let batched_s = t0.elapsed().as_secs_f64();
+
+    let sample = if quick { 4 } else { 8 };
+    let mut per_point_op = cross_op(&env, &train, spec, workers_max, 0);
+    let mut per_point_total = 0.0;
+    let mut rows_match = true;
+    for i in 0..sample {
+        let point = &xt[i * d..(i + 1) * d];
+        let t0 = std::time::Instant::now();
+        let one = per_point_op.apply(point, d, &v);
+        per_point_total += t0.elapsed().as_secs_f64();
+        // Each output row depends only on its own test point: the batched
+        // row must be bitwise-identical to the single-point result.
+        rows_match &= one.row(0) == batched.row(i);
+    }
+    let per_point_s = per_point_total / sample as f64;
+    let speedup = per_point_s * n_test as f64 / batched_s;
+    assert!(rows_match, "batched and per-point predictions diverged");
+
+    print_table(
+        &format!(
+            "Batched vs per-point prediction (n_train={n_train}, n_test={n_test}, \
+             rhs={rhs_cols} cols, {workers_max} workers)"
+        ),
+        &["mode", "total", "per point", "speedup"],
+        &[
+            vec![
+                "per-point".into(),
+                format!("{:.1}s (extrapolated)", per_point_s * n_test as f64),
+                format!("{:.1}ms", per_point_s * 1e3),
+                "1.00x".into(),
+            ],
+            vec![
+                "batched".into(),
+                format!("{:.2}s", batched_s),
+                format!("{:.2}ms", batched_s * 1e3 / n_test as f64),
+                format!("{speedup:.0}x"),
+            ],
+        ],
+    );
+
+    // --- chunk-size x worker-count sweep --------------------------------
+    let chunks: Vec<usize> = if quick { vec![512, 2048] } else { vec![256, 512, 2048, 8192] };
+    let worker_counts: Vec<usize> = if quick { vec![1, workers_max] } else { vec![1, 2, 4] };
+    let reps = if quick { 1 } else { 3 };
+    let mut sweep_rows = Vec::new();
+    let mut sweep_json = Vec::new();
+    for &workers in &worker_counts {
+        for &chunk in &chunks {
+            let chunk = chunk.min(n_test);
+            let mut op = cross_op(&env, &train, spec, workers, chunk);
+            let stats = time_fn(0, reps, || {
+                let _ = op.apply(&xt, d, &v);
+            });
+            let pps = n_test as f64 / stats.min;
+            sweep_rows.push(vec![
+                workers.to_string(),
+                chunk.to_string(),
+                stats.fmt_seconds(),
+                format!("{pps:.0}"),
+            ]);
+            sweep_json.push(obj(vec![
+                ("workers", num(workers as f64)),
+                ("chunk", num(chunk as f64)),
+                ("seconds", num(stats.min)),
+                ("points_per_s", num(pps)),
+            ]));
+        }
+    }
+    print_table(
+        &format!("Prediction throughput sweep (n_train={n_train}, n_test={n_test})"),
+        &["workers", "chunk", "time/batch", "points/s"],
+        &sweep_rows,
+    );
+
+    let doc = obj(vec![
+        ("bench", s("bench_predict")),
+        ("mode", s(if quick { "quick" } else { "full" })),
+        ("n_train", num(n_train as f64)),
+        ("n_test", num(n_test as f64)),
+        ("rhs_cols", num(rhs_cols as f64)),
+        ("workers", num(workers_max as f64)),
+        ("batched_s", num(batched_s)),
+        ("per_point_s", num(per_point_s)),
+        ("batched_vs_per_point_speedup", num(speedup)),
+        ("outputs_bitwise_match", Json::Bool(rows_match)),
+        ("sweep", arr(sweep_json)),
+    ]);
+    if std::fs::create_dir_all(&env.cfg.results_dir).is_ok() {
+        let path = std::path::Path::new(&env.cfg.results_dir).join("BENCH_predict.json");
+        if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+            eprintln!("could not write {}: {e}", path.display());
+        } else {
+            println!("wrote {}", path.display());
+        }
+    }
+
+    assert!(
+        speedup >= 5.0,
+        "batched prediction must beat per-point by >= 5x (got {speedup:.1}x)"
+    );
+}

@@ -13,10 +13,9 @@ use exactgp::solvers::{DenseOp, IdentityPrecond, Preconditioner};
 use exactgp::util::rng::Rng;
 
 fn main() {
-    let n: usize = std::env::var("EXACTGP_BENCH_N")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1024);
+    // Single-size bench: first entry of a comma-separated EXACTGP_BENCH_N.
+    let env = exactgp::bench_harness::BenchEnv::from_env(&[]);
+    let n: usize = env.sizes(&[1024], &[1024]).first().copied().unwrap_or(1024);
     let d = 4;
     let noise: f64 = 1e-2;
     let mut rng = Rng::new(11, 0);

@@ -8,10 +8,8 @@ use exactgp::coordinator::{self, ExactRecipe, Model};
 
 fn main() {
     let mut env = BenchEnv::from_env(&["poletele", "bike", "kin40k"]);
-    env.cfg.full_adam_steps = std::env::var("EXACTGP_BENCH_FULL_ADAM")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(25);
+    env.cfg.full_adam_steps =
+        exactgp::bench_harness::env_usize("EXACTGP_BENCH_FULL_ADAM").unwrap_or(25);
 
     let mut rows = Vec::new();
     let mut reports = Vec::new();

@@ -3,10 +3,18 @@
 //! Provides warmup + repeated timing with mean/std reporting, and the
 //! environment knobs shared by every `rust/benches/bench_*.rs` binary:
 //!
-//! * `EXACTGP_BENCH_SCALE`   — smoke | default | large | paper | <cap>
-//! * `EXACTGP_BENCH_DATASETS`— comma-separated dataset subset
-//! * `EXACTGP_BENCH_TRIALS`  — trials per cell (paper: 3)
-//! * `EXACTGP_BENCH_WORKERS` — worker ("GPU") count
+//! * `EXACTGP_BENCH_SCALE`    — smoke | default | large | paper | a cap
+//! * `EXACTGP_BENCH_DATASETS` — comma-separated dataset subset, or `all`
+//! * `EXACTGP_BENCH_TRIALS`   — trials per cell (paper: 3)
+//! * `EXACTGP_BENCH_WORKERS`  — worker ("GPU") count
+//! * `EXACTGP_BENCH_QUICK`    — `1` = CI smoke mode (same as passing
+//!   `--quick` on the bench command line): shrunken problem sizes and
+//!   repetition counts so a bench finishes in seconds
+//! * `EXACTGP_BENCH_N`        — comma-separated problem sizes.
+//!   `bench_mvm` sweeps every listed size; `bench_predict` and
+//!   `bench_solvers` run one size and use the first entry
+//! * `EXACTGP_BENCH_FULL_ADAM`— Adam steps for the no-pretraining recipe
+//!   benches (`bench_fig1_init`, `bench_table5_adam100`)
 //!
 //! Each bench prints a paper-style table and writes `results/<exp>.json`.
 
@@ -16,13 +24,18 @@ use crate::data::synthetic::Scale;
 /// Timing statistics from `time_fn`.
 #[derive(Clone, Copy, Debug)]
 pub struct TimingStats {
+    /// Mean seconds per repetition.
     pub mean: f64,
+    /// Sample standard deviation of the repetition times.
     pub std: f64,
+    /// Fastest repetition (throughput numbers use this).
     pub min: f64,
+    /// Number of measured repetitions.
     pub reps: usize,
 }
 
 impl TimingStats {
+    /// Human formatting with unit auto-scaling (us / ms / s).
     pub fn fmt_seconds(&self) -> String {
         if self.mean < 1e-3 {
             format!("{:.1}us +/- {:.1}", self.mean * 1e6, self.std * 1e6)
@@ -52,9 +65,14 @@ pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> TimingStats 
 
 /// Bench configuration from the environment.
 pub struct BenchEnv {
+    /// Run configuration (scale / workers already applied from the env).
     pub cfg: Config,
+    /// Datasets this bench run covers.
     pub datasets: Vec<String>,
+    /// Trials per cell.
     pub trials: u64,
+    /// CI smoke mode (`--quick` flag or `EXACTGP_BENCH_QUICK=1`).
+    pub quick: bool,
 }
 
 impl BenchEnv {
@@ -87,8 +105,25 @@ impl BenchEnv {
             .ok()
             .and_then(|t| t.parse().ok())
             .unwrap_or(1);
-        BenchEnv { cfg, datasets, trials }
+        BenchEnv { cfg, datasets, trials, quick: quick_requested() }
     }
+
+    /// Problem sizes for a size-sweep bench: `EXACTGP_BENCH_N`
+    /// (comma-separated) when set, else `quick_default` in quick mode or
+    /// `full_default` otherwise.
+    pub fn sizes(&self, full_default: &[usize], quick_default: &[usize]) -> Vec<usize> {
+        match std::env::var("EXACTGP_BENCH_N") {
+            Ok(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
+            Err(_) if self.quick => quick_default.to_vec(),
+            Err(_) => full_default.to_vec(),
+        }
+    }
+}
+
+/// Integer override from the environment (e.g. `EXACTGP_BENCH_FULL_ADAM`).
+/// Unset or unparsable = None.
+pub fn env_usize(var: &str) -> Option<usize> {
+    std::env::var(var).ok().and_then(|v| v.parse().ok())
 }
 
 /// True when a bench was invoked as a CI smoke run: either

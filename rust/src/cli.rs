@@ -2,6 +2,11 @@
 //! closure). Supports subcommands, `--flag value`, `--flag=value`, boolean
 //! flags, repeated `--set key=value` config overrides, and positional args.
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 use anyhow::{bail, Result};
 
 #[derive(Clone, Debug, Default)]

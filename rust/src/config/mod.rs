@@ -22,6 +22,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse `pjrt` / `native`.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "pjrt" => Ok(Backend::Pjrt),
@@ -41,6 +42,7 @@ pub enum Flavor {
 }
 
 impl Flavor {
+    /// Manifest name of the flavor.
     pub fn name(&self) -> &'static str {
         match self {
             Flavor::Pallas => "pallas",
@@ -48,6 +50,7 @@ impl Flavor {
         }
     }
 
+    /// Parse `pallas` / `jnp`.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "pallas" => Ok(Flavor::Pallas),
@@ -61,39 +64,62 @@ impl Flavor {
 #[derive(Clone, Debug)]
 pub struct Config {
     // model
+    /// Kernel family (paper: Matern-3/2 throughout).
     pub kernel: KernelKind,
+    /// Independent per-dimension lengthscales (Table 3) vs one shared.
     pub ard: bool,
     /// Noise floor sigma^2 >= this (paper: 0.1 for houseelectric).
     pub noise_floor: f64,
 
     // solver (BBMM / mBCG)
-    pub train_tol: f64,     // paper: eps = 1
-    pub predict_tol: f64,   // paper: eps <= 0.01
+    /// mBCG relative-residual tolerance during training (paper: eps = 1).
+    pub train_tol: f64,
+    /// mBCG tolerance for the prediction-cache solves (paper: eps <= 0.01).
+    pub predict_tol: f64,
+    /// Hard cap on mBCG iterations per solve.
     pub max_cg_iters: usize,
-    pub probes: usize,          // Hutchinson probe vectors
-    pub precond_rank: usize,    // paper: k = 100
-    pub variance_rank: usize,   // LOVE cache rank
+    /// Hutchinson probe vectors per NLL/gradient evaluation.
+    pub probes: usize,
+    /// Pivoted-Cholesky preconditioner rank (paper: k = 100).
+    pub precond_rank: usize,
+    /// LOVE predictive-variance cache rank.
+    pub variance_rank: usize,
 
     // training recipe
-    pub pretrain_subset: usize, // paper: 10,000
-    pub pretrain_lbfgs_steps: usize, // paper: 10
-    pub pretrain_adam_steps: usize,  // paper: 10
-    pub finetune_adam_steps: usize,  // paper: 3
-    pub adam_lr: f64,                // paper: 0.1
-    pub full_adam_steps: usize,      // Table 5 recipe: 100
+    /// Subset size for Cholesky pretraining (paper: 10,000).
+    pub pretrain_subset: usize,
+    /// L-BFGS steps during pretraining (paper: 10).
+    pub pretrain_lbfgs_steps: usize,
+    /// Adam steps during pretraining (paper: 10).
+    pub pretrain_adam_steps: usize,
+    /// Adam steps on the full data after pretraining (paper: 3).
+    pub finetune_adam_steps: usize,
+    /// Adam learning rate (paper: 0.1).
+    pub adam_lr: f64,
+    /// Adam steps for the no-pretraining recipe (Table 5: 100).
+    pub full_adam_steps: usize,
 
     // baselines
-    pub sgpr_m: usize,       // paper: 512
-    pub svgp_m: usize,       // paper: 1024
-    pub svgp_batch: usize,   // paper: 1024
-    pub sgpr_iters: usize,   // paper: 100
-    pub svgp_epochs: usize,  // paper: 100
-    pub svgp_lr: f64,        // paper: 0.01
+    /// SGPR inducing points (paper: 512).
+    pub sgpr_m: usize,
+    /// SVGP inducing points (paper: 1024).
+    pub svgp_m: usize,
+    /// SVGP minibatch size (paper: 1024).
+    pub svgp_batch: usize,
+    /// SGPR Adam iterations (paper: 100).
+    pub sgpr_iters: usize,
+    /// SVGP epochs (paper: 100).
+    pub svgp_epochs: usize,
+    /// SVGP learning rate (paper: 0.01).
+    pub svgp_lr: f64,
 
     // execution
+    /// Which tile backend executes kernel MVMs.
     pub backend: Backend,
+    /// Preferred artifact flavor on the PJRT backend.
     pub flavor: Flavor,
-    pub workers: usize, // "number of GPUs"
+    /// Worker ("GPU") count in the device pool.
+    pub workers: usize,
     /// Rows per kernel partition (the paper reports p = #partitions;
     /// we plan by rows-per-partition against a memory budget).
     pub partition_memory_mb: usize,
@@ -105,12 +131,23 @@ pub struct Config {
     /// resident half of the memory split — `partition_memory_mb` governs
     /// the transient per-partition strips.
     pub cache_memory_mb: usize,
+    /// Test points per batched-prediction chunk. 0 (the default) plans the
+    /// chunk size from `predict_chunk_mb` against the training size.
+    pub predict_chunk: usize,
+    /// Transient memory budget (MiB) for one prediction chunk's
+    /// cross-kernel strip when `predict_chunk` is 0.
+    pub predict_chunk_mb: usize,
 
     // experiment control
+    /// Dataset scale policy (caps training sizes; `paper` = full size).
     pub scale: Scale,
+    /// Trials per experiment cell (paper: 3).
     pub trials: usize,
+    /// Base RNG seed.
     pub seed: u64,
+    /// Directory holding the AOT artifact manifest.
     pub artifacts_dir: String,
+    /// Directory where experiment/bench JSON reports are written.
     pub results_dir: String,
 }
 
@@ -144,6 +181,8 @@ impl Default for Config {
             partition_memory_mb: 256,
             cache_kernel_blocks: true,
             cache_memory_mb: 256,
+            predict_chunk: 0,
+            predict_chunk_mb: 64,
             scale: Scale::DEFAULT,
             trials: 1,
             seed: 0,
@@ -206,6 +245,8 @@ impl Config {
             "exec.partition_memory_mb" => self.partition_memory_mb = v.parse()?,
             "exec.cache_kernel_blocks" => self.cache_kernel_blocks = parse_bool(v)?,
             "exec.cache_memory_mb" => self.cache_memory_mb = v.parse()?,
+            "exec.predict_chunk" => self.predict_chunk = v.parse()?,
+            "exec.predict_chunk_mb" => self.predict_chunk_mb = v.parse()?,
             "run.scale" => {
                 self.scale = Scale::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad scale {v:?}"))?
@@ -262,6 +303,8 @@ mod tests {
         assert_eq!(c.sgpr_m, 512);
         assert_eq!(c.svgp_m, 1024);
         assert_eq!(c.svgp_lr, 0.01);
+        assert_eq!(c.predict_chunk, 0); // auto: plan from predict_chunk_mb
+        assert_eq!(c.predict_chunk_mb, 64);
     }
 
     #[test]
@@ -273,8 +316,12 @@ mod tests {
         c.set("run.scale", "smoke").unwrap();
         c.set("exec.cache_kernel_blocks", "false").unwrap();
         c.set("exec.cache_memory_mb", "64").unwrap();
+        c.set("exec.predict_chunk", "2048").unwrap();
+        c.set("exec.predict_chunk_mb", "128").unwrap();
         assert!(!c.cache_kernel_blocks);
         assert_eq!(c.cache_memory_mb, 64);
+        assert_eq!(c.predict_chunk, 2048);
+        assert_eq!(c.predict_chunk_mb, 128);
         assert_eq!(c.probes, 16);
         assert_eq!(c.backend, Backend::Native);
         assert!(c.ard);

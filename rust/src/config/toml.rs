@@ -4,6 +4,7 @@
 
 use anyhow::{bail, Result};
 
+/// Parse the TOML subset into flat ("section.key", "raw value") pairs.
 pub fn parse(text: &str) -> Result<Vec<(String, String)>> {
     let mut out = Vec::new();
     let mut section = String::new();

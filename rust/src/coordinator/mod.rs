@@ -3,6 +3,11 @@
 //! identical pipeline (dataset -> model -> train -> caches -> predictions
 //! -> metrics -> report).
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 use std::sync::Arc;
 
 use anyhow::{bail, Result};

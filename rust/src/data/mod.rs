@@ -11,6 +11,11 @@
 //! 2/9 validation, 3/9 test; features and targets whitened to mean 0 /
 //! std 1 *as measured on the training set*.
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 pub mod csv;
 pub mod synthetic;
 
@@ -35,6 +40,17 @@ pub struct Dataset {
     /// Std of y before whitening — RMSEs are reported in whitened units
     /// (as in the paper; random-guess RMSE = 1).
     pub y_std: f64,
+    /// Mean of y before whitening (with `y_std`, the target transform).
+    pub y_mean: f64,
+    /// Per-feature whitening means in the pipeline space (train stats).
+    pub feature_mu: Vec<f64>,
+    /// Per-feature whitening stds in the pipeline space (train stats).
+    pub feature_sd: Vec<f64>,
+    /// JL projection (d_original, d), flat row-major, when the source
+    /// dimensionality exceeded the tile width; None otherwise. Together
+    /// with the whitening stats this lets raw-unit queries be mapped into
+    /// the model's feature space after the fact (CSV serving).
+    pub projection: Option<Vec<f64>>,
 }
 
 impl Dataset {
@@ -77,6 +93,54 @@ impl Dataset {
         }
         (x, y)
     }
+
+    /// Map raw-unit query features (flat (m, `d_original`)) into the
+    /// model's pipeline feature space: the stored JL projection (when the
+    /// source dimensionality exceeded the tile width) followed by
+    /// train-statistics whitening — the exact transform `prepare` applied
+    /// to the training data. Errors when the dataset carries no pipeline
+    /// statistics (hand-built datasets) or the width is wrong.
+    pub fn transform_x(&self, x: &[f64]) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(
+            self.feature_mu.len() == self.d && self.feature_sd.len() == self.d,
+            "dataset {:?} carries no feature-pipeline statistics",
+            self.name
+        );
+        let d_in = self.d_original;
+        anyhow::ensure!(
+            d_in > 0 && x.len() % d_in == 0,
+            "query features are not a multiple of d_original={d_in}"
+        );
+        let m = x.len() / d_in;
+        let mut out = match &self.projection {
+            Some(proj) => {
+                let mut o = vec![0.0; m * self.d];
+                for i in 0..m {
+                    let row = &x[i * d_in..(i + 1) * d_in];
+                    let orow = &mut o[i * self.d..(i + 1) * self.d];
+                    for (k, &v) in row.iter().enumerate() {
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let prow = &proj[k * self.d..(k + 1) * self.d];
+                        for j in 0..self.d {
+                            orow[j] += v * prow[j];
+                        }
+                    }
+                }
+                o
+            }
+            None => x.to_vec(),
+        };
+        whiten(&mut out, self.d, &self.feature_mu, &self.feature_sd);
+        Ok(out)
+    }
+
+    /// Whiten raw-unit targets with the stored training statistics (the
+    /// units every RMSE/NLL in this crate is reported in).
+    pub fn transform_y(&self, y: &[f64]) -> Vec<f64> {
+        y.iter().map(|v| (v - self.y_mean) / self.y_std).collect()
+    }
 }
 
 /// Raw (unsplit, unwhitened) data.
@@ -95,9 +159,7 @@ impl RawData {
     /// Split 4/9 train, 2/9 val, 3/9 test; whiten on train stats;
     /// compress features to at most `max_d` dims (JL random projection).
     pub fn prepare(self, max_d: usize, rng: &mut Rng) -> Dataset {
-        let compressed = compress_features(self.x, self.d, max_d, &self.name);
-        let d = compressed.1;
-        let x = compressed.0;
+        let (x, d, projection) = compress_features(self.x, self.d, max_d, &self.name);
         let n = self.y.len();
         let perm = rng.permutation(n);
         let n_train = n * 4 / 9;
@@ -140,6 +202,10 @@ impl RawData {
             test_x,
             test_y,
             y_std: y_sd,
+            y_mean: y_mu,
+            feature_mu: mu,
+            feature_sd: sd,
+            projection,
         }
     }
 }
@@ -185,10 +251,17 @@ fn whiten(x: &mut [f64], d: usize, mu: &[f64], sd: &[f64]) {
 /// Johnson-Lindenstrauss random projection to `max_d` dims when d exceeds
 /// the tile artifacts' compiled width (CTslice: 385 -> 32). Distance-based
 /// kernels see approximately preserved geometry; the projection matrix is
-/// seeded from the dataset name, so it is stable across runs.
-fn compress_features(x: Vec<f64>, d: usize, max_d: usize, name: &str) -> (Vec<f64>, usize) {
+/// seeded from the dataset name, so it is stable across runs. Returns the
+/// (d, max_d) projection used (None when no compression was needed) so
+/// the dataset can replay the transform on later queries.
+fn compress_features(
+    x: Vec<f64>,
+    d: usize,
+    max_d: usize,
+    name: &str,
+) -> (Vec<f64>, usize, Option<Vec<f64>>) {
     if d <= max_d {
-        return (x, d);
+        return (x, d, None);
     }
     let mut rng = Rng::new(crate::util::rng::fnv1a(name) ^ 0x4A4C, 77);
     let scale = 1.0 / (max_d as f64).sqrt();
@@ -208,7 +281,7 @@ fn compress_features(x: Vec<f64>, d: usize, max_d: usize, name: &str) -> (Vec<f6
             }
         }
     }
-    (out, max_d)
+    (out, max_d, Some(proj))
 }
 
 #[cfg(test)]
@@ -268,12 +341,14 @@ mod tests {
 
     #[test]
     fn compression_only_when_needed() {
-        let (x, d) = compress_features(vec![1.0; 10 * 8], 8, 32, "a");
+        let (x, d, proj) = compress_features(vec![1.0; 10 * 8], 8, 32, "a");
         assert_eq!(d, 8);
         assert_eq!(x.len(), 80);
-        let (x2, d2) = compress_features(vec![1.0; 10 * 100], 100, 32, "a");
+        assert!(proj.is_none());
+        let (x2, d2, proj2) = compress_features(vec![1.0; 10 * 100], 100, 32, "a");
         assert_eq!(d2, 32);
         assert_eq!(x2.len(), 320);
+        assert_eq!(proj2.unwrap().len(), 100 * 32);
     }
 
     #[test]
@@ -282,7 +357,7 @@ mod tests {
         let n = 40;
         let d = 200;
         let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
-        let (z, dz) = compress_features(x.clone(), d, 32, "jl");
+        let (z, dz, _) = compress_features(x.clone(), d, 32, "jl");
         let mut ratios = vec![];
         for i in 0..10 {
             for j in (i + 1)..10 {
@@ -299,6 +374,39 @@ mod tests {
         }
         let mean: f64 = ratios.iter().sum::<f64>() / ratios.len() as f64;
         assert!((mean - 1.0).abs() < 0.25, "JL mean distortion {mean}");
+    }
+
+    #[test]
+    fn stored_pipeline_replays_on_raw_queries() {
+        // No compression: transform_x must reproduce prepare's whitening.
+        let ds = toy_raw(900, 3).prepare(32, &mut Rng::new(8, 0));
+        assert!(ds.projection.is_none());
+        let z = ds.transform_x(&ds.feature_mu).unwrap();
+        for v in &z {
+            assert!(v.abs() < 1e-10, "mean row must whiten to zero, got {v}");
+        }
+        assert_eq!(ds.transform_y(&[ds.y_mean]), vec![0.0]);
+
+        // With compression: project then whiten, shapes and stats line up.
+        let ds = toy_raw(450, 100).prepare(32, &mut Rng::new(9, 0));
+        let proj = ds.projection.as_ref().expect("JL projection stored");
+        assert_eq!(proj.len(), 100 * 32);
+        let raw_row = vec![0.5; 100];
+        let t = ds.transform_x(&raw_row).unwrap();
+        assert_eq!(t.len(), 32);
+        // Manual replay: raw @ proj, then whiten with the stored stats.
+        let mut want = vec![0.0; 32];
+        for k in 0..100 {
+            for j in 0..32 {
+                want[j] += raw_row[k] * proj[k * 32 + j];
+            }
+        }
+        for j in 0..32 {
+            want[j] = (want[j] - ds.feature_mu[j]) / ds.feature_sd[j];
+            assert!((t[j] - want[j]).abs() < 1e-12);
+        }
+        // Wrong width is an error, not garbage.
+        assert!(ds.transform_x(&[1.0; 32]).is_err());
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! The partitioned batch prediction operator (serving side of the paper's
+//! SS3 "Predictions"): `K(X*, X) @ V` for whole batches of test points,
+//! streamed in memory-budgeted chunks through the same DevicePool / tile
+//! machinery — and the same worker-resident kernel-block caches — as the
+//! training MVMs.
+//!
+//! Why chunking: a serving batch can be arbitrarily large (the ROADMAP
+//! target is millions of queries), but one pass materializes a transient
+//! (chunk_rows x n) cross-kernel strip tile by tile. Chunking the test set
+//! bounds that transient state exactly the way `partition::Plan` bounds it
+//! for training — O(n) in the training size, independent of the batch.
+//!
+//! Cache protocol: the operator owns one process-unique `op_id` for its
+//! lifetime and bumps its `generation` after every chunk (and on
+//! `set_hypers`). Within a chunk, a multi-column RHS (the `[a | W]`
+//! prediction block is 1 + r columns, walked t at a time) replays each
+//! materialized test-train block gemm-only; across chunks the generation
+//! bump guarantees a worker can never serve a block built from a previous
+//! chunk's test rows, because blocks are keyed by (op_id, generation,
+//! row_start) and row offsets repeat between chunks.
+
+use std::sync::Arc;
+
+use crate::exec::{pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
+use crate::kernels::Hypers;
+use crate::linalg::Mat;
+use crate::metrics::Accounting;
+
+/// Chunked rectangular kernel operator `K(X*, X)` over a fixed training
+/// set. Construct once per model (or per predict call), then `apply` whole
+/// test batches through it.
+pub struct CrossKernelOp {
+    /// Training inputs in column-tile layout (shared with the training
+    /// operator; never copied per batch).
+    pub train: Arc<PaddedData>,
+    /// Worker pool executing the per-chunk row jobs.
+    pub pool: Arc<DevicePool>,
+    /// Tile geometry shared with every worker backend.
+    pub spec: TileSpec,
+    /// Current kernel hyperparameters (noise is never added: the operator
+    /// is rectangular, so there is no diagonal).
+    pub hypers: Hypers,
+    /// Communication / cache / prediction accounting.
+    pub acct: Arc<Accounting>,
+    /// Process-unique identity for worker-cache keying, held for the
+    /// operator's lifetime.
+    pub op_id: u64,
+    /// Bumped after every chunk and by `set_hypers`, so worker-cached
+    /// blocks from other test rows or other hypers are never served.
+    pub generation: u64,
+    /// Byte budget for worker-resident test-train correlation blocks
+    /// (0 = stream every tile). Only engaged when the RHS is wider than
+    /// one `spec.t` pass — a single-pass RHS touches each block once, so
+    /// caching would be pure write-out overhead.
+    pub cache_budget_bytes: usize,
+    /// Test rows per chunk (0 = the whole batch in one chunk).
+    pub chunk_rows: usize,
+}
+
+impl CrossKernelOp {
+    /// Build the operator over `train`. Defaults: no cache budget, whole
+    /// batch in one chunk — tune with `with_cache_budget` /
+    /// `with_chunk_rows` (see `partition::predict_chunk_rows` for the
+    /// memory-budgeted chunk size).
+    pub fn new(
+        train: Arc<PaddedData>,
+        pool: Arc<DevicePool>,
+        spec: TileSpec,
+        hypers: Hypers,
+        acct: Arc<Accounting>,
+    ) -> CrossKernelOp {
+        CrossKernelOp {
+            train,
+            pool,
+            spec,
+            hypers,
+            acct,
+            // Drawn from the same namespace as the square training
+            // operators: worker caches key on it.
+            op_id: crate::exec::next_op_id(),
+            generation: 0,
+            cache_budget_bytes: 0,
+            chunk_rows: 0,
+        }
+    }
+
+    /// Enable the worker-resident block cache with a byte budget
+    /// (0 disables).
+    pub fn with_cache_budget(mut self, bytes: usize) -> CrossKernelOp {
+        self.cache_budget_bytes = bytes;
+        self
+    }
+
+    /// Set the test-chunk size in rows (0 = single chunk).
+    pub fn with_chunk_rows(mut self, rows: usize) -> CrossKernelOp {
+        self.chunk_rows = rows;
+        self
+    }
+
+    /// Move to new hyperparameters; stale worker blocks are invalidated by
+    /// the generation bump.
+    pub fn set_hypers(&mut self, h: Hypers) {
+        self.hypers = h;
+        self.generation += 1;
+    }
+
+    /// `K(X*, X) @ V` for the whole batch `xstar` (flat row-major (m, d)),
+    /// streamed in `chunk_rows` chunks. Returns an (m, v.cols) matrix.
+    ///
+    /// Each output row depends only on its own test point's features and
+    /// the fixed column-tile traversal of the training set, so the result
+    /// is bitwise-identical across chunk sizes and worker counts.
+    pub fn apply(&mut self, xstar: &[f64], d: usize, v: &Mat) -> Mat {
+        assert_eq!(v.rows, self.train.n, "RHS rows must equal n_train");
+        assert!(d <= self.spec.d, "d={d} exceeds compiled tile width {}", self.spec.d);
+        let m = if d == 0 { 0 } else { xstar.len() / d };
+        let mut out = Mat::zeros(m, v.cols);
+        if m == 0 {
+            return out;
+        }
+        let chunk = if self.chunk_rows == 0 { m } else { self.chunk_rows };
+        // Multi-pass RHS (cols > t) replays blocks; single-pass streams.
+        let budget = if v.cols > self.spec.t { self.cache_budget_bytes } else { 0 };
+        // The padded f32 RHS depends only on the training set and tile
+        // geometry — pad it once and share across every chunk, instead of
+        // re-converting O(n_train x cols) f64 per chunk.
+        let mut passes: Option<Vec<Arc<Vec<f32>>>> = None;
+        let mut start = 0;
+        while start < m {
+            let rows = chunk.min(m - start);
+            let chunk_x = &xstar[start * d..(start + rows) * d];
+            // Row-side alignment: pad the chunk to the tile height, not
+            // the column-tile width — a 1-point query costs spec.r padded
+            // rows, not spec.c.
+            let test =
+                Arc::new(PaddedData::with_row_align(chunk_x, d, &self.spec, self.spec.r));
+            let mut op = PartitionedKernelOp::rect(
+                test,
+                self.train.clone(),
+                self.pool.clone(),
+                self.spec,
+                self.hypers.clone(),
+                self.acct.clone(),
+            )
+            .with_cache_budget(budget);
+            // Stable identity across the operator's lifetime; fresh
+            // generation per chunk (row offsets repeat between chunks).
+            op.op_id = self.op_id;
+            op.generation = self.generation;
+            let passes = passes.get_or_insert_with(|| op.rhs_passes(v));
+            let kv = op.apply_passes(v.cols, passes);
+            for i in 0..rows {
+                out.row_mut(start + i).copy_from_slice(kv.row(i));
+            }
+            self.generation += 1;
+            self.acct.note_predict_chunk();
+            start += rows;
+        }
+        self.acct.note_predict(m as u64);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::exec::backend_factory;
+    use crate::kernels::{KernelEval, KernelKind};
+    use crate::util::rng::Rng;
+
+    fn native_pool(spec: TileSpec, workers: usize) -> Arc<DevicePool> {
+        let mut cfg = crate::config::Config::default();
+        cfg.backend = Backend::Native;
+        let factory =
+            backend_factory(&cfg, KernelKind::Matern32, false, spec.d, spec).unwrap();
+        Arc::new(DevicePool::new(workers, factory).unwrap())
+    }
+
+    fn setup(
+        n_train: usize,
+        d: usize,
+        spec: TileSpec,
+        workers: usize,
+    ) -> (CrossKernelOp, Vec<f64>, Hypers) {
+        let mut rng = Rng::new(61, 0);
+        let xs: Vec<f64> = (0..n_train * d).map(|_| rng.normal()).collect();
+        let train = Arc::new(PaddedData::new(&xs, d, &spec));
+        let hypers = Hypers::default_init(None);
+        let pool = native_pool(spec, workers);
+        let op = CrossKernelOp::new(
+            train,
+            pool,
+            spec,
+            hypers.clone(),
+            Arc::new(Accounting::default()),
+        );
+        (op, xs, hypers)
+    }
+
+    #[test]
+    fn chunked_apply_matches_dense_cross() {
+        let spec = TileSpec { r: 8, c: 16, t: 4, d: 3 };
+        let (n_train, n_test, d) = (37, 21, 3);
+        let (mut op, xs, hypers) = setup(n_train, d, spec, 2);
+        let mut rng = Rng::new(62, 0);
+        let xt: Vec<f64> = (0..n_test * d).map(|_| rng.normal()).collect();
+        let v = Mat::from_vec(n_train, 6, rng.normal_vec(n_train * 6));
+        let want = KernelEval::new(KernelKind::Matern32, &hypers)
+            .cross(&xt, &xs, d)
+            .matmul(&v);
+        for chunk in [0usize, 1, 7, 8, 9, 20, 21, 22, 64] {
+            op.chunk_rows = chunk;
+            let got = op.apply(&xt, d, &v);
+            assert_eq!(got.rows, n_test);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "chunk={chunk}: diff={}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn bitwise_identical_across_chunks_and_workers() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let (n_train, n_test, d) = (30, 13, 2);
+        let mut rng = Rng::new(63, 0);
+        let xt: Vec<f64> = (0..n_test * d).map(|_| rng.normal()).collect();
+        let v_data = rng.normal_vec(n_train * 5);
+        let mut reference: Option<Mat> = None;
+        for workers in [1usize, 2, 3] {
+            for chunk in [0usize, 1, 4, 12, 13, 14] {
+                let (mut op, _, _) = setup(n_train, d, spec, workers);
+                op.chunk_rows = chunk;
+                let got = op.apply(&xt, d, &Mat::from_vec(n_train, 5, v_data.clone()));
+                match &reference {
+                    None => reference = Some(got),
+                    Some(r) => assert_eq!(
+                        r.data, got.data,
+                        "workers={workers} chunk={chunk} not bitwise-identical"
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_advances_per_chunk_and_on_set_hypers() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let (mut op, _, hypers) = setup(20, 2, spec, 1);
+        let mut rng = Rng::new(64, 0);
+        let xt: Vec<f64> = (0..10 * 2).map(|_| rng.normal()).collect();
+        let v = Mat::from_vec(20, 2, rng.normal_vec(40));
+        op.chunk_rows = 4; // 10 test rows -> 3 chunks
+        let g0 = op.generation;
+        let _ = op.apply(&xt, 2, &v);
+        assert_eq!(op.generation, g0 + 3);
+        op.set_hypers(hypers);
+        assert_eq!(op.generation, g0 + 4);
+    }
+
+    #[test]
+    fn prediction_counters_are_recorded() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let (mut op, _, _) = setup(24, 2, spec, 2);
+        let mut rng = Rng::new(65, 0);
+        let xt: Vec<f64> = (0..9 * 2).map(|_| rng.normal()).collect();
+        let v = Mat::from_vec(24, 2, rng.normal_vec(48));
+        op.chunk_rows = 4;
+        let before = op.acct.snapshot();
+        let _ = op.apply(&xt, 2, &v);
+        let delta = op.acct.snapshot().delta(&before);
+        assert_eq!(delta.predict_points, 9);
+        assert_eq!(delta.predict_chunks, 3); // ceil(9 / 4)
+    }
+
+    #[test]
+    fn multi_pass_rhs_hits_the_block_cache_within_a_chunk() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let (mut op, _, _) = setup(32, 2, spec, 2);
+        op.cache_budget_bytes = 64 << 20; // everything resident
+        let mut rng = Rng::new(66, 0);
+        let xt: Vec<f64> = (0..16 * 2).map(|_| rng.normal()).collect();
+        // 6 RHS columns over t=2 => 3 passes per chunk: pass 1 fills,
+        // passes 2-3 replay gemm-only.
+        let v = Mat::from_vec(32, 6, rng.normal_vec(32 * 6));
+        let before = op.acct.snapshot();
+        let _ = op.apply(&xt, 2, &v);
+        let delta = op.acct.snapshot().delta(&before);
+        assert!(delta.cache_fills > 0, "no blocks materialized");
+        assert!(
+            delta.cache_hits >= 2 * delta.cache_fills,
+            "fills={} hits={}",
+            delta.cache_fills,
+            delta.cache_hits
+        );
+        // A second apply must refill (new generation), never reuse blocks
+        // keyed to the previous batch's test rows.
+        let before = op.acct.snapshot();
+        let _ = op.apply(&xt, 2, &v);
+        let delta = op.acct.snapshot().delta(&before);
+        assert!(delta.cache_fills > 0, "stale-generation blocks were reused");
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
+        let (mut op, _, _) = setup(12, 2, spec, 1);
+        let v = Mat::zeros(12, 2);
+        let out = op.apply(&[], 2, &v);
+        assert_eq!((out.rows, out.cols), (0, 2));
+    }
+}

@@ -15,9 +15,12 @@
 //! Communication accounting (`metrics::Accounting`) tracks bytes moved to
 //! and from workers, verifying the O(n)-per-MVM communication claim.
 
+pub mod cross;
 pub mod native;
 pub mod pjrt_backend;
 pub mod pool;
+
+pub use cross::CrossKernelOp;
 
 use std::sync::Arc;
 
@@ -34,9 +37,13 @@ use crate::solvers::BatchMvm;
 /// Fixed tile geometry (must match the compiled artifacts for PJRT).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileSpec {
+    /// Tile height: rows of the kernel block one backend call produces.
     pub r: usize,
+    /// Tile width: training columns streamed per backend call.
     pub c: usize,
+    /// RHS width: columns of V processed per backend call.
     pub t: usize,
+    /// Compiled feature width; inputs are zero-padded up to it.
     pub d: usize,
 }
 
@@ -44,6 +51,8 @@ impl TileSpec {
     /// Production geometry (aot.py TILE_R/TILE_C).
     pub const PROD: TileSpec = TileSpec { r: 512, c: 2048, t: 16, d: 32 };
 
+    /// Padded feature width for a true dimensionality `d` (the artifact
+    /// menu compiles d = 8 and d = 32 variants).
     pub fn d_pad_for(d: usize) -> usize {
         if d <= 8 {
             8
@@ -57,6 +66,7 @@ impl TileSpec {
 /// the backend's `TileSpec` shapes; `theta` is the kernel-only parameter
 /// vector (no noise — the coordinator owns the diagonal).
 pub trait TileBackend {
+    /// The tile geometry this backend was built for.
     fn spec(&self) -> TileSpec;
 
     /// K(xr, xc) @ v  -> (r, t)
@@ -105,21 +115,38 @@ pub trait TileBackend {
 /// Send; each worker constructs its own client inside the thread).
 pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn TileBackend>> + Send + Sync>;
 
-/// Dataset in tile layout: rows padded to a multiple of the tile width,
-/// features padded to the compiled d.
+/// Dataset in tile layout: rows padded to a tile boundary, features
+/// padded to the compiled d.
 pub struct PaddedData {
-    pub n: usize,     // true rows
-    pub n_pad: usize, // padded rows (multiple of spec.c)
-    pub d: usize,     // true feature dim
-    pub d_pad: usize, // padded feature dim
-    pub x: Vec<f32>,  // (n_pad, d_pad)
+    /// True (unpadded) row count.
+    pub n: usize,
+    /// Padded row count (a multiple of the alignment chosen at build).
+    pub n_pad: usize,
+    /// True feature dimensionality.
+    pub d: usize,
+    /// Padded feature dimensionality (= spec.d; extra dims are zero).
+    pub d_pad: usize,
+    /// The (n_pad, d_pad) f32 feature matrix, flat row-major.
+    pub x: Vec<f32>,
 }
 
 impl PaddedData {
+    /// Pad to a multiple of `spec.c`: the layout for data used on the
+    /// *column* (streamed) side of an operator — and therefore also for
+    /// the square training operator, where rows and columns are the same
+    /// set.
     pub fn new(x: &[f64], d: usize, spec: &TileSpec) -> PaddedData {
+        Self::with_row_align(x, d, spec, spec.c)
+    }
+
+    /// Pad rows to a multiple of `align`. Row-side-only operands (the
+    /// test chunk of a rectangular prediction operator) align to the tile
+    /// height `spec.r` instead of the much wider `spec.c`, so a small
+    /// chunk does not drag `spec.c` rows of padding through every tile.
+    pub fn with_row_align(x: &[f64], d: usize, spec: &TileSpec, align: usize) -> PaddedData {
         let n = x.len() / d;
         assert!(d <= spec.d, "d={d} exceeds compiled tile width {}", spec.d);
-        let n_pad = n.div_ceil(spec.c) * spec.c;
+        let n_pad = n.div_ceil(align.max(1)) * align.max(1);
         let mut out = vec![0.0f32; n_pad * spec.d];
         for i in 0..n {
             for j in 0..d {
@@ -129,6 +156,7 @@ impl PaddedData {
         PaddedData { n, n_pad, d, d_pad: spec.d, x: out }
     }
 
+    /// Borrow `rows` consecutive padded feature rows starting at `start`.
     pub fn row_block(&self, start: usize, rows: usize) -> &[f32] {
         &self.x[start * self.d_pad..(start + rows) * self.d_pad]
     }
@@ -139,18 +167,32 @@ impl PaddedData {
 /// setting) are never served to another.
 static OP_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
+/// Allocate a fresh process-unique operator id from the shared namespace
+/// (every operator that dispatches cached jobs must draw from it).
+pub(crate) fn next_op_id() -> u64 {
+    OP_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
 /// The partitioned kernel operator (possibly rectangular:
 /// rows = `row_data`, columns = `col_data`).
 pub struct PartitionedKernelOp {
+    /// Row-side inputs (the training set; the test chunk for `rect`).
     pub row_data: Arc<PaddedData>,
+    /// Column-side inputs (always the training set).
     pub col_data: Arc<PaddedData>,
+    /// Worker pool executing the row-partition jobs.
     pub pool: Arc<pool::DevicePool>,
+    /// Row-partition plan (memory-budgeted; see `partition::Plan`).
     pub plan: Plan,
+    /// Tile geometry shared with every worker backend.
     pub spec: TileSpec,
+    /// Current kernel hyperparameters.
     pub hypers: Hypers,
     /// Added on the diagonal when row_data and col_data are the same set.
     pub noise: f64,
+    /// True for the square training operator K^(X, X).
     pub square: bool,
+    /// Communication / cache accounting shared with the workers.
     pub acct: Arc<Accounting>,
     /// Process-unique identity for worker-cache keying.
     pub op_id: u64,
@@ -183,7 +225,7 @@ impl PartitionedKernelOp {
             noise,
             square: true,
             acct,
-            op_id: OP_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            op_id: next_op_id(),
             generation: 0,
             cache_budget_bytes: 0,
         }
@@ -209,7 +251,7 @@ impl PartitionedKernelOp {
             noise: 0.0,
             square: false,
             acct,
-            op_id: OP_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            op_id: next_op_id(),
             generation: 0,
             cache_budget_bytes: 0,
         }
@@ -222,6 +264,8 @@ impl PartitionedKernelOp {
         self
     }
 
+    /// Move the operator to a new hyperparameter setting, invalidating
+    /// every worker-cached correlation block via a generation bump.
     pub fn set_hypers(&mut self, h: Hypers) {
         self.noise = if self.square { h.noise() } else { 0.0 };
         self.hypers = h;
@@ -235,10 +279,12 @@ impl PartitionedKernelOp {
         self.generation += 1;
     }
 
+    /// True (unpadded) row count of the operator.
     pub fn n_rows(&self) -> usize {
         self.row_data.n
     }
 
+    /// True (unpadded) column count of the operator.
     pub fn n_cols(&self) -> usize {
         self.col_data.n
     }
@@ -273,13 +319,32 @@ impl PartitionedKernelOp {
 
     /// Raw K @ V (no noise), handling RHS chunking over the compiled t.
     pub fn apply_raw(&self, v: &Mat) -> Mat {
+        self.apply_passes(v.cols, &self.rhs_passes(v))
+    }
+
+    /// Pad each t-wide RHS column chunk of `v` to the wire layout once.
+    /// The padding depends only on the column data and tile geometry, so
+    /// the passes are reusable across repeated applications against the
+    /// same training set — `CrossKernelOp` pads a serving batch's
+    /// `[a | W]` RHS once and shares it across every test chunk instead
+    /// of re-converting O(n x cols) f64 per chunk.
+    pub fn rhs_passes(&self, v: &Mat) -> Vec<Arc<Vec<f32>>> {
         assert_eq!(v.rows, self.col_data.n);
-        let mut out = Mat::zeros(self.row_data.n, v.cols);
-        for chunk_start in (0..v.cols).step_by(self.spec.t) {
-            let chunk = chunk_start..(chunk_start + self.spec.t).min(v.cols);
-            let padded = Arc::new(self.pad_rhs(v, chunk.clone()));
+        (0..v.cols)
+            .step_by(self.spec.t)
+            .map(|cs| Arc::new(self.pad_rhs(v, cs..(cs + self.spec.t).min(v.cols))))
+            .collect()
+    }
+
+    /// Raw K @ V against pre-padded RHS passes (see `rhs_passes`); `cols`
+    /// is the original RHS width.
+    pub fn apply_passes(&self, cols: usize, passes: &[Arc<Vec<f32>>]) -> Mat {
+        assert_eq!(passes.len(), cols.div_ceil(self.spec.t.max(1)));
+        let mut out = Mat::zeros(self.row_data.n, cols);
+        for (pass, chunk_start) in passes.iter().zip((0..cols).step_by(self.spec.t)) {
+            let chunk = chunk_start..(chunk_start + self.spec.t).min(cols);
             let theta = Arc::new(self.theta_padded());
-            let results = self.run_jobs(pool::JobKind::Mvm, padded, theta);
+            let results = self.run_jobs(pool::JobKind::Mvm, pass.clone(), theta);
             for &(start, len, ref res) in &results {
                 let rows = len.min(self.row_data.n.saturating_sub(start));
                 for i in 0..rows {

@@ -14,6 +14,7 @@ use anyhow::Result;
 use crate::exec::{TileBackend, TileSpec};
 use crate::kernels::KernelKind;
 
+/// The pure-Rust tile backend (see the module docs).
 pub struct NativeBackend {
     kind: KernelKind,
     ard: bool,
@@ -26,6 +27,7 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Build a backend for one worker at the given tile geometry.
     pub fn new(kind: KernelKind, ard: bool, spec: TileSpec) -> NativeBackend {
         NativeBackend {
             kind,
@@ -98,7 +100,7 @@ fn rbf_rho_e(r2: f32) -> (f32, f32) {
     (rho, rho)
 }
 
-/// Accumulate one tile row of the matvec: orow[j] += rho[jc] * v_s[jc*t+j].
+/// Accumulate one tile row of the matvec: `orow[j] += rho[jc] * v_s[jc*t+j]`.
 ///
 /// Shared by the streaming `mvm` (rho freshly computed into the scratch
 /// row) and the cached `mvm_cached` (rho read from a materialized block):

@@ -10,6 +10,8 @@ use anyhow::{Context, Result};
 use crate::exec::{TileBackend, TileSpec};
 use crate::runtime::{Engine, Executable, Manifest};
 
+/// One worker's PJRT backend: a private client plus the compiled mvm /
+/// mvmgrad executables for the requested kernel, mode, and flavor.
 pub struct PjrtBackend {
     spec: TileSpec,
     ard: bool,
@@ -20,6 +22,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Compile the artifacts named by the manifest for this tile geometry.
     pub fn new(
         manifest: &Manifest,
         kind: &str,

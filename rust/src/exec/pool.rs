@@ -27,27 +27,41 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::exec::{BackendFactory, PaddedData};
 use crate::metrics::Accounting;
 
+/// What a job computes against its row strip.
 #[derive(Clone, Copy, Debug)]
 pub enum JobKind {
+    /// Plain K @ V (the only kind eligible for block caching).
     Mvm,
-    /// nl = number of lengthscale gradients in the backend output.
-    MvmGrads { nl: usize },
+    /// K @ V plus lengthscale-gradient MVMs; `nl` = number of gradient
+    /// outputs in the backend's stacked result.
+    MvmGrads {
+        /// Number of lengthscale gradients in the backend output.
+        nl: usize,
+    },
 }
 
 /// One row-partition job.
 pub struct Job {
+    /// Job index; also the sticky routing key (`id % workers`).
     pub id: usize,
+    /// What to compute.
     pub kind: JobKind,
+    /// First padded row of this job's strip.
     pub row_start: usize,
+    /// Rows in this job's strip.
     pub row_len: usize,
+    /// Row-side inputs.
     pub row_data: Arc<PaddedData>,
+    /// Column-side inputs (streamed tile by tile).
     pub col_data: Arc<PaddedData>,
     /// True column count — tiles entirely beyond this are skipped (their
     /// RHS rows are zero-padded).
     pub col_limit: usize,
     /// (n_pad, t) RHS, f32 flat.
     pub v: Arc<Vec<f32>>,
+    /// Kernel-only parameter vector in the wire layout.
     pub theta: Arc<Vec<f32>>,
+    /// Shared communication / cache accounting.
     pub acct: Arc<Accounting>,
     /// Cache identity: which operator issued this job...
     pub op_id: u64,
@@ -92,10 +106,13 @@ pub struct DevicePool {
     results_rx: Mutex<mpsc::Receiver<(usize, anyhow::Result<Vec<f64>>)>>,
     results_tx: mpsc::Sender<(usize, anyhow::Result<Vec<f64>>)>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Worker ("device") count.
     pub workers: usize,
 }
 
 impl DevicePool {
+    /// Spawn `workers` threads, each constructing its own backend via
+    /// `factory`; fails synchronously if any backend fails to build.
     pub fn new(workers: usize, factory: BackendFactory) -> anyhow::Result<DevicePool> {
         assert!(workers > 0);
         let queues: Vec<WorkQueue> = (0..workers)
@@ -159,15 +176,24 @@ impl DevicePool {
 
     /// Execute all jobs; panics on backend errors (they indicate broken
     /// artifacts / shape mismatches — programming errors, not data).
+    ///
+    /// Concurrent `run` calls (e.g. two threads sharing one model and
+    /// predicting at once) are serialized: the result channel is held for
+    /// the whole submit-and-drain, so one caller can never collect —
+    /// or be short-changed by — another caller's job results (job ids
+    /// restart at 0 for every batch). Parallelism lives in the workers,
+    /// not in overlapping batches.
     pub fn run(&self, jobs: Vec<Job>) -> Vec<Vec<f64>> {
         let n = jobs.len();
+        // Take the receiver BEFORE enqueuing: from here to the last recv
+        // this batch owns the channel end-to-end.
+        let rx = self.results_rx.lock().unwrap();
         for j in jobs {
             let (lock, cv) = &*self.queues[j.id % self.workers];
             lock.lock().unwrap().push_back(Message::Work(j));
             cv.notify_one();
         }
         let mut out: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
-        let rx = self.results_rx.lock().unwrap();
         for _ in 0..n {
             let (id, res) = rx.recv().expect("worker died");
             out[id] = Some(res.unwrap_or_else(|e| panic!("tile backend error: {e:#}")));

@@ -8,6 +8,11 @@
 //! 3. the pretraining engine for the paper's initialization recipe (SS5):
 //!    10 L-BFGS + 10 Adam steps on a training subset.
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 use anyhow::Result;
 
 use crate::kernels::{Hypers, KernelEval, KernelKind};

@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use crate::config::Config;
 use crate::data::Dataset;
-use crate::exec::{pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
+use crate::exec::{pool::DevicePool, CrossKernelOp, PaddedData, PartitionedKernelOp, TileSpec};
 use crate::kernels::{Hypers, KernelEval, KernelKind};
 use crate::linalg::Mat;
 use crate::metrics::{Accounting, Stopwatch, LOG_2PI};
@@ -48,10 +48,12 @@ pub struct Recipe {
 }
 
 impl Recipe {
+    /// The paper's SS5 default: subset pretraining + a few Adam steps.
     pub fn paper_default(cfg: &Config) -> Recipe {
         Recipe { pretrain: true, adam_steps: cfg.finetune_adam_steps }
     }
 
+    /// The Table 5 ablation: plain Adam from scratch, no pretraining.
     pub fn full_adam(cfg: &Config) -> Recipe {
         Recipe { pretrain: false, adam_steps: cfg.full_adam_steps }
     }
@@ -60,15 +62,25 @@ impl Recipe {
 /// Per-step training diagnostics (Figure 1 / Figure 5 curves).
 #[derive(Clone, Debug)]
 pub struct StepLog {
+    /// Adam step index (0-based).
     pub step: usize,
+    /// NLL estimate at this step.
     pub nll: f64,
+    /// mBCG iterations the step's solve took.
     pub cg_iters: usize,
+    /// Wall-clock seconds for the step.
     pub seconds: f64,
 }
 
+/// The exact BBMM GP over a partitioned, distributed kernel operator —
+/// the model of the paper. Lifecycle: `new` -> `train` -> `precompute` ->
+/// `predict` (batched, chunked, cache-backed).
 pub struct ExactGp {
+    /// Kernel family.
     pub kind: KernelKind,
+    /// Current hyperparameters (updated by `train`).
     pub hypers: Hypers,
+    /// The run configuration the model was built with.
     pub cfg: Config,
     spec: TileSpec,
     pool: Arc<DevicePool>,
@@ -87,10 +99,15 @@ pub struct ExactGp {
     /// built once at precompute time so `predict` never re-copies the
     /// variance cache column by column — and the only resident copy.
     pred_rhs: Option<Mat>,
+    /// Per-step training diagnostics.
     pub step_log: Vec<StepLog>,
+    /// Wall-clock seconds spent in subset pretraining.
     pub pretrain_seconds: f64,
+    /// Wall-clock seconds spent in `train` (pretraining included).
     pub train_seconds: f64,
+    /// Wall-clock seconds spent in `precompute`.
     pub precompute_seconds: f64,
+    /// Number of row partitions of the training operator.
     pub partitions: usize,
 }
 
@@ -146,10 +163,12 @@ impl ExactGp {
         plan
     }
 
+    /// Training-set size.
     pub fn n(&self) -> usize {
         self.y.len()
     }
 
+    /// The communication / cache / prediction accounting for this model.
     pub fn accounting(&self) -> &Arc<Accounting> {
         &self.acct
     }
@@ -297,6 +316,10 @@ impl ExactGp {
                     test_x: vec![],
                     test_y: vec![],
                     y_std: 1.0,
+                    y_mean: 0.0,
+                    feature_mu: vec![],
+                    feature_sd: vec![],
+                    projection: None,
                 };
                 ds_like.train_subset(subset, rng)
             };
@@ -369,44 +392,72 @@ impl ExactGp {
         Ok(())
     }
 
-    /// Predict at `xstar` (flat (s, d)) from the caches: one rectangular
-    /// partitioned MVM for the means and one K(X*,X) @ W product for the
-    /// variances — no linear solves at test time.
+    /// Rows of test points per prediction chunk: the explicit
+    /// `exec.predict_chunk` when set, else planned from
+    /// `exec.predict_chunk_mb` against the training size (see
+    /// `partition::predict_chunk_rows`).
+    fn predict_chunk_rows(&self) -> usize {
+        if self.cfg.predict_chunk > 0 {
+            self.cfg.predict_chunk
+        } else {
+            crate::partition::predict_chunk_rows(
+                self.data.n_pad,
+                self.cfg.predict_chunk_mb << 20,
+                self.spec.t,
+                self.spec.r,
+            )
+        }
+    }
+
+    /// Predict a whole batch `xstar` (flat row-major (m, d)) from the
+    /// precomputed caches: the test set is streamed in memory-budgeted
+    /// chunks through `exec::CrossKernelOp`, each chunk computing
+    /// `K(X*, X) [a | W]` in one partitioned pass over the pool — means
+    /// from the `a` column, variances from whole-row slab dots against the
+    /// LOVE projection columns. No linear solves at test time.
     pub fn predict(&self, xstar: &[f64]) -> Result<super::Predictions> {
+        self.predict_with_chunk(xstar, self.predict_chunk_rows())
+    }
+
+    /// `predict` with an explicit chunk size in test rows (0 = the whole
+    /// batch in one chunk). Chunking never changes results — each output
+    /// row depends only on its own test point — it only bounds the
+    /// transient memory and latency of one pool dispatch.
+    pub fn predict_with_chunk(
+        &self,
+        xstar: &[f64],
+        chunk_rows: usize,
+    ) -> Result<super::Predictions> {
         // Means and the variance projection in one batched RHS:
         // V = [a | W] -> K(X*, X) [a | W]; V was assembled at precompute
-        // time and is reused verbatim across predict calls.
+        // time and is reused verbatim across predict calls. CrossKernelOp
+        // engages the worker block cache only when V is wider than one
+        // t-pass (otherwise each block is touched once and caching would
+        // be pure write-out overhead).
         let v = self
             .pred_rhs
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("call precompute() before predict()"))?;
-        let s = xstar.len() / self.d;
-        let test_data = Arc::new(PaddedData::new(xstar, self.d, &self.spec));
-        // A multi-chunk RHS (1 + r columns over t-wide chunks) replays
-        // each test-train block instead of re-evaluating the kernel; a
-        // single-chunk RHS applies each block exactly once, so caching
-        // would be pure write-out overhead — stream it.
-        let budget = if v.cols > self.spec.t { self.cache_budget_bytes() } else { 0 };
-        let rect = PartitionedKernelOp::rect(
-            test_data,
+        let mut cross = CrossKernelOp::new(
             self.data.clone(),
             self.pool.clone(),
             self.spec,
             self.hypers.clone(),
             self.acct.clone(),
         )
-        .with_cache_budget(budget);
-        let r = v.cols - 1;
-        let kv = rect.apply_raw(v);
+        .with_cache_budget(self.cache_budget_bytes())
+        .with_chunk_rows(chunk_rows);
+        let kv = cross.apply(xstar, self.d, v);
         let os = self.hypers.outputscale();
+        let s = kv.rows;
         let mut mean = Vec::with_capacity(s);
         let mut var = Vec::with_capacity(s);
         for i in 0..s {
-            mean.push(kv[(i, 0)]);
-            let mut explained = 0.0;
-            for j in 0..r {
-                explained += kv[(i, 1 + j)] * kv[(i, 1 + j)];
-            }
+            // Whole-row slab: row = [mean | W-projection], one contiguous
+            // dot for the explained variance instead of strided indexing.
+            let row = kv.row(i);
+            mean.push(row[0]);
+            let explained = crate::linalg::dot(&row[1..], &row[1..]);
             var.push((os - explained).max(0.0));
         }
         Ok(super::Predictions { mean, var, noise: self.hypers.noise() })

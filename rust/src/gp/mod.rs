@@ -15,16 +15,21 @@ use crate::metrics;
 /// Var[f*]; `var_y` (latent + noise) is what NLL uses.
 #[derive(Clone, Debug)]
 pub struct Predictions {
+    /// Predictive means, one per test point.
     pub mean: Vec<f64>,
+    /// Latent predictive variances Var[f*], one per test point.
     pub var: Vec<f64>,
+    /// Observation-noise variance (added to `var` for NLL).
     pub noise: f64,
 }
 
 impl Predictions {
+    /// RMSE of the means against the true targets.
     pub fn rmse(&self, truth: &[f64]) -> f64 {
         metrics::rmse(&self.mean, truth)
     }
 
+    /// Mean negative log predictive likelihood (noise included).
     pub fn nll(&self, truth: &[f64]) -> f64 {
         let var_y: Vec<f64> = self.var.iter().map(|v| v + self.noise).collect();
         metrics::mean_nll(&self.mean, &var_y, truth)
@@ -34,20 +39,30 @@ impl Predictions {
 /// Shared result record for every model (rows of Tables 1/2/3/5).
 #[derive(Clone, Debug)]
 pub struct FitReport {
+    /// Model name (`exact-gp`, `cholesky-gp`, `sgpr`, `svgp`).
     pub model: String,
+    /// Dataset name.
     pub dataset: String,
+    /// Training-set size.
     pub n_train: usize,
+    /// Feature dimensionality.
     pub d: usize,
+    /// Test RMSE in whitened units.
     pub rmse: f64,
+    /// Mean negative log predictive likelihood on the test set.
     pub nll: f64,
+    /// Training wall-clock seconds.
     pub train_seconds: f64,
+    /// Prediction-cache precomputation seconds.
     pub precompute_seconds: f64,
     /// Seconds to predict the full test set after precomputation.
     pub predict_seconds: f64,
+    /// Model-specific extras as (key, value) pairs.
     pub extra: Vec<(String, f64)>,
 }
 
 impl FitReport {
+    /// Serialize for `results/*.json` experiment records.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::{arr, num, obj, s, Json};
         let mut fields = vec![

@@ -7,6 +7,11 @@
 //! initialization, and the closed-form predictive posterior (computed
 //! natively — m x m systems).
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 use anyhow::{bail, Result};
 
 use crate::config::Config;

@@ -25,6 +25,11 @@
 //! in f64 while the kernel tiles run in f32 mirrors the paper's setup (GPU
 //! f32 MVMs + stable reductions).
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 pub mod chol;
 pub mod eig;
 
@@ -347,7 +352,7 @@ pub fn scale_vec(a: f64, x: &mut [f64]) {
 // block updates all t columns, instead of t strided passes.
 // ---------------------------------------------------------------------------
 
-/// Per-column dot products diag(A^T B): acc[j] = sum_i a[i, j] * b[i, j].
+/// Per-column dot products diag(A^T B): `acc[j] = sum_i a[i, j] * b[i, j]`.
 pub fn col_dots(a: &Mat, b: &Mat) -> Vec<f64> {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
     let t = a.cols;
@@ -368,7 +373,7 @@ pub fn col_norms(a: &Mat) -> Vec<f64> {
     col_dots(a, a).into_iter().map(f64::sqrt).collect()
 }
 
-/// y[:, j] += alpha[j] * x[:, j] for every column in one contiguous pass.
+/// `y[:, j] += alpha[j] * x[:, j]` for every column in one contiguous pass.
 /// A zero `alpha[j]` leaves that column exactly unchanged.
 pub fn axpy_cols(alpha: &[f64], x: &Mat, y: &mut Mat) {
     assert_eq!((x.rows, x.cols), (y.rows, y.cols));

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train        train one model on one dataset and report metrics
+//!   predict      train + precompute, then serve batched predictions and
+//!                write predictions + per-request latency stats as JSON
 //!   reproduce    run a paper experiment (table1|table2|fig1..fig4|table3|table5)
 //!   datasets     list the benchmark suite (paper signature + scaled size)
 //!   info         runtime / artifact environment report
@@ -50,10 +52,13 @@ fn run() -> Result<()> {
     let args = Args::parse_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("predict") => cmd_predict(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("info") => cmd_info(&args),
-        Some(other) => bail!("unknown subcommand {other:?} (train|reproduce|datasets|info)"),
+        Some(other) => {
+            bail!("unknown subcommand {other:?} (train|predict|reproduce|datasets|info)")
+        }
         None => {
             print_usage();
             Ok(())
@@ -70,6 +75,9 @@ fn print_usage() {
                          [--scale smoke|default|large|paper|<cap>] [--workers N]\n\
                          [--backend pjrt|native] [--flavor jnp|pallas] [--ard]\n\
                          [--config file.toml] [--set sec.key=value]...\n\
+           exactgp predict --dataset <name> [--test-csv file.csv] [--batch N]\n\
+                           [--chunk N] [--out results/predict_<name>.json]\n\
+                           [--save-predictions N] [--scale ...] [--workers N]\n\
            exactgp reproduce --exp table1|table2|table3|table5|fig1|fig2|fig3|fig4\n\
            exactgp datasets [--scale ...]\n\
            exactgp info\n"
@@ -103,6 +111,158 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let path = coordinator::write_results(&cfg, &format!("train_{name}_{}", model.name()), &rows)?;
     eprintln!("wrote {path:?}");
+    Ok(())
+}
+
+/// Train + precompute an exact GP, then serve the test inputs (the
+/// dataset's test split, or a CSV with the same feature columns plus a
+/// trailing target column) in batches, reporting per-request latency stats
+/// and writing predictions + stats as JSON.
+fn cmd_predict(args: &Args) -> Result<()> {
+    use exactgp::util::json::{arr, num, obj, s};
+
+    let mut cfg = build_config(args)?;
+    if let Some(c) = args.get_usize("chunk")? {
+        cfg.predict_chunk = c;
+    }
+    let name = args.get_or("dataset", "bike");
+    let batch = args.get_usize("batch")?.unwrap_or(1000).max(1);
+    let ds = coordinator::load_dataset(&cfg, name, 0)?;
+
+    let (test_x, test_y): (Vec<f64>, Vec<f64>) = match args.get("test-csv") {
+        Some(path) => {
+            let raw = exactgp::data::csv::load_csv(std::path::Path::new(path), name)?;
+            if raw.d != ds.d_original {
+                bail!(
+                    "test CSV has {} feature columns but {name} expects {} raw-unit \
+                     features (the last CSV column is the target)",
+                    raw.d,
+                    ds.d_original
+                );
+            }
+            // Replay the dataset's stored feature pipeline (JL projection +
+            // train-statistics whitening) so raw-unit queries land in the
+            // model's feature space; targets are whitened the same way, so
+            // the reported RMSE/NLL stay in the crate's whitened units.
+            eprintln!(
+                "applying the stored feature pipeline to {} CSV rows",
+                raw.n()
+            );
+            (ds.transform_x(&raw.x)?, ds.transform_y(&raw.y))
+        }
+        None => (ds.test_x.clone(), ds.test_y.clone()),
+    };
+    let m = test_x.len() / ds.d;
+    if m == 0 {
+        bail!("no test points to predict");
+    }
+
+    eprintln!("training exact GP on {name} (n_train={}, d={}) ...", ds.n_train(), ds.d);
+    let (pool, spec) = coordinator::make_pool(&cfg, ds.d)?;
+    let mut rng = exactgp::util::rng::Rng::new(cfg.seed, 0);
+    let mut gp = exactgp::gp::exact::ExactGp::new(&cfg, cfg.kernel, &ds, pool, spec);
+    gp.train(exactgp::gp::exact::Recipe::paper_default(&cfg), &mut rng)?;
+    gp.precompute(&mut rng)?;
+    eprintln!(
+        "ready: train={:.1}s precompute={:.2}s — serving {m} points in batches of {batch}",
+        gp.train_seconds, gp.precompute_seconds
+    );
+
+    let before = gp.accounting().snapshot();
+    let mut mean = Vec::with_capacity(m);
+    let mut var = Vec::with_capacity(m);
+    let mut noise = 0.0;
+    let mut latencies = Vec::new();
+    let mut start = 0;
+    while start < m {
+        let rows = batch.min(m - start);
+        let t0 = std::time::Instant::now();
+        let preds = gp.predict(&test_x[start * ds.d..(start + rows) * ds.d])?;
+        latencies.push(t0.elapsed().as_secs_f64());
+        mean.extend_from_slice(&preds.mean);
+        var.extend_from_slice(&preds.var);
+        noise = preds.noise;
+        start += rows;
+    }
+    let delta = gp.accounting().snapshot().delta(&before);
+
+    let total: f64 = latencies.iter().sum();
+    let mut sorted = latencies.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Nearest-rank percentile (never reports below the worst sample at
+    // high q). One request = one batch of up to `batch` points; the stats
+    // are per-request, not per-point.
+    let pct = |q: f64| {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    };
+    let preds = exactgp::gp::Predictions { mean, var, noise };
+    let rmse = preds.rmse(&test_y);
+    let nll = preds.nll(&test_y);
+    // The JSON predictions array is capped so a paper-scale run (hundreds
+    // of thousands of test points) cannot balloon the report after the
+    // memory-budgeted compute finished; stats always cover all m points.
+    let saved = args.get_usize("save-predictions")?.unwrap_or(10_000).min(m);
+    if saved < m {
+        eprintln!("writing the first {saved} of {m} predictions (--save-predictions to change)");
+    }
+
+    coordinator::print_table(
+        &format!(
+            "prediction serving: {m} points in {} requests of <= {batch}",
+            latencies.len()
+        ),
+        &["metric", "value"],
+        &[
+            vec!["throughput".into(), format!("{:.0} points/s", m as f64 / total)],
+            vec!["request p50".into(), format!("{:.1} ms", pct(0.50) * 1e3)],
+            vec!["request p90".into(), format!("{:.1} ms", pct(0.90) * 1e3)],
+            vec!["request p99".into(), format!("{:.1} ms", pct(0.99) * 1e3)],
+            vec!["rmse".into(), format!("{rmse:.4}")],
+            vec!["nll".into(), format!("{nll:.4}")],
+            vec!["chunks dispatched".into(), delta.predict_chunks.to_string()],
+        ],
+    );
+
+    let doc = obj(vec![
+        ("experiment", s("predict")),
+        ("dataset", s(name)),
+        ("n_train", num(ds.n_train() as f64)),
+        ("d", num(ds.d as f64)),
+        ("points", num(m as f64)),
+        ("batch", num(batch as f64)),
+        ("predict_chunk", num(cfg.predict_chunk as f64)), // 0 = auto (MB-planned)
+        ("predict_chunk_mb", num(cfg.predict_chunk_mb as f64)),
+        ("workers", num(cfg.workers as f64)),
+        ("train_seconds", num(gp.train_seconds)),
+        ("precompute_seconds", num(gp.precompute_seconds)),
+        ("request_latency_mean_s", num(total / latencies.len() as f64)),
+        ("request_latency_p50_s", num(pct(0.50))),
+        ("request_latency_p90_s", num(pct(0.90))),
+        ("request_latency_p99_s", num(pct(0.99))),
+        ("throughput_points_per_s", num(m as f64 / total)),
+        ("rmse", num(rmse)),
+        ("nll", num(nll)),
+        ("predict_points", num(delta.predict_points as f64)),
+        ("predict_chunks", num(delta.predict_chunks as f64)),
+        ("cache_fills", num(delta.cache_fills as f64)),
+        ("cache_hits", num(delta.cache_hits as f64)),
+        ("predictions_saved", num(saved as f64)),
+        (
+            "predictions",
+            arr(preds
+                .mean
+                .iter()
+                .zip(&preds.var)
+                .take(saved)
+                .map(|(mu, v)| obj(vec![("mean", num(*mu)), ("var", num(*v))]))),
+        ),
+    ]);
+    std::fs::create_dir_all(&cfg.results_dir)?;
+    let out_default = format!("{}/predict_{name}.json", cfg.results_dir);
+    let out = args.get_or("out", &out_default);
+    std::fs::write(out, doc.to_string_pretty())?;
+    eprintln!("wrote {out}");
     Ok(())
 }
 

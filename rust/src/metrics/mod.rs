@@ -5,6 +5,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+/// log(2 pi), the Gaussian log-density constant.
 pub const LOG_2PI: f64 = 1.8378770664093453;
 
 /// Root-mean-square error (whitened units; random guess = 1.0).
@@ -36,15 +37,18 @@ pub fn mean_nll(mean: &[f64], var: &[f64], truth: &[f64]) -> f64 {
 pub struct Stopwatch {
     start: Instant,
     last: Instant,
+    /// Recorded (name, seconds) laps, in order.
     pub laps: Vec<(String, f64)>,
 }
 
 impl Stopwatch {
+    /// Start a stopwatch at the current instant.
     pub fn start() -> Self {
         let now = Instant::now();
         Stopwatch { start: now, last: now, laps: vec![] }
     }
 
+    /// Record a named lap; returns the seconds since the previous lap.
     pub fn lap(&mut self, name: &str) -> f64 {
         let now = Instant::now();
         let dt = now.duration_since(self.last).as_secs_f64();
@@ -53,6 +57,7 @@ impl Stopwatch {
         dt
     }
 
+    /// Seconds elapsed since `start` (laps included).
     pub fn total(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
@@ -79,34 +84,55 @@ pub struct Accounting {
     /// Kernel-block cache: tile MVMs served from a cached block (kernel
     /// evaluation skipped entirely).
     pub cache_hits: AtomicU64,
+    /// Prediction: test points served through the batch engine.
+    pub predict_points: AtomicU64,
+    /// Prediction: memory-budgeted test chunks dispatched to the pool.
+    pub predict_chunks: AtomicU64,
 }
 
 impl Accounting {
+    /// Record `b` bytes copied host -> device.
     pub fn add_to_device(&self, b: u64) {
         self.bytes_to_device.fetch_add(b, Ordering::Relaxed);
     }
 
+    /// Record `b` bytes copied device -> host.
     pub fn add_from_device(&self, b: u64) {
         self.bytes_from_device.fetch_add(b, Ordering::Relaxed);
     }
 
+    /// Record one tile execution and its transient footprint.
     pub fn note_tile(&self, bytes: u64) {
         self.tile_execs.fetch_add(1, Ordering::Relaxed);
         self.peak_tile_bytes.fetch_max(bytes, Ordering::Relaxed);
     }
 
+    /// Record one full kernel MVM.
     pub fn note_mvm(&self) {
         self.mvms.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one correlation block materialized into a worker cache.
     pub fn note_cache_fill(&self) {
         self.cache_fills.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one tile MVM served from a cached block.
     pub fn note_cache_hit(&self) {
         self.cache_hits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `points` test points served by a batch-prediction call.
+    pub fn note_predict(&self, points: u64) {
+        self.predict_points.fetch_add(points, Ordering::Relaxed);
+    }
+
+    /// Record one prediction chunk dispatched to the pool.
+    pub fn note_predict_chunk(&self) {
+        self.predict_chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy of all counters.
     pub fn snapshot(&self) -> AccountingSnapshot {
         AccountingSnapshot {
             bytes_to_device: self.bytes_to_device.load(Ordering::Relaxed),
@@ -116,9 +142,12 @@ impl Accounting {
             mvms: self.mvms.load(Ordering::Relaxed),
             cache_fills: self.cache_fills.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            predict_points: self.predict_points.load(Ordering::Relaxed),
+            predict_chunks: self.predict_chunks.load(Ordering::Relaxed),
         }
     }
 
+    /// Zero every counter.
     pub fn reset(&self) {
         self.bytes_to_device.store(0, Ordering::Relaxed);
         self.bytes_from_device.store(0, Ordering::Relaxed);
@@ -127,21 +156,36 @@ impl Accounting {
         self.mvms.store(0, Ordering::Relaxed);
         self.cache_fills.store(0, Ordering::Relaxed);
         self.cache_hits.store(0, Ordering::Relaxed);
+        self.predict_points.store(0, Ordering::Relaxed);
+        self.predict_chunks.store(0, Ordering::Relaxed);
     }
 }
 
+/// Plain-value copy of `Accounting` at one instant (see `snapshot`).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AccountingSnapshot {
+    /// Bytes copied host -> device.
     pub bytes_to_device: u64,
+    /// Bytes copied device -> host.
     pub bytes_from_device: u64,
+    /// Peak transient tile bytes alive at once, per worker.
     pub peak_tile_bytes: u64,
+    /// Tile executions.
     pub tile_execs: u64,
+    /// Full kernel MVMs.
     pub mvms: u64,
+    /// Correlation blocks materialized into worker caches.
     pub cache_fills: u64,
+    /// Tile MVMs served from cached blocks.
     pub cache_hits: u64,
+    /// Test points served through the batch prediction engine.
+    pub predict_points: u64,
+    /// Prediction chunks dispatched to the pool.
+    pub predict_chunks: u64,
 }
 
 impl AccountingSnapshot {
+    /// Counter differences since `earlier` (peak stays absolute).
     pub fn delta(&self, earlier: &AccountingSnapshot) -> AccountingSnapshot {
         AccountingSnapshot {
             bytes_to_device: self.bytes_to_device - earlier.bytes_to_device,
@@ -151,6 +195,8 @@ impl AccountingSnapshot {
             mvms: self.mvms - earlier.mvms,
             cache_fills: self.cache_fills - earlier.cache_fills,
             cache_hits: self.cache_hits - earlier.cache_hits,
+            predict_points: self.predict_points - earlier.predict_points,
+            predict_chunks: self.predict_chunks - earlier.predict_chunks,
         }
     }
 }

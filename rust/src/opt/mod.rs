@@ -7,6 +7,11 @@
 //! * SGPR: 100 iterations Adam (lr 0.1);
 //! * SVGP: 100 epochs Adam (lr 0.01), minibatch 1024.
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 pub mod adam;
 pub mod lbfgs;
 

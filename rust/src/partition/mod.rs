@@ -8,18 +8,22 @@
 //! partition according to the amount of memory available rather than
 //! number of partitions p").
 
-/// One row-partition: global row range [start, end).
+/// One row-partition: global row range `[start, end)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Partition {
+    /// First row of the partition (inclusive).
     pub start: usize,
+    /// One past the last row of the partition (exclusive).
     pub end: usize,
 }
 
 impl Partition {
+    /// Number of rows in the partition.
     pub fn len(&self) -> usize {
         self.end - self.start
     }
 
+    /// True when the partition covers no rows.
     pub fn is_empty(&self) -> bool {
         self.start >= self.end
     }
@@ -28,9 +32,13 @@ impl Partition {
 /// A full plan for one n x n (or n_rows x n_cols rectangular) operator.
 #[derive(Clone, Debug)]
 pub struct Plan {
+    /// Total rows of the operator being partitioned.
     pub n_rows: usize,
+    /// Total columns of the operator (the streamed dimension).
     pub n_cols: usize,
+    /// Target rows per partition (the last partition may be shorter).
     pub rows_per_partition: usize,
+    /// The row partitions, in row order, covering `[0, n_rows)` exactly.
     pub partitions: Vec<Partition>,
 }
 
@@ -69,6 +77,7 @@ impl Plan {
         Plan::with_rows(n_rows, n_cols, aligned.max(1).min(n_rows.max(1)))
     }
 
+    /// Number of partitions (the paper's `p`).
     pub fn p(&self) -> usize {
         self.partitions.len()
     }
@@ -76,6 +85,32 @@ impl Plan {
     /// Peak transient memory (bytes) for the strip of one partition.
     pub fn transient_bytes(&self, t_rhs: usize) -> usize {
         self.rows_per_partition.min(self.n_rows) * 4 * (self.n_cols + 2 * t_rhs)
+    }
+}
+
+/// Test-chunk planning for batched prediction: how many test rows one
+/// `K(X*, X) @ V` pass may carry so that its transient state — the
+/// (rows x n_cols) cross-kernel strip plus I/O vectors, the same
+/// accounting as `Plan::with_memory_budget` — fits in `budget_bytes`.
+///
+/// The result is aligned down to `align` (the tile row height, so padded
+/// chunks waste no tile rows) and clamped to at least one tile. Chunks
+/// planned this way keep prediction memory O(n) in the training size no
+/// matter how large the incoming test batch is: the serving analogue of
+/// the training path's partition planning.
+pub fn predict_chunk_rows(
+    n_cols: usize,
+    budget_bytes: usize,
+    t_rhs: usize,
+    align: usize,
+) -> usize {
+    let bytes_per_row = 4 * (n_cols + 2 * t_rhs);
+    let raw = (budget_bytes / bytes_per_row.max(1)).max(1);
+    let align = align.max(1);
+    if raw >= align {
+        (raw / align) * align
+    } else {
+        align
     }
 }
 
@@ -171,6 +206,21 @@ mod tests {
         let plan = Plan::with_memory_budget(1000, 1000, 1, 16, 512);
         assert_eq!(plan.rows_per_partition, 1);
         assert_eq!(plan.p(), 1000);
+    }
+
+    #[test]
+    fn predict_chunks_respect_budget_and_alignment() {
+        // 10k train columns, 64 MiB budget, t=16 RHS, 512-row tiles.
+        let rows = predict_chunk_rows(10_240, 64 << 20, 16, 512);
+        assert!(rows >= 512);
+        assert_eq!(rows % 512, 0);
+        assert!(rows * 4 * (10_240 + 32) <= 64 << 20);
+        // More budget => larger (or equal) chunks.
+        let big = predict_chunk_rows(10_240, 256 << 20, 16, 512);
+        assert!(big >= rows);
+        // A budget below one tile still returns a full tile: the chunk
+        // floor is the tile height, not a single row.
+        assert_eq!(predict_chunk_rows(1 << 20, 1, 16, 512), 512);
     }
 
     #[test]

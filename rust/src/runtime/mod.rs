@@ -8,6 +8,11 @@
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids.
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 pub mod manifest;
 pub mod pjrt;
 

@@ -20,9 +20,12 @@ use crate::util::rng::Rng;
 
 /// Lanczos factorization K^ ~= Q T Q^T.
 pub struct LanczosFactor {
-    pub q: Mat,          // (n, r)
-    pub diag: Vec<f64>,  // T diagonal (r)
-    pub off: Vec<f64>,   // T off-diagonal (r-1)
+    /// Orthonormal Lanczos basis Q, shape (n, r).
+    pub q: Mat,
+    /// Diagonal of the tridiagonal T (length r).
+    pub diag: Vec<f64>,
+    /// Off-diagonal of T (length r - 1).
+    pub off: Vec<f64>,
 }
 
 /// Run Lanczos with full reorthogonalization for `rank` steps starting
@@ -135,6 +138,7 @@ impl VarianceCache {
         Ok(VarianceCache { w })
     }
 
+    /// Cache rank r (columns of W).
     pub fn rank(&self) -> usize {
         self.w.cols
     }

@@ -30,9 +30,11 @@ use crate::solvers::{BatchMvm, Preconditioner};
 /// Convergence / iteration report for one mBCG call.
 #[derive(Clone, Debug)]
 pub struct MbcgStats {
+    /// Iterations run (the max over columns; each costs one batched MVM).
     pub iterations: usize,
     /// Relative residual per column at exit.
     pub rel_residuals: Vec<f64>,
+    /// Per-column: did the relative residual reach the tolerance.
     pub converged: Vec<bool>,
 }
 
@@ -45,6 +47,7 @@ pub struct MbcgResult {
     /// Invariant (held by construction): off.len() == diag.len() - 1
     /// whenever diag is non-empty.
     pub tridiags: Vec<(Vec<f64>, Vec<f64>)>,
+    /// Convergence / iteration report.
     pub stats: MbcgStats,
 }
 

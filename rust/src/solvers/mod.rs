@@ -25,12 +25,15 @@ use crate::linalg::Mat;
 /// `exec::PartitionedKernelOp` (the production partitioned/distributed
 /// kernel operator).
 pub trait BatchMvm {
+    /// Operator dimension n.
     fn n(&self) -> usize;
+    /// Y = K^ V for an (n, t) block V.
     fn mvm(&self, v: &Mat) -> Mat;
 }
 
 /// Dense in-memory operator (tests and small problems only).
 pub struct DenseOp {
+    /// The dense operator matrix.
     pub a: Mat,
 }
 
@@ -47,13 +50,17 @@ impl BatchMvm for DenseOp {
 /// Preconditioner interface for mBCG. `apply` computes P^{-1} R
 /// column-wise; `logdet` is log|P|; `sample_probe` draws z ~ N(0, P).
 pub trait Preconditioner {
+    /// P^{-1} R, column-wise over the block R.
     fn apply(&self, r: &Mat) -> Mat;
+    /// log|P|.
     fn logdet(&self) -> f64;
+    /// Draw one probe vector z ~ N(0, P).
     fn sample_probe(&self, rng: &mut crate::util::rng::Rng) -> Vec<f64>;
 }
 
 /// Identity "preconditioner" (P = I): plain CG, N(0, I) probes.
 pub struct IdentityPrecond {
+    /// Operator dimension n (probe length).
     pub n: usize,
 }
 

@@ -4,7 +4,7 @@
 //!
 //! Produces L (k, n; row-major, row i is the i-th factor vector) such that
 //! K ~= L^T L ... stored as `rows: Vec<Vec<f64>>` so that
-//! K ~= sum_i rows[i] rows[i]^T. Only k kernel *rows* are ever computed —
+//! `K ~= sum_i rows[i] rows[i]^T`. Only k kernel *rows* are ever computed —
 //! an O(nk) space and O(nk^2 + nk d) time dependence, evaluated natively
 //! in Rust (no device round-trips for k << n).
 
@@ -13,6 +13,7 @@ use crate::kernels::KernelEval;
 /// Access to kernel rows — implemented by the native evaluator; a trait so
 /// tests can count row accesses.
 pub trait KernelRows {
+    /// Number of data points.
     fn n(&self) -> usize;
     /// diag(K) (without noise).
     fn diag(&self) -> Vec<f64>;
@@ -22,8 +23,11 @@ pub trait KernelRows {
 
 /// Native kernel-row provider over a flat (n, d) dataset.
 pub struct NativeKernelRows<'a> {
+    /// Kernel evaluator at the current hyperparameters.
     pub eval: &'a KernelEval,
+    /// Flat row-major (n, d) inputs.
     pub x: &'a [f64],
+    /// Feature dimensionality.
     pub d: usize,
 }
 
@@ -43,9 +47,11 @@ impl KernelRows for NativeKernelRows<'_> {
     }
 }
 
-/// The rank-k factor. `rows[i]` has length n; K ~= sum_i rows[i] rows[i]^T.
+/// The rank-k factor. `rows[i]` has length n; `K ~= sum_i rows[i] rows[i]^T`.
 pub struct PivotedCholesky {
+    /// Number of data points (columns of each factor row).
     pub n: usize,
+    /// The k factor vectors, each of length n.
     pub rows: Vec<Vec<f64>>,
     /// Residual trace after the last accepted pivot (error indicator:
     /// tr(K - L_k L_k^T)).
@@ -115,16 +121,17 @@ pub fn pivoted_cholesky<R: KernelRows>(kr: &R, k: usize, rel_tol: f64) -> Pivote
 }
 
 impl PivotedCholesky {
+    /// Achieved rank (may stop short of the requested k).
     pub fn rank(&self) -> usize {
         self.rows.len()
     }
 
-    /// y = L_k^T v  (k-vector from n-vector): y_i = rows[i] . v
+    /// y = L_k^T v  (k-vector from n-vector): `y_i = rows[i] . v`
     pub fn lt_matvec(&self, v: &[f64]) -> Vec<f64> {
         self.rows.iter().map(|r| crate::linalg::dot(r, v)).collect()
     }
 
-    /// y = L_k w  (n-vector from k-vector): sum_i w_i rows[i]
+    /// y = L_k w  (n-vector from k-vector): `sum_i w_i rows[i]`
     pub fn l_matvec(&self, w: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; self.n];
         for (i, r) in self.rows.iter().enumerate() {

@@ -13,8 +13,12 @@ use crate::solvers::pivchol::PivotedCholesky;
 use crate::solvers::Preconditioner;
 use crate::util::rng::Rng;
 
+/// The preconditioner P = L_k L_k^T + sigma^2 I with a Woodbury-factored
+/// inverse (see the module docs).
 pub struct PivCholPrecond {
+    /// Operator dimension n.
     pub n: usize,
+    /// Noise variance sigma^2 on the diagonal.
     pub noise: f64,
     pc: PivotedCholesky,
     /// Cholesky of M = sigma^2 I_k + L^T L  (k x k).
@@ -23,6 +27,8 @@ pub struct PivCholPrecond {
 }
 
 impl PivCholPrecond {
+    /// Build from a pivoted-Cholesky factor and a positive noise variance;
+    /// factors the k x k Woodbury core once.
     pub fn new(pc: PivotedCholesky, noise: f64) -> anyhow::Result<Self> {
         assert!(noise > 0.0, "noise must be positive");
         let k = pc.rank();
@@ -44,6 +50,7 @@ impl PivCholPrecond {
         Ok(PivCholPrecond { n, noise, pc, core, logdet_cache })
     }
 
+    /// Rank k of the low-rank factor.
     pub fn rank(&self) -> usize {
         self.pc.rank()
     }

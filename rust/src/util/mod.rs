@@ -1,5 +1,10 @@
 //! Shared utilities: RNG, JSON, property-testing helper.
 
+// Rustdoc debt: public items here are not yet individually documented;
+// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
+// the docs) when this module is next touched.
+#![allow(missing_docs)]
+
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

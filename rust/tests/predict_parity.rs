@@ -1,0 +1,161 @@
+//! Prediction parity suite: batched, chunked, partitioned predictions
+//! (means AND variances) must match the dense Cholesky reference on small
+//! n, stay bitwise-deterministic across chunk sizes and worker counts,
+//! and survive the chunk-boundary edge cases (m = 1, m = chunk +/- 1).
+
+use std::sync::Arc;
+
+use exactgp::config::{Backend, Config};
+use exactgp::data::{Dataset, RawData};
+use exactgp::exec::{backend_factory, pool::DevicePool, TileSpec};
+use exactgp::gp::cholesky::CholeskyGp;
+use exactgp::gp::exact::ExactGp;
+use exactgp::kernels::KernelKind;
+use exactgp::util::rng::Rng;
+
+fn toy_dataset(n_total: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed, 0);
+    let mut raw = RawData {
+        name: "toy".into(),
+        d,
+        x: (0..n_total * d).map(|_| rng.normal()).collect(),
+        y: vec![0.0; n_total],
+    };
+    for i in 0..n_total {
+        let xi = raw.x[i * d];
+        let xj = raw.x[i * d + d - 1];
+        raw.y[i] = (1.5 * xi).sin() + 0.3 * xj + 0.05 * rng.normal();
+    }
+    raw.prepare(32, &mut rng)
+}
+
+/// An exact GP with full-rank LOVE cache and tight solves: its predictive
+/// moments must agree with the dense Cholesky GP to solver tolerance.
+fn exact_gp(ds: &Dataset, workers: usize) -> ExactGp {
+    let spec = TileSpec { r: 16, c: 32, t: 16, d: 32 };
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.predict_tol = 1e-9;
+    cfg.variance_rank = ds.n_train(); // full rank => exact variances
+    cfg.precond_rank = 20;
+    cfg.workers = workers;
+    let factory = backend_factory(&cfg, KernelKind::Matern32, false, spec.d, spec).unwrap();
+    let pool = Arc::new(DevicePool::new(workers, factory).unwrap());
+    let mut gp = ExactGp::new(&cfg, KernelKind::Matern32, ds, pool, spec);
+    let mut rng = Rng::new(301, 0);
+    gp.precompute(&mut rng).unwrap();
+    gp
+}
+
+fn oracle(gp: &ExactGp, ds: &Dataset) -> exactgp::gp::Predictions {
+    let mut chol = CholeskyGp::new(
+        KernelKind::Matern32,
+        gp.hypers.clone(),
+        ds.train_x.clone(),
+        ds.train_y.clone(),
+        ds.d,
+    );
+    chol.predict(&ds.test_x).unwrap()
+}
+
+#[test]
+fn chunked_batched_predictions_match_cholesky() {
+    let ds = toy_dataset(200, 2, 401);
+    let gp = exact_gp(&ds, 2);
+    let want = oracle(&gp, &ds);
+    let m = ds.n_test();
+    // Chunk sizes straddling every boundary: single point, sub-tile,
+    // tile-aligned, m - 1, m, m + 1, and 0 (= one chunk for the batch).
+    for chunk in [0usize, 1, 7, 16, 64, m - 1, m, m + 1] {
+        let got = gp.predict_with_chunk(&ds.test_x, chunk).unwrap();
+        assert_eq!(got.mean.len(), m);
+        for i in 0..m {
+            assert!(
+                (got.mean[i] - want.mean[i]).abs() < 1e-4,
+                "chunk={chunk} mean[{i}]: {} vs {}",
+                got.mean[i],
+                want.mean[i]
+            );
+            assert!(
+                (got.var[i] - want.var[i]).abs() < 1e-3,
+                "chunk={chunk} var[{i}]: {} vs {}",
+                got.var[i],
+                want.var[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn config_chunking_matches_explicit_chunking() {
+    let ds = toy_dataset(180, 2, 402);
+    let gp = exact_gp(&ds, 2);
+    // The config-planned path (predict) and an explicit whole-batch chunk
+    // must be bitwise-identical: chunking never changes a row's result.
+    let auto = gp.predict(&ds.test_x).unwrap();
+    let one = gp.predict_with_chunk(&ds.test_x, 0).unwrap();
+    assert_eq!(auto.mean, one.mean);
+    assert_eq!(auto.var, one.var);
+}
+
+#[test]
+fn bitwise_deterministic_across_workers_and_chunks() {
+    let ds = toy_dataset(160, 2, 403);
+    let mut reference: Option<exactgp::gp::Predictions> = None;
+    for workers in [1usize, 2, 3] {
+        let gp = exact_gp(&ds, workers);
+        for chunk in [0usize, 5, 32, ds.n_test()] {
+            let got = gp.predict_with_chunk(&ds.test_x, chunk).unwrap();
+            match &reference {
+                None => reference = Some(got),
+                Some(r) => {
+                    assert_eq!(
+                        r.mean, got.mean,
+                        "means differ at workers={workers} chunk={chunk}"
+                    );
+                    assert_eq!(
+                        r.var, got.var,
+                        "variances differ at workers={workers} chunk={chunk}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_point_and_boundary_batches() {
+    let ds = toy_dataset(150, 2, 404);
+    let gp = exact_gp(&ds, 2);
+    let want = oracle(&gp, &ds);
+    let d = ds.d;
+    // m = 1: one query through the full chunked path.
+    let one = gp.predict_with_chunk(&ds.test_x[..d], 4).unwrap();
+    assert_eq!(one.mean.len(), 1);
+    assert!((one.mean[0] - want.mean[0]).abs() < 1e-4);
+    assert!((one.var[0] - want.var[0]).abs() < 1e-3);
+    // m = chunk - 1 and m = chunk + 1 around a chunk of 8.
+    for m in [7usize, 8, 9] {
+        let got = gp.predict_with_chunk(&ds.test_x[..m * d], 8).unwrap();
+        assert_eq!(got.mean.len(), m);
+        for i in 0..m {
+            assert!((got.mean[i] - want.mean[i]).abs() < 1e-4, "m={m} i={i}");
+            assert!((got.var[i] - want.var[i]).abs() < 1e-3, "m={m} i={i}");
+        }
+    }
+    // Empty batch: legal, returns empty predictions.
+    let empty = gp.predict_with_chunk(&[], 8).unwrap();
+    assert!(empty.mean.is_empty() && empty.var.is_empty());
+}
+
+#[test]
+fn prediction_counters_track_served_points() {
+    let ds = toy_dataset(150, 2, 405);
+    let gp = exact_gp(&ds, 2);
+    let before = gp.accounting().snapshot();
+    let m = ds.n_test();
+    let _ = gp.predict_with_chunk(&ds.test_x, 16).unwrap();
+    let delta = gp.accounting().snapshot().delta(&before);
+    assert_eq!(delta.predict_points, m as u64);
+    assert_eq!(delta.predict_chunks, m.div_ceil(16) as u64);
+}
