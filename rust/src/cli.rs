@@ -2,25 +2,27 @@
 //! closure). Supports subcommands, `--flag value`, `--flag=value`, boolean
 //! flags, repeated `--set key=value` config overrides, and positional args.
 
-// Rustdoc debt: public items here are not yet individually documented;
-// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
-// the docs) when this module is next touched.
-#![allow(missing_docs)]
-
 use anyhow::{bail, Result};
 
+/// Parsed command line: one optional subcommand, positional arguments,
+/// and `--flag` / `--flag value` / `--flag=value` pairs (last repeat of a
+/// flag wins, except `--set`, which accumulates).
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First bare token (`train`, `predict`, `serve`, ...).
     pub subcommand: Option<String>,
+    /// Bare tokens after the subcommand.
     pub positional: Vec<String>,
     flags: Vec<(String, Option<String>)>,
 }
 
 impl Args {
+    /// Parse the process arguments (skipping the binary name).
     pub fn parse_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Parse an explicit token stream (tests, embedding).
     pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
         let mut args = Args::default();
         let mut iter = items.into_iter().peekable();
@@ -47,10 +49,12 @@ impl Args {
         Ok(args)
     }
 
+    /// True if `--name` appeared at all (boolean flags).
     pub fn flag_present(&self, name: &str) -> bool {
         self.flags.iter().any(|(k, _)| k == name)
     }
 
+    /// Last value given for `--name`, if any.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags
             .iter()
@@ -59,10 +63,12 @@ impl Args {
             .and_then(|(_, v)| v.as_deref())
     }
 
+    /// `get` with a default for absent flags.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer-valued flag; `Ok(None)` when absent, error when malformed.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
         match self.get(name) {
             None => Ok(None),
@@ -73,6 +79,7 @@ impl Args {
         }
     }
 
+    /// Float-valued flag; `Ok(None)` when absent, error when malformed.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         match self.get(name) {
             None => Ok(None),

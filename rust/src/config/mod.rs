@@ -137,6 +137,12 @@ pub struct Config {
     /// Transient memory budget (MiB) for one prediction chunk's
     /// cross-kernel strip when `predict_chunk` is 0.
     pub predict_chunk_mb: usize,
+    /// Serving: maximum test points the coalescing serve loop packs into
+    /// one batched dispatch before flushing.
+    pub serve_batch: usize,
+    /// Serving: latency deadline in milliseconds — a partially filled
+    /// serve batch flushes once its oldest query has waited this long.
+    pub serve_max_delay_ms: f64,
 
     // experiment control
     /// Dataset scale policy (caps training sizes; `paper` = full size).
@@ -183,6 +189,8 @@ impl Default for Config {
             cache_memory_mb: 256,
             predict_chunk: 0,
             predict_chunk_mb: 64,
+            serve_batch: 256,
+            serve_max_delay_ms: 2.0,
             scale: Scale::DEFAULT,
             trials: 1,
             seed: 0,
@@ -209,6 +217,39 @@ impl Config {
             snap(self.sgpr_m, &[16, 64, 128, 256, 512]),
             snap(self.svgp_m, &[16, 64, 256, 1024]),
         )
+    }
+
+    /// Stable fingerprint of the configuration fields that shape a
+    /// *trained model* — kernel family, solver tolerances, and the
+    /// training recipe — recorded in checkpoints for provenance and
+    /// surfaced (not enforced) at load time. Runtime knobs (backend,
+    /// workers, memory budgets, serving) are deliberately excluded: they
+    /// may differ between the training and the serving process without
+    /// invalidating the model.
+    pub fn model_fingerprint(&self) -> u64 {
+        let canon = format!(
+            "kernel={};ard={};noise_floor={:e};train_tol={:e};predict_tol={:e};\
+             max_cg_iters={};probes={};precond_rank={};variance_rank={};\
+             pretrain_subset={};pretrain_lbfgs={};pretrain_adam={};\
+             finetune_adam={};adam_lr={:e};full_adam={};seed={}",
+            self.kernel.name(),
+            self.ard,
+            self.noise_floor,
+            self.train_tol,
+            self.predict_tol,
+            self.max_cg_iters,
+            self.probes,
+            self.precond_rank,
+            self.variance_rank,
+            self.pretrain_subset,
+            self.pretrain_lbfgs_steps,
+            self.pretrain_adam_steps,
+            self.finetune_adam_steps,
+            self.adam_lr,
+            self.full_adam_steps,
+            self.seed,
+        );
+        crate::util::rng::fnv1a(&canon)
     }
 
     /// Apply a dotted override like `solver.probes = 16`.
@@ -247,6 +288,8 @@ impl Config {
             "exec.cache_memory_mb" => self.cache_memory_mb = v.parse()?,
             "exec.predict_chunk" => self.predict_chunk = v.parse()?,
             "exec.predict_chunk_mb" => self.predict_chunk_mb = v.parse()?,
+            "exec.serve_batch" => self.serve_batch = v.parse()?,
+            "exec.serve_max_delay_ms" => self.serve_max_delay_ms = v.parse()?,
             "run.scale" => {
                 self.scale = Scale::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad scale {v:?}"))?
@@ -305,6 +348,8 @@ mod tests {
         assert_eq!(c.svgp_lr, 0.01);
         assert_eq!(c.predict_chunk, 0); // auto: plan from predict_chunk_mb
         assert_eq!(c.predict_chunk_mb, 64);
+        assert_eq!(c.serve_batch, 256);
+        assert_eq!(c.serve_max_delay_ms, 2.0);
     }
 
     #[test]
@@ -318,15 +363,36 @@ mod tests {
         c.set("exec.cache_memory_mb", "64").unwrap();
         c.set("exec.predict_chunk", "2048").unwrap();
         c.set("exec.predict_chunk_mb", "128").unwrap();
+        c.set("exec.serve_batch", "64").unwrap();
+        c.set("exec.serve_max_delay_ms", "0.5").unwrap();
         assert!(!c.cache_kernel_blocks);
         assert_eq!(c.cache_memory_mb, 64);
         assert_eq!(c.predict_chunk, 2048);
         assert_eq!(c.predict_chunk_mb, 128);
+        assert_eq!(c.serve_batch, 64);
+        assert_eq!(c.serve_max_delay_ms, 0.5);
         assert_eq!(c.probes, 16);
         assert_eq!(c.backend, Backend::Native);
         assert!(c.ard);
         assert_eq!(c.scale.train_cap, 1024);
         assert!(c.set("bogus.key", "1").is_err());
+    }
+
+    #[test]
+    fn model_fingerprint_tracks_model_fields_only() {
+        let a = Config::default();
+        let mut b = Config::default();
+        assert_eq!(a.model_fingerprint(), b.model_fingerprint());
+        // Runtime knobs must not change the fingerprint: a model trained
+        // with 1 worker is the same model served with 8.
+        b.workers = 8;
+        b.backend = Backend::Native;
+        b.serve_batch = 32;
+        b.cache_memory_mb = 1;
+        assert_eq!(a.model_fingerprint(), b.model_fingerprint());
+        // Model-shaping fields must.
+        b.probes = 16;
+        assert_ne!(a.model_fingerprint(), b.model_fingerprint());
     }
 
     #[test]

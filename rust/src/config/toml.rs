@@ -74,6 +74,17 @@ results_dir = "results/x # not a comment"
     }
 
     #[test]
+    fn exec_serve_knobs_flow_through_to_config() {
+        let text = "[exec]\nserve_batch = 128\nserve_max_delay_ms = 1.5\n";
+        let mut cfg = crate::config::Config::default();
+        for (k, v) in parse(text).unwrap() {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.serve_batch, 128);
+        assert_eq!(cfg.serve_max_delay_ms, 1.5);
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse("[unterminated").is_err());
         assert!(parse("novalue =").is_err());

@@ -8,6 +8,8 @@
 // the docs) when this module is next touched.
 #![allow(missing_docs)]
 
+pub mod serve;
+
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -217,6 +219,42 @@ pub fn run_model_with_recipe(
         predict_seconds,
         extra,
     })
+}
+
+/// Restore a checkpointed exact GP for serving: read the manifest, build
+/// a pool sized for the stored dataset's dimensionality, reconstruct the
+/// model with **zero solver work** (no mBCG, no Lanczos — the accounting
+/// counters stay at zero until retraining). `cfg` contributes only the
+/// runtime knobs (backend, workers, memory budgets, serve settings); the
+/// kernel, hypers, and prediction cache come from the checkpoint. A
+/// config fingerprint mismatch is surfaced as a note, not an error —
+/// serving legitimately runs under a different runtime configuration
+/// than training did.
+pub fn load_model(
+    cfg: &Config,
+    dir: &std::path::Path,
+) -> Result<(ExactGp, Dataset)> {
+    let ckpt = crate::runtime::checkpoint::load(dir)?;
+    // Compare provenance against the *user's* configuration, before the
+    // stored kernel/ard overwrite below — otherwise an explicit
+    // `--set model.kernel=...` mismatch could never surface here.
+    if ckpt.config_fingerprint != cfg.model_fingerprint() {
+        eprintln!(
+            "note: checkpoint was trained under a different model \
+             configuration (fingerprint {:016x}, current {:016x}); serving \
+             the stored model as-is",
+            ckpt.config_fingerprint,
+            cfg.model_fingerprint()
+        );
+    }
+    // make_pool picks the tile geometry from kernel/ard/d, so it must see
+    // the checkpoint's values (from_checkpoint re-applies the same two
+    // overrides on its own clone for the same reason).
+    let mut cfg = cfg.clone();
+    cfg.kernel = ckpt.kernel;
+    cfg.ard = ckpt.hypers.is_ard();
+    let (pool, spec) = make_pool(&cfg, ckpt.dataset.d)?;
+    ExactGp::from_checkpoint(&cfg, ckpt, pool, spec)
 }
 
 /// Load a dataset by name at the config's scale.

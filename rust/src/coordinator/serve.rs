@@ -1,0 +1,231 @@
+//! The coalescing serve loop: many concurrent small queries, one batched
+//! dispatch.
+//!
+//! PR 4's batch prediction engine proved that serving a whole batch
+//! through one memory-budgeted `CrossKernelOp` pass beats per-point
+//! `predict` calls by a wide margin — a lone query still pays a full
+//! padded tile row and a pool dispatch. Production traffic, though,
+//! arrives as many concurrent *single-point* lookups, not pre-built
+//! batches. This module bridges the two: clients submit queries through a
+//! cloneable [`ServeHandle`]; the loop accumulates them and flushes one
+//! batched `predict` per dispatch when either
+//!
+//! * the batch is full (`exec.serve_batch` points), or
+//! * the oldest pending query has waited `exec.serve_max_delay_ms`
+//!   (the latency deadline — a trickle of traffic is never parked
+//!   indefinitely waiting for a batch that won't fill).
+//!
+//! Coalescing never changes answers: each output row of the batched pass
+//! depends only on its own test point (see `exec::cross`), so N
+//! concurrent 1-point queries return bitwise-identical results to one
+//! N-point `predict` call — enforced by `rust/tests/serve_coalesce.rs`.
+//!
+//! Threading model: [`run`] executes on the caller's thread and owns the
+//! model reference; clients run anywhere and only hold the channel-backed
+//! handle. The loop exits when every handle clone has been dropped and
+//! the queue is drained. Dispatch counts land in the model's
+//! `Accounting` (`serve_requests` / `serve_batches` /
+//! `serve_flush_full` / `serve_flush_deadline`).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::gp::exact::ExactGp;
+use crate::gp::Predictions;
+
+/// A reply to one query: the predictive moments for its points, or a
+/// serving-side error description.
+pub type ServeReply = Result<Predictions, String>;
+
+/// One in-flight query: `x` is flat row-major (m, d) in the model's
+/// feature space; the reply is delivered on `reply`.
+pub struct ServeRequest {
+    x: Vec<f64>,
+    reply: Sender<ServeReply>,
+}
+
+/// Client-side handle to the serve loop. Clone freely across threads;
+/// the loop shuts down once every clone is dropped and the queue drains.
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: Sender<ServeRequest>,
+    d: usize,
+}
+
+impl ServeHandle {
+    /// Submit a query of one or more points (flat row-major (m, d));
+    /// returns the receiver its reply will arrive on. Errors if the
+    /// query is malformed or the loop has shut down.
+    pub fn submit(&self, x: Vec<f64>) -> Result<mpsc::Receiver<ServeReply>> {
+        anyhow::ensure!(
+            !x.is_empty() && x.len() % self.d == 0,
+            "query holds {} values, not a positive multiple of d={}",
+            x.len(),
+            self.d
+        );
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(ServeRequest { x, reply: tx })
+            .map_err(|_| anyhow::anyhow!("serve loop has shut down"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit one query and wait for its reply.
+    pub fn query(&self, x: Vec<f64>) -> Result<Predictions> {
+        let rx = self.submit(x)?;
+        match rx.recv() {
+            Ok(Ok(p)) => Ok(p),
+            Ok(Err(e)) => bail!("serve dispatch failed: {e}"),
+            Err(_) => bail!("serve loop dropped the request"),
+        }
+    }
+}
+
+/// Dispatch statistics for one `run` (mirrored into `Accounting`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Queries answered.
+    pub requests: u64,
+    /// Test points served.
+    pub points: u64,
+    /// Batched dispatches issued.
+    pub batches: u64,
+    /// Dispatches triggered by a full batch.
+    pub flush_full: u64,
+    /// Dispatches triggered by the latency deadline (or shutdown drain).
+    pub flush_deadline: u64,
+}
+
+/// Create the client handle + loop receiver pair for a model of feature
+/// dimensionality `d` (use `gp.dim()`).
+pub fn channel(d: usize) -> (ServeHandle, Receiver<ServeRequest>) {
+    let (tx, rx) = mpsc::channel();
+    (ServeHandle { tx, d }, rx)
+}
+
+/// Run the coalescing loop on the current thread until every
+/// [`ServeHandle`] clone is dropped and the queue is drained. `gp` must
+/// have its prediction cache ready (`precompute` or a checkpoint load).
+///
+/// `batch_points` and `max_delay` are the two `exec.serve_*` knobs:
+/// flush when the accumulated batch reaches `batch_points`, or when
+/// `max_delay` has passed since the first query of the batch arrived.
+/// Returns the dispatch statistics; errors if a dispatch itself fails
+/// (every pending client gets the error string first).
+pub fn run(
+    gp: &ExactGp,
+    rx: Receiver<ServeRequest>,
+    batch_points: usize,
+    max_delay: Duration,
+) -> Result<ServeStats> {
+    let d = gp.dim();
+    let batch_points = batch_points.max(1);
+    let acct = gp.accounting().clone();
+    let mut stats = ServeStats::default();
+
+    loop {
+        // Block for the first query of the next batch; a closed, drained
+        // queue is the shutdown signal.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let deadline = Instant::now() + max_delay;
+        let mut xs: Vec<f64> = Vec::with_capacity(batch_points * d);
+        let mut pending: Vec<(usize, Sender<ServeReply>)> = Vec::new();
+        let mut disconnected = false;
+        {
+            let m = first.x.len() / d;
+            xs.extend_from_slice(&first.x);
+            pending.push((m, first.reply));
+        }
+        // Coalesce until batch-full or the deadline; a multi-point query
+        // may overshoot `batch_points` — it is never split across
+        // dispatches.
+        while xs.len() / d < batch_points {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(r) => {
+                    let m = r.x.len() / d;
+                    xs.extend_from_slice(&r.x);
+                    pending.push((m, r.reply));
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+
+        let points = xs.len() / d;
+        let full = points >= batch_points;
+        stats.batches += 1;
+        stats.requests += pending.len() as u64;
+        stats.points += points as u64;
+        if full {
+            stats.flush_full += 1;
+        } else {
+            stats.flush_deadline += 1;
+        }
+        acct.note_serve_requests(pending.len() as u64);
+        acct.note_serve_batch(full);
+
+        // One memory-budgeted batched dispatch for the whole coalesced
+        // batch (predict chunks it further under exec.predict_chunk_mb
+        // if the batch is larger than one chunk).
+        match gp.predict(&xs) {
+            Ok(preds) => {
+                let mut off = 0;
+                for (m, reply) in pending {
+                    let slice = Predictions {
+                        mean: preds.mean[off..off + m].to_vec(),
+                        var: preds.var[off..off + m].to_vec(),
+                        noise: preds.noise,
+                    };
+                    // A client that gave up on its reply is not an error.
+                    let _ = reply.send(Ok(slice));
+                    off += m;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (_, reply) in pending {
+                    let _ = reply.send(Err(msg.clone()));
+                }
+                bail!("serve dispatch failed: {msg}");
+            }
+        }
+
+        if disconnected {
+            break;
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_rejects_malformed_queries() {
+        let (handle, _rx) = channel(3);
+        assert!(handle.submit(vec![]).is_err());
+        assert!(handle.submit(vec![1.0, 2.0]).is_err());
+        assert!(handle.submit(vec![1.0, 2.0, 3.0]).is_ok());
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let (handle, rx) = channel(2);
+        drop(rx);
+        let err = handle.submit(vec![0.0, 0.0]).unwrap_err();
+        assert!(format!("{err}").contains("shut down"));
+    }
+}

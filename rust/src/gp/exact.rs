@@ -74,7 +74,9 @@ pub struct StepLog {
 
 /// The exact BBMM GP over a partitioned, distributed kernel operator —
 /// the model of the paper. Lifecycle: `new` -> `train` -> `precompute` ->
-/// `predict` (batched, chunked, cache-backed).
+/// `predict` (batched, chunked, cache-backed), with `save` / `load`
+/// persisting the predict-ready state so a fresh process serves
+/// predictions without re-solving anything.
 pub struct ExactGp {
     /// Kernel family.
     pub kind: KernelKind,
@@ -94,6 +96,15 @@ pub struct ExactGp {
     /// solve's tens of MVMs) and are invalidated — by a `set_hypers`
     /// generation bump — exactly when the hyperparameters move.
     op: Option<PartitionedKernelOp>,
+    /// The pivoted-Cholesky preconditioner, cached alongside the
+    /// persistent operator: rebuilding it is O(n·k² + n·k·d) CPU work,
+    /// and between a training step's solve and `precompute` (or across
+    /// repeated evaluations at fixed hypers) the hyperparameters have not
+    /// moved. Invalidated exactly like the operator's worker caches: by
+    /// comparing the hypers it was built at against the current ones.
+    precond: Option<PivCholPrecond>,
+    /// The hypers `precond` was built at (the invalidation key).
+    precond_hypers: Option<Hypers>,
     /// The prediction cache (paper SS3 "Predictions"): the combined RHS
     /// [a | W] (mean solve a = K^{-1} y, LOVE variance projection W),
     /// built once at precompute time so `predict` never re-copies the
@@ -142,6 +153,8 @@ impl ExactGp {
             y: ds.train_y.clone(),
             d: ds.d,
             op: None,
+            precond: None,
+            precond_hypers: None,
             pred_rhs: None,
             step_log: vec![],
             pretrain_seconds: 0.0,
@@ -166,6 +179,11 @@ impl ExactGp {
     /// Training-set size.
     pub fn n(&self) -> usize {
         self.y.len()
+    }
+
+    /// Feature dimensionality of the model's (pipeline) input space.
+    pub fn dim(&self) -> usize {
+        self.d
     }
 
     /// The communication / cache / prediction accounting for this model.
@@ -209,16 +227,27 @@ impl ExactGp {
         }
     }
 
-    /// Build the rank-k pivoted-Cholesky preconditioner at the current
-    /// hyperparameters (paper: k = 100).
-    fn preconditioner(&self) -> Result<PivCholPrecond> {
+    /// Bring the cached rank-k pivoted-Cholesky preconditioner (paper:
+    /// k = 100) up to the current hyperparameters. A no-op when the
+    /// hypers have not moved since the last build — e.g. `precompute`
+    /// right after the final Adam step, or repeated NLL evaluations at a
+    /// fixed setting — which previously paid the full O(n·k² + n·k·d)
+    /// factorization on every call. Builds are counted in
+    /// `Accounting::precond_builds`.
+    fn ensure_precond(&mut self) -> Result<()> {
+        if self.precond.is_some() && self.precond_hypers.as_ref() == Some(&self.hypers) {
+            return Ok(());
+        }
         let eval = KernelEval::new(self.kind, &self.hypers);
         let rank = self.cfg.precond_rank.min(self.n().saturating_sub(1)).max(1);
         let pc = {
             let kr = NativeKernelRows { eval: &eval, x: &self.x, d: self.d };
             pivoted_cholesky(&kr, rank, 1e-10)
         };
-        PivCholPrecond::new(pc, self.hypers.noise())
+        self.acct.note_precond_build();
+        self.precond = Some(PivCholPrecond::new(pc, self.hypers.noise())?);
+        self.precond_hypers = Some(self.hypers.clone());
+        Ok(())
     }
 
     /// One BBMM evaluation: NLL estimate + gradient w.r.t. log-hypers.
@@ -229,8 +258,9 @@ impl ExactGp {
         let n = self.n();
         let t = self.cfg.probes;
         self.ensure_op();
+        self.ensure_precond()?;
         let op = self.op.as_ref().unwrap();
-        let precond = self.preconditioner()?;
+        let precond = self.precond.as_ref().unwrap();
 
         // RHS block: [y | z_1 .. z_t], z_j ~ N(0, P).
         let mut b = Mat::zeros(n, 1 + t);
@@ -242,7 +272,33 @@ impl ExactGp {
             b.set_col(1 + j, &probe);
         }
 
-        let res = mbcg(op, &precond, &b, self.cfg.train_tol, self.cfg.max_cg_iters, 1);
+        self.acct.note_mbcg_solve();
+        let res = mbcg(op, precond, &b, self.cfg.train_tol, self.cfg.max_cg_iters, 1);
+        // A CG breakdown (lost search direction) means this step's NLL,
+        // gradient, and log-det quadrature are built on a partial solve.
+        // Training tolerates it — the next Adam step re-solves at new
+        // hypers — but silently is how wrong models ship, so warn with
+        // the offending column's relative residual and count it.
+        if let Some((col, iter, rel)) = res.stats.first_breakdown() {
+            self.acct.note_cg_breakdowns(res.stats.breakdown_count() as u64);
+            eprintln!(
+                "warning: mBCG breakdown during training — {} of {} columns, \
+                 first at column {col} (iteration {iter}, relative residual \
+                 {rel:.3e}); this step's gradient is degraded",
+                res.stats.breakdown_count(),
+                1 + t,
+            );
+        } else if let Some(col) = res.stats.converged.iter().position(|&c| !c) {
+            // max_cg_iters ran out before train_tol: not a breakdown, but
+            // the step's solves are looser than configured.
+            eprintln!(
+                "warning: mBCG hit max_cg_iters={} during training — column \
+                 {col} stopped at relative residual {:.3e} (train_tol {:.1e})",
+                self.cfg.max_cg_iters,
+                res.stats.rel_residuals[col],
+                self.cfg.train_tol,
+            );
+        }
         let u0 = res.u.col(0);
         let w = precond.apply(&z); // P^{-1} z_j
 
@@ -367,13 +423,36 @@ impl ExactGp {
     pub fn precompute(&mut self, rng: &mut Rng) -> Result<()> {
         let sw = Stopwatch::start();
         self.ensure_op();
+        self.ensure_precond()?;
         let (a, cache) = {
             let op = self.op.as_ref().unwrap();
-            let precond = self.preconditioner()?;
+            let precond = self.precond.as_ref().unwrap();
             let b = Mat::col_vec(&self.y);
+            self.acct.note_mbcg_solve();
             let res =
-                mbcg(op, &precond, &b, self.cfg.predict_tol, self.cfg.max_cg_iters, 1);
+                mbcg(op, precond, &b, self.cfg.predict_tol, self.cfg.max_cg_iters, 1);
+            // Unlike training, the mean solve a = K^{-1} y is *cached*:
+            // a breakdown here would poison every prediction this model
+            // ever serves. Bail instead of building the cache.
+            if res.stats.breakdown_count() > 0 {
+                self.acct.note_cg_breakdowns(res.stats.breakdown_count() as u64);
+            }
+            res.stats.ensure_healthy("precompute mean solve (a = K^{-1} y)")?;
+            // No breakdown but no convergence either (max_cg_iters
+            // exhausted above predict_tol): the cache is degraded, not
+            // wrong — warn loudly instead of failing a long run outright.
+            if !res.stats.converged[0] {
+                eprintln!(
+                    "warning: precompute mean solve stopped at relative \
+                     residual {:.3e} (predict_tol {:.1e}, max_cg_iters {}); \
+                     the prediction cache is less accurate than configured",
+                    res.stats.rel_residuals[0],
+                    self.cfg.predict_tol,
+                    self.cfg.max_cg_iters,
+                );
+            }
             let rank = self.cfg.variance_rank.min(self.n());
+            self.acct.note_lanczos_pass();
             let f = lanczos(op, rank, rng)?;
             (res.u.col(0), VarianceCache::from_lanczos(&f)?)
         };
@@ -461,6 +540,93 @@ impl ExactGp {
             var.push((os - explained).max(0.0));
         }
         Ok(super::Predictions { mean, var, noise: self.hypers.noise() })
+    }
+
+    /// Persist the trained, predict-ready model as a versioned on-disk
+    /// checkpoint (see `runtime::checkpoint` for the format). `ds` must
+    /// be the dataset the model was trained on — its feature pipeline
+    /// (JL projection + whitening statistics + target transform) is
+    /// persisted alongside the model so raw-unit queries keep working
+    /// after a restart. Requires `precompute()` to have run: the whole
+    /// point of a checkpoint is skipping that work on load.
+    pub fn save(&self, dir: &std::path::Path, ds: &Dataset) -> Result<()> {
+        let pred_rhs = self.pred_rhs.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "save: call precompute() first — a checkpoint captures the \
+                 predict-ready prediction cache"
+            )
+        })?;
+        anyhow::ensure!(
+            ds.n_train() == self.n() && ds.d == self.d && ds.train_y == self.y,
+            "save: dataset {:?} (n_train={}, d={}) is not the one this model \
+             was trained on (n_train={}, d={})",
+            ds.name,
+            ds.n_train(),
+            ds.d,
+            self.n(),
+            self.d
+        );
+        crate::runtime::checkpoint::save(
+            dir,
+            &crate::runtime::checkpoint::CheckpointView {
+                kernel: self.kind,
+                hypers: &self.hypers,
+                config_fingerprint: self.cfg.model_fingerprint(),
+                dataset: ds,
+                pred_rhs,
+                step_log: &self.step_log,
+                pretrain_seconds: self.pretrain_seconds,
+                train_seconds: self.train_seconds,
+                precompute_seconds: self.precompute_seconds,
+            },
+        )
+    }
+
+    /// Restore a predict-ready model from a checkpoint directory: no
+    /// training, no mBCG solve, no Lanczos pass — the model's
+    /// `accounting()` shows zero solver work until (unless) it is
+    /// retrained, and `predict` results are bitwise-identical to the
+    /// model that was saved. `cfg` supplies only the *runtime* knobs
+    /// (backend, workers, memory budgets, serve settings); the
+    /// model-defining state — kernel, hypers, prediction cache — comes
+    /// from the checkpoint. Returns the model plus the restored dataset
+    /// (feature pipeline and test split included).
+    pub fn load(
+        dir: &std::path::Path,
+        cfg: &Config,
+        pool: Arc<DevicePool>,
+        spec: TileSpec,
+    ) -> Result<(ExactGp, Dataset)> {
+        let ckpt = crate::runtime::checkpoint::load(dir)?;
+        Self::from_checkpoint(cfg, ckpt, pool, spec)
+    }
+
+    /// `load` from an already-parsed checkpoint (lets callers inspect the
+    /// manifest — e.g. compare `config_fingerprint` — before committing
+    /// to a pool geometry).
+    pub fn from_checkpoint(
+        cfg: &Config,
+        ckpt: crate::runtime::Checkpoint,
+        pool: Arc<DevicePool>,
+        spec: TileSpec,
+    ) -> Result<(ExactGp, Dataset)> {
+        anyhow::ensure!(
+            ckpt.dataset.d <= spec.d,
+            "checkpoint dataset has d={} but the pool's tile width is {}",
+            ckpt.dataset.d,
+            spec.d
+        );
+        let mut cfg = cfg.clone();
+        cfg.kernel = ckpt.kernel;
+        cfg.ard = ckpt.hypers.is_ard();
+        let mut gp = ExactGp::new(&cfg, ckpt.kernel, &ckpt.dataset, pool, spec);
+        gp.hypers = ckpt.hypers;
+        gp.pred_rhs = Some(ckpt.pred_rhs);
+        gp.step_log = ckpt.step_log;
+        gp.pretrain_seconds = ckpt.pretrain_seconds;
+        gp.train_seconds = ckpt.train_seconds;
+        gp.precompute_seconds = ckpt.precompute_seconds;
+        Ok((gp, ckpt.dataset))
     }
 }
 
@@ -555,6 +721,34 @@ mod tests {
         let delta = gp.accounting().snapshot().delta(&before);
         assert!(gp.op.as_ref().unwrap().generation > gen0);
         assert!(delta.cache_fills > 0, "stale blocks were not refilled");
+    }
+
+    #[test]
+    fn preconditioner_cached_at_fixed_hypers_rebuilt_on_move() {
+        let ds = toy_dataset(180, 2, 95);
+        let mut cfg = Config::default();
+        cfg.probes = 2;
+        cfg.precond_rank = 8;
+        cfg.variance_rank = 8;
+        let mut gp = native_gp(&cfg, &ds, 2);
+        let mut rng = Rng::new(96, 0);
+        let _ = gp.nll_and_grad(&mut rng).unwrap();
+        assert_eq!(gp.accounting().snapshot().precond_builds, 1);
+        // Fixed hypers: another NLL evaluation AND precompute both reuse
+        // the cached factor (the "precompute right after the last Adam
+        // step evaluated these hypers" case used to pay a full
+        // O(n·k²+n·k·d) rebuild).
+        let _ = gp.nll_and_grad(&mut rng).unwrap();
+        gp.precompute(&mut rng).unwrap();
+        let snap = gp.accounting().snapshot();
+        assert_eq!(snap.precond_builds, 1, "cached factor was rebuilt");
+        assert_eq!(snap.mbcg_solves, 3, "every solve is counted");
+        assert_eq!(snap.lanczos_passes, 1);
+        assert_eq!(snap.cg_breakdowns, 0);
+        // Moved hypers: exactly one rebuild.
+        gp.hypers.log_lengthscales[0] += 0.05;
+        let _ = gp.nll_and_grad(&mut rng).unwrap();
+        assert_eq!(gp.accounting().snapshot().precond_builds, 2);
     }
 
     #[test]

@@ -94,9 +94,11 @@ pub fn tridiag_eig(diag: &[f64], off: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
         }
     }
 
-    // Sort ascending (insertion sort on (d, columns of z) — m is tiny).
+    // Sort ascending. total_cmp: a NaN eigenvalue (poisoned input) must
+    // not panic the comparator — the quadrature caller sees NaN results
+    // and reports them, instead of aborting the whole training run.
     let mut idx: Vec<usize> = (0..m).collect();
-    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    idx.sort_by(|&a, &b| d[a].total_cmp(&d[b]));
     let eigs: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
     let first_row: Vec<f64> = idx.iter().map(|&i| z[i]).collect(); // z[0*m + i]
     Ok((eigs, first_row))
@@ -203,6 +205,20 @@ mod tests {
         // eigen-free identity: for diagonal T it's log(d[0]).
         let q = quadrature(&[2.0, 5.0, 7.0], &[0.0, 0.0], |x| x.ln(), 1e-300).unwrap();
         assert!((q - (2.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_input_never_panics() {
+        // Regression: the eigenvalue sort used partial_cmp().unwrap(),
+        // which aborted the process on a NaN eigenvalue. Poisoned inputs
+        // must come back as a Result (or NaN values), never a panic.
+        let r = tridiag_eig(&[f64::NAN, 1.0, 2.0], &[0.0, 0.0]);
+        if let Ok((eigs, w)) = r {
+            assert_eq!(eigs.len(), 3);
+            assert_eq!(w.len(), 3);
+        } // Err("no convergence") is equally acceptable — just no panic.
+        let r = tridiag_eig(&[1.0, f64::NAN], &[0.5]);
+        assert!(r.is_ok() || r.is_err());
     }
 
     #[test]

@@ -2,8 +2,13 @@
 //!
 //! Subcommands:
 //!   train        train one model on one dataset and report metrics
-//!   predict      train + precompute, then serve batched predictions and
-//!                write predictions + per-request latency stats as JSON
+//!   predict      train + precompute (or load a checkpoint), then serve
+//!                batched predictions and write predictions + per-request
+//!                latency stats as JSON; --ckpt <dir> saves/loads the
+//!                trained model so later runs skip training entirely
+//!   serve        load a checkpoint (zero solver work at startup) and run
+//!                the coalescing request loop: concurrent single-point
+//!                queries are batched into memory-budgeted dispatches
 //!   reproduce    run a paper experiment (table1|table2|fig1..fig4|table3|table5)
 //!   datasets     list the benchmark suite (paper signature + scaled size)
 //!   info         runtime / artifact environment report
@@ -53,11 +58,12 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
-            bail!("unknown subcommand {other:?} (train|predict|reproduce|datasets|info)")
+            bail!("unknown subcommand {other:?} (train|predict|serve|reproduce|datasets|info)")
         }
         None => {
             print_usage();
@@ -78,6 +84,11 @@ fn print_usage() {
            exactgp predict --dataset <name> [--test-csv file.csv] [--batch N]\n\
                            [--chunk N] [--out results/predict_<name>.json]\n\
                            [--save-predictions N] [--scale ...] [--workers N]\n\
+                           [--ckpt dir]   (load if present, else train+save)\n\
+           exactgp serve --ckpt <dir> [--clients C] [--requests R]\n\
+                         [--queries file.csv] [--batch N] [--max-delay-ms T]\n\
+                         [--no-baseline] [--baseline-points N]\n\
+                         [--assert-speedup X] [--out results/BENCH_serve.json]\n\
            exactgp reproduce --exp table1|table2|table3|table5|fig1|fig2|fig3|fig4\n\
            exactgp datasets [--scale ...]\n\
            exactgp info\n"
@@ -114,10 +125,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Train + precompute an exact GP, then serve the test inputs (the
+/// Train + precompute an exact GP — or restore one from a `--ckpt`
+/// checkpoint with zero solver work — then serve the test inputs (the
 /// dataset's test split, or a CSV with the same feature columns plus a
 /// trailing target column) in batches, reporting per-request latency stats
-/// and writing predictions + stats as JSON.
+/// and writing predictions + stats as JSON. With `--ckpt <dir>`: load the
+/// checkpoint when one exists there, otherwise train and save one.
 fn cmd_predict(args: &Args) -> Result<()> {
     use exactgp::util::json::{arr, num, obj, s};
 
@@ -125,13 +138,61 @@ fn cmd_predict(args: &Args) -> Result<()> {
     if let Some(c) = args.get_usize("chunk")? {
         cfg.predict_chunk = c;
     }
-    let name = args.get_or("dataset", "bike");
     let batch = args.get_usize("batch")?.unwrap_or(1000).max(1);
-    let ds = coordinator::load_dataset(&cfg, name, 0)?;
+    let ckpt_dir = args.get("ckpt").map(std::path::PathBuf::from);
+
+    let (gp, ds) = match &ckpt_dir {
+        Some(dir) if exactgp::runtime::checkpoint::exists(dir) => {
+            let t0 = std::time::Instant::now();
+            let (gp, ds) = coordinator::load_model(&cfg, dir)?;
+            if let Some(want) = args.get("dataset") {
+                if want != ds.name {
+                    eprintln!(
+                        "warning: --dataset {want} is ignored — the checkpoint \
+                         at {dir:?} holds the {:?} model (delete the directory \
+                         or point --ckpt elsewhere to train {want})",
+                        ds.name
+                    );
+                }
+            }
+            let snap = gp.accounting().snapshot();
+            eprintln!(
+                "loaded checkpoint {dir:?} ({}: n_train={}, d={}) in {:.2}s — \
+                 mbcg_solves={}, lanczos_passes={} at startup",
+                ds.name,
+                ds.n_train(),
+                ds.d,
+                t0.elapsed().as_secs_f64(),
+                snap.mbcg_solves,
+                snap.lanczos_passes,
+            );
+            (gp, ds)
+        }
+        _ => {
+            let name = args.get_or("dataset", "bike");
+            let ds = coordinator::load_dataset(&cfg, name, 0)?;
+            eprintln!(
+                "training exact GP on {name} (n_train={}, d={}) ...",
+                ds.n_train(),
+                ds.d
+            );
+            let (pool, spec) = coordinator::make_pool(&cfg, ds.d)?;
+            let mut rng = exactgp::util::rng::Rng::new(cfg.seed, 0);
+            let mut gp = exactgp::gp::exact::ExactGp::new(&cfg, cfg.kernel, &ds, pool, spec);
+            gp.train(exactgp::gp::exact::Recipe::paper_default(&cfg), &mut rng)?;
+            gp.precompute(&mut rng)?;
+            if let Some(dir) = &ckpt_dir {
+                gp.save(dir, &ds)?;
+                eprintln!("saved checkpoint {dir:?}");
+            }
+            (gp, ds)
+        }
+    };
+    let name = ds.name.clone();
 
     let (test_x, test_y): (Vec<f64>, Vec<f64>) = match args.get("test-csv") {
         Some(path) => {
-            let raw = exactgp::data::csv::load_csv(std::path::Path::new(path), name)?;
+            let raw = exactgp::data::csv::load_csv(std::path::Path::new(path), &name)?;
             if raw.d != ds.d_original {
                 bail!(
                     "test CSV has {} feature columns but {name} expects {} raw-unit \
@@ -157,12 +218,6 @@ fn cmd_predict(args: &Args) -> Result<()> {
         bail!("no test points to predict");
     }
 
-    eprintln!("training exact GP on {name} (n_train={}, d={}) ...", ds.n_train(), ds.d);
-    let (pool, spec) = coordinator::make_pool(&cfg, ds.d)?;
-    let mut rng = exactgp::util::rng::Rng::new(cfg.seed, 0);
-    let mut gp = exactgp::gp::exact::ExactGp::new(&cfg, cfg.kernel, &ds, pool, spec);
-    gp.train(exactgp::gp::exact::Recipe::paper_default(&cfg), &mut rng)?;
-    gp.precompute(&mut rng)?;
     eprintln!(
         "ready: train={:.1}s precompute={:.2}s — serving {m} points in batches of {batch}",
         gp.train_seconds, gp.precompute_seconds
@@ -187,15 +242,12 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let delta = gp.accounting().snapshot().delta(&before);
 
     let total: f64 = latencies.iter().sum();
-    let mut sorted = latencies.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    // Nearest-rank percentile (never reports below the worst sample at
-    // high q). One request = one batch of up to `batch` points; the stats
-    // are per-request, not per-point.
-    let pct = |q: f64| {
-        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
-        sorted[rank - 1]
-    };
+    // Nearest-rank percentiles, NaN-safe (metrics::percentiles sorts with
+    // total_cmp — a poisoned timing can no longer panic a long run). One
+    // request = one batch of up to `batch` points; the stats are
+    // per-request, not per-point.
+    let pcts = exactgp::metrics::percentiles(&latencies, &[0.50, 0.90, 0.99]);
+    let (p50, p90, p99) = (pcts[0], pcts[1], pcts[2]);
     let preds = exactgp::gp::Predictions { mean, var, noise };
     let rmse = preds.rmse(&test_y);
     let nll = preds.nll(&test_y);
@@ -215,9 +267,9 @@ fn cmd_predict(args: &Args) -> Result<()> {
         &["metric", "value"],
         &[
             vec!["throughput".into(), format!("{:.0} points/s", m as f64 / total)],
-            vec!["request p50".into(), format!("{:.1} ms", pct(0.50) * 1e3)],
-            vec!["request p90".into(), format!("{:.1} ms", pct(0.90) * 1e3)],
-            vec!["request p99".into(), format!("{:.1} ms", pct(0.99) * 1e3)],
+            vec!["request p50".into(), format!("{:.1} ms", p50 * 1e3)],
+            vec!["request p90".into(), format!("{:.1} ms", p90 * 1e3)],
+            vec!["request p99".into(), format!("{:.1} ms", p99 * 1e3)],
             vec!["rmse".into(), format!("{rmse:.4}")],
             vec!["nll".into(), format!("{nll:.4}")],
             vec!["chunks dispatched".into(), delta.predict_chunks.to_string()],
@@ -226,7 +278,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 
     let doc = obj(vec![
         ("experiment", s("predict")),
-        ("dataset", s(name)),
+        ("dataset", s(&name)),
         ("n_train", num(ds.n_train() as f64)),
         ("d", num(ds.d as f64)),
         ("points", num(m as f64)),
@@ -237,9 +289,9 @@ fn cmd_predict(args: &Args) -> Result<()> {
         ("train_seconds", num(gp.train_seconds)),
         ("precompute_seconds", num(gp.precompute_seconds)),
         ("request_latency_mean_s", num(total / latencies.len() as f64)),
-        ("request_latency_p50_s", num(pct(0.50))),
-        ("request_latency_p90_s", num(pct(0.90))),
-        ("request_latency_p99_s", num(pct(0.99))),
+        ("request_latency_p50_s", num(p50)),
+        ("request_latency_p90_s", num(p90)),
+        ("request_latency_p99_s", num(p99)),
         ("throughput_points_per_s", num(m as f64 / total)),
         ("rmse", num(rmse)),
         ("nll", num(nll)),
@@ -260,6 +312,289 @@ fn cmd_predict(args: &Args) -> Result<()> {
     ]);
     std::fs::create_dir_all(&cfg.results_dir)?;
     let out_default = format!("{}/predict_{name}.json", cfg.results_dir);
+    let out = args.get_or("out", &out_default);
+    std::fs::write(out, doc.to_string_pretty())?;
+    eprintln!("wrote {out}");
+    Ok(())
+}
+
+/// Load a checkpoint and run the coalescing serve loop against a
+/// concurrent workload of single-point queries.
+///
+/// Startup is verified to perform **zero solver work** (the accounting
+/// counters prove no mBCG solve and no Lanczos pass ran — the whole point
+/// of serving from a checkpoint), and every coalesced answer is checked
+/// bitwise against one batched `predict` over the same query pool before
+/// the run is declared good. Unless `--no-baseline`, a sequential
+/// per-point baseline is timed over `--baseline-points` queries and the
+/// coalesced-vs-sequential throughput ratio is reported
+/// (`--assert-speedup X` turns it into a hard gate for CI).
+///
+/// Workload: `--clients C` threads each fire `--requests R` single-point
+/// queries (open loop: submit all, then collect replies), drawn
+/// round-robin from `--queries file.csv` (raw units, replayed through the
+/// stored feature pipeline) or the checkpoint's test split.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use exactgp::coordinator::serve;
+    use exactgp::util::json::{num, obj, s};
+    use std::time::{Duration, Instant};
+
+    let mut cfg = build_config(args)?;
+    if let Some(b) = args.get_usize("batch")? {
+        cfg.serve_batch = b;
+    }
+    if let Some(ms) = args.get_f64("max-delay-ms")? {
+        cfg.serve_max_delay_ms = ms;
+    }
+    let dir = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow::anyhow!(
+            "serve requires --ckpt <dir> (create one with `exactgp predict \
+             --dataset <name> --ckpt <dir>`)"
+        ))?;
+    let dir = std::path::Path::new(dir);
+
+    let t0 = Instant::now();
+    let (gp, ds) = coordinator::load_model(&cfg, dir)?;
+    let load_seconds = t0.elapsed().as_secs_f64();
+    let startup = gp.accounting().snapshot();
+    if startup.mbcg_solves != 0 || startup.lanczos_passes != 0 {
+        bail!(
+            "loaded model performed solver work at startup \
+             (mbcg_solves={}, lanczos_passes={}) — checkpoint restore must \
+             be solve-free",
+            startup.mbcg_solves,
+            startup.lanczos_passes
+        );
+    }
+    eprintln!(
+        "serving {} (n_train={}, d={}): checkpoint loaded in {load_seconds:.2}s, \
+         zero solver work at startup (mbcg_solves=0, lanczos_passes=0)",
+        ds.name,
+        ds.n_train(),
+        ds.d
+    );
+
+    // Query pool: raw-unit CSV replayed through the stored feature
+    // pipeline, or the checkpoint's test split.
+    let d = ds.d;
+    let queries: std::sync::Arc<Vec<f64>> = std::sync::Arc::new(match args.get("queries") {
+        Some(path) => {
+            let raw = exactgp::data::csv::load_csv(std::path::Path::new(path), &ds.name)?;
+            if raw.d != ds.d_original {
+                bail!(
+                    "queries CSV has {} feature columns but the checkpoint \
+                     expects {} raw-unit features",
+                    raw.d,
+                    ds.d_original
+                );
+            }
+            ds.transform_x(&raw.x)?
+        }
+        None => {
+            if ds.test_x.is_empty() {
+                bail!("checkpoint carries no test split; pass --queries <csv>");
+            }
+            ds.test_x.clone()
+        }
+    });
+    let pool_points = queries.len() / d;
+
+    let clients = args.get_usize("clients")?.unwrap_or(8).max(1);
+    let per_client = args.get_usize("requests")?.unwrap_or(100).max(1);
+    let total_requests = clients * per_client;
+    eprintln!(
+        "workload: {clients} clients x {per_client} single-point queries \
+         (pool of {pool_points} points), serve_batch={}, max_delay={}ms",
+        cfg.serve_batch, cfg.serve_max_delay_ms
+    );
+
+    // Open-loop clients: fire every request, then collect replies — the
+    // throughput regime the coalescer exists for. Latency is measured
+    // submit -> reply per request.
+    let (handle, rx) = serve::channel(gp.dim());
+    let t_serve = Instant::now();
+    type ClientOut = Result<(Vec<f64>, Vec<(usize, f64, f64)>)>;
+    let threads: Vec<std::thread::JoinHandle<ClientOut>> = (0..clients)
+        .map(|c| {
+            let handle = handle.clone();
+            let queries = queries.clone();
+            std::thread::spawn(move || -> ClientOut {
+                let mut inflight = Vec::with_capacity(per_client);
+                for k in 0..per_client {
+                    let qi = (c + k * clients) % pool_points;
+                    let x = queries[qi * d..(qi + 1) * d].to_vec();
+                    inflight.push((Instant::now(), qi, handle.submit(x)?));
+                }
+                let mut lats = Vec::with_capacity(per_client);
+                let mut answers = Vec::with_capacity(per_client);
+                for (t, qi, rx) in inflight {
+                    match rx.recv() {
+                        Ok(Ok(p)) => {
+                            lats.push(t.elapsed().as_secs_f64());
+                            answers.push((qi, p.mean[0], p.var[0]));
+                        }
+                        Ok(Err(e)) => bail!("serve error: {e}"),
+                        Err(_) => bail!("serve loop dropped a request"),
+                    }
+                }
+                Ok((lats, answers))
+            })
+        })
+        .collect();
+    drop(handle); // the loop exits once every client thread finishes
+
+    let before = gp.accounting().snapshot();
+    let stats = serve::run(
+        &gp,
+        rx,
+        cfg.serve_batch,
+        Duration::from_secs_f64(cfg.serve_max_delay_ms.max(0.0) / 1e3),
+    )?;
+    let serve_seconds = t_serve.elapsed().as_secs_f64();
+    let delta = gp.accounting().snapshot().delta(&before);
+
+    let mut latencies = Vec::with_capacity(total_requests);
+    let mut answers = Vec::with_capacity(total_requests);
+    for th in threads {
+        let (lats, ans) = th.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+        latencies.extend(lats);
+        answers.extend(ans);
+    }
+    assert_eq!(stats.requests as usize, total_requests);
+
+    // Parity: every coalesced single-point answer must be bitwise equal
+    // to a batched predict over the same points — coalescing is a
+    // scheduling optimization, never a numerics change. Only the
+    // *distinct served* indices are re-predicted: at paper scale the
+    // checkpoint's test split can dwarf the workload, and verifying 800
+    // answers must not cost a 100k-point pass.
+    let mut served: Vec<usize> = answers.iter().map(|&(qi, _, _)| qi).collect();
+    served.sort_unstable();
+    served.dedup();
+    let mut parity_x = Vec::with_capacity(served.len() * d);
+    for &qi in &served {
+        parity_x.extend_from_slice(&queries[qi * d..(qi + 1) * d]);
+    }
+    let batched = gp.predict(&parity_x)?;
+    let slot = |qi: usize| served.binary_search(&qi).unwrap();
+    for &(qi, mean, var) in &answers {
+        let k = slot(qi);
+        if mean.to_bits() != batched.mean[k].to_bits()
+            || var.to_bits() != batched.var[k].to_bits()
+        {
+            bail!(
+                "coalesced answer for query {qi} diverged from batched \
+                 predict: mean {mean:e} vs {:e}, var {var:e} vs {:e}",
+                batched.mean[k],
+                batched.var[k]
+            );
+        }
+    }
+
+    let coalesced_tput = total_requests as f64 / serve_seconds;
+    let pcts = exactgp::metrics::percentiles(&latencies, &[0.50, 0.90, 0.99]);
+
+    // Sequential per-point baseline: what the same lookups cost without
+    // coalescing (capped — that is exactly the slow path).
+    if args.flag_present("no-baseline") && args.get("assert-speedup").is_some() {
+        bail!("--assert-speedup needs the baseline measurement; drop --no-baseline");
+    }
+    let (baseline_tput, speedup) = if args.flag_present("no-baseline") {
+        (f64::NAN, f64::NAN)
+    } else {
+        let bl = args
+            .get_usize("baseline-points")?
+            .unwrap_or(200)
+            .min(total_requests)
+            .max(1);
+        let t0 = Instant::now();
+        for i in 0..bl {
+            let qi = i % pool_points;
+            let _ = gp.predict(&queries[qi * d..(qi + 1) * d])?;
+        }
+        let tput = bl as f64 / t0.elapsed().as_secs_f64();
+        (tput, coalesced_tput / tput)
+    };
+
+    coordinator::print_table(
+        &format!(
+            "coalesced serving: {total_requests} single-point queries in \
+             {} batches",
+            stats.batches
+        ),
+        &["metric", "value"],
+        &[
+            vec!["throughput".into(), format!("{coalesced_tput:.0} queries/s")],
+            vec![
+                "sequential baseline".into(),
+                if baseline_tput.is_nan() {
+                    "skipped".into()
+                } else {
+                    format!("{baseline_tput:.0} queries/s")
+                },
+            ],
+            vec![
+                "speedup".into(),
+                if speedup.is_nan() { "-".into() } else { format!("{speedup:.1}x") },
+            ],
+            vec![
+                "points per batch".into(),
+                format!("{:.1}", stats.points as f64 / stats.batches.max(1) as f64),
+            ],
+            vec![
+                "flushes (full / deadline)".into(),
+                format!("{} / {}", stats.flush_full, stats.flush_deadline),
+            ],
+            vec!["request p50".into(), format!("{:.2} ms", pcts[0] * 1e3)],
+            vec!["request p90".into(), format!("{:.2} ms", pcts[1] * 1e3)],
+            vec!["request p99".into(), format!("{:.2} ms", pcts[2] * 1e3)],
+            vec!["parity vs batched".into(), "bitwise-identical".into()],
+        ],
+    );
+
+    if let Some(want) = args.get_f64("assert-speedup")? {
+        if !(speedup >= want) {
+            bail!(
+                "coalesced serving speedup {speedup:.2}x is below the \
+                 required {want}x (run with more --clients or a larger \
+                 --batch, or drop --assert-speedup)"
+            );
+        }
+    }
+
+    let mut fields = vec![
+        ("experiment", s("serve")),
+        ("dataset", s(&ds.name)),
+        ("n_train", num(ds.n_train() as f64)),
+        ("d", num(d as f64)),
+        ("clients", num(clients as f64)),
+        ("requests", num(total_requests as f64)),
+        ("serve_batch", num(cfg.serve_batch as f64)),
+        ("serve_max_delay_ms", num(cfg.serve_max_delay_ms)),
+        ("workers", num(cfg.workers as f64)),
+        ("load_seconds", num(load_seconds)),
+        ("serve_seconds", num(serve_seconds)),
+        ("startup_mbcg_solves", num(startup.mbcg_solves as f64)),
+        ("startup_lanczos_passes", num(startup.lanczos_passes as f64)),
+        ("throughput_queries_per_s", num(coalesced_tput)),
+        ("request_latency_p50_s", num(pcts[0])),
+        ("request_latency_p90_s", num(pcts[1])),
+        ("request_latency_p99_s", num(pcts[2])),
+        ("serve_batches", num(stats.batches as f64)),
+        ("serve_flush_full", num(stats.flush_full as f64)),
+        ("serve_flush_deadline", num(stats.flush_deadline as f64)),
+        ("points_per_batch", num(stats.points as f64 / stats.batches.max(1) as f64)),
+        ("predict_chunks", num(delta.predict_chunks as f64)),
+        ("parity_bitwise", exactgp::util::json::Json::Bool(true)),
+    ];
+    if !baseline_tput.is_nan() {
+        fields.push(("sequential_throughput_queries_per_s", num(baseline_tput)));
+        fields.push(("coalesced_speedup_vs_sequential", num(speedup)));
+    }
+    let doc = obj(fields);
+    std::fs::create_dir_all(&cfg.results_dir)?;
+    let out_default = format!("{}/BENCH_serve.json", cfg.results_dir);
     let out = args.get_or("out", &out_default);
     std::fs::write(out, doc.to_string_pretty())?;
     eprintln!("wrote {out}");

@@ -88,6 +88,25 @@ pub struct Accounting {
     pub predict_points: AtomicU64,
     /// Prediction: memory-budgeted test chunks dispatched to the pool.
     pub predict_chunks: AtomicU64,
+    /// Solver: mBCG solve calls issued (training + precompute). A model
+    /// restored from a checkpoint must show zero of these before its
+    /// first prediction — the "no retraining at startup" proof.
+    pub mbcg_solves: AtomicU64,
+    /// Solver: Lanczos factorization passes (the LOVE variance cache).
+    pub lanczos_passes: AtomicU64,
+    /// Solver: mBCG columns deactivated by a CG breakdown (non-finite or
+    /// vanishing p·Kp curvature) before reaching the tolerance.
+    pub cg_breakdowns: AtomicU64,
+    /// Preconditioner: pivoted-Cholesky factor builds (cache misses).
+    pub precond_builds: AtomicU64,
+    /// Serving: queries accepted by the coalescing loop.
+    pub serve_requests: AtomicU64,
+    /// Serving: batched dispatches the coalescing loop issued.
+    pub serve_batches: AtomicU64,
+    /// Serving: flushes triggered by a full batch.
+    pub serve_flush_full: AtomicU64,
+    /// Serving: flushes triggered by the latency deadline (or shutdown).
+    pub serve_flush_deadline: AtomicU64,
 }
 
 impl Accounting {
@@ -132,6 +151,42 @@ impl Accounting {
         self.predict_chunks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one mBCG solve call.
+    pub fn note_mbcg_solve(&self) {
+        self.mbcg_solves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one Lanczos factorization pass.
+    pub fn note_lanczos_pass(&self) {
+        self.lanczos_passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` mBCG columns lost to CG breakdowns.
+    pub fn note_cg_breakdowns(&self, n: u64) {
+        self.cg_breakdowns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one pivoted-Cholesky preconditioner build.
+    pub fn note_precond_build(&self) {
+        self.precond_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` queries accepted by the coalescing serve loop.
+    pub fn note_serve_requests(&self, n: u64) {
+        self.serve_requests.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one coalesced serve dispatch; `full` says whether the batch
+    /// filled up (vs the latency deadline / shutdown forcing the flush).
+    pub fn note_serve_batch(&self, full: bool) {
+        self.serve_batches.fetch_add(1, Ordering::Relaxed);
+        if full {
+            self.serve_flush_full.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.serve_flush_deadline.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Consistent point-in-time copy of all counters.
     pub fn snapshot(&self) -> AccountingSnapshot {
         AccountingSnapshot {
@@ -144,6 +199,14 @@ impl Accounting {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             predict_points: self.predict_points.load(Ordering::Relaxed),
             predict_chunks: self.predict_chunks.load(Ordering::Relaxed),
+            mbcg_solves: self.mbcg_solves.load(Ordering::Relaxed),
+            lanczos_passes: self.lanczos_passes.load(Ordering::Relaxed),
+            cg_breakdowns: self.cg_breakdowns.load(Ordering::Relaxed),
+            precond_builds: self.precond_builds.load(Ordering::Relaxed),
+            serve_requests: self.serve_requests.load(Ordering::Relaxed),
+            serve_batches: self.serve_batches.load(Ordering::Relaxed),
+            serve_flush_full: self.serve_flush_full.load(Ordering::Relaxed),
+            serve_flush_deadline: self.serve_flush_deadline.load(Ordering::Relaxed),
         }
     }
 
@@ -158,6 +221,14 @@ impl Accounting {
         self.cache_hits.store(0, Ordering::Relaxed);
         self.predict_points.store(0, Ordering::Relaxed);
         self.predict_chunks.store(0, Ordering::Relaxed);
+        self.mbcg_solves.store(0, Ordering::Relaxed);
+        self.lanczos_passes.store(0, Ordering::Relaxed);
+        self.cg_breakdowns.store(0, Ordering::Relaxed);
+        self.precond_builds.store(0, Ordering::Relaxed);
+        self.serve_requests.store(0, Ordering::Relaxed);
+        self.serve_batches.store(0, Ordering::Relaxed);
+        self.serve_flush_full.store(0, Ordering::Relaxed);
+        self.serve_flush_deadline.store(0, Ordering::Relaxed);
     }
 }
 
@@ -182,6 +253,22 @@ pub struct AccountingSnapshot {
     pub predict_points: u64,
     /// Prediction chunks dispatched to the pool.
     pub predict_chunks: u64,
+    /// mBCG solve calls issued.
+    pub mbcg_solves: u64,
+    /// Lanczos factorization passes.
+    pub lanczos_passes: u64,
+    /// mBCG columns deactivated by CG breakdowns.
+    pub cg_breakdowns: u64,
+    /// Pivoted-Cholesky preconditioner builds.
+    pub precond_builds: u64,
+    /// Queries accepted by the coalescing serve loop.
+    pub serve_requests: u64,
+    /// Batched dispatches issued by the coalescing serve loop.
+    pub serve_batches: u64,
+    /// Serve flushes triggered by a full batch.
+    pub serve_flush_full: u64,
+    /// Serve flushes triggered by the latency deadline (or shutdown).
+    pub serve_flush_deadline: u64,
 }
 
 impl AccountingSnapshot {
@@ -197,8 +284,37 @@ impl AccountingSnapshot {
             cache_hits: self.cache_hits - earlier.cache_hits,
             predict_points: self.predict_points - earlier.predict_points,
             predict_chunks: self.predict_chunks - earlier.predict_chunks,
+            mbcg_solves: self.mbcg_solves - earlier.mbcg_solves,
+            lanczos_passes: self.lanczos_passes - earlier.lanczos_passes,
+            cg_breakdowns: self.cg_breakdowns - earlier.cg_breakdowns,
+            precond_builds: self.precond_builds - earlier.precond_builds,
+            serve_requests: self.serve_requests - earlier.serve_requests,
+            serve_batches: self.serve_batches - earlier.serve_batches,
+            serve_flush_full: self.serve_flush_full - earlier.serve_flush_full,
+            serve_flush_deadline: self.serve_flush_deadline - earlier.serve_flush_deadline,
         }
     }
+}
+
+/// Nearest-rank percentiles of a sample set (latency reporting): for each
+/// quantile `q` in (0, 1], returns the smallest sample whose rank covers
+/// `q` of the distribution — p99 can never report below the worst sample
+/// it covers. NaN-safe: samples are ordered with `f64::total_cmp` (NaNs
+/// sort last and can never panic the comparator), so a single poisoned
+/// timing cannot crash a long serving run. Returns NaN per quantile when
+/// `samples` is empty.
+pub fn percentiles(samples: &[f64], qs: &[f64]) -> Vec<f64> {
+    if samples.is_empty() {
+        return vec![f64::NAN; qs.len()];
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    qs.iter()
+        .map(|&q| {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            sorted[rank - 1]
+        })
+        .collect()
 }
 
 /// Mean and sample standard deviation of a slice (bench reporting).
@@ -254,6 +370,21 @@ mod tests {
         assert_eq!(s.peak_tile_bytes, 4096);
         assert_eq!(s.tile_execs, 2);
         assert_eq!(s.mvms, 1);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank_and_nan_safe() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let p = percentiles(&xs, &[0.5, 0.9, 0.99, 1.0]);
+        assert_eq!(p, vec![3.0, 5.0, 5.0, 5.0]);
+        // A NaN sample must not panic the sort (regression: the old
+        // partial_cmp().unwrap() comparator aborted on NaN); NaN sorts
+        // last under total_cmp, so finite quantiles stay meaningful.
+        let xs = [2.0, f64::NAN, 1.0];
+        let p = percentiles(&xs, &[0.5, 1.0]);
+        assert_eq!(p[0], 2.0);
+        assert!(p[1].is_nan());
+        assert!(percentiles(&[], &[0.5])[0].is_nan());
     }
 
     #[test]

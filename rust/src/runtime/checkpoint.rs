@@ -1,0 +1,530 @@
+//! Versioned on-disk model checkpoints: train once, serve forever.
+//!
+//! The paper's headline is that exact-GP training on 10^6 points costs
+//! hours — which makes a trained model an expensive artifact. A checkpoint
+//! captures everything `ExactGp::predict` needs so a fresh process can
+//! serve predictions with **zero mBCG solves and zero Lanczos passes**:
+//!
+//! * the kernel family and hyperparameters,
+//! * the training inputs/targets and the dataset's feature pipeline
+//!   (JL projection + whitening statistics + target transform), so
+//!   raw-unit queries keep working after a restart,
+//! * the `[a | W]` prediction RHS (mean solve + LOVE variance projection)
+//!   — the O(n·r) state whose construction is the expensive part,
+//! * the training step log, timings, and a config fingerprint for
+//!   provenance.
+//!
+//! ## Layout
+//!
+//! A checkpoint is a directory:
+//!
+//! ```text
+//! <dir>/checkpoint.json   versioned manifest (util::json; written last)
+//! <dir>/<array>.bin       raw little-endian f64 payloads (train_x,
+//!                         train_y, test_x, test_y, pred_rhs, projection)
+//! ```
+//!
+//! Large arrays live in binary sidecars — exact bitwise f64 round-trip by
+//! construction — with their element count and an FNV-1a checksum recorded
+//! in the manifest, so truncation or corruption is rejected with a clear
+//! error instead of producing silently wrong predictions. The manifest is
+//! written after every sidecar, so an interrupted save never looks like a
+//! valid checkpoint. Unknown format versions are rejected (no silent
+//! best-effort parsing of a future layout).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::gp::exact::StepLog;
+use crate::kernels::{Hypers, KernelKind};
+use crate::linalg::Mat;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::fnv1a_bytes;
+
+/// Manifest `format` tag — identifies the directory as one of ours.
+pub const FORMAT: &str = "exactgp-checkpoint";
+
+/// Current checkpoint layout version. Bump on any incompatible change;
+/// `load` rejects both older and newer versions explicitly.
+pub const VERSION: u64 = 1;
+
+/// Manifest file name inside a checkpoint directory.
+pub const MANIFEST: &str = "checkpoint.json";
+
+/// True if `dir` looks like a checkpoint (manifest present). Used by the
+/// CLI to decide between "load" and "train then save".
+pub fn exists(dir: &Path) -> bool {
+    dir.join(MANIFEST).is_file()
+}
+
+/// Borrowed view of the state `save` persists — references, so saving a
+/// million-point model never clones its O(n·d) inputs or O(n·r) slab.
+pub struct CheckpointView<'a> {
+    /// Kernel family the model was trained with.
+    pub kernel: KernelKind,
+    /// Trained hyperparameters.
+    pub hypers: &'a Hypers,
+    /// `Config::model_fingerprint()` of the training configuration.
+    pub config_fingerprint: u64,
+    /// The dataset the model was trained on (feature pipeline included;
+    /// the validation split is not persisted).
+    pub dataset: &'a Dataset,
+    /// The `[a | W]` prediction RHS built by `precompute`.
+    pub pred_rhs: &'a Mat,
+    /// Per-step training diagnostics.
+    pub step_log: &'a [StepLog],
+    /// Wall-clock seconds spent in subset pretraining.
+    pub pretrain_seconds: f64,
+    /// Wall-clock seconds spent training.
+    pub train_seconds: f64,
+    /// Wall-clock seconds spent in `precompute`.
+    pub precompute_seconds: f64,
+}
+
+/// A checkpoint restored from disk (owned; see `ExactGp::from_checkpoint`
+/// for turning it back into a predict-ready model).
+pub struct Checkpoint {
+    /// Layout version the directory was written with (== `VERSION`).
+    pub version: u64,
+    /// Kernel family.
+    pub kernel: KernelKind,
+    /// Trained hyperparameters.
+    pub hypers: Hypers,
+    /// Fingerprint of the training configuration (provenance; surfaced,
+    /// not enforced — runtime knobs may legitimately differ at serve time).
+    pub config_fingerprint: u64,
+    /// Training data + feature pipeline (+ the test split, for replay
+    /// workloads and post-restart evaluation; validation split is empty).
+    pub dataset: Dataset,
+    /// The `[a | W]` prediction RHS.
+    pub pred_rhs: Mat,
+    /// Per-step training diagnostics.
+    pub step_log: Vec<StepLog>,
+    /// Wall-clock seconds spent in subset pretraining.
+    pub pretrain_seconds: f64,
+    /// Wall-clock seconds spent training.
+    pub train_seconds: f64,
+    /// Wall-clock seconds spent in `precompute`.
+    pub precompute_seconds: f64,
+}
+
+/// Write one f64 array as a raw little-endian sidecar; returns its
+/// manifest entry (file name, element count, checksum).
+fn write_array(dir: &Path, name: &str, data: &[f64]) -> Result<Json> {
+    let mut bytes = Vec::with_capacity(data.len() * 8);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let fnv = fnv1a_bytes(&bytes);
+    let file = format!("{name}.bin");
+    std::fs::write(dir.join(&file), &bytes)
+        .with_context(|| format!("writing checkpoint array {file:?}"))?;
+    Ok(obj(vec![
+        ("file", s(&file)),
+        ("len", num(data.len() as f64)),
+        ("fnv", s(&format!("{fnv:016x}"))),
+    ]))
+}
+
+/// Read one sidecar back, verifying length and checksum.
+fn read_array(dir: &Path, entry: &Json, what: &str) -> Result<Vec<f64>> {
+    let file = entry.req_str("file")?;
+    let len = entry.req_usize("len")?;
+    let want_fnv = u64::from_str_radix(entry.req_str("fnv")?, 16)
+        .with_context(|| format!("corrupt checkpoint: bad checksum field for {what}"))?;
+    let bytes = std::fs::read(dir.join(file))
+        .with_context(|| format!("reading checkpoint array {file:?} ({what})"))?;
+    ensure!(
+        bytes.len() == len * 8,
+        "corrupt checkpoint: {what} ({file}) holds {} bytes, manifest says {} \
+         elements ({} bytes)",
+        bytes.len(),
+        len,
+        len * 8
+    );
+    let got_fnv = fnv1a_bytes(&bytes);
+    ensure!(
+        got_fnv == want_fnv,
+        "corrupt checkpoint: {what} ({file}) checksum mismatch \
+         (stored {want_fnv:016x}, computed {got_fnv:016x})"
+    );
+    Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Persist a model checkpoint into `dir` (created if missing). The
+/// manifest is written last, so a partial save is never mistaken for a
+/// valid checkpoint.
+pub fn save(dir: &Path, view: &CheckpointView) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint directory {dir:?}"))?;
+    let ds = view.dataset;
+    ensure!(
+        view.pred_rhs.rows == ds.n_train(),
+        "checkpoint: pred_rhs has {} rows but the dataset has {} training points",
+        view.pred_rhs.rows,
+        ds.n_train()
+    );
+
+    let mut arrays = vec![
+        ("train_x", write_array(dir, "train_x", &ds.train_x)?),
+        ("train_y", write_array(dir, "train_y", &ds.train_y)?),
+        ("test_x", write_array(dir, "test_x", &ds.test_x)?),
+        ("test_y", write_array(dir, "test_y", &ds.test_y)?),
+        ("pred_rhs", write_array(dir, "pred_rhs", &view.pred_rhs.data)?),
+    ];
+    if let Some(proj) = &ds.projection {
+        arrays.push(("projection", write_array(dir, "projection", proj)?));
+    }
+
+    let manifest = obj(vec![
+        ("format", s(FORMAT)),
+        ("version", num(VERSION as f64)),
+        ("kernel", s(view.kernel.name())),
+        (
+            "hypers",
+            obj(vec![
+                (
+                    "log_lengthscales",
+                    arr(view.hypers.log_lengthscales.iter().map(|&v| num(v))),
+                ),
+                ("log_outputscale", num(view.hypers.log_outputscale)),
+                ("log_noise", num(view.hypers.log_noise)),
+            ]),
+        ),
+        ("config_fingerprint", s(&format!("{:016x}", view.config_fingerprint))),
+        (
+            "dataset",
+            obj(vec![
+                ("name", s(&ds.name)),
+                ("d", num(ds.d as f64)),
+                ("d_original", num(ds.d_original as f64)),
+                ("n_train", num(ds.n_train() as f64)),
+                ("n_test", num(ds.n_test() as f64)),
+                ("y_std", num(ds.y_std)),
+                ("y_mean", num(ds.y_mean)),
+                ("feature_mu", arr(ds.feature_mu.iter().map(|&v| num(v)))),
+                ("feature_sd", arr(ds.feature_sd.iter().map(|&v| num(v)))),
+            ]),
+        ),
+        ("pred_rhs_cols", num(view.pred_rhs.cols as f64)),
+        ("arrays", Json::Obj(arrays.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+        (
+            "step_log",
+            arr(view.step_log.iter().map(|sl| {
+                obj(vec![
+                    ("step", num(sl.step as f64)),
+                    ("nll", num(sl.nll)),
+                    ("cg_iters", num(sl.cg_iters as f64)),
+                    ("seconds", num(sl.seconds)),
+                ])
+            })),
+        ),
+        (
+            "timings",
+            obj(vec![
+                ("pretrain_seconds", num(view.pretrain_seconds)),
+                ("train_seconds", num(view.train_seconds)),
+                ("precompute_seconds", num(view.precompute_seconds)),
+            ]),
+        ),
+    ]);
+    std::fs::write(dir.join(MANIFEST), manifest.to_string_pretty())
+        .with_context(|| format!("writing checkpoint manifest in {dir:?}"))?;
+    Ok(())
+}
+
+/// Load a checkpoint from `dir`, verifying format, version, lengths, and
+/// checksums. Every failure mode names what is wrong — a checkpoint that
+/// cannot be trusted must never load into a model that serves traffic.
+pub fn load(dir: &Path) -> Result<Checkpoint> {
+    let path = dir.join(MANIFEST);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no checkpoint at {dir:?} (missing {MANIFEST})"))?;
+    let m = Json::parse(&text)
+        .with_context(|| format!("corrupt checkpoint manifest {path:?}"))?;
+
+    let format = m.req_str("format")?;
+    ensure!(
+        format == FORMAT,
+        "not an exactgp checkpoint: format is {format:?} (expected {FORMAT:?})"
+    );
+    let version = m.req_usize("version")? as u64;
+    ensure!(
+        version == VERSION,
+        "checkpoint version mismatch: directory has v{version}, this binary \
+         reads v{VERSION} — re-save the model with this binary"
+    );
+
+    let kernel = m.req_str("kernel")?;
+    let kernel = KernelKind::parse(kernel)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint names unknown kernel {kernel:?}"))?;
+
+    let h = m.req("hypers")?;
+    let hypers = Hypers {
+        log_lengthscales: h.req_f64_arr("log_lengthscales")?,
+        log_outputscale: h.req_f64("log_outputscale")?,
+        log_noise: h.req_f64("log_noise")?,
+    };
+    ensure!(
+        !hypers.log_lengthscales.is_empty(),
+        "corrupt checkpoint: empty lengthscale vector"
+    );
+
+    let config_fingerprint = u64::from_str_radix(m.req_str("config_fingerprint")?, 16)
+        .context("corrupt checkpoint: bad config_fingerprint")?;
+
+    let d = m.req("dataset")?;
+    let dim = d.req_usize("d")?;
+    let n_train = d.req_usize("n_train")?;
+    let n_test = d.req_usize("n_test")?;
+    ensure!(dim > 0 && n_train > 0, "corrupt checkpoint: empty dataset");
+
+    let d_original = d.req_usize("d_original")?;
+    let arrays = m.req("arrays")?;
+    let train_x = read_array(dir, arrays.req("train_x")?, "training inputs")?;
+    let train_y = read_array(dir, arrays.req("train_y")?, "training targets")?;
+    let test_x = read_array(dir, arrays.req("test_x")?, "test inputs")?;
+    let test_y = read_array(dir, arrays.req("test_y")?, "test targets")?;
+    let projection = match arrays.get("projection") {
+        Some(entry) => {
+            let proj = read_array(dir, entry, "feature projection")?;
+            // The projection replays raw-unit queries: a wrong-sized one
+            // must fail here, not as an out-of-bounds slice at query time.
+            ensure!(
+                proj.len() == d_original * dim,
+                "corrupt checkpoint: feature projection holds {} values, \
+                 expected {d_original}x{dim}",
+                proj.len()
+            );
+            Some(proj)
+        }
+        None => None,
+    };
+    ensure!(
+        train_x.len() == n_train * dim && train_y.len() == n_train,
+        "corrupt checkpoint: training arrays disagree with the manifest \
+         (x: {} for {n_train}x{dim}, y: {})",
+        train_x.len(),
+        train_y.len()
+    );
+    ensure!(
+        test_x.len() == n_test * dim && test_y.len() == n_test,
+        "corrupt checkpoint: test arrays disagree with the manifest"
+    );
+
+    let cols = m.req_usize("pred_rhs_cols")?;
+    let rhs = read_array(dir, arrays.req("pred_rhs")?, "prediction RHS [a | W]")?;
+    ensure!(
+        cols >= 1 && rhs.len() == n_train * cols,
+        "corrupt checkpoint: pred_rhs holds {} values, expected {n_train}x{cols}",
+        rhs.len()
+    );
+    let pred_rhs = Mat::from_vec(n_train, cols, rhs);
+
+    let dataset = Dataset {
+        name: d.req_str("name")?.to_string(),
+        d: dim,
+        d_original,
+        train_x,
+        train_y,
+        val_x: vec![],
+        val_y: vec![],
+        test_x,
+        test_y,
+        y_std: d.req_f64("y_std")?,
+        y_mean: d.req_f64("y_mean")?,
+        feature_mu: d.req_f64_arr("feature_mu")?,
+        feature_sd: d.req_f64_arr("feature_sd")?,
+        projection,
+    };
+
+    let mut step_log = Vec::new();
+    for sl in m.req_arr("step_log")? {
+        step_log.push(StepLog {
+            step: sl.req_usize("step")?,
+            nll: sl.req_f64("nll")?,
+            cg_iters: sl.req_usize("cg_iters")?,
+            seconds: sl.req_f64("seconds")?,
+        });
+    }
+    let t = m.req("timings")?;
+
+    Ok(Checkpoint {
+        version,
+        kernel,
+        hypers,
+        config_fingerprint,
+        dataset,
+        pred_rhs,
+        step_log,
+        pretrain_seconds: t.req_f64("pretrain_seconds")?,
+        train_seconds: t.req_f64("train_seconds")?,
+        precompute_seconds: t.req_f64("precompute_seconds")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy_dataset(n: usize, d: usize) -> Dataset {
+        let mut rng = Rng::new(71, 0);
+        Dataset {
+            name: "toy".into(),
+            d,
+            d_original: d,
+            train_x: rng.normal_vec(n * d),
+            train_y: rng.normal_vec(n),
+            val_x: vec![],
+            val_y: vec![],
+            test_x: rng.normal_vec(3 * d),
+            test_y: rng.normal_vec(3),
+            y_std: 2.5,
+            y_mean: -0.25,
+            feature_mu: vec![0.1; d],
+            feature_sd: vec![1.2; d],
+            projection: None,
+        }
+    }
+
+    fn toy_view<'a>(
+        ds: &'a Dataset,
+        hypers: &'a Hypers,
+        rhs: &'a Mat,
+        log: &'a [StepLog],
+    ) -> CheckpointView<'a> {
+        CheckpointView {
+            kernel: KernelKind::Matern32,
+            hypers,
+            config_fingerprint: 0xDEAD_BEEF_u64,
+            dataset: ds,
+            pred_rhs: rhs,
+            step_log: log,
+            pretrain_seconds: 0.5,
+            train_seconds: 1.5,
+            precompute_seconds: 0.25,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_exact() {
+        let dir = std::env::temp_dir().join(format!("exactgp_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = toy_dataset(17, 3);
+        let hypers = Hypers {
+            log_lengthscales: vec![0.123456789012345, -0.5],
+            log_outputscale: 0.25,
+            log_noise: -2.302585092994046,
+        };
+        let mut rng = Rng::new(72, 0);
+        let rhs = Mat::from_vec(17, 4, rng.normal_vec(17 * 4));
+        let log =
+            vec![StepLog { step: 0, nll: 12.5, cg_iters: 7, seconds: 0.125 }];
+        assert!(!exists(&dir));
+        save(&dir, &toy_view(&ds, &hypers, &rhs, &log)).unwrap();
+        assert!(exists(&dir));
+
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.version, VERSION);
+        assert_eq!(ck.kernel, KernelKind::Matern32);
+        assert_eq!(ck.config_fingerprint, 0xDEAD_BEEF);
+        // Bitwise f64 equality — the binary sidecars guarantee it.
+        assert_eq!(ck.hypers, hypers);
+        assert_eq!(ck.dataset.train_x, ds.train_x);
+        assert_eq!(ck.dataset.train_y, ds.train_y);
+        assert_eq!(ck.dataset.test_x, ds.test_x);
+        assert_eq!(ck.pred_rhs.data, rhs.data);
+        assert_eq!((ck.pred_rhs.rows, ck.pred_rhs.cols), (17, 4));
+        assert_eq!(ck.dataset.y_std, 2.5);
+        assert_eq!(ck.step_log.len(), 1);
+        assert_eq!(ck.step_log[0].cg_iters, 7);
+        assert_eq!(ck.train_seconds, 1.5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_bad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = toy_dataset(9, 2);
+        let hypers = Hypers::default_init(None);
+        let rhs = Mat::zeros(9, 2);
+        save(&dir, &toy_view(&ds, &hypers, &rhs, &[])).unwrap();
+
+        // Truncation: manifest length no longer matches the file.
+        let bytes = std::fs::read(dir.join("pred_rhs.bin")).unwrap();
+        std::fs::write(dir.join("pred_rhs.bin"), &bytes[..bytes.len() - 8]).unwrap();
+        let err = format!("{:#}", load(&dir).unwrap_err());
+        assert!(err.contains("corrupt"), "{err}");
+
+        // Bit flip: length right, checksum wrong.
+        let mut bytes = bytes;
+        bytes[3] ^= 0x40;
+        std::fs::write(dir.join("pred_rhs.bin"), &bytes).unwrap();
+        let err = format!("{:#}", load(&dir).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_and_format_mismatches_are_rejected() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_ver_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = toy_dataset(6, 2);
+        let hypers = Hypers::default_init(None);
+        let rhs = Mat::zeros(6, 1);
+        save(&dir, &toy_view(&ds, &hypers, &rhs, &[])).unwrap();
+
+        let manifest = std::fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        let future = manifest.replace(
+            &format!("\"version\": {VERSION}"),
+            &format!("\"version\": {}", VERSION + 1),
+        );
+        assert_ne!(future, manifest, "version field not found to rewrite");
+        std::fs::write(dir.join(MANIFEST), future).unwrap();
+        let err = format!("{}", load(&dir).unwrap_err());
+        assert!(err.contains("version mismatch"), "{err}");
+
+        let alien = manifest.replace(FORMAT, "someone-elses-checkpoint");
+        std::fs::write(dir.join(MANIFEST), alien).unwrap();
+        let err = format!("{}", load(&dir).unwrap_err());
+        assert!(err.contains("not an exactgp checkpoint"), "{err}");
+
+        // Unparseable manifest.
+        std::fs::write(dir.join(MANIFEST), "{ not json").unwrap();
+        let err = format!("{:#}", load(&dir).unwrap_err());
+        assert!(err.contains("corrupt checkpoint manifest"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn projection_roundtrips_when_present() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_proj_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut ds = toy_dataset(8, 4);
+        ds.d_original = 10;
+        ds.projection = Some((0..10 * 4).map(|i| i as f64 * 0.125).collect());
+        let hypers = Hypers::default_init(None);
+        let rhs = Mat::zeros(8, 3);
+        save(&dir, &toy_view(&ds, &hypers, &rhs, &[])).unwrap();
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.dataset.projection, ds.projection);
+        assert_eq!(ck.dataset.d_original, 10);
+
+        // A projection whose size disagrees with d_original x d must be
+        // rejected at load, not blow up at query time.
+        let manifest = std::fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        let skewed = manifest.replace("\"d_original\": 10", "\"d_original\": 12");
+        assert_ne!(skewed, manifest);
+        std::fs::write(dir.join(MANIFEST), skewed).unwrap();
+        let err = format!("{}", load(&dir).unwrap_err());
+        assert!(err.contains("feature projection"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -13,8 +13,10 @@
 // the docs) when this module is next touched.
 #![allow(missing_docs)]
 
+pub mod checkpoint;
 pub mod manifest;
 pub mod pjrt;
 
+pub use checkpoint::Checkpoint;
 pub use manifest::{ArtifactMeta, Manifest};
 pub use pjrt::{Engine, Executable};

@@ -36,6 +36,47 @@ pub struct MbcgStats {
     pub rel_residuals: Vec<f64>,
     /// Per-column: did the relative residual reach the tolerance.
     pub converged: Vec<bool>,
+    /// Per-column: the 0-based iteration at which CG broke down — the
+    /// search-direction curvature p·K^p came back non-finite or ≈0, so the
+    /// column was deactivated *without* reaching the tolerance. `None` for
+    /// healthy columns. A broken column's solution is whatever the last
+    /// good iteration accumulated; callers that need the solve to be
+    /// trustworthy must check (`first_breakdown` / `ensure_healthy`).
+    pub breakdowns: Vec<Option<usize>>,
+}
+
+impl MbcgStats {
+    /// Number of columns that broke down.
+    pub fn breakdown_count(&self) -> usize {
+        self.breakdowns.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// The first broken-down column, as (column index, breakdown
+    /// iteration, relative residual at exit) — the diagnostic callers
+    /// surface to users.
+    pub fn first_breakdown(&self) -> Option<(usize, usize, f64)> {
+        self.breakdowns
+            .iter()
+            .enumerate()
+            .find_map(|(j, b)| b.map(|it| (j, it, self.rel_residuals[j])))
+    }
+
+    /// Error if any column broke down — used by callers whose downstream
+    /// results would silently inherit a wrong solution (the prediction
+    /// cache). `context` names the solve in the error.
+    pub fn ensure_healthy(&self, context: &str) -> Result<()> {
+        if let Some((col, iter, rel)) = self.first_breakdown() {
+            bail!(
+                "{context}: CG broke down on {} of {} columns — column {col} \
+                 lost its search direction at iteration {iter} with relative \
+                 residual {rel:.3e} (solution is not trustworthy; check the \
+                 kernel conditioning / noise floor)",
+                self.breakdown_count(),
+                self.breakdowns.len(),
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Result of an mBCG call.
@@ -85,6 +126,7 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
     let mut alphas: Vec<Vec<f64>> = vec![Vec::new(); t];
     let mut betas: Vec<Vec<f64>> = vec![Vec::new(); t];
     let mut pending_beta = vec![0.0f64; t];
+    let mut breakdowns: Vec<Option<usize>> = vec![None; t];
     let mut rel_res: Vec<f64> = (0..t)
         .map(|j| if b_norms[j] > 0.0 { 1.0 } else { 0.0 })
         .collect();
@@ -106,7 +148,13 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
                 continue;
             }
             if !pv[j].is_finite() || pv[j].abs() < 1e-300 {
+                // CG breakdown: the search direction carries no usable
+                // curvature. Deactivate the column AND record it —
+                // rel_res[j] is still above tol, so downstream consumers
+                // can see the solve is not trustworthy instead of
+                // silently using the partial solution.
                 active[j] = false;
+                breakdowns[j] = Some(iterations - 1);
                 continue;
             }
             alpha[j] = rz[j] / pv[j];
@@ -189,7 +237,7 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
     MbcgResult {
         u,
         tridiags,
-        stats: MbcgStats { iterations, rel_residuals: rel_res, converged },
+        stats: MbcgStats { iterations, rel_residuals: rel_res, converged, breakdowns },
     }
 }
 
@@ -246,6 +294,52 @@ mod tests {
         let want = f.solve_mat(&b);
         assert!(res.u.max_abs_diff(&want) < 1e-6, "diff={}", res.u.max_abs_diff(&want));
         assert!(res.stats.converged.iter().all(|&c| c));
+        // A healthy solve records no breakdowns and passes the health check.
+        assert_eq!(res.stats.breakdown_count(), 0);
+        assert!(res.stats.first_breakdown().is_none());
+        res.stats.ensure_healthy("test solve").unwrap();
+    }
+
+    #[test]
+    fn breakdown_is_recorded_not_silent() {
+        // The zero operator has no curvature: p·Kp = 0 on the very first
+        // iteration, which used to silently deactivate the column and hand
+        // back u = 0 as if it were a solution. The breakdown must now be
+        // visible in the stats and fail the health check with the
+        // offending column's relative residual.
+        let n = 8;
+        let op = DenseOp { a: Mat::zeros(n, n) };
+        let mut rng = Rng::new(19, 0);
+        let b = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+        let res = mbcg(&op, &IdentityPrecond { n }, &b, 1e-8, 50, 2);
+        assert_eq!(res.stats.breakdowns, vec![Some(0), Some(0)]);
+        assert_eq!(res.stats.breakdown_count(), 2);
+        assert!(res.stats.converged.iter().all(|&c| !c));
+        let (col, iter, rel) = res.stats.first_breakdown().unwrap();
+        assert_eq!((col, iter), (0, 0));
+        assert!((rel - 1.0).abs() < 1e-12, "untouched residual, rel={rel}");
+        let err = res.stats.ensure_healthy("precompute mean solve").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("precompute mean solve"), "{msg}");
+        assert!(msg.contains("column 0"), "{msg}");
+    }
+
+    #[test]
+    fn non_finite_curvature_is_a_breakdown() {
+        // An operator that emits NaN poisons p·Kp; the column must be
+        // flagged instead of polluting the solution silently.
+        let n = 6;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 1.0;
+        }
+        a[(0, 0)] = f64::NAN;
+        let op = DenseOp { a };
+        let mut rng = Rng::new(20, 0);
+        let b = Mat::from_vec(n, 1, rng.normal_vec(n));
+        let res = mbcg(&op, &IdentityPrecond { n }, &b, 1e-10, 50, 1);
+        assert!(res.stats.breakdowns[0].is_some());
+        assert!(res.stats.ensure_healthy("nan solve").is_err());
     }
 
     #[test]

@@ -75,13 +75,17 @@ pub fn pivoted_cholesky<R: KernelRows>(kr: &R, k: usize, rel_tol: f64) -> Pivote
     let mut used = vec![false; n];
 
     for _ in 0..k.min(n) {
-        // Pivot: largest remaining diagonal.
-        let (piv, &dmax) = d
+        // Pivot: largest remaining diagonal. NaN candidates (a poisoned
+        // kernel row / residual update) are skipped outright — a NaN must
+        // neither win the argmax (total_cmp would rank it above every
+        // finite value) nor panic the comparator the way the old
+        // partial_cmp().unwrap() did deep into a long run.
+        let best = d
             .iter()
             .enumerate()
-            .filter(|&(i, _)| !used[i])
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .filter(|&(i, v)| !used[i] && !v.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1));
+        let Some((piv, &dmax)) = best else { break };
         if dmax <= 0.0 {
             break;
         }
@@ -231,6 +235,38 @@ mod tests {
         p.sort_unstable();
         p.dedup();
         assert_eq!(p.len(), pc.pivots.len());
+    }
+
+    #[test]
+    fn nan_diagonal_entries_are_skipped_not_fatal() {
+        // A kernel-row provider with one poisoned diagonal entry: the
+        // pivot argmax must skip it (never select it, never panic) and
+        // still factor the healthy remainder.
+        struct PoisonedRows<'a> {
+            inner: NativeKernelRows<'a>,
+            bad: usize,
+        }
+        impl KernelRows for PoisonedRows<'_> {
+            fn n(&self) -> usize {
+                self.inner.n()
+            }
+            fn diag(&self) -> Vec<f64> {
+                let mut d = self.inner.diag();
+                d[self.bad] = f64::NAN;
+                d
+            }
+            fn row(&self, i: usize) -> Vec<f64> {
+                assert_ne!(i, self.bad, "NaN pivot was selected");
+                self.inner.row(i)
+            }
+        }
+        let (x, eval) = toy_kernel(30, 2, 7);
+        let kr = PoisonedRows { inner: NativeKernelRows { eval: &eval, x: &x, d: 2 }, bad: 4 };
+        let pc = pivoted_cholesky(&kr, 10, 0.0);
+        assert_eq!(pc.rank(), 10);
+        assert!(!pc.pivots.contains(&4));
+        // Factor vectors are built from healthy kernel rows only.
+        assert!(pc.rows.iter().all(|r| r.iter().all(|v| v.is_finite())));
     }
 
     #[test]

@@ -53,6 +53,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
@@ -75,6 +82,22 @@ impl Json {
 
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.req(key)?.as_f64().map(|x| x as usize).ok_or_else(|| anyhow!("{key:?} not a number"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.req(key)?.as_f64().ok_or_else(|| anyhow!("{key:?} not a number"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Json]> {
+        self.req(key)?.as_arr().ok_or_else(|| anyhow!("{key:?} not an array"))
+    }
+
+    /// Required f64 array (checkpoint metadata vectors).
+    pub fn req_f64_arr(&self, key: &str) -> Result<Vec<f64>> {
+        self.req_arr(key)?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("{key:?} holds a non-number")))
+            .collect()
     }
 
     pub fn to_string_pretty(&self) -> String {

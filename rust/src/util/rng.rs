@@ -142,8 +142,14 @@ impl Rng {
 
 /// Stable 64-bit hash of a string — used to derive dataset seeds by name.
 pub fn fnv1a(s: &str) -> u64 {
+    fnv1a_bytes(s.as_bytes())
+}
+
+/// Stable 64-bit FNV-1a over raw bytes — used for checkpoint payload
+/// checksums (corruption detection, not cryptographic integrity).
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.as_bytes() {
+    for b in bytes {
         h ^= *b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }

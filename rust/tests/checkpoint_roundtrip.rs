@@ -1,0 +1,127 @@
+//! Checkpoint round-trip parity (the durable-model contract):
+//!
+//! * `save` → `load` in a fresh model context reproduces predictions
+//!   **bitwise** across prediction chunk sizes and worker counts;
+//! * a loaded model performs zero solver work — no mBCG solve, no
+//!   Lanczos pass, no preconditioner build — before its first predict;
+//! * corrupt or tampered checkpoints are rejected with a clear error,
+//!   never loaded into a model that would serve wrong numbers.
+
+use exactgp::config::{Backend, Config};
+use exactgp::coordinator;
+use exactgp::data::synthetic::Scale;
+use exactgp::gp::exact::{ExactGp, Recipe};
+use exactgp::util::rng::Rng;
+
+fn base_cfg(workers: usize, cap: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.scale = Scale { train_cap: cap };
+    cfg.workers = workers;
+    cfg.pretrain_subset = 64;
+    cfg.pretrain_lbfgs_steps = 2;
+    cfg.pretrain_adam_steps = 2;
+    cfg.finetune_adam_steps = 2;
+    cfg.precond_rank = 16;
+    cfg.variance_rank = 24;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("exactgp_it_{tag}_{}", std::process::id()))
+}
+
+fn trained_model(cfg: &Config, name: &str) -> (ExactGp, exactgp::data::Dataset) {
+    let ds = coordinator::load_dataset(cfg, name, 0).unwrap();
+    let (pool, spec) = coordinator::make_pool(cfg, ds.d).unwrap();
+    let mut rng = Rng::new(11, 0);
+    let mut gp = ExactGp::new(cfg, cfg.kernel, &ds, pool, spec);
+    gp.train(Recipe::paper_default(cfg), &mut rng).unwrap();
+    gp.precompute(&mut rng).unwrap();
+    (gp, ds)
+}
+
+#[test]
+fn save_load_is_bitwise_identical_across_chunks_and_workers() {
+    let cfg0 = base_cfg(2, 320);
+    let (gp, ds) = trained_model(&cfg0, "bike");
+    let want = gp.predict(&ds.test_x).unwrap();
+
+    let dir = tmp_dir("roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    gp.save(&dir, &ds).unwrap();
+    assert!(exactgp::runtime::checkpoint::exists(&dir));
+
+    for workers in [1usize, 3] {
+        for chunk in [0usize, 7, 64] {
+            let mut cfg = base_cfg(workers, 320);
+            cfg.predict_chunk = chunk;
+            let (gp2, ds2) = coordinator::load_model(&cfg, &dir).unwrap();
+
+            // The restored dataset carries the full pipeline + test split.
+            assert_eq!(ds2.test_x, ds.test_x);
+            assert_eq!(ds2.name, ds.name);
+
+            // Zero solver work at startup — the accounting counters are
+            // the proof serving relies on.
+            let snap = gp2.accounting().snapshot();
+            assert_eq!(snap.mbcg_solves, 0, "load ran an mBCG solve");
+            assert_eq!(snap.lanczos_passes, 0, "load ran a Lanczos pass");
+            assert_eq!(snap.precond_builds, 0, "load built a preconditioner");
+
+            let got = gp2.predict(&ds2.test_x).unwrap();
+            assert_eq!(got.mean.len(), want.mean.len());
+            for i in 0..want.mean.len() {
+                assert_eq!(
+                    got.mean[i].to_bits(),
+                    want.mean[i].to_bits(),
+                    "mean[{i}] differs (workers={workers}, chunk={chunk})"
+                );
+                assert_eq!(
+                    got.var[i].to_bits(),
+                    want.var[i].to_bits(),
+                    "var[{i}] differs (workers={workers}, chunk={chunk})"
+                );
+            }
+            assert_eq!(got.noise.to_bits(), want.noise.to_bits());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn save_requires_a_prediction_cache() {
+    let cfg = base_cfg(1, 128);
+    let ds = coordinator::load_dataset(&cfg, "bike", 0).unwrap();
+    let (pool, spec) = coordinator::make_pool(&cfg, ds.d).unwrap();
+    let gp = ExactGp::new(&cfg, cfg.kernel, &ds, pool, spec);
+    let dir = tmp_dir("nocache");
+    let err = gp.save(&dir, &ds).unwrap_err();
+    assert!(format!("{err}").contains("precompute"), "{err}");
+    assert!(!dir.exists(), "a partial checkpoint was written");
+}
+
+#[test]
+fn tampered_checkpoint_refuses_to_load() {
+    let cfg = base_cfg(1, 128);
+    let (gp, ds) = trained_model(&cfg, "elevators");
+    let dir = tmp_dir("tamper");
+    let _ = std::fs::remove_dir_all(&dir);
+    gp.save(&dir, &ds).unwrap();
+
+    // Flip one byte of the prediction cache: load must fail on the
+    // checksum, not serve a silently corrupted model.
+    let file = dir.join("pred_rhs.bin");
+    let mut bytes = std::fs::read(&file).unwrap();
+    bytes[17] ^= 0x20;
+    std::fs::write(&file, &bytes).unwrap();
+    let err = format!("{:#}", coordinator::load_model(&cfg, &dir).unwrap_err());
+    assert!(err.contains("checksum"), "{err}");
+
+    // Missing sidecar: clear error, not a panic.
+    std::fs::remove_file(&file).unwrap();
+    let err = format!("{:#}", coordinator::load_model(&cfg, &dir).unwrap_err());
+    assert!(err.contains("pred_rhs"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,134 @@
+//! Coalescing serve loop: concurrent (and queued) single-point queries
+//! must return **bitwise** the answers of one batched `predict`, while the
+//! dispatch counters prove the loop actually coalesced them into batches
+//! instead of serving point by point.
+
+use std::time::Duration;
+
+use exactgp::config::{Backend, Config};
+use exactgp::coordinator::{self, serve};
+use exactgp::data::synthetic::Scale;
+use exactgp::gp::exact::{ExactGp, Recipe};
+use exactgp::util::rng::Rng;
+
+fn served_model(cap: usize) -> (ExactGp, exactgp::data::Dataset) {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.scale = Scale { train_cap: cap };
+    cfg.workers = 2;
+    cfg.precond_rank = 12;
+    cfg.variance_rank = 16;
+    let ds = coordinator::load_dataset(&cfg, "bike", 0).unwrap();
+    let (pool, spec) = coordinator::make_pool(&cfg, ds.d).unwrap();
+    let mut rng = Rng::new(21, 0);
+    let mut gp = ExactGp::new(&cfg, cfg.kernel, &ds, pool, spec);
+    gp.train(Recipe { pretrain: false, adam_steps: 1 }, &mut rng).unwrap();
+    gp.precompute(&mut rng).unwrap();
+    (gp, ds)
+}
+
+#[test]
+fn queued_single_point_queries_coalesce_and_match_batched() {
+    let (gp, ds) = served_model(192);
+    let d = ds.d;
+    let m = ds.n_test().min(40);
+    let batched = gp.predict(&ds.test_x[..m * d]).unwrap();
+
+    // Deterministic coalescing: queue all queries first, then run the
+    // loop. 40 single-point queries at batch_points=16 must produce
+    // exactly ceil(40/16)=3 dispatches — two full flushes and one
+    // shutdown-drain flush — never 40 per-point dispatches.
+    let (handle, rx) = serve::channel(gp.dim());
+    let mut replies = Vec::with_capacity(m);
+    for qi in 0..m {
+        let x = ds.test_x[qi * d..(qi + 1) * d].to_vec();
+        replies.push(handle.submit(x).unwrap());
+    }
+    drop(handle);
+    let before = gp.accounting().snapshot();
+    let stats = serve::run(&gp, rx, 16, Duration::from_millis(50)).unwrap();
+
+    let full = (m / 16) as u64; // full flushes
+    let drain = u64::from(m % 16 != 0); // shutdown-drain flush for the rest
+    assert_eq!(stats.requests, m as u64);
+    assert_eq!(stats.points, m as u64);
+    assert_eq!(stats.batches, full + drain, "expected ceil({m}/16) dispatches: {stats:?}");
+    assert_eq!(stats.flush_full, full, "{stats:?}");
+    assert_eq!(stats.flush_deadline, drain, "shutdown drain flush: {stats:?}");
+    assert!(stats.batches < stats.requests, "no coalescing happened: {stats:?}");
+
+    // The same numbers land in the model's Accounting.
+    let delta = gp.accounting().snapshot().delta(&before);
+    assert_eq!(delta.serve_requests, m as u64);
+    assert_eq!(delta.serve_batches, full + drain);
+    assert_eq!(delta.serve_flush_full, full);
+    assert_eq!(delta.serve_flush_deadline, drain);
+
+    // Bitwise parity with the batched predict, reply by reply.
+    for (qi, rx) in replies.into_iter().enumerate() {
+        let p = rx.recv().unwrap().unwrap();
+        assert_eq!(p.mean.len(), 1);
+        assert_eq!(
+            p.mean[0].to_bits(),
+            batched.mean[qi].to_bits(),
+            "mean[{qi}] diverged under coalescing"
+        );
+        assert_eq!(
+            p.var[0].to_bits(),
+            batched.var[qi].to_bits(),
+            "var[{qi}] diverged under coalescing"
+        );
+        assert_eq!(p.noise.to_bits(), batched.noise.to_bits());
+    }
+}
+
+#[test]
+fn concurrent_clients_get_correct_answers() {
+    let (gp, ds) = served_model(160);
+    let d = ds.d;
+    let m = ds.n_test().min(24);
+    let batched = gp.predict(&ds.test_x[..m * d]).unwrap();
+    let test_x = std::sync::Arc::new(ds.test_x.clone());
+
+    let (handle, rx) = serve::channel(gp.dim());
+    let clients = 4;
+    let per_client = m / clients;
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let handle = handle.clone();
+            let test_x = test_x.clone();
+            std::thread::spawn(move || {
+                // Closed loop: each query waits for its reply (blocking
+                // `query`), so the loop's deadline path gets exercised.
+                let mut out = Vec::new();
+                for k in 0..per_client {
+                    let qi = c * per_client + k;
+                    let p = handle.query(test_x[qi * d..(qi + 1) * d].to_vec()).unwrap();
+                    out.push((qi, p.mean[0], p.var[0]));
+                }
+                out
+            })
+        })
+        .collect();
+    // A multi-point query rides along with the single-point traffic and
+    // is never split across dispatches.
+    let multi_rx = handle.submit(ds.test_x[..3 * d].to_vec()).unwrap();
+    drop(handle);
+
+    let stats = serve::run(&gp, rx, 8, Duration::from_millis(5)).unwrap();
+    assert_eq!(stats.requests, (clients * per_client + 1) as u64);
+    assert_eq!(stats.points, (clients * per_client + 3) as u64);
+
+    let multi = multi_rx.recv().unwrap().unwrap();
+    assert_eq!(multi.mean.len(), 3);
+    for i in 0..3 {
+        assert_eq!(multi.mean[i].to_bits(), batched.mean[i].to_bits());
+        assert_eq!(multi.var[i].to_bits(), batched.var[i].to_bits());
+    }
+    for th in threads {
+        for (qi, mean, var) in th.join().unwrap() {
+            assert_eq!(mean.to_bits(), batched.mean[qi].to_bits(), "mean[{qi}]");
+            assert_eq!(var.to_bits(), batched.var[qi].to_bits(), "var[{qi}]");
+        }
+    }
+}
