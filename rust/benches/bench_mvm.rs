@@ -10,8 +10,10 @@
 use std::sync::Arc;
 
 use exactgp::bench_harness::{time_fn, BenchEnv};
-use exactgp::config::{Backend, Flavor};
+use exactgp::config::{Backend, Flavor, TransportKind};
 use exactgp::coordinator::print_table;
+use exactgp::exec::transport::subprocess::SubprocessOptions;
+use exactgp::exec::transport::BackendSpec;
 use exactgp::exec::{backend_factory, pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
 use exactgp::kernels::Hypers;
 use exactgp::linalg::Mat;
@@ -191,6 +193,41 @@ fn main() {
         let bitwise = streaming.apply_raw(&v).data == cached.apply_raw(&v).data;
         let speedup = stream_warm / cached_warm;
         let cold_overhead = cached_cold / stream_cold - 1.0;
+        // Transport overhead: the identical streaming MVM pushed through
+        // the subprocess transport (one OS process per worker, length-
+        // prefixed stdio frames). Recording it in BENCH_mvm.json lets the
+        // trajectory catch wire-protocol regressions; skipped gracefully
+        // when worker processes cannot spawn on the host.
+        let sub_warm = {
+            let bspec = BackendSpec::Native { kernel: cfg.kernel, ard: false, spec };
+            let opts = SubprocessOptions {
+                worker_bin: Some(env!("CARGO_BIN_EXE_exactgp").into()),
+                ..SubprocessOptions::default()
+            };
+            match DevicePool::with_transport(TransportKind::Subprocess, workers, &bspec, opts)
+            {
+                Ok(pool) => {
+                    let op = PartitionedKernelOp::square(
+                        data.clone(),
+                        Arc::new(pool),
+                        Plan::with_rows(data.n_pad, data.n_pad, (spec.r * 4).min(data.n_pad)),
+                        spec,
+                        Hypers::default_init(None),
+                        Arc::new(Accounting::default()),
+                    );
+                    Some(
+                        time_fn(0, cache_reps, || {
+                            let _ = op.apply_raw(&v);
+                        })
+                        .min,
+                    )
+                }
+                Err(e) => {
+                    eprintln!("subprocess transport unavailable, skipping overhead row: {e:#}");
+                    None
+                }
+            }
+        };
         let fmt_s = |x: f64| {
             if x < 1e-3 {
                 format!("{:.1}us", x * 1e6)
@@ -223,8 +260,27 @@ fn main() {
                 ],
             ],
         );
+        {
+            let mut rows_t = vec![vec![
+                "local (threads)".into(),
+                fmt_s(stream_warm),
+                "1.00x".into(),
+            ]];
+            if let Some(t) = sub_warm {
+                rows_t.push(vec![
+                    "subprocess (stdio)".into(),
+                    fmt_s(t),
+                    format!("{:.2}x", t / stream_warm),
+                ]);
+            }
+            print_table(
+                &format!("Transport overhead at n={n} (streaming MVM, {workers} workers)"),
+                &["transport", "time/MVM", "vs local"],
+                &rows_t,
+            );
+        }
         // Persist the perf trajectory: CI uploads results/BENCH_mvm.json.
-        let doc = obj(vec![
+        let mut fields = vec![
             ("bench", s("bench_mvm")),
             ("mode", s(if quick { "quick" } else { "full" })),
             ("n", num(n as f64)),
@@ -249,7 +305,12 @@ fn main() {
                     ])
                 })),
             ),
-        ]);
+        ];
+        if let Some(t) = sub_warm {
+            fields.push(("subprocess_mvm_s", num(t)));
+            fields.push(("subprocess_overhead_frac", num(t / stream_warm - 1.0)));
+        }
+        let doc = obj(fields);
         if std::fs::create_dir_all(&env.cfg.results_dir).is_ok() {
             let path =
                 std::path::Path::new(&env.cfg.results_dir).join("BENCH_mvm.json");

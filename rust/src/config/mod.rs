@@ -32,6 +32,53 @@ impl Backend {
     }
 }
 
+/// How partition jobs reach their workers (see `exec::transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process worker threads (the default; today's behavior).
+    Local,
+    /// Worker subprocesses of our own binary (`exactgp worker`) speaking
+    /// the framed protocol over stdin/stdout pipes.
+    Subprocess,
+}
+
+impl TransportKind {
+    /// Config/wire name of the transport.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Subprocess => "subprocess",
+        }
+    }
+
+    /// Parse `local` / `subprocess`, with the valid values in the error.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "local" => Ok(TransportKind::Local),
+            "subprocess" => Ok(TransportKind::Subprocess),
+            _ => bail!(
+                "unknown exec.transport {s:?}: valid values are \"local\" \
+                 (in-process thread pool) and \"subprocess\" (worker processes \
+                 over pipes)"
+            ),
+        }
+    }
+
+    /// Transport named by `EXACTGP_TRANSPORT`, if set and valid (an invalid
+    /// value is reported on stderr and ignored rather than silently
+    /// flipping a run back to the default without a trace).
+    pub fn from_env() -> Option<Self> {
+        let v = std::env::var("EXACTGP_TRANSPORT").ok()?;
+        match Self::parse(&v) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!("warning: ignoring EXACTGP_TRANSPORT: {e}");
+                None
+            }
+        }
+    }
+}
+
 /// Which artifact flavor to prefer on the PJRT backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Flavor {
@@ -120,6 +167,13 @@ pub struct Config {
     pub flavor: Flavor,
     /// Worker ("GPU") count in the device pool.
     pub workers: usize,
+    /// How partition jobs reach their workers: in-process threads
+    /// (`local`) or worker subprocesses over pipes (`subprocess`).
+    pub transport: TransportKind,
+    /// Subprocess transport only: seconds a worker may sit on its oldest
+    /// in-flight job before the coordinator declares it hung, kills it,
+    /// respawns, and resubmits (0 disables the timeout).
+    pub worker_timeout_secs: u64,
     /// Rows per kernel partition (the paper reports p = #partitions;
     /// we plan by rows-per-partition against a memory budget).
     pub partition_memory_mb: usize,
@@ -184,6 +238,8 @@ impl Default for Config {
             backend: Backend::Pjrt,
             flavor: Flavor::Pallas,
             workers: 1,
+            transport: TransportKind::from_env().unwrap_or(TransportKind::Local),
+            worker_timeout_secs: 300,
             partition_memory_mb: 256,
             cache_kernel_blocks: true,
             cache_memory_mb: 256,
@@ -283,6 +339,8 @@ impl Config {
             "exec.backend" => self.backend = Backend::parse(v)?,
             "exec.flavor" => self.flavor = Flavor::parse(v)?,
             "exec.workers" => self.workers = v.parse()?,
+            "exec.transport" => self.transport = TransportKind::parse(&unquote(v))?,
+            "exec.worker_timeout_secs" => self.worker_timeout_secs = v.parse()?,
             "exec.partition_memory_mb" => self.partition_memory_mb = v.parse()?,
             "exec.cache_kernel_blocks" => self.cache_kernel_blocks = parse_bool(v)?,
             "exec.cache_memory_mb" => self.cache_memory_mb = v.parse()?,
@@ -350,6 +408,7 @@ mod tests {
         assert_eq!(c.predict_chunk_mb, 64);
         assert_eq!(c.serve_batch, 256);
         assert_eq!(c.serve_max_delay_ms, 2.0);
+        assert_eq!(c.worker_timeout_secs, 300);
     }
 
     #[test]
@@ -379,6 +438,23 @@ mod tests {
     }
 
     #[test]
+    fn transport_parses_and_rejects_with_valid_values_listed() {
+        let mut c = Config::default();
+        c.set("exec.transport", "subprocess").unwrap();
+        assert_eq!(c.transport, TransportKind::Subprocess);
+        c.set("exec.transport", "\"local\"").unwrap(); // quoted TOML form
+        assert_eq!(c.transport, TransportKind::Local);
+        c.set("exec.worker_timeout_secs", "42").unwrap();
+        assert_eq!(c.worker_timeout_secs, 42);
+        // The parse error must teach the valid values.
+        let err = c.set("exec.transport", "grpc").unwrap_err().to_string();
+        assert!(err.contains("local"), "error should list valid values: {err}");
+        assert!(err.contains("subprocess"), "error should list valid values: {err}");
+        assert_eq!(TransportKind::Local.name(), "local");
+        assert_eq!(TransportKind::Subprocess.name(), "subprocess");
+    }
+
+    #[test]
     fn model_fingerprint_tracks_model_fields_only() {
         let a = Config::default();
         let mut b = Config::default();
@@ -389,6 +465,10 @@ mod tests {
         b.backend = Backend::Native;
         b.serve_batch = 32;
         b.cache_memory_mb = 1;
+        // A model trained over threads is the same model served over
+        // subprocesses: transport is a runtime knob, not a model field.
+        b.transport = TransportKind::Subprocess;
+        b.worker_timeout_secs = 7;
         assert_eq!(a.model_fingerprint(), b.model_fingerprint());
         // Model-shaping fields must.
         b.probes = 16;

@@ -85,6 +85,27 @@ results_dir = "results/x # not a comment"
     }
 
     #[test]
+    fn exec_transport_knobs_round_trip() {
+        // Both quoted (real TOML) and bare (override style) string forms.
+        let text = "[exec]\ntransport = \"subprocess\"\nworker_timeout_secs = 17\n";
+        let mut cfg = crate::config::Config::default();
+        for (k, v) in parse(text).unwrap() {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.transport, crate::config::TransportKind::Subprocess);
+        assert_eq!(cfg.worker_timeout_secs, 17);
+        let mut cfg = crate::config::Config::default();
+        for (k, v) in parse("[exec]\ntransport = local\n").unwrap() {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.transport, crate::config::TransportKind::Local);
+        // Invalid strings fail at parse time, naming the valid values.
+        let mut cfg = crate::config::Config::default();
+        let err = cfg.set("exec.transport", "tcp").unwrap_err().to_string();
+        assert!(err.contains("subprocess"), "{err}");
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse("[unterminated").is_err());
         assert!(parse("novalue =").is_err());

@@ -17,7 +17,9 @@ use anyhow::{bail, Result};
 use crate::config::Config;
 use crate::data::synthetic;
 use crate::data::Dataset;
-use crate::exec::{backend_factory, pool::DevicePool, TileSpec};
+use crate::exec::transport::subprocess::SubprocessOptions;
+use crate::exec::transport::BackendSpec;
+use crate::exec::{pool::DevicePool, TileSpec};
 use crate::gp::exact::{ExactGp, Recipe};
 use crate::gp::{FitReport, Predictions};
 use crate::kernels::Hypers;
@@ -54,22 +56,28 @@ impl Model {
     }
 }
 
-/// Build the worker pool for a config (the "GPUs" of Table 2).
+/// Build the worker pool for a config (the "GPUs" of Table 2), on
+/// whichever transport `cfg.transport` selects — everything above this
+/// call (training, checkpointing, serving) is transport-agnostic.
 ///
 /// Low-dimensional datasets (d <= 8) use the narrow d=8 tile artifacts
 /// when available — padding everything to d=32 would waste ~45% of the
 /// tile flops on zero features (EXPERIMENTS.md SS Perf).
 pub fn make_pool(cfg: &Config, d: usize) -> Result<(Arc<DevicePool>, TileSpec)> {
+    let opts = SubprocessOptions::from_config(cfg);
     let mut spec = TileSpec::PROD;
     if d <= 8 && !cfg.ard && cfg.kernel == crate::kernels::KernelKind::Matern32 {
         let narrow = TileSpec { d: 8, ..spec };
-        if let Ok(factory) = backend_factory(cfg, cfg.kernel, cfg.ard, narrow.d, narrow) {
-            return Ok((Arc::new(DevicePool::new(cfg.workers, factory)?), narrow));
+        if let Ok(bs) = BackendSpec::from_config(cfg, cfg.kernel, cfg.ard, narrow.d, narrow) {
+            let pool =
+                DevicePool::with_transport(cfg.transport, cfg.workers, &bs, opts.clone())?;
+            return Ok((Arc::new(pool), narrow));
         }
     }
     spec.d = TileSpec::PROD.d;
-    let factory = backend_factory(cfg, cfg.kernel, cfg.ard, spec.d, spec)?;
-    Ok((Arc::new(DevicePool::new(cfg.workers, factory)?), spec))
+    let bs = BackendSpec::from_config(cfg, cfg.kernel, cfg.ard, spec.d, spec)?;
+    let pool = DevicePool::with_transport(cfg.transport, cfg.workers, &bs, opts)?;
+    Ok((Arc::new(pool), spec))
 }
 
 /// Recipe variants for the exact GP (Figure 1 / Table 5).

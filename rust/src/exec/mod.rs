@@ -5,8 +5,9 @@
 //! * `PaddedData` — the training inputs in the fixed-shape f32 tile layout;
 //! * `pool::DevicePool` — W workers standing in for W GPUs; each owns a
 //!   private backend (its own PJRT client + compiled executables, or the
-//!   native evaluator) and processes row-partition jobs from a shared
-//!   queue;
+//!   native evaluator) and a resident kernel-block cache. Whether the
+//!   workers are in-process threads or worker subprocesses is a
+//!   `transport` choice the operators never see;
 //! * `PartitionedKernelOp` — `BatchMvm` over K^ = K + sigma^2 I that never
 //!   materializes K: each partition's (rows x n) strip exists only tile by
 //!   tile inside a worker, exactly the O(n)-memory scheme of the paper;
@@ -17,8 +18,8 @@
 
 pub mod cross;
 pub mod native;
-pub mod pjrt_backend;
 pub mod pool;
+pub mod transport;
 
 pub use cross::CrossKernelOp;
 
@@ -26,12 +27,11 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::{Backend, Config, Flavor};
+use crate::config::Config;
 use crate::kernels::{Hypers, KernelKind};
 use crate::linalg::Mat;
 use crate::metrics::Accounting;
 use crate::partition::{CacheBudget, Plan};
-use crate::runtime::Manifest;
 use crate::solvers::BatchMvm;
 
 /// Fixed tile geometry (must match the compiled artifacts for PJRT).
@@ -115,6 +115,11 @@ pub trait TileBackend {
 /// Send; each worker constructs its own client inside the thread).
 pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn TileBackend>> + Send + Sync>;
 
+/// Process-unique `PaddedData` ids: transports that move operands across
+/// a process boundary upload each operand once per worker and reference
+/// it by this id in every job.
+static DATA_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
 /// Dataset in tile layout: rows padded to a tile boundary, features
 /// padded to the compiled d.
 pub struct PaddedData {
@@ -128,6 +133,8 @@ pub struct PaddedData {
     pub d_pad: usize,
     /// The (n_pad, d_pad) f32 feature matrix, flat row-major.
     pub x: Vec<f32>,
+    /// Process-unique identity (see [`PaddedData::data_id`]).
+    id: u64,
 }
 
 impl PaddedData {
@@ -153,7 +160,41 @@ impl PaddedData {
                 out[i * spec.d + j] = x[i * d + j] as f32;
             }
         }
-        PaddedData { n, n_pad, d, d_pad: spec.d, x: out }
+        PaddedData {
+            n,
+            n_pad,
+            d,
+            d_pad: spec.d,
+            x: out,
+            id: DATA_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+
+    /// Reassemble an already-padded operand on the far side of a
+    /// transport. The id is freshly drawn from the *worker's* namespace —
+    /// workers key their operand registry by the coordinator-side id from
+    /// the `Upload` frame, never by this one.
+    pub(crate) fn from_wire(
+        n: usize,
+        n_pad: usize,
+        d: usize,
+        d_pad: usize,
+        x: Vec<f32>,
+    ) -> PaddedData {
+        PaddedData {
+            n,
+            n_pad,
+            d,
+            d_pad,
+            x,
+            id: DATA_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+
+    /// Process-unique identity: the upload/reference key for transports
+    /// whose workers hold operands on the far side of a pipe.
+    pub fn data_id(&self) -> u64 {
+        self.id
     }
 
     /// Borrow `rows` consecutive padded feature rows starting at `start`.
@@ -524,7 +565,11 @@ impl BatchMvm for PartitionedKernelOp {
 }
 
 /// Build the backend factory for a config (used by the coordinator and
-/// all benches/examples).
+/// all benches/examples). Thin wrapper over
+/// [`transport::BackendSpec::from_config`] + [`transport::BackendSpec::factory`] —
+/// the spec is the canonical description (it also crosses process
+/// boundaries); the closure form exists for callers that construct local
+/// pools directly.
 pub fn backend_factory(
     cfg: &Config,
     kind: KernelKind,
@@ -532,32 +577,7 @@ pub fn backend_factory(
     d_pad: usize,
     spec: TileSpec,
 ) -> Result<BackendFactory> {
-    let mode = if ard { "ard" } else { "shared" };
-    match cfg.backend {
-        Backend::Native => {
-            let k = kind;
-            let a = ard;
-            Ok(Arc::new(move |_wid| {
-                Ok(Box::new(native::NativeBackend::new(k, a, spec)) as Box<dyn TileBackend>)
-            }))
-        }
-        Backend::Pjrt => {
-            let manifest = Arc::new(Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?);
-            let flavor = match cfg.flavor {
-                Flavor::Pallas => "pallas",
-                Flavor::Jnp => "jnp",
-            };
-            // Validate availability up front (better error than in-thread).
-            manifest.require("mvm", kind.name(), mode, flavor, &[("t", spec.t), ("d", d_pad)])?;
-            let kname = kind.name().to_string();
-            let mode = mode.to_string();
-            let flavor = flavor.to_string();
-            Ok(Arc::new(move |_wid| {
-                let b = pjrt_backend::PjrtBackend::new(&manifest, &kname, &mode, &flavor, spec)?;
-                Ok(Box::new(b) as Box<dyn TileBackend>)
-            }))
-        }
-    }
+    transport::BackendSpec::from_config(cfg, kind, ard, d_pad, spec)?.factory()
 }
 
 #[cfg(test)]

@@ -1,4 +1,5 @@
-//! The device pool: W worker threads standing in for W GPUs.
+//! The device pool: W workers standing in for W GPUs, behind a
+//! [`Transport`].
 //!
 //! Each worker owns a private `TileBackend` (its own PJRT client +
 //! compiled executables — PJRT handles are not `Send`, and per-device
@@ -11,6 +12,14 @@
 //! K^(X^(l), X) V locally in f64, and ships back only the (rows x t)
 //! result — O(n) communication per MVM.
 //!
+//! Whether those workers are in-process threads (the default
+//! [`transport::local`]) or child processes speaking a pipe protocol
+//! ([`transport::subprocess`]) is the transport's business:
+//! `PartitionedKernelOp` / `CrossKernelOp` only ever see this facade,
+//! and both transports execute jobs through the same
+//! `transport::worker::run_partition`, so results are bitwise-identical
+//! across transports.
+//!
 //! Cache protocol: a job carries (op_id, generation, cache_tiles). The
 //! worker keeps blocks for exactly one (op_id, generation) at a time;
 //! a cached job with a different identity clears the stale blocks first
@@ -20,10 +29,11 @@
 //! the byte budget is enforced by construction. Streaming jobs
 //! (cache_tiles = 0) leave the cache untouched.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
+use crate::config::TransportKind;
+use crate::exec::transport::subprocess::{SubprocessOptions, SubprocessTransport};
+use crate::exec::transport::{local::LocalTransport, BackendSpec, Transport};
 use crate::exec::{BackendFactory, PaddedData};
 use crate::metrics::Accounting;
 
@@ -40,7 +50,10 @@ pub enum JobKind {
     },
 }
 
-/// One row-partition job.
+/// One row-partition job. `Clone` is cheap (operands, RHS, and theta are
+/// shared `Arc`s) — the subprocess transport clones jobs it must keep for
+/// resubmission after a worker death.
+#[derive(Clone)]
 pub struct Job {
     /// Job index; also the sticky routing key (`id % workers`).
     pub id: usize,
@@ -72,283 +85,64 @@ pub struct Job {
     pub cache_tiles: usize,
 }
 
-enum Message {
-    Work(Job),
-    Shutdown,
-}
-
-type WorkQueue = Arc<(Mutex<VecDeque<Message>>, Condvar)>;
-
-/// One cached strip: the leading `filled` blocks (each spec.r * spec.c
-/// f32 correlations) of a job's tile traversal.
-#[derive(Default)]
-struct CachedStrip {
-    filled: usize,
-    data: Vec<f32>,
-}
-
-/// Worker-resident cache: strips for one (op_id, generation), keyed by
-/// the job's row_start (job row ranges are disjoint per operator).
-#[derive(Default)]
-struct WorkerCache {
-    op_id: u64,
-    generation: u64,
-    strips: HashMap<usize, CachedStrip>,
-}
-
-/// Worker pool. `run` is synchronous: submit all jobs, wait for all
-/// results, return them ordered by job id. Jobs are routed to worker
-/// `id % workers` — the routing must be sticky (not work-stealing) so a
-/// row range lands on the worker holding its cached blocks; per-row
-/// results are identical however jobs are routed.
+/// Worker pool facade over a [`Transport`]. `run` is synchronous: submit
+/// all jobs, wait for all results, return them ordered by job id. Jobs
+/// are routed to worker `id % workers` — the routing must be sticky (not
+/// work-stealing) so a row range lands on the worker holding its cached
+/// blocks; per-row results are identical however jobs are routed.
 pub struct DevicePool {
-    queues: Vec<WorkQueue>,
-    results_rx: Mutex<mpsc::Receiver<(usize, anyhow::Result<Vec<f64>>)>>,
-    results_tx: mpsc::Sender<(usize, anyhow::Result<Vec<f64>>)>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    transport: Box<dyn Transport>,
     /// Worker ("device") count.
     pub workers: usize,
 }
 
 impl DevicePool {
-    /// Spawn `workers` threads, each constructing its own backend via
-    /// `factory`; fails synchronously if any backend fails to build.
+    /// In-process thread pool (the default transport): spawn `workers`
+    /// threads, each constructing its own backend via `factory`; fails
+    /// synchronously if any backend fails to build — or if `workers` is 0
+    /// (a pool with no devices can never run a job; silently clamping
+    /// would hide a config error).
     pub fn new(workers: usize, factory: BackendFactory) -> anyhow::Result<DevicePool> {
-        assert!(workers > 0);
-        let queues: Vec<WorkQueue> = (0..workers)
-            .map(|_| Arc::new((Mutex::new(VecDeque::new()), Condvar::new())))
-            .collect();
-        let (results_tx, results_rx) = mpsc::channel();
-        let mut handles = Vec::with_capacity(workers);
-        // Surface backend construction errors synchronously.
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        for wid in 0..workers {
-            let queue = queues[wid].clone();
-            let tx = results_tx.clone();
-            let factory = factory.clone();
-            let ready = ready_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut backend = match factory(wid) {
-                    Ok(b) => {
-                        let _ = ready.send(Ok(()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = ready.send(Err(e));
-                        return;
-                    }
-                };
-                let mut cache = WorkerCache::default();
-                loop {
-                    let msg = {
-                        let (lock, cv) = &*queue;
-                        let mut q = lock.lock().unwrap();
-                        loop {
-                            if let Some(m) = q.pop_front() {
-                                break m;
-                            }
-                            q = cv.wait(q).unwrap();
-                        }
-                    };
-                    match msg {
-                        Message::Shutdown => break,
-                        Message::Work(job) => {
-                            let id = job.id;
-                            let out = run_partition(&mut *backend, &job, &mut cache);
-                            let _ = tx.send((id, out));
-                        }
-                    }
-                }
-            }));
+        Ok(DevicePool { transport: Box::new(LocalTransport::new(workers, factory)?), workers })
+    }
+
+    /// Worker-process pool: spawn `workers` children of `exactgp worker`
+    /// and hand them `backend` over the wire.
+    pub fn subprocess(
+        workers: usize,
+        backend: &BackendSpec,
+        opts: SubprocessOptions,
+    ) -> anyhow::Result<DevicePool> {
+        let t = SubprocessTransport::new(workers, backend.clone(), opts)?;
+        Ok(DevicePool { transport: Box::new(t), workers })
+    }
+
+    /// Construct whichever transport `kind` names from one serializable
+    /// backend description — the coordinator's single entry point, so
+    /// nothing above this call knows which transport runs the jobs.
+    pub fn with_transport(
+        kind: TransportKind,
+        workers: usize,
+        backend: &BackendSpec,
+        opts: SubprocessOptions,
+    ) -> anyhow::Result<DevicePool> {
+        match kind {
+            TransportKind::Local => DevicePool::new(workers, backend.factory()?),
+            TransportKind::Subprocess => DevicePool::subprocess(workers, backend, opts),
         }
-        drop(ready_tx);
-        for _ in 0..workers {
-            ready_rx.recv().expect("worker init channel")?;
-        }
-        Ok(DevicePool {
-            queues,
-            results_rx: Mutex::new(results_rx),
-            results_tx,
-            handles,
-            workers,
-        })
+    }
+
+    /// Wrap an already-built transport (tests that exercise a transport
+    /// directly).
+    pub fn from_transport(transport: Box<dyn Transport>) -> DevicePool {
+        let workers = transport.workers();
+        DevicePool { transport, workers }
     }
 
     /// Execute all jobs; panics on backend errors (they indicate broken
-    /// artifacts / shape mismatches — programming errors, not data).
-    ///
-    /// Concurrent `run` calls (e.g. two threads sharing one model and
-    /// predicting at once) are serialized: the result channel is held for
-    /// the whole submit-and-drain, so one caller can never collect —
-    /// or be short-changed by — another caller's job results (job ids
-    /// restart at 0 for every batch). Parallelism lives in the workers,
-    /// not in overlapping batches.
+    /// artifacts / shape mismatches — programming errors, not data). See
+    /// [`Transport::run`] for the batch-exclusive contract.
     pub fn run(&self, jobs: Vec<Job>) -> Vec<Vec<f64>> {
-        let n = jobs.len();
-        // Take the receiver BEFORE enqueuing: from here to the last recv
-        // this batch owns the channel end-to-end.
-        let rx = self.results_rx.lock().unwrap();
-        for j in jobs {
-            let (lock, cv) = &*self.queues[j.id % self.workers];
-            lock.lock().unwrap().push_back(Message::Work(j));
-            cv.notify_one();
-        }
-        let mut out: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (id, res) = rx.recv().expect("worker died");
-            out[id] = Some(res.unwrap_or_else(|e| panic!("tile backend error: {e:#}")));
-        }
-        out.into_iter().map(|o| o.unwrap()).collect()
+        self.transport.run(jobs)
     }
-}
-
-impl Drop for DevicePool {
-    fn drop(&mut self) {
-        for q in &self.queues {
-            let (lock, cv) = &**q;
-            lock.lock().unwrap().push_back(Message::Shutdown);
-            cv.notify_one();
-        }
-        let _ = &self.results_tx;
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// Process one row partition on a worker: stream column tiles — or replay
-/// worker-cached correlation blocks gemm-only — accumulating
-/// K(X^(l), :) V in f64. Output layout: [kv (rows*t)] for Mvm, or
-/// [kv | g_0 | g_1 | ...] each (rows*t) for MvmGrads.
-///
-/// Cached and streaming tiles produce bitwise-identical f32 outputs
-/// (`TileBackend::mvm_cached` contract), and the f64 accumulation
-/// traversal order below is the same either way, so enabling the cache
-/// never changes an MVM result.
-fn run_partition(
-    backend: &mut dyn crate::exec::TileBackend,
-    job: &Job,
-    cache: &mut WorkerCache,
-) -> anyhow::Result<Vec<f64>> {
-    let spec = backend.spec();
-    let t = spec.t;
-    let nl = match job.kind {
-        JobKind::Mvm => 0,
-        JobKind::MvmGrads { nl } => nl,
-    };
-    // Number of *reported* gradient blocks: native reports per true-dim,
-    // PJRT reports per padded-dim; both are handled by the caller keeping
-    // only the first n_ls blocks.
-    let out_blocks = 1 + nl;
-    let mut acc = vec![0.0f64; out_blocks * job.row_len * t];
-
-    // Communication accounting: only theta here — the RHS is charged once
-    // per device per MVM by `PartitionedKernelOp::run_jobs` (the paper's
-    // model: "supply each device with a new right-hand-side vector v"),
-    // and X tiles are device-resident (uploaded once), so neither is
-    // charged per partition. Cached rho blocks are likewise
-    // device-resident and move no bytes.
-    job.acct.add_to_device(job.theta.len() as u64 * 4);
-
-    // Reconcile the cache identity: blocks materialized for another
-    // operator or an older hyper generation are dead — clear them before
-    // any lookup so they can never be served.
-    let block = spec.r * spec.c;
-    let use_cache =
-        job.cache_tiles > 0 && matches!(job.kind, JobKind::Mvm) && backend.supports_cache();
-    if use_cache && (cache.op_id != job.op_id || cache.generation != job.generation) {
-        cache.strips.clear();
-        cache.op_id = job.op_id;
-        cache.generation = job.generation;
-    }
-    let mut strip = if use_cache {
-        let mut s = cache.strips.remove(&job.row_start).unwrap_or_default();
-        if s.data.len() < job.cache_tiles * block {
-            s.data.resize(job.cache_tiles * block, 0.0);
-        }
-        s
-    } else {
-        CachedStrip::default()
-    };
-
-    // Partitions need not be tile-aligned (memory budgets can give
-    // rows-per-partition < tile height); clamp the row block to the padded
-    // data and zero-fill the overhang in a scratch tile.
-    let mut xr_scratch = vec![0.0f32; spec.r * job.row_data.d_pad];
-    let mut tile_idx = 0usize;
-    let mut row = job.row_start;
-    while row < job.row_start + job.row_len {
-        let avail = job.row_data.n_pad.saturating_sub(row).min(spec.r);
-        let xr: &[f32] = if avail == spec.r {
-            job.row_data.row_block(row, spec.r)
-        } else {
-            xr_scratch.iter_mut().for_each(|v| *v = 0.0);
-            xr_scratch[..avail * job.row_data.d_pad]
-                .copy_from_slice(job.row_data.row_block(row, avail));
-            &xr_scratch
-        };
-        let mut col = 0;
-        while col < job.col_limit {
-            let xc = job.col_data.row_block(col, spec.c);
-            let vt = &job.v[col * t..(col + spec.c) * t];
-            job.acct
-                .note_tile((spec.r * spec.c * 4 + spec.c * t * 4 + spec.r * t * 4) as u64);
-            match job.kind {
-                JobKind::Mvm => {
-                    let kv = if use_cache && tile_idx < job.cache_tiles {
-                        let rho = &mut strip.data[tile_idx * block..(tile_idx + 1) * block];
-                        if tile_idx >= strip.filled {
-                            // Fills happen in traversal order, so `filled`
-                            // is always a prefix count.
-                            backend.materialize_tile(xr, xc, &job.theta, rho)?;
-                            strip.filled = tile_idx + 1;
-                            job.acct.note_cache_fill();
-                        } else {
-                            job.acct.note_cache_hit();
-                        }
-                        backend.mvm_cached(rho, vt, &job.theta)?
-                    } else {
-                        backend.mvm(xr, xc, vt, &job.theta)?
-                    };
-                    let base = (row - job.row_start) * t;
-                    for i in 0..spec.r {
-                        if row + i >= job.row_start + job.row_len {
-                            break;
-                        }
-                        for j in 0..t {
-                            acc[base + i * t + j] += kv[i * t + j] as f64;
-                        }
-                    }
-                }
-                JobKind::MvmGrads { nl } => {
-                    let (kv, g) = backend.mvm_grads(xr, xc, vt, &job.theta)?;
-                    let base = (row - job.row_start) * t;
-                    let block = job.row_len * t;
-                    let n_g = backend.n_ls_grads().min(nl);
-                    for i in 0..spec.r {
-                        if row + i >= job.row_start + job.row_len {
-                            break;
-                        }
-                        for j in 0..t {
-                            acc[base + i * t + j] += kv[i * t + j] as f64;
-                        }
-                        for l in 0..n_g {
-                            for j in 0..t {
-                                acc[block * (1 + l) + base + i * t + j] +=
-                                    g[l * spec.r * t + i * t + j] as f64;
-                            }
-                        }
-                    }
-                }
-            }
-            col += spec.c;
-            tile_idx += 1;
-        }
-        row += spec.r;
-    }
-    if use_cache {
-        cache.strips.insert(job.row_start, strip);
-    }
-    job.acct.add_from_device((acc.len() * 8) as u64);
-    Ok(acc)
 }

@@ -1,0 +1,143 @@
+//! The local transport: W in-process worker threads standing in for W
+//! GPUs — the default, and the pre-transport `DevicePool` behavior
+//! verbatim (same sticky routing, same per-worker backend and resident
+//! cache, same synchronous batch semantics).
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::exec::pool::Job;
+use crate::exec::transport::worker::{run_partition, WorkerCache};
+use crate::exec::transport::Transport;
+use crate::exec::BackendFactory;
+
+enum Message {
+    Work(Job),
+    Shutdown,
+}
+
+type WorkQueue = Arc<(Mutex<VecDeque<Message>>, Condvar)>;
+
+/// In-process thread-pool transport. Each worker thread owns a private
+/// `TileBackend` (PJRT handles are not `Send`; per-device isolation is
+/// exactly the paper's setup) plus a resident kernel-block cache, and
+/// executes jobs through the same `run_partition` as the subprocess
+/// worker.
+pub struct LocalTransport {
+    queues: Vec<WorkQueue>,
+    results_rx: Mutex<mpsc::Receiver<(usize, Result<Vec<f64>>)>>,
+    results_tx: mpsc::Sender<(usize, Result<Vec<f64>>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl LocalTransport {
+    /// Spawn `workers` threads, each constructing its own backend via
+    /// `factory`; fails synchronously if any backend fails to build.
+    pub fn new(workers: usize, factory: BackendFactory) -> Result<LocalTransport> {
+        anyhow::ensure!(
+            workers > 0,
+            "device pool needs at least one worker (exec.workers = 0)"
+        );
+        let queues: Vec<WorkQueue> = (0..workers)
+            .map(|_| Arc::new((Mutex::new(VecDeque::new()), Condvar::new())))
+            .collect();
+        let (results_tx, results_rx) = mpsc::channel();
+        let mut handles = Vec::with_capacity(workers);
+        // Surface backend construction errors synchronously.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for wid in 0..workers {
+            let queue = queues[wid].clone();
+            let tx = results_tx.clone();
+            let factory = factory.clone();
+            let ready = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut backend = match factory(wid) {
+                    Ok(b) => {
+                        let _ = ready.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                let mut cache = WorkerCache::default();
+                loop {
+                    let msg = {
+                        let (lock, cv) = &*queue;
+                        let mut q = lock.lock().unwrap();
+                        loop {
+                            if let Some(m) = q.pop_front() {
+                                break m;
+                            }
+                            q = cv.wait(q).unwrap();
+                        }
+                    };
+                    match msg {
+                        Message::Shutdown => break,
+                        Message::Work(job) => {
+                            let id = job.id;
+                            let out = run_partition(&mut *backend, &job, &mut cache);
+                            let _ = tx.send((id, out));
+                        }
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            ready_rx.recv().expect("worker init channel")?;
+        }
+        Ok(LocalTransport { queues, results_rx: Mutex::new(results_rx), results_tx, handles, workers })
+    }
+}
+
+impl Transport for LocalTransport {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute all jobs; panics on backend errors (they indicate broken
+    /// artifacts / shape mismatches — programming errors, not data).
+    ///
+    /// Concurrent `run` calls (e.g. two threads sharing one model and
+    /// predicting at once) are serialized: the result channel is held for
+    /// the whole submit-and-drain, so one caller can never collect —
+    /// or be short-changed by — another caller's job results (job ids
+    /// restart at 0 for every batch). Parallelism lives in the workers,
+    /// not in overlapping batches.
+    fn run(&self, jobs: Vec<Job>) -> Vec<Vec<f64>> {
+        let n = jobs.len();
+        // Take the receiver BEFORE enqueuing: from here to the last recv
+        // this batch owns the channel end-to-end.
+        let rx = self.results_rx.lock().unwrap();
+        for j in jobs {
+            let (lock, cv) = &*self.queues[j.id % self.workers];
+            lock.lock().unwrap().push_back(Message::Work(j));
+            cv.notify_one();
+        }
+        let mut out: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (id, res) = rx.recv().expect("worker died");
+            out[id] = Some(res.unwrap_or_else(|e| panic!("tile backend error: {e:#}")));
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for LocalTransport {
+    fn drop(&mut self) {
+        for q in &self.queues {
+            let (lock, cv) = &**q;
+            lock.lock().unwrap().push_back(Message::Shutdown);
+            cv.notify_one();
+        }
+        let _ = &self.results_tx;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

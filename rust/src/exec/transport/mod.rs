@@ -1,0 +1,198 @@
+//! Transport abstraction: how partition jobs reach the workers that
+//! execute them.
+//!
+//! The paper's distributed-MVM scheme (SS3) is one coordinator handing
+//! row-partition jobs to W devices and collecting (rows x t) results —
+//! nothing about it requires the devices to live in the coordinator's
+//! process. This module makes that seam explicit:
+//!
+//! * [`Transport`] — the executor contract `DevicePool` delegates to:
+//!   submit a batch of [`pool::Job`]s, get back per-job f64 accumulators.
+//!   `PartitionedKernelOp` / `CrossKernelOp` never see which
+//!   implementation is underneath.
+//! * [`local`] — today's in-process worker threads (the default;
+//!   bitwise-identical to the pre-transport behavior).
+//! * [`subprocess`] — worker processes of our own binary
+//!   (`exactgp worker`) speaking the framed [`wire`] protocol over
+//!   stdin/stdout pipes, with coordinator-side fault handling: a worker
+//!   that dies or times out mid-solve is respawned and its in-flight
+//!   jobs are resubmitted.
+//! * [`worker`] — the shared per-job execution path (`run_partition` and
+//!   the resident block cache) plus the subprocess worker's stdio serve
+//!   loop. Both transports run the *same* function per job, which is
+//!   what makes their results bitwise-identical by construction.
+//! * [`BackendSpec`] — a serializable description of a worker backend,
+//!   so a worker process can rebuild its `TileBackend` on the far side
+//!   of a pipe (closures in [`BackendFactory`] cannot cross a process
+//!   boundary).
+//!
+//! Cache semantics are transport-invariant: blocks live next to whichever
+//! worker executes the jobs (thread or process), keyed by
+//! `(op_id, generation)`, and `set_hypers` invalidates them through the
+//! generation bump carried by every job — the far side never needs an
+//! explicit invalidation message.
+
+pub mod local;
+pub mod pjrt;
+pub mod subprocess;
+pub(crate) mod wire;
+pub mod worker;
+
+use anyhow::Result;
+
+use crate::config::{Backend, Config, Flavor};
+use crate::exec::pool::Job;
+use crate::exec::{native::NativeBackend, BackendFactory, TileBackend, TileSpec};
+use crate::kernels::KernelKind;
+use crate::runtime::Manifest;
+
+/// Executor seam under `DevicePool`: submit a batch of row-partition
+/// jobs, collect the per-job f64 accumulators ordered by job id.
+///
+/// Contract (shared by every implementation):
+/// * routing is sticky — job `id % workers()` always lands on the same
+///   worker, so the worker holding a row range's cached blocks sees that
+///   range again on the next MVM;
+/// * `run` is synchronous and batch-exclusive — concurrent callers are
+///   serialized, one batch owns the result path end to end;
+/// * backend errors are programming errors (broken artifacts, shape
+///   mismatches) and panic, matching the pre-transport `DevicePool`.
+pub trait Transport: Send + Sync {
+    /// Worker ("device") count; the sticky-routing modulus.
+    fn workers(&self) -> usize;
+
+    /// Execute all jobs; returns results indexed by job id (ids must be
+    /// `0..jobs.len()`, each appearing once).
+    fn run(&self, jobs: Vec<Job>) -> Vec<Vec<f64>>;
+}
+
+/// Serializable description of a worker backend: everything a worker —
+/// in-process or on the far side of a pipe — needs to construct its
+/// private `TileBackend`. The process-capable counterpart of
+/// [`BackendFactory`], whose closures cannot be shipped to a subprocess.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendSpec {
+    /// Pure-Rust tile evaluation (`exec::native`).
+    Native {
+        /// Kernel family.
+        kernel: KernelKind,
+        /// Per-dimension lengthscales vs one shared.
+        ard: bool,
+        /// Tile geometry.
+        spec: TileSpec,
+    },
+    /// AOT artifacts through the PJRT client (`exec::transport::pjrt`).
+    Pjrt {
+        /// Directory holding the artifact manifest.
+        artifacts_dir: String,
+        /// Kernel family.
+        kernel: KernelKind,
+        /// Per-dimension lengthscales vs one shared.
+        ard: bool,
+        /// Preferred artifact flavor.
+        flavor: Flavor,
+        /// Tile geometry (must match the compiled artifacts).
+        spec: TileSpec,
+    },
+}
+
+impl BackendSpec {
+    /// Describe the backend a config selects (the spec-level counterpart
+    /// of `exec::backend_factory`). For PJRT, validates artifact
+    /// availability up front so a bad manifest fails in the coordinator
+    /// with a readable error instead of inside a worker.
+    pub fn from_config(
+        cfg: &Config,
+        kind: KernelKind,
+        ard: bool,
+        d_pad: usize,
+        spec: TileSpec,
+    ) -> Result<BackendSpec> {
+        match cfg.backend {
+            Backend::Native => Ok(BackendSpec::Native { kernel: kind, ard, spec }),
+            Backend::Pjrt => {
+                let mode = if ard { "ard" } else { "shared" };
+                let manifest =
+                    Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+                manifest.require(
+                    "mvm",
+                    kind.name(),
+                    mode,
+                    cfg.flavor.name(),
+                    &[("t", spec.t), ("d", d_pad)],
+                )?;
+                Ok(BackendSpec::Pjrt {
+                    artifacts_dir: cfg.artifacts_dir.clone(),
+                    kernel: kind,
+                    ard,
+                    flavor: cfg.flavor,
+                    spec,
+                })
+            }
+        }
+    }
+
+    /// The tile geometry workers built from this spec will use.
+    pub fn tile_spec(&self) -> TileSpec {
+        match self {
+            BackendSpec::Native { spec, .. } | BackendSpec::Pjrt { spec, .. } => *spec,
+        }
+    }
+
+    /// Construct one worker's backend (the subprocess worker calls this
+    /// after decoding the spec from its `Init` frame).
+    pub fn build(&self) -> Result<Box<dyn TileBackend>> {
+        match self {
+            BackendSpec::Native { kernel, ard, spec } => {
+                Ok(Box::new(NativeBackend::new(*kernel, *ard, *spec)) as Box<dyn TileBackend>)
+            }
+            BackendSpec::Pjrt { artifacts_dir, kernel, ard, flavor, spec } => {
+                let manifest = Manifest::load(std::path::Path::new(artifacts_dir))?;
+                let mode = if *ard { "ard" } else { "shared" };
+                let b = pjrt::PjrtBackend::new(
+                    &manifest,
+                    kernel.name(),
+                    mode,
+                    flavor.name(),
+                    *spec,
+                )?;
+                Ok(Box::new(b) as Box<dyn TileBackend>)
+            }
+        }
+    }
+
+    /// A per-worker [`BackendFactory`] over this spec (the local
+    /// transport's construction path). PJRT loads and validates the
+    /// manifest once here, then each worker compiles its own executables
+    /// from it — the same sharing the closure-based factory always did.
+    pub fn factory(&self) -> Result<BackendFactory> {
+        match self.clone() {
+            BackendSpec::Native { kernel, ard, spec } => Ok(std::sync::Arc::new(move |_wid| {
+                Ok(Box::new(NativeBackend::new(kernel, ard, spec)) as Box<dyn TileBackend>)
+            })),
+            BackendSpec::Pjrt { artifacts_dir, kernel, ard, flavor, spec } => {
+                let manifest = std::sync::Arc::new(Manifest::load(std::path::Path::new(
+                    &artifacts_dir,
+                ))?);
+                let mode = if ard { "ard" } else { "shared" };
+                manifest.require(
+                    "mvm",
+                    kernel.name(),
+                    mode,
+                    flavor.name(),
+                    &[("t", spec.t), ("d", spec.d)],
+                )?;
+                Ok(std::sync::Arc::new(move |_wid| {
+                    let b = pjrt::PjrtBackend::new(
+                        &manifest,
+                        kernel.name(),
+                        mode,
+                        flavor.name(),
+                        spec,
+                    )?;
+                    Ok(Box::new(b) as Box<dyn TileBackend>)
+                }))
+            }
+        }
+    }
+}

@@ -1,9 +1,12 @@
 //! PJRT tile backend: executes the AOT artifacts (L1 Pallas or L2 jnp
 //! flavor) through the `xla` crate's PJRT CPU client.
 //!
-//! One backend per worker thread, holding its own `Engine` (client) and
-//! compiled executables; this mirrors per-GPU compilation in the paper's
-//! setup and sidesteps `Send` constraints on PJRT handles.
+//! One backend per worker — thread or process — holding its own `Engine`
+//! (client) and compiled executables; this mirrors per-GPU compilation in
+//! the paper's setup and sidesteps `Send` constraints on PJRT handles.
+//! Workers on the far side of a pipe rebuild it from the `BackendSpec` in
+//! their `Init` frame, so the backend itself never crosses the transport
+//! seam — only its description does.
 
 use anyhow::{Context, Result};
 

@@ -1,0 +1,516 @@
+//! The subprocess transport: worker *processes* of our own binary
+//! (`exactgp worker`), speaking the framed [`wire`] protocol over
+//! stdin/stdout pipes.
+//!
+//! Topology: one coordinator, W children. Each child owns a private
+//! backend and a resident kernel-block cache (exactly like a local worker
+//! thread — the cache and its `(op_id, generation)` invalidation live on
+//! the far side of the pipe). A dedicated reader thread per child drains
+//! its stdout into one event channel, so result collection never blocks
+//! job submission and a full pipe cannot deadlock the batch.
+//!
+//! Data residency: `PaddedData` operands upload once per worker, keyed by
+//! their process-unique data id, and are referenced by id in every job —
+//! per-MVM traffic stays O(n) (RHS + theta out, rows x t back), the
+//! paper's communication model with real serialization behind it.
+//!
+//! Fault handling: a worker that exits (or times out on its oldest
+//! in-flight job) is killed, respawned, re-initialized, re-uploaded, and
+//! its in-flight jobs are resubmitted — counted in `Accounting`
+//! (`worker_restarts`, `jobs_resubmitted`). Stale events from a dead
+//! incarnation are fenced off by an incarnation number. The
+//! `EXACTGP_KILL_WORKER_AFTER_JOBS` hook (or `SubprocessOptions`) arms a
+//! deterministic mid-solve death on worker 0's first incarnation to prove
+//! the path.
+
+use std::collections::{BTreeMap, HashSet};
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::exec::pool::Job;
+use crate::exec::transport::{wire, BackendSpec, Transport};
+use crate::exec::PaddedData;
+use crate::metrics::Accounting;
+
+/// Spawning knobs for the subprocess transport.
+#[derive(Clone, Debug, Default)]
+pub struct SubprocessOptions {
+    /// Worker executable. `None` resolves `EXACTGP_WORKER_BIN`, then the
+    /// current executable (when it *is* `exactgp`), then an `exactgp`
+    /// sibling of the current executable (covers `target/*/deps` test
+    /// binaries finding `target/*/exactgp`).
+    pub worker_bin: Option<PathBuf>,
+    /// Fault injection: worker 0's first incarnation exits after this
+    /// many jobs.
+    pub kill_after_jobs: Option<u64>,
+    /// Fault injection: worker 0's first incarnation hangs after this
+    /// many jobs (exercises the timeout path).
+    pub hang_after_jobs: Option<u64>,
+    /// Declare a worker hung when it has in-flight jobs but no progress
+    /// for this long; `None` disables the timeout.
+    pub job_timeout: Option<Duration>,
+}
+
+impl SubprocessOptions {
+    /// Read the environment hooks: `EXACTGP_KILL_WORKER_AFTER_JOBS`
+    /// (fault injection) and `EXACTGP_WORKER_TIMEOUT_SECS` (hang
+    /// detection; 0 disables).
+    pub fn from_env() -> SubprocessOptions {
+        let kill = std::env::var("EXACTGP_KILL_WORKER_AFTER_JOBS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&n| n > 0);
+        let timeout = std::env::var("EXACTGP_WORKER_TIMEOUT_SECS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok());
+        SubprocessOptions {
+            worker_bin: None,
+            kill_after_jobs: kill,
+            hang_after_jobs: None,
+            job_timeout: timeout.filter(|&t| t > 0).map(Duration::from_secs),
+        }
+    }
+
+    /// Environment hooks plus the config's `exec.worker_timeout_secs`
+    /// (the env timeout, when set, wins so a run can be unstuck without
+    /// editing configs).
+    pub fn from_config(cfg: &Config) -> SubprocessOptions {
+        let mut o = SubprocessOptions::from_env();
+        if o.job_timeout.is_none() && cfg.worker_timeout_secs > 0 {
+            o.job_timeout = Some(Duration::from_secs(cfg.worker_timeout_secs));
+        }
+        o
+    }
+}
+
+/// Locate the worker executable (see `SubprocessOptions::worker_bin`).
+fn resolve_worker_bin(opts: &SubprocessOptions) -> Result<PathBuf> {
+    if let Some(p) = &opts.worker_bin {
+        return Ok(p.clone());
+    }
+    if let Some(p) = std::env::var_os("EXACTGP_WORKER_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    if exe.file_stem().and_then(|s| s.to_str()) == Some("exactgp") {
+        return Ok(exe);
+    }
+    let name = if cfg!(windows) { "exactgp.exe" } else { "exactgp" };
+    let mut candidates = Vec::new();
+    if let Some(dir) = exe.parent() {
+        candidates.push(dir.join(name));
+        // Test binaries live in target/{profile}/deps; the CLI sits one
+        // level up at target/{profile}/exactgp.
+        if dir.file_name() == Some(std::ffi::OsStr::new("deps")) {
+            if let Some(up) = dir.parent() {
+                candidates.push(up.join(name));
+            }
+        }
+    }
+    for c in candidates {
+        if c.is_file() {
+            return Ok(c);
+        }
+    }
+    bail!(
+        "cannot locate the exactgp worker binary next to {}; set EXACTGP_WORKER_BIN \
+         (or SubprocessOptions.worker_bin) to the exactgp executable",
+        exe.display()
+    )
+}
+
+/// What a reader thread reports: a decoded frame (with its wire size) or
+/// the death of its pipe.
+enum Event {
+    Frame(u64, wire::Response),
+    Dead,
+}
+
+/// One worker child. `inc` is the incarnation number: events from a dead
+/// incarnation's reader thread carry the old value and are ignored.
+struct Slot {
+    child: Child,
+    stdin: ChildStdin,
+    inc: u64,
+    uploaded: HashSet<u64>,
+}
+
+struct Inner {
+    slots: Vec<Slot>,
+    rx: Receiver<(usize, u64, Event)>,
+    tx: Sender<(usize, u64, Event)>,
+}
+
+/// Worker-process transport (see the module docs).
+pub struct SubprocessTransport {
+    inner: Mutex<Inner>,
+    backend: BackendSpec,
+    bin: PathBuf,
+    opts: SubprocessOptions,
+    workers: usize,
+}
+
+fn reader_thread(wid: usize, inc: u64, stdout: ChildStdout, tx: Sender<(usize, u64, Event)>) {
+    let mut r = BufReader::new(stdout);
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(buf) => {
+                let bytes = buf.len() as u64 + 4;
+                match wire::decode_response(&buf) {
+                    Ok(resp) => {
+                        if tx.send((wid, inc, Event::Frame(bytes, resp))).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        // Garbage on the protocol channel: treat the worker
+                        // as lost (it will be killed and respawned).
+                        let _ = tx.send((wid, inc, Event::Dead));
+                        return;
+                    }
+                }
+            }
+            Err(_) => {
+                let _ = tx.send((wid, inc, Event::Dead));
+                return;
+            }
+        }
+    }
+}
+
+/// Spawn one worker child at incarnation `inc` and send its `Init`.
+fn spawn_slot(
+    bin: &Path,
+    backend: &BackendSpec,
+    wid: usize,
+    inc: u64,
+    tx: Sender<(usize, u64, Event)>,
+    kill_after_jobs: u64,
+    hang_after_jobs: u64,
+) -> Result<Slot> {
+    let mut child = Command::new(bin)
+        .arg("worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        // The kill hook is coordinator-owned: it arms worker 0's first
+        // incarnation via Init, and must not leak into children (a worker
+        // never reads it, but being explicit keeps respawns obviously
+        // unarmed). A worker is a leaf, never a coordinator.
+        .env_remove("EXACTGP_KILL_WORKER_AFTER_JOBS")
+        .env_remove("EXACTGP_TRANSPORT")
+        .spawn()
+        .with_context(|| format!("spawning worker process {}", bin.display()))?;
+    let mut stdin = child.stdin.take().expect("piped stdin");
+    let stdout = child.stdout.take().expect("piped stdout");
+    std::thread::spawn(move || reader_thread(wid, inc, stdout, tx));
+    wire::write_frame(
+        &mut stdin,
+        &wire::encode_init(wid as u64, backend, kill_after_jobs, hang_after_jobs),
+    )
+    .with_context(|| format!("sending Init to worker {wid}"))?;
+    Ok(Slot { child, stdin, inc, uploaded: HashSet::new() })
+}
+
+/// Send one already-encoded frame, counting its wire bytes.
+fn send(slot: &mut Slot, payload: &[u8], acct: &Accounting) -> Result<()> {
+    wire::write_frame(&mut slot.stdin, payload)?;
+    acct.add_ipc_tx(payload.len() as u64 + 4);
+    Ok(())
+}
+
+/// Upload an operand if this worker incarnation has not seen it yet.
+fn ensure_uploaded(slot: &mut Slot, data: &PaddedData, acct: &Accounting) -> Result<()> {
+    if slot.uploaded.insert(data.data_id()) {
+        send(
+            slot,
+            &wire::encode_upload(
+                data.data_id(),
+                data.n as u64,
+                data.n_pad as u64,
+                data.d as u64,
+                data.d_pad as u64,
+                &data.x,
+            ),
+            acct,
+        )?;
+    }
+    Ok(())
+}
+
+/// (Re)send every job a worker owns, uploading operands first.
+fn submit_all(slot: &mut Slot, jobs: &BTreeMap<usize, Job>, acct: &Accounting) -> Result<()> {
+    for job in jobs.values() {
+        ensure_uploaded(slot, &job.row_data, acct)?;
+        ensure_uploaded(slot, &job.col_data, acct)?;
+        send(slot, &wire::encode_run(job), acct)?;
+    }
+    Ok(())
+}
+
+/// Kill + respawn worker `wid` and resubmit its in-flight jobs, counting
+/// the restart. Panics when a worker keeps dying past the restart cap —
+/// at that point the failure is systemic, not transient.
+#[allow(clippy::too_many_arguments)]
+fn revive(
+    slots: &mut [Slot],
+    tx: &Sender<(usize, u64, Event)>,
+    bin: &Path,
+    backend: &BackendSpec,
+    wid: usize,
+    inflight: &BTreeMap<usize, Job>,
+    acct: &Accounting,
+    restarts: &mut usize,
+    cap: usize,
+) {
+    *restarts += 1;
+    if *restarts > cap {
+        panic!(
+            "subprocess transport: worker {wid} keeps dying ({restarts} restarts this \
+             batch); giving up"
+        );
+    }
+    acct.note_worker_restart();
+    acct.note_jobs_resubmitted(inflight.len() as u64);
+    let _ = slots[wid].child.kill();
+    let _ = slots[wid].child.wait();
+    let inc = slots[wid].inc + 1;
+    // Respawns are never armed with fault injection — a kill hook that
+    // re-armed itself would loop forever.
+    match spawn_slot(bin, backend, wid, inc, tx.clone(), 0, 0) {
+        Ok(slot) => slots[wid] = slot,
+        Err(e) => panic!("subprocess transport: failed to respawn worker {wid}: {e:#}"),
+    }
+    // A fresh process holds no data and no cache: re-upload and resubmit.
+    // If these writes fail the new child is already dead; its reader's
+    // Dead event triggers the next revive (bounded by the cap above).
+    if let Err(e) = submit_all(&mut slots[wid], inflight, acct) {
+        eprintln!("subprocess transport: resubmission to worker {wid} failed ({e:#}); retrying");
+    }
+}
+
+impl SubprocessTransport {
+    /// Spawn `workers` children of `exactgp worker` and complete the init
+    /// handshake with each; fails synchronously if any worker's backend
+    /// fails to build (mirroring the local transport's construction).
+    pub fn new(
+        workers: usize,
+        backend: BackendSpec,
+        opts: SubprocessOptions,
+    ) -> Result<SubprocessTransport> {
+        anyhow::ensure!(
+            workers > 0,
+            "device pool needs at least one worker (exec.workers = 0)"
+        );
+        let bin = resolve_worker_bin(&opts)?;
+        let (tx, rx) = mpsc::channel();
+        let mut slots: Vec<Slot> = Vec::with_capacity(workers);
+        let spawn_all = (|| -> Result<()> {
+            for wid in 0..workers {
+                let (kill, hang) = if wid == 0 {
+                    (opts.kill_after_jobs.unwrap_or(0), opts.hang_after_jobs.unwrap_or(0))
+                } else {
+                    (0, 0)
+                };
+                slots.push(spawn_slot(&bin, &backend, wid, 0, tx.clone(), kill, hang)?);
+            }
+            Ok(())
+        })();
+        let kill_all = |slots: &mut Vec<Slot>| {
+            for s in slots.iter_mut() {
+                let _ = s.child.kill();
+                let _ = s.child.wait();
+            }
+        };
+        if let Err(e) = spawn_all {
+            kill_all(&mut slots);
+            return Err(e);
+        }
+        // Wait for every worker's Ready so backend-construction errors
+        // surface here, not mid-solve.
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut ready = vec![false; workers];
+        while ready.iter().any(|r| !r) {
+            let remain = deadline.saturating_duration_since(Instant::now());
+            let ev = if remain.is_zero() { Err(RecvTimeoutError::Timeout) } else { rx.recv_timeout(remain) };
+            match ev {
+                Ok((wid, _inc, Event::Frame(_, wire::Response::Ready))) => ready[wid] = true,
+                Ok((wid, _inc, Event::Frame(_, wire::Response::InitErr(msg)))) => {
+                    kill_all(&mut slots);
+                    bail!("worker {wid} backend init failed: {msg}");
+                }
+                Ok((wid, _inc, Event::Dead)) => {
+                    kill_all(&mut slots);
+                    bail!("worker {wid} exited during the init handshake");
+                }
+                Ok(_) => {} // no jobs are in flight yet; nothing else is valid
+                Err(_) => {
+                    kill_all(&mut slots);
+                    bail!("timed out waiting for worker init handshake");
+                }
+            }
+        }
+        Ok(SubprocessTransport {
+            inner: Mutex::new(Inner { slots, rx, tx }),
+            backend,
+            bin,
+            opts,
+            workers,
+        })
+    }
+}
+
+impl Transport for SubprocessTransport {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute all jobs across the worker children. Semantics match the
+    /// local transport: synchronous, batch-exclusive (the inner state is
+    /// one mutex), panics on backend errors. Additionally: workers that
+    /// die or stall are respawned and their in-flight jobs resubmitted,
+    /// so a batch completes — with identical results — through worker
+    /// loss.
+    fn run(&self, jobs: Vec<Job>) -> Vec<Vec<f64>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // All jobs of a batch share the operator's accounting.
+        let acct: Arc<Accounting> = jobs[0].acct.clone();
+        let mut guard = self.inner.lock().unwrap();
+        let Inner { slots, rx, tx } = &mut *guard;
+        let w = self.workers;
+        let restart_cap = w * 3 + 5;
+        let mut restarts = 0usize;
+
+        // Sticky routing: job id % workers, same as the local transport.
+        let mut inflight: Vec<BTreeMap<usize, Job>> = (0..w).map(|_| BTreeMap::new()).collect();
+        for job in jobs {
+            inflight[job.id % w].insert(job.id, job);
+        }
+        for wid in 0..w {
+            if submit_all(&mut slots[wid], &inflight[wid], &acct).is_err() {
+                // Dead before the batch even started: the reader's Dead
+                // event is on its way, but revive now so the batch is not
+                // stuck waiting on an unsubmitted worker.
+                revive(
+                    slots, tx, &self.bin, &self.backend, wid, &inflight[wid], &acct,
+                    &mut restarts, restart_cap,
+                );
+            }
+        }
+
+        let mut out: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
+        let mut done = 0usize;
+        let mut last_progress = vec![Instant::now(); w];
+        let tick = Duration::from_millis(100);
+        while done < n {
+            match rx.recv_timeout(tick) {
+                Ok((wid, inc, ev)) => {
+                    if inc != slots[wid].inc {
+                        continue; // stale event from a killed incarnation
+                    }
+                    match ev {
+                        Event::Frame(bytes, resp) => {
+                            acct.add_ipc_rx(bytes);
+                            match resp {
+                                // A respawned worker's handshake.
+                                wire::Response::Ready => {}
+                                wire::Response::InitErr(msg) => panic!(
+                                    "tile backend error: worker {wid} re-init failed: {msg}"
+                                ),
+                                wire::Response::JobOk { id, acct: wa, out: data } => {
+                                    let id = id as usize;
+                                    if let Some(job) = inflight[wid].remove(&id) {
+                                        // Merge the worker's counter delta so
+                                        // accounting matches the local
+                                        // transport bit for bit.
+                                        job.acct.merge_remote(&wa.to_snapshot());
+                                        out[id] = Some(data);
+                                        done += 1;
+                                        last_progress[wid] = Instant::now();
+                                    }
+                                }
+                                wire::Response::JobErr { id: _, msg } => {
+                                    panic!("tile backend error: {msg}")
+                                }
+                            }
+                        }
+                        Event::Dead => {
+                            eprintln!(
+                                "subprocess transport: worker {wid} died with {} jobs in \
+                                 flight; respawning",
+                                inflight[wid].len()
+                            );
+                            revive(
+                                slots, tx, &self.bin, &self.backend, wid, &inflight[wid],
+                                &acct, &mut restarts, restart_cap,
+                            );
+                            last_progress[wid] = Instant::now();
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(t) = self.opts.job_timeout {
+                        for wid in 0..w {
+                            if !inflight[wid].is_empty() && last_progress[wid].elapsed() >= t {
+                                eprintln!(
+                                    "subprocess transport: worker {wid} made no progress \
+                                     for {:.1}s with {} jobs in flight; killing and \
+                                     respawning",
+                                    t.as_secs_f64(),
+                                    inflight[wid].len()
+                                );
+                                revive(
+                                    slots, tx, &self.bin, &self.backend, wid,
+                                    &inflight[wid], &acct, &mut restarts, restart_cap,
+                                );
+                                last_progress[wid] = Instant::now();
+                            }
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // We hold a Sender in Inner; this cannot happen.
+                    panic!("subprocess transport: event channel closed");
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("every job id completed")).collect()
+    }
+}
+
+impl Drop for SubprocessTransport {
+    fn drop(&mut self) {
+        let Ok(mut inner) = self.inner.lock() else { return };
+        for slot in &mut inner.slots {
+            let _ = wire::write_frame(&mut slot.stdin, &wire::encode_shutdown());
+        }
+        for slot in &mut inner.slots {
+            // Workers exit on Shutdown; kill stragglers (a hung
+            // fault-injection worker never drains its queue).
+            let deadline = Instant::now() + Duration::from_millis(500);
+            loop {
+                match slot.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10))
+                    }
+                    _ => {
+                        let _ = slot.child.kill();
+                        let _ = slot.child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}

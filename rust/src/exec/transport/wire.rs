@@ -1,0 +1,642 @@
+//! Framed wire protocol between the coordinator and worker processes.
+//!
+//! Every message is one frame: `[u32 payload-length (LE)][payload]`.
+//! Payloads are hand-rolled little-endian (no serde in the offline
+//! dependency closure): a leading `u8` tag, then the fields in a fixed
+//! order. Slices encode as a `u64` element count followed by the raw
+//! little-endian elements.
+//!
+//! Requests (coordinator -> worker):
+//! * `Init` — worker id, the serializable [`BackendSpec`], and the
+//!   fault-injection arming (kill/hang after N jobs). Sent exactly once,
+//!   first; the worker answers `Ready` or `InitErr`.
+//! * `Upload` — one `PaddedData` operand, keyed by its process-unique
+//!   data id. Sent lazily before the first job referencing it (and again
+//!   after a respawn — a fresh worker holds no data).
+//! * `Run` — one row-partition job. References operands by data id; the
+//!   RHS and theta travel inline (the paper's per-MVM communication).
+//! * `Shutdown` — drain and exit.
+//!
+//! Responses (worker -> coordinator):
+//! * `Ready` / `InitErr` — the init handshake.
+//! * `JobOk` — job id, the worker's per-job [`WireAcct`] counter delta
+//!   (so coordinator-side accounting matches the local transport
+//!   exactly), and the (rows x t) f64 accumulator.
+//! * `JobErr` — job id plus the backend error text.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Flavor;
+use crate::exec::pool::{Job, JobKind};
+use crate::exec::transport::BackendSpec;
+use crate::exec::TileSpec;
+use crate::kernels::KernelKind;
+use crate::metrics::AccountingSnapshot;
+
+/// Frames larger than this are protocol corruption, not data.
+const MAX_FRAME: u32 = u32::MAX - 4;
+
+/// Write one `[u32 len][payload]` frame and flush it.
+pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    let len = u32::try_from(payload.len()).context("frame exceeds u32 length")?;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds the protocol maximum");
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload (errors on EOF or a corrupt length).
+pub(crate) fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut lb = [0u8; 4];
+    r.read_exact(&mut lb).context("reading frame length")?;
+    let len = u32::from_le_bytes(lb);
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds the protocol maximum");
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf).context("reading frame payload")?;
+    Ok(buf)
+}
+
+// ---- primitive encoders -------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(buf, xs.len() as u64);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    put_u64(buf, xs.len() as u64);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Cursor over a received payload.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame: wanted {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("u64 does not fit usize")
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        Ok(String::from_utf8(self.take(n)?.to_vec()).context("non-utf8 string")?)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.usize()?;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+// ---- messages -----------------------------------------------------------
+
+const REQ_INIT: u8 = 1;
+const REQ_UPLOAD: u8 = 2;
+const REQ_RUN: u8 = 3;
+const REQ_SHUTDOWN: u8 = 4;
+
+const RESP_READY: u8 = 1;
+const RESP_INIT_ERR: u8 = 2;
+const RESP_JOB_OK: u8 = 3;
+const RESP_JOB_ERR: u8 = 4;
+
+const BACKEND_NATIVE: u8 = 0;
+const BACKEND_PJRT: u8 = 1;
+
+const KIND_MVM: u8 = 0;
+const KIND_MVM_GRADS: u8 = 1;
+
+/// A decoded coordinator -> worker message.
+pub(crate) enum Request {
+    /// Handshake: build the backend, arm fault injection.
+    Init {
+        /// Worker index (diagnostics only).
+        worker_id: u64,
+        /// What backend to construct.
+        backend: BackendSpec,
+        /// Fault injection: exit abruptly after this many jobs (0 = off).
+        kill_after_jobs: u64,
+        /// Fault injection: hang forever after this many jobs (0 = off).
+        hang_after_jobs: u64,
+    },
+    /// Register one `PaddedData` operand under `id`.
+    Upload {
+        /// Coordinator-side `PaddedData::data_id`.
+        id: u64,
+        /// True row count.
+        n: u64,
+        /// Padded row count.
+        n_pad: u64,
+        /// True feature dimensionality.
+        d: u64,
+        /// Padded feature dimensionality.
+        d_pad: u64,
+        /// The (n_pad, d_pad) f32 features, flat row-major.
+        x: Vec<f32>,
+    },
+    /// Execute one row-partition job.
+    Run(WireJob),
+    /// Drain and exit.
+    Shutdown,
+}
+
+/// The serializable fields of a [`Job`] (operands travel by data id).
+pub(crate) struct WireJob {
+    /// Job id (also the sticky routing key on the coordinator).
+    pub id: u64,
+    /// Gradient output count for `MvmGrads`; `None` = plain `Mvm`.
+    pub grads_nl: Option<u64>,
+    /// First padded row of the strip.
+    pub row_start: u64,
+    /// Rows in the strip.
+    pub row_len: u64,
+    /// Row-side operand (`Upload` id).
+    pub row_data: u64,
+    /// Column-side operand (`Upload` id).
+    pub col_data: u64,
+    /// True column count (all-padding tiles are skipped).
+    pub col_limit: u64,
+    /// Cache identity: issuing operator...
+    pub op_id: u64,
+    /// ...at this hyperparameter generation.
+    pub generation: u64,
+    /// Leading blocks of the strip the worker may hold resident.
+    pub cache_tiles: u64,
+    /// (n_pad, t) RHS, f32 flat.
+    pub v: Vec<f32>,
+    /// Kernel-only theta in the wire layout.
+    pub theta: Vec<f32>,
+}
+
+/// A decoded worker -> coordinator message.
+pub(crate) enum Response {
+    /// Backend constructed; the worker is accepting jobs.
+    Ready,
+    /// Backend construction failed (the error text).
+    InitErr(String),
+    /// One job's result.
+    JobOk {
+        /// Echoed job id.
+        id: u64,
+        /// The worker's counter delta for this job.
+        acct: WireAcct,
+        /// The (rows x t[, grads]) f64 accumulator.
+        out: Vec<f64>,
+    },
+    /// One job's backend error.
+    JobErr {
+        /// Echoed job id.
+        id: u64,
+        /// Error text.
+        msg: String,
+    },
+}
+
+/// Per-job accounting delta a worker ships back in `JobOk`: the counters
+/// `run_partition` touches. `peak_tile_bytes` is the worker's absolute
+/// peak (merged by max on the coordinator); the rest are differences.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub(crate) struct WireAcct {
+    /// Bytes charged host -> device inside the job.
+    pub bytes_to_device: u64,
+    /// Bytes charged device -> host inside the job.
+    pub bytes_from_device: u64,
+    /// The worker's absolute peak transient tile bytes.
+    pub peak_tile_bytes: u64,
+    /// Tile executions.
+    pub tile_execs: u64,
+    /// Cache fills.
+    pub cache_fills: u64,
+    /// Cache hits.
+    pub cache_hits: u64,
+}
+
+impl WireAcct {
+    /// Capture the counters `run_partition` touches from a snapshot delta.
+    pub fn from_delta(d: &AccountingSnapshot) -> WireAcct {
+        WireAcct {
+            bytes_to_device: d.bytes_to_device,
+            bytes_from_device: d.bytes_from_device,
+            peak_tile_bytes: d.peak_tile_bytes,
+            tile_execs: d.tile_execs,
+            cache_fills: d.cache_fills,
+            cache_hits: d.cache_hits,
+        }
+    }
+
+    /// As a snapshot suitable for `Accounting::merge_remote`.
+    pub fn to_snapshot(&self) -> AccountingSnapshot {
+        AccountingSnapshot {
+            bytes_to_device: self.bytes_to_device,
+            bytes_from_device: self.bytes_from_device,
+            peak_tile_bytes: self.peak_tile_bytes,
+            tile_execs: self.tile_execs,
+            cache_fills: self.cache_fills,
+            cache_hits: self.cache_hits,
+            ..Default::default()
+        }
+    }
+}
+
+fn put_backend(buf: &mut Vec<u8>, b: &BackendSpec) {
+    let put_spec = |buf: &mut Vec<u8>, s: &TileSpec| {
+        put_u64(buf, s.r as u64);
+        put_u64(buf, s.c as u64);
+        put_u64(buf, s.t as u64);
+        put_u64(buf, s.d as u64);
+    };
+    match b {
+        BackendSpec::Native { kernel, ard, spec } => {
+            put_u8(buf, BACKEND_NATIVE);
+            put_str(buf, kernel.name());
+            put_u8(buf, u8::from(*ard));
+            put_spec(buf, spec);
+        }
+        BackendSpec::Pjrt { artifacts_dir, kernel, ard, flavor, spec } => {
+            put_u8(buf, BACKEND_PJRT);
+            put_str(buf, kernel.name());
+            put_u8(buf, u8::from(*ard));
+            put_spec(buf, spec);
+            put_str(buf, artifacts_dir);
+            put_str(buf, flavor.name());
+        }
+    }
+}
+
+fn get_backend(d: &mut Dec) -> Result<BackendSpec> {
+    let tag = d.u8()?;
+    let kernel_name = d.str()?;
+    let kernel = KernelKind::parse(&kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name:?} on the wire"))?;
+    let ard = d.u8()? != 0;
+    let spec = TileSpec { r: d.usize()?, c: d.usize()?, t: d.usize()?, d: d.usize()? };
+    match tag {
+        BACKEND_NATIVE => Ok(BackendSpec::Native { kernel, ard, spec }),
+        BACKEND_PJRT => {
+            let artifacts_dir = d.str()?;
+            let flavor = Flavor::parse(&d.str()?)?;
+            Ok(BackendSpec::Pjrt { artifacts_dir, kernel, ard, flavor, spec })
+        }
+        _ => bail!("unknown backend tag {tag}"),
+    }
+}
+
+/// Encode `Init`.
+pub(crate) fn encode_init(
+    worker_id: u64,
+    backend: &BackendSpec,
+    kill_after_jobs: u64,
+    hang_after_jobs: u64,
+) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u8(&mut buf, REQ_INIT);
+    put_u64(&mut buf, worker_id);
+    put_u64(&mut buf, kill_after_jobs);
+    put_u64(&mut buf, hang_after_jobs);
+    put_backend(&mut buf, backend);
+    buf
+}
+
+/// Encode `Upload` for one operand (borrows the features; no copy until
+/// the wire buffer itself).
+pub(crate) fn encode_upload(id: u64, n: u64, n_pad: u64, d: u64, d_pad: u64, x: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(1 + 5 * 8 + 8 + x.len() * 4);
+    put_u8(&mut buf, REQ_UPLOAD);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, n);
+    put_u64(&mut buf, n_pad);
+    put_u64(&mut buf, d);
+    put_u64(&mut buf, d_pad);
+    put_f32s(&mut buf, x);
+    buf
+}
+
+/// Encode `Run` straight from a coordinator-side [`Job`] (operands by
+/// data id; RHS and theta inline).
+pub(crate) fn encode_run(job: &Job) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(1 + 11 * 8 + (job.v.len() + job.theta.len()) * 4);
+    put_u8(&mut buf, REQ_RUN);
+    put_u64(&mut buf, job.id as u64);
+    match job.kind {
+        JobKind::Mvm => put_u8(&mut buf, KIND_MVM),
+        JobKind::MvmGrads { nl } => {
+            put_u8(&mut buf, KIND_MVM_GRADS);
+            put_u64(&mut buf, nl as u64);
+        }
+    }
+    put_u64(&mut buf, job.row_start as u64);
+    put_u64(&mut buf, job.row_len as u64);
+    put_u64(&mut buf, job.row_data.data_id());
+    put_u64(&mut buf, job.col_data.data_id());
+    put_u64(&mut buf, job.col_limit as u64);
+    put_u64(&mut buf, job.op_id);
+    put_u64(&mut buf, job.generation);
+    put_u64(&mut buf, job.cache_tiles as u64);
+    put_f32s(&mut buf, &job.v);
+    put_f32s(&mut buf, &job.theta);
+    buf
+}
+
+/// Encode `Shutdown`.
+pub(crate) fn encode_shutdown() -> Vec<u8> {
+    vec![REQ_SHUTDOWN]
+}
+
+/// Decode any request frame.
+pub(crate) fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut d = Dec::new(payload);
+    match d.u8()? {
+        REQ_INIT => {
+            let worker_id = d.u64()?;
+            let kill_after_jobs = d.u64()?;
+            let hang_after_jobs = d.u64()?;
+            let backend = get_backend(&mut d)?;
+            Ok(Request::Init { worker_id, backend, kill_after_jobs, hang_after_jobs })
+        }
+        REQ_UPLOAD => Ok(Request::Upload {
+            id: d.u64()?,
+            n: d.u64()?,
+            n_pad: d.u64()?,
+            d: d.u64()?,
+            d_pad: d.u64()?,
+            x: d.f32s()?,
+        }),
+        REQ_RUN => {
+            let id = d.u64()?;
+            let grads_nl = match d.u8()? {
+                KIND_MVM => None,
+                KIND_MVM_GRADS => Some(d.u64()?),
+                k => bail!("unknown job kind tag {k}"),
+            };
+            Ok(Request::Run(WireJob {
+                id,
+                grads_nl,
+                row_start: d.u64()?,
+                row_len: d.u64()?,
+                row_data: d.u64()?,
+                col_data: d.u64()?,
+                col_limit: d.u64()?,
+                op_id: d.u64()?,
+                generation: d.u64()?,
+                cache_tiles: d.u64()?,
+                v: d.f32s()?,
+                theta: d.f32s()?,
+            }))
+        }
+        REQ_SHUTDOWN => Ok(Request::Shutdown),
+        t => bail!("unknown request tag {t}"),
+    }
+}
+
+/// Encode `Ready`.
+pub(crate) fn encode_ready() -> Vec<u8> {
+    vec![RESP_READY]
+}
+
+/// Encode `InitErr`.
+pub(crate) fn encode_init_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u8(&mut buf, RESP_INIT_ERR);
+    put_str(&mut buf, msg);
+    buf
+}
+
+/// Encode `JobOk` (borrows the accumulator).
+pub(crate) fn encode_job_ok(id: u64, acct: &WireAcct, out: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(1 + 7 * 8 + 8 + out.len() * 8);
+    put_u8(&mut buf, RESP_JOB_OK);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, acct.bytes_to_device);
+    put_u64(&mut buf, acct.bytes_from_device);
+    put_u64(&mut buf, acct.peak_tile_bytes);
+    put_u64(&mut buf, acct.tile_execs);
+    put_u64(&mut buf, acct.cache_fills);
+    put_u64(&mut buf, acct.cache_hits);
+    put_f64s(&mut buf, out);
+    buf
+}
+
+/// Encode `JobErr`.
+pub(crate) fn encode_job_err(id: u64, msg: &str) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u8(&mut buf, RESP_JOB_ERR);
+    put_u64(&mut buf, id);
+    put_str(&mut buf, msg);
+    buf
+}
+
+/// Decode any response frame.
+pub(crate) fn decode_response(payload: &[u8]) -> Result<Response> {
+    let mut d = Dec::new(payload);
+    match d.u8()? {
+        RESP_READY => Ok(Response::Ready),
+        RESP_INIT_ERR => Ok(Response::InitErr(d.str()?)),
+        RESP_JOB_OK => Ok(Response::JobOk {
+            id: d.u64()?,
+            acct: WireAcct {
+                bytes_to_device: d.u64()?,
+                bytes_from_device: d.u64()?,
+                peak_tile_bytes: d.u64()?,
+                tile_execs: d.u64()?,
+                cache_fills: d.u64()?,
+                cache_hits: d.u64()?,
+            },
+            out: d.f64s()?,
+        }),
+        RESP_JOB_ERR => Ok(Response::JobErr { id: d.u64()?, msg: d.str()? }),
+        t => bail!("unknown response tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::exec::PaddedData;
+    use crate::metrics::Accounting;
+
+    const SPEC: TileSpec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
+
+    #[test]
+    fn frames_round_trip_over_a_buffer() {
+        let mut pipe: Vec<u8> = Vec::new();
+        write_frame(&mut pipe, b"hello").unwrap();
+        write_frame(&mut pipe, b"").unwrap();
+        write_frame(&mut pipe, &[7u8; 300]).unwrap();
+        let mut r = &pipe[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap(), vec![7u8; 300]);
+        // Clean EOF surfaces as an error (the worker exits its loop).
+        assert!(read_frame(&mut r).is_err());
+        // A truncated frame is an error, not garbage.
+        let mut r = &pipe[..3];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn init_round_trips_both_backend_specs() {
+        for spec in [
+            BackendSpec::Native { kernel: KernelKind::Matern32, ard: true, spec: SPEC },
+            BackendSpec::Pjrt {
+                artifacts_dir: "artifacts".into(),
+                kernel: KernelKind::Rbf,
+                ard: false,
+                flavor: Flavor::Jnp,
+                spec: TileSpec::PROD,
+            },
+        ] {
+            let buf = encode_init(3, &spec, 5, 0);
+            match decode_request(&buf).unwrap() {
+                Request::Init { worker_id, backend, kill_after_jobs, hang_after_jobs } => {
+                    assert_eq!(worker_id, 3);
+                    assert_eq!(kill_after_jobs, 5);
+                    assert_eq!(hang_after_jobs, 0);
+                    assert_eq!(backend, spec);
+                }
+                _ => panic!("wrong request variant"),
+            }
+        }
+    }
+
+    #[test]
+    fn upload_and_run_round_trip() {
+        let x: Vec<f64> = (0..15).map(|i| i as f64 * 0.25).collect();
+        let data = Arc::new(PaddedData::new(&x, 3, &SPEC));
+        let buf =
+            encode_upload(data.data_id(), data.n as u64, data.n_pad as u64, 3, SPEC.d as u64, &data.x);
+        match decode_request(&buf).unwrap() {
+            Request::Upload { id, n, n_pad, d, d_pad, x } => {
+                assert_eq!(id, data.data_id());
+                assert_eq!((n, n_pad, d, d_pad), (5, data.n_pad as u64, 3, SPEC.d as u64));
+                assert_eq!(x, data.x, "f32 features must survive bitwise");
+            }
+            _ => panic!("wrong request variant"),
+        }
+
+        let job = Job {
+            id: 2,
+            kind: JobKind::MvmGrads { nl: 3 },
+            row_start: 4,
+            row_len: 4,
+            row_data: data.clone(),
+            col_data: data.clone(),
+            col_limit: 5,
+            v: Arc::new(vec![0.5f32; data.n_pad * SPEC.t]),
+            theta: Arc::new(vec![0.1, 0.2]),
+            acct: Arc::new(Accounting::default()),
+            op_id: 77,
+            generation: 9,
+            cache_tiles: 6,
+        };
+        match decode_request(&encode_run(&job)).unwrap() {
+            Request::Run(wj) => {
+                assert_eq!(wj.id, 2);
+                assert_eq!(wj.grads_nl, Some(3));
+                assert_eq!((wj.row_start, wj.row_len), (4, 4));
+                assert_eq!((wj.row_data, wj.col_data), (data.data_id(), data.data_id()));
+                assert_eq!((wj.col_limit, wj.op_id, wj.generation, wj.cache_tiles), (5, 77, 9, 6));
+                assert_eq!(wj.v, *job.v, "RHS must survive bitwise");
+                assert_eq!(wj.theta, *job.theta);
+            }
+            _ => panic!("wrong request variant"),
+        }
+        assert!(matches!(decode_request(&encode_shutdown()).unwrap(), Request::Shutdown));
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        assert!(matches!(decode_response(&encode_ready()).unwrap(), Response::Ready));
+        match decode_response(&encode_init_err("no artifacts")).unwrap() {
+            Response::InitErr(m) => assert_eq!(m, "no artifacts"),
+            _ => panic!("wrong response variant"),
+        }
+        let acct = WireAcct {
+            bytes_to_device: 1,
+            bytes_from_device: 2,
+            peak_tile_bytes: 3,
+            tile_execs: 4,
+            cache_fills: 5,
+            cache_hits: 6,
+        };
+        // f64 results must survive bitwise — including signed zero & ulp.
+        let out = [1.0f64, -0.0, f64::MIN_POSITIVE, 1.0 + f64::EPSILON];
+        match decode_response(&encode_job_ok(11, &acct, &out)).unwrap() {
+            Response::JobOk { id, acct: a, out: o } => {
+                assert_eq!(id, 11);
+                assert_eq!(a, acct);
+                assert_eq!(o.len(), out.len());
+                for (x, y) in o.iter().zip(&out) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            _ => panic!("wrong response variant"),
+        }
+        match decode_response(&encode_job_err(12, "boom")).unwrap() {
+            Response::JobErr { id, msg } => {
+                assert_eq!(id, 12);
+                assert_eq!(msg, "boom");
+            }
+            _ => panic!("wrong response variant"),
+        }
+        // Unknown tags are rejected loudly.
+        assert!(decode_response(&[99]).is_err());
+        assert!(decode_request(&[99]).is_err());
+        assert!(decode_request(&[]).is_err());
+    }
+}

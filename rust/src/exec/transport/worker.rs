@@ -1,0 +1,305 @@
+//! The worker side of every transport: the per-job execution path shared
+//! by in-process threads and worker subprocesses, plus the subprocess
+//! stdio serve loop (`exactgp worker`).
+//!
+//! `run_partition` and the resident block cache live here — both
+//! transports execute jobs through this one function, which is what makes
+//! local and subprocess results bitwise-identical by construction: the
+//! f32 tile op sequence and the f64 accumulation traversal are the same
+//! code, and the wire moves f32/f64 values losslessly.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::exec::pool::{Job, JobKind};
+use crate::exec::transport::wire::{self, Request, WireAcct, WireJob};
+use crate::exec::{PaddedData, TileBackend};
+use crate::metrics::Accounting;
+
+/// One cached strip: the leading `filled` blocks (each spec.r * spec.c
+/// f32 correlations) of a job's tile traversal.
+#[derive(Default)]
+pub(crate) struct CachedStrip {
+    pub(crate) filled: usize,
+    pub(crate) data: Vec<f32>,
+}
+
+/// Worker-resident cache: strips for one (op_id, generation), keyed by
+/// the job's row_start (job row ranges are disjoint per operator).
+#[derive(Default)]
+pub(crate) struct WorkerCache {
+    pub(crate) op_id: u64,
+    pub(crate) generation: u64,
+    pub(crate) strips: HashMap<usize, CachedStrip>,
+}
+
+/// Process one row partition on a worker: stream column tiles — or replay
+/// worker-cached correlation blocks gemm-only — accumulating
+/// K(X^(l), :) V in f64. Output layout: [kv (rows*t)] for Mvm, or
+/// [kv | g_0 | g_1 | ...] each (rows*t) for MvmGrads.
+///
+/// Cached and streaming tiles produce bitwise-identical f32 outputs
+/// (`TileBackend::mvm_cached` contract), and the f64 accumulation
+/// traversal order below is the same either way, so enabling the cache
+/// never changes an MVM result.
+pub(crate) fn run_partition(
+    backend: &mut dyn TileBackend,
+    job: &Job,
+    cache: &mut WorkerCache,
+) -> Result<Vec<f64>> {
+    let spec = backend.spec();
+    let t = spec.t;
+    let nl = match job.kind {
+        JobKind::Mvm => 0,
+        JobKind::MvmGrads { nl } => nl,
+    };
+    // Number of *reported* gradient blocks: native reports per true-dim,
+    // PJRT reports per padded-dim; both are handled by the caller keeping
+    // only the first n_ls blocks.
+    let out_blocks = 1 + nl;
+    let mut acc = vec![0.0f64; out_blocks * job.row_len * t];
+
+    // Communication accounting: only theta here — the RHS is charged once
+    // per device per MVM by `PartitionedKernelOp::run_jobs` (the paper's
+    // model: "supply each device with a new right-hand-side vector v"),
+    // and X tiles are device-resident (uploaded once), so neither is
+    // charged per partition. Cached rho blocks are likewise
+    // device-resident and move no bytes.
+    job.acct.add_to_device(job.theta.len() as u64 * 4);
+
+    // Reconcile the cache identity: blocks materialized for another
+    // operator or an older hyper generation are dead — clear them before
+    // any lookup so they can never be served.
+    let block = spec.r * spec.c;
+    let use_cache =
+        job.cache_tiles > 0 && matches!(job.kind, JobKind::Mvm) && backend.supports_cache();
+    if use_cache && (cache.op_id != job.op_id || cache.generation != job.generation) {
+        cache.strips.clear();
+        cache.op_id = job.op_id;
+        cache.generation = job.generation;
+    }
+    let mut strip = if use_cache {
+        let mut s = cache.strips.remove(&job.row_start).unwrap_or_default();
+        if s.data.len() < job.cache_tiles * block {
+            s.data.resize(job.cache_tiles * block, 0.0);
+        }
+        s
+    } else {
+        CachedStrip::default()
+    };
+
+    // Partitions need not be tile-aligned (memory budgets can give
+    // rows-per-partition < tile height); clamp the row block to the padded
+    // data and zero-fill the overhang in a scratch tile.
+    let mut xr_scratch = vec![0.0f32; spec.r * job.row_data.d_pad];
+    let mut tile_idx = 0usize;
+    let mut row = job.row_start;
+    while row < job.row_start + job.row_len {
+        let avail = job.row_data.n_pad.saturating_sub(row).min(spec.r);
+        let xr: &[f32] = if avail == spec.r {
+            job.row_data.row_block(row, spec.r)
+        } else {
+            xr_scratch.iter_mut().for_each(|v| *v = 0.0);
+            xr_scratch[..avail * job.row_data.d_pad]
+                .copy_from_slice(job.row_data.row_block(row, avail));
+            &xr_scratch
+        };
+        let mut col = 0;
+        while col < job.col_limit {
+            let xc = job.col_data.row_block(col, spec.c);
+            let vt = &job.v[col * t..(col + spec.c) * t];
+            job.acct
+                .note_tile((spec.r * spec.c * 4 + spec.c * t * 4 + spec.r * t * 4) as u64);
+            match job.kind {
+                JobKind::Mvm => {
+                    let kv = if use_cache && tile_idx < job.cache_tiles {
+                        let rho = &mut strip.data[tile_idx * block..(tile_idx + 1) * block];
+                        if tile_idx >= strip.filled {
+                            // Fills happen in traversal order, so `filled`
+                            // is always a prefix count.
+                            backend.materialize_tile(xr, xc, &job.theta, rho)?;
+                            strip.filled = tile_idx + 1;
+                            job.acct.note_cache_fill();
+                        } else {
+                            job.acct.note_cache_hit();
+                        }
+                        backend.mvm_cached(rho, vt, &job.theta)?
+                    } else {
+                        backend.mvm(xr, xc, vt, &job.theta)?
+                    };
+                    let base = (row - job.row_start) * t;
+                    for i in 0..spec.r {
+                        if row + i >= job.row_start + job.row_len {
+                            break;
+                        }
+                        for j in 0..t {
+                            acc[base + i * t + j] += kv[i * t + j] as f64;
+                        }
+                    }
+                }
+                JobKind::MvmGrads { nl } => {
+                    let (kv, g) = backend.mvm_grads(xr, xc, vt, &job.theta)?;
+                    let base = (row - job.row_start) * t;
+                    let block = job.row_len * t;
+                    let n_g = backend.n_ls_grads().min(nl);
+                    for i in 0..spec.r {
+                        if row + i >= job.row_start + job.row_len {
+                            break;
+                        }
+                        for j in 0..t {
+                            acc[base + i * t + j] += kv[i * t + j] as f64;
+                        }
+                        for l in 0..n_g {
+                            for j in 0..t {
+                                acc[block * (1 + l) + base + i * t + j] +=
+                                    g[l * spec.r * t + i * t + j] as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            col += spec.c;
+            tile_idx += 1;
+        }
+        row += spec.r;
+    }
+    if use_cache {
+        cache.strips.insert(job.row_start, strip);
+    }
+    job.acct.add_from_device((acc.len() * 8) as u64);
+    Ok(acc)
+}
+
+/// Reassemble a coordinator-side [`Job`] from its wire form plus the
+/// worker's operand registry.
+fn job_from_wire(
+    wj: &WireJob,
+    data: &HashMap<u64, Arc<PaddedData>>,
+    acct: &Arc<Accounting>,
+) -> Result<Job> {
+    let operand = |id: u64| -> Result<Arc<PaddedData>> {
+        data.get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("job references unknown data id {id} (missing Upload)"))
+    };
+    Ok(Job {
+        id: wj.id as usize,
+        kind: match wj.grads_nl {
+            None => JobKind::Mvm,
+            Some(nl) => JobKind::MvmGrads { nl: nl as usize },
+        },
+        row_start: wj.row_start as usize,
+        row_len: wj.row_len as usize,
+        row_data: operand(wj.row_data)?,
+        col_data: operand(wj.col_data)?,
+        col_limit: wj.col_limit as usize,
+        v: Arc::new(wj.v.clone()),
+        theta: Arc::new(wj.theta.clone()),
+        acct: acct.clone(),
+        op_id: wj.op_id,
+        generation: wj.generation,
+        cache_tiles: wj.cache_tiles as usize,
+    })
+}
+
+/// Serve the framed worker protocol on stdin/stdout — the body of the
+/// `exactgp worker` CLI mode the subprocess transport spawns.
+///
+/// Protocol: the first frame must be `Init` (build the backend, answer
+/// `Ready` or `InitErr`); then `Upload` frames register operands,
+/// `Run` frames execute jobs through the same `run_partition` as the
+/// local transport (answering `JobOk` with a per-job counter delta, or
+/// `JobErr`), and `Shutdown` — or the coordinator closing the pipe —
+/// exits cleanly.
+///
+/// stdout is the protocol channel: nothing else in this mode may print
+/// to it (diagnostics go to stderr, which the coordinator inherits).
+pub fn serve_stdio() -> Result<()> {
+    let stdin = std::io::stdin();
+    let mut rin = BufReader::new(stdin.lock());
+    let stdout = std::io::stdout();
+    let mut wout = BufWriter::new(stdout.lock());
+
+    let first = wire::read_frame(&mut rin).context("worker: reading Init frame")?;
+    let Request::Init { worker_id, backend, kill_after_jobs, hang_after_jobs } =
+        wire::decode_request(&first).context("worker: decoding Init frame")?
+    else {
+        bail!("worker: protocol violation — first frame was not Init");
+    };
+    let mut backend = match backend.build() {
+        Ok(b) => {
+            wire::write_frame(&mut wout, &wire::encode_ready())?;
+            b
+        }
+        Err(e) => {
+            wire::write_frame(&mut wout, &wire::encode_init_err(&format!("{e:#}")))?;
+            return Ok(());
+        }
+    };
+
+    let mut cache = WorkerCache::default();
+    let mut data: HashMap<u64, Arc<PaddedData>> = HashMap::new();
+    // A private Accounting: per-job snapshot deltas ship back in JobOk and
+    // are merged into the coordinator's shared counters.
+    let acct = Arc::new(Accounting::default());
+    let mut jobs_done = 0u64;
+
+    loop {
+        // EOF (coordinator gone, or killed us between frames) ends the
+        // loop; a worker has no work to flush.
+        let Ok(frame) = wire::read_frame(&mut rin) else { break };
+        match wire::decode_request(&frame)
+            .with_context(|| format!("worker {worker_id}: decoding request"))?
+        {
+            Request::Init { .. } => bail!("worker {worker_id}: duplicate Init"),
+            Request::Shutdown => break,
+            Request::Upload { id, n, n_pad, d, d_pad, x } => {
+                data.insert(
+                    id,
+                    Arc::new(PaddedData::from_wire(
+                        n as usize,
+                        n_pad as usize,
+                        d as usize,
+                        d_pad as usize,
+                        x,
+                    )),
+                );
+            }
+            Request::Run(wj) => {
+                let id = wj.id;
+                let resp = match job_from_wire(&wj, &data, &acct) {
+                    Ok(job) => {
+                        let before = acct.snapshot();
+                        match run_partition(&mut *backend, &job, &mut cache) {
+                            Ok(out) => {
+                                let delta = acct.snapshot().delta(&before);
+                                wire::encode_job_ok(id, &WireAcct::from_delta(&delta), &out)
+                            }
+                            Err(e) => wire::encode_job_err(id, &format!("{e:#}")),
+                        }
+                    }
+                    Err(e) => wire::encode_job_err(id, &format!("{e:#}")),
+                };
+                wire::write_frame(&mut wout, &resp)?;
+                jobs_done += 1;
+                // Fault injection, armed via Init: prove the coordinator's
+                // respawn-and-resubmit path with a deterministic mid-solve
+                // death (or hang, for the timeout path).
+                if kill_after_jobs > 0 && jobs_done >= kill_after_jobs {
+                    eprintln!("worker {worker_id}: fault injection — exiting after {jobs_done} jobs");
+                    std::process::exit(23);
+                }
+                if hang_after_jobs > 0 && jobs_done >= hang_after_jobs {
+                    eprintln!("worker {worker_id}: fault injection — hanging after {jobs_done} jobs");
+                    loop {
+                        std::thread::sleep(std::time::Duration::from_secs(3600));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -12,9 +12,13 @@
 //!   reproduce    run a paper experiment (table1|table2|fig1..fig4|table3|table5)
 //!   datasets     list the benchmark suite (paper signature + scaled size)
 //!   info         runtime / artifact environment report
+//!   worker       (internal) serve the framed MVM worker protocol on
+//!                stdin/stdout — spawned by the subprocess transport,
+//!                never run by hand
 //!
 //! Common flags: --config <file.toml>, --set sec.key=value (repeatable),
-//! --dataset, --model, --scale, --workers, --backend, --flavor, --trials.
+//! --dataset, --model, --scale, --workers, --backend, --flavor,
+//! --transport local|subprocess, --trials.
 
 use anyhow::{bail, Result};
 
@@ -44,6 +48,9 @@ fn build_config(args: &Args) -> Result<Config> {
     if let Some(f) = args.get("flavor") {
         cfg.flavor = exactgp::config::Flavor::parse(f)?;
     }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = exactgp::config::TransportKind::parse(t)?;
+    }
     if let Some(t) = args.get_usize("trials")? {
         cfg.trials = t;
     }
@@ -62,8 +69,11 @@ fn run() -> Result<()> {
         Some("reproduce") => cmd_reproduce(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("info") => cmd_info(&args),
+        // Internal: the subprocess transport's worker side. stdout is the
+        // protocol channel, so this path must print nothing to it.
+        Some("worker") => exactgp::exec::transport::worker::serve_stdio(),
         Some(other) => {
-            bail!("unknown subcommand {other:?} (train|predict|serve|reproduce|datasets|info)")
+            bail!("unknown subcommand {other:?} (train|predict|serve|reproduce|datasets|info|worker)")
         }
         None => {
             print_usage();
@@ -80,6 +90,7 @@ fn print_usage() {
            exactgp train --dataset <name> [--model exact|cholesky|sgpr|svgp]\n\
                          [--scale smoke|default|large|paper|<cap>] [--workers N]\n\
                          [--backend pjrt|native] [--flavor jnp|pallas] [--ard]\n\
+                         [--transport local|subprocess]\n\
                          [--config file.toml] [--set sec.key=value]...\n\
            exactgp predict --dataset <name> [--test-csv file.csv] [--batch N]\n\
                            [--chunk N] [--out results/predict_<name>.json]\n\
@@ -91,7 +102,8 @@ fn print_usage() {
                          [--assert-speedup X] [--out results/BENCH_serve.json]\n\
            exactgp reproduce --exp table1|table2|table3|table5|fig1|fig2|fig3|fig4\n\
            exactgp datasets [--scale ...]\n\
-           exactgp info\n"
+           exactgp info\n\
+           exactgp worker   (internal: subprocess-transport worker mode)\n"
     );
 }
 
@@ -651,7 +663,13 @@ fn cmd_datasets(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     println!("exactgp {}", env!("CARGO_PKG_VERSION"));
-    println!("backend: {:?}, flavor: {:?}, workers: {}", cfg.backend, cfg.flavor, cfg.workers);
+    println!(
+        "backend: {:?}, flavor: {:?}, workers: {}, transport: {}",
+        cfg.backend,
+        cfg.flavor,
+        cfg.workers,
+        cfg.transport.name()
+    );
     match exactgp::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir)) {
         Ok(m) => {
             println!(

@@ -107,6 +107,14 @@ pub struct Accounting {
     pub serve_flush_full: AtomicU64,
     /// Serving: flushes triggered by the latency deadline (or shutdown).
     pub serve_flush_deadline: AtomicU64,
+    /// Transport: worker processes respawned after a death or timeout.
+    pub worker_restarts: AtomicU64,
+    /// Transport: in-flight jobs resubmitted after their worker died.
+    pub jobs_resubmitted: AtomicU64,
+    /// Transport: protocol bytes written to worker pipes (job traffic).
+    pub ipc_bytes_tx: AtomicU64,
+    /// Transport: protocol bytes read back from worker pipes.
+    pub ipc_bytes_rx: AtomicU64,
 }
 
 impl Accounting {
@@ -187,6 +195,39 @@ impl Accounting {
         }
     }
 
+    /// Record one worker process respawn (death or timeout recovery).
+    pub fn note_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` in-flight jobs resubmitted after a worker loss.
+    pub fn note_jobs_resubmitted(&self, n: u64) {
+        self.jobs_resubmitted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `b` protocol bytes written to a worker pipe.
+    pub fn add_ipc_tx(&self, b: u64) {
+        self.ipc_bytes_tx.fetch_add(b, Ordering::Relaxed);
+    }
+
+    /// Record `b` protocol bytes read back from a worker pipe.
+    pub fn add_ipc_rx(&self, b: u64) {
+        self.ipc_bytes_rx.fetch_add(b, Ordering::Relaxed);
+    }
+
+    /// Merge a remote worker's per-job counter delta into this accounting
+    /// (the subprocess transport ships these back in every job response so
+    /// cache/communication counters match the local transport exactly).
+    /// `peak_tile_bytes` merges by max; everything else adds.
+    pub fn merge_remote(&self, d: &AccountingSnapshot) {
+        self.bytes_to_device.fetch_add(d.bytes_to_device, Ordering::Relaxed);
+        self.bytes_from_device.fetch_add(d.bytes_from_device, Ordering::Relaxed);
+        self.peak_tile_bytes.fetch_max(d.peak_tile_bytes, Ordering::Relaxed);
+        self.tile_execs.fetch_add(d.tile_execs, Ordering::Relaxed);
+        self.cache_fills.fetch_add(d.cache_fills, Ordering::Relaxed);
+        self.cache_hits.fetch_add(d.cache_hits, Ordering::Relaxed);
+    }
+
     /// Consistent point-in-time copy of all counters.
     pub fn snapshot(&self) -> AccountingSnapshot {
         AccountingSnapshot {
@@ -207,6 +248,10 @@ impl Accounting {
             serve_batches: self.serve_batches.load(Ordering::Relaxed),
             serve_flush_full: self.serve_flush_full.load(Ordering::Relaxed),
             serve_flush_deadline: self.serve_flush_deadline.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            jobs_resubmitted: self.jobs_resubmitted.load(Ordering::Relaxed),
+            ipc_bytes_tx: self.ipc_bytes_tx.load(Ordering::Relaxed),
+            ipc_bytes_rx: self.ipc_bytes_rx.load(Ordering::Relaxed),
         }
     }
 
@@ -229,6 +274,10 @@ impl Accounting {
         self.serve_batches.store(0, Ordering::Relaxed);
         self.serve_flush_full.store(0, Ordering::Relaxed);
         self.serve_flush_deadline.store(0, Ordering::Relaxed);
+        self.worker_restarts.store(0, Ordering::Relaxed);
+        self.jobs_resubmitted.store(0, Ordering::Relaxed);
+        self.ipc_bytes_tx.store(0, Ordering::Relaxed);
+        self.ipc_bytes_rx.store(0, Ordering::Relaxed);
     }
 }
 
@@ -269,6 +318,14 @@ pub struct AccountingSnapshot {
     pub serve_flush_full: u64,
     /// Serve flushes triggered by the latency deadline (or shutdown).
     pub serve_flush_deadline: u64,
+    /// Worker processes respawned after a death or timeout.
+    pub worker_restarts: u64,
+    /// In-flight jobs resubmitted after their worker died.
+    pub jobs_resubmitted: u64,
+    /// Protocol bytes written to worker pipes.
+    pub ipc_bytes_tx: u64,
+    /// Protocol bytes read back from worker pipes.
+    pub ipc_bytes_rx: u64,
 }
 
 impl AccountingSnapshot {
@@ -292,6 +349,10 @@ impl AccountingSnapshot {
             serve_batches: self.serve_batches - earlier.serve_batches,
             serve_flush_full: self.serve_flush_full - earlier.serve_flush_full,
             serve_flush_deadline: self.serve_flush_deadline - earlier.serve_flush_deadline,
+            worker_restarts: self.worker_restarts - earlier.worker_restarts,
+            jobs_resubmitted: self.jobs_resubmitted - earlier.jobs_resubmitted,
+            ipc_bytes_tx: self.ipc_bytes_tx - earlier.ipc_bytes_tx,
+            ipc_bytes_rx: self.ipc_bytes_rx - earlier.ipc_bytes_rx,
         }
     }
 }
@@ -364,12 +425,54 @@ mod tests {
         acc.note_tile(4096);
         acc.note_tile(2048);
         acc.note_mvm();
+        acc.note_worker_restart();
+        acc.note_jobs_resubmitted(3);
+        acc.add_ipc_tx(700);
+        acc.add_ipc_rx(300);
         let s = acc.snapshot();
         assert_eq!(s.bytes_to_device, 100);
         assert_eq!(s.bytes_from_device, 50);
         assert_eq!(s.peak_tile_bytes, 4096);
         assert_eq!(s.tile_execs, 2);
         assert_eq!(s.mvms, 1);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.jobs_resubmitted, 3);
+        assert_eq!(s.ipc_bytes_tx, 700);
+        assert_eq!(s.ipc_bytes_rx, 300);
+        // Transport counters flow through delta and reset like the rest.
+        let more = acc.snapshot().delta(&s);
+        assert_eq!(more.worker_restarts, 0);
+        assert_eq!(more.ipc_bytes_tx, 0);
+        acc.reset();
+        let z = acc.snapshot();
+        assert_eq!(z.worker_restarts, 0);
+        assert_eq!(z.jobs_resubmitted, 0);
+        assert_eq!(z.ipc_bytes_tx, 0);
+        assert_eq!(z.ipc_bytes_rx, 0);
+    }
+
+    #[test]
+    fn merge_remote_adds_counters_and_maxes_peak() {
+        let acc = Accounting::default();
+        acc.note_tile(1000);
+        let delta = AccountingSnapshot {
+            bytes_to_device: 10,
+            bytes_from_device: 20,
+            peak_tile_bytes: 4096,
+            tile_execs: 5,
+            cache_fills: 2,
+            cache_hits: 3,
+            ..Default::default()
+        };
+        acc.merge_remote(&delta);
+        acc.merge_remote(&AccountingSnapshot { peak_tile_bytes: 64, ..Default::default() });
+        let s = acc.snapshot();
+        assert_eq!(s.bytes_to_device, 10);
+        assert_eq!(s.bytes_from_device, 20);
+        assert_eq!(s.peak_tile_bytes, 4096, "peak merges by max, not add");
+        assert_eq!(s.tile_execs, 6);
+        assert_eq!(s.cache_fills, 2);
+        assert_eq!(s.cache_hits, 3);
     }
 
     #[test]

@@ -6,10 +6,10 @@
 
 use std::sync::Arc;
 
-use exactgp::exec::{
-    native::NativeBackend, pool::DevicePool, BackendFactory, PaddedData, PartitionedKernelOp,
-    TileBackend, TileSpec,
-};
+use exactgp::config::TransportKind;
+use exactgp::exec::transport::subprocess::SubprocessOptions;
+use exactgp::exec::transport::BackendSpec;
+use exactgp::exec::{pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
 use exactgp::kernels::{Hypers, KernelKind};
 use exactgp::linalg::Mat;
 use exactgp::metrics::Accounting;
@@ -27,17 +27,24 @@ fn hypers() -> Hypers {
     }
 }
 
+/// Pool on whichever transport `EXACTGP_TRANSPORT` selects (default
+/// local) — the CI subprocess leg runs this whole suite, counters and
+/// all, over real worker processes.
+fn build_pool(workers: usize) -> Arc<DevicePool> {
+    let kind = TransportKind::from_env().unwrap_or(TransportKind::Local);
+    let backend = BackendSpec::Native { kernel: KernelKind::Matern32, ard: false, spec: SPEC };
+    let mut opts = SubprocessOptions::from_env();
+    opts.worker_bin = Some(env!("CARGO_BIN_EXE_exactgp").into());
+    Arc::new(DevicePool::with_transport(kind, workers, &backend, opts).unwrap())
+}
+
 fn build_op(
     x: &[f64],
     workers: usize,
     rows_per_partition: usize,
     cache_budget: usize,
 ) -> PartitionedKernelOp {
-    let factory: BackendFactory = Arc::new(move |_| {
-        Ok(Box::new(NativeBackend::new(KernelKind::Matern32, false, SPEC))
-            as Box<dyn TileBackend>)
-    });
-    let pool = Arc::new(DevicePool::new(workers, factory).unwrap());
+    let pool = build_pool(workers);
     let data = Arc::new(PaddedData::new(x, SPEC.d, &SPEC));
     let plan = Plan::with_rows(data.n_pad, data.n_pad, rows_per_partition);
     PartitionedKernelOp::square(

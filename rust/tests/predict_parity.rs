@@ -7,7 +7,9 @@ use std::sync::Arc;
 
 use exactgp::config::{Backend, Config};
 use exactgp::data::{Dataset, RawData};
-use exactgp::exec::{backend_factory, pool::DevicePool, TileSpec};
+use exactgp::exec::transport::subprocess::SubprocessOptions;
+use exactgp::exec::transport::BackendSpec;
+use exactgp::exec::{pool::DevicePool, TileSpec};
 use exactgp::gp::cholesky::CholeskyGp;
 use exactgp::gp::exact::ExactGp;
 use exactgp::kernels::KernelKind;
@@ -39,8 +41,12 @@ fn exact_gp(ds: &Dataset, workers: usize) -> ExactGp {
     cfg.variance_rank = ds.n_train(); // full rank => exact variances
     cfg.precond_rank = 20;
     cfg.workers = workers;
-    let factory = backend_factory(&cfg, KernelKind::Matern32, false, spec.d, spec).unwrap();
-    let pool = Arc::new(DevicePool::new(workers, factory).unwrap());
+    // cfg.transport defaults from EXACTGP_TRANSPORT, so the CI subprocess
+    // leg pushes this whole suite through worker processes.
+    let backend = BackendSpec::from_config(&cfg, KernelKind::Matern32, false, spec.d, spec).unwrap();
+    let mut opts = SubprocessOptions::from_config(&cfg);
+    opts.worker_bin = Some(env!("CARGO_BIN_EXE_exactgp").into());
+    let pool = Arc::new(DevicePool::with_transport(cfg.transport, workers, &backend, opts).unwrap());
     let mut gp = ExactGp::new(&cfg, KernelKind::Matern32, ds, pool, spec);
     let mut rng = Rng::new(301, 0);
     gp.precompute(&mut rng).unwrap();

@@ -1,0 +1,249 @@
+//! Transport parity: the subprocess transport must be *observably
+//! identical* to the local thread pool — bitwise-equal MVMs, gradient
+//! MVMs, cached replays, and end-to-end train → checkpoint → predict
+//! results, with the same accounting counters arriving over IPC — plus
+//! the fault-handling contract: a worker killed or hung mid-solve is
+//! respawned, its in-flight jobs are resubmitted, and the batch still
+//! converges to the same bits.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use exactgp::config::{Backend, Config, TransportKind};
+use exactgp::coordinator;
+use exactgp::data::synthetic::Scale;
+use exactgp::exec::transport::subprocess::SubprocessOptions;
+use exactgp::exec::transport::BackendSpec;
+use exactgp::exec::{pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
+use exactgp::gp::exact::{ExactGp, Recipe};
+use exactgp::kernels::{Hypers, KernelKind};
+use exactgp::linalg::Mat;
+use exactgp::metrics::Accounting;
+use exactgp::partition::Plan;
+use exactgp::solvers::BatchMvm;
+use exactgp::util::rng::Rng;
+
+const SPEC: TileSpec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
+
+fn backend() -> BackendSpec {
+    BackendSpec::Native { kernel: KernelKind::Matern32, ard: false, spec: SPEC }
+}
+
+/// Options pinned to the test build's own `exactgp` binary, so the
+/// suite never depends on PATH or the env resolution order.
+fn opts() -> SubprocessOptions {
+    SubprocessOptions {
+        worker_bin: Some(env!("CARGO_BIN_EXE_exactgp").into()),
+        ..SubprocessOptions::default()
+    }
+}
+
+fn pool(kind: TransportKind, workers: usize, o: SubprocessOptions) -> Arc<DevicePool> {
+    Arc::new(DevicePool::with_transport(kind, workers, &backend(), o).unwrap())
+}
+
+fn build_op(pool: Arc<DevicePool>, x: &[f64], rpp: usize, cache_budget: usize) -> PartitionedKernelOp {
+    let data = Arc::new(PaddedData::new(x, SPEC.d, &SPEC));
+    let plan = Plan::with_rows(data.n_pad, data.n_pad, rpp);
+    let hypers = Hypers {
+        log_lengthscales: vec![0.15],
+        log_outputscale: 0.1,
+        log_noise: (0.3f64).ln(),
+    };
+    PartitionedKernelOp::square(data, pool, plan, SPEC, hypers, Arc::new(Accounting::default()))
+        .with_cache_budget(cache_budget)
+}
+
+fn toy(n: usize) -> (Vec<f64>, Mat) {
+    let mut rng = Rng::new(901, n as u64);
+    let x: Vec<f64> = (0..n * SPEC.d).map(|_| rng.normal()).collect();
+    let v = Mat::from_vec(n, SPEC.t, rng.normal_vec(n * SPEC.t));
+    (x, v)
+}
+
+#[test]
+fn mvm_and_grads_bitwise_parity_across_worker_counts() {
+    // n = 45 misaligns with every tile dimension on purpose.
+    let (x, v) = toy(45);
+    let reference = build_op(pool(TransportKind::Local, 1, opts()), &x, 16, 0).mvm(&v);
+    let (ref_kv, ref_gs) =
+        build_op(pool(TransportKind::Local, 1, opts()), &x, 16, 0).apply_grads(&v);
+    for workers in [1usize, 2, 3] {
+        for rpp in [SPEC.r, SPEC.r * 3, 1024] {
+            let op = build_op(pool(TransportKind::Subprocess, workers, opts()), &x, rpp, 0);
+            let got = op.mvm(&v);
+            assert_eq!(
+                got.data, reference.data,
+                "subprocess MVM diverged (workers={workers} rpp={rpp})"
+            );
+            let (kv, gs) = op.apply_grads(&v);
+            assert_eq!(kv.data, ref_kv.data, "gradient KV diverged (workers={workers})");
+            assert_eq!(gs.len(), ref_gs.len());
+            for (g, rg) in gs.iter().zip(&ref_gs) {
+                assert_eq!(g.data, rg.data, "lengthscale gradient diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_replay_and_counters_match_over_ipc() {
+    let (x, v) = toy(40);
+    let local = build_op(pool(TransportKind::Local, 2, opts()), &x, SPEC.r * 2, 64 << 20);
+    let sub = build_op(pool(TransportKind::Subprocess, 2, opts()), &x, SPEC.r * 2, 64 << 20);
+
+    for op in [&local, &sub] {
+        let cold = op.mvm(&v);
+        let warm = op.mvm(&v);
+        assert_eq!(cold.data, warm.data, "cached replay changed the result");
+    }
+    assert_eq!(local.mvm(&v).data, sub.mvm(&v).data, "transports diverged");
+
+    // The worker-side counters must arrive intact over the wire: fills,
+    // hits, tile execs, and device-byte accounting all equal the local
+    // transport's numbers.
+    let ls = local.acct.snapshot();
+    let ss = sub.acct.snapshot();
+    assert!(ls.cache_fills > 0 && ls.cache_hits > 0, "cache never engaged");
+    assert_eq!(ss.cache_fills, ls.cache_fills, "cache_fills diverged over IPC");
+    assert_eq!(ss.cache_hits, ls.cache_hits, "cache_hits diverged over IPC");
+    assert_eq!(ss.tile_execs, ls.tile_execs, "tile_execs diverged over IPC");
+    assert_eq!(ss.bytes_to_device, ls.bytes_to_device);
+    assert_eq!(ss.bytes_from_device, ls.bytes_from_device);
+
+    // And only the subprocess transport moves IPC bytes.
+    assert_eq!(ls.ipc_bytes_tx, 0);
+    assert_eq!(ls.ipc_bytes_rx, 0);
+    assert!(ss.ipc_bytes_tx > 0, "no request bytes counted");
+    assert!(ss.ipc_bytes_rx > 0, "no response bytes counted");
+}
+
+fn base_cfg(workers: usize, transport: TransportKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.scale = Scale { train_cap: 320 };
+    cfg.workers = workers;
+    cfg.transport = transport;
+    cfg.pretrain_subset = 64;
+    cfg.pretrain_lbfgs_steps = 2;
+    cfg.pretrain_adam_steps = 2;
+    cfg.finetune_adam_steps = 2;
+    cfg.precond_rank = 16;
+    cfg.variance_rank = 24;
+    cfg
+}
+
+fn trained(cfg: &Config) -> (ExactGp, exactgp::data::Dataset) {
+    let ds = coordinator::load_dataset(cfg, "bike", 0).unwrap();
+    let (pool, spec) = coordinator::make_pool(cfg, ds.d).unwrap();
+    let mut rng = Rng::new(11, 0);
+    let mut gp = ExactGp::new(cfg, cfg.kernel, &ds, pool, spec);
+    gp.train(Recipe::paper_default(cfg), &mut rng).unwrap();
+    gp.precompute(&mut rng).unwrap();
+    (gp, ds)
+}
+
+#[test]
+fn end_to_end_train_checkpoint_predict_is_bitwise_identical() {
+    // The full pipeline — train, checkpoint, restore, predict — run once
+    // per transport; every prediction must agree to the last bit. The
+    // subprocess leg resolves the worker binary from the environment the
+    // way a real run does (test binaries live in target/*/deps and find
+    // the sibling exactgp CLI).
+    let (gp_local, ds) = trained(&base_cfg(2, TransportKind::Local));
+    let want = gp_local.predict(&ds.test_x).unwrap();
+
+    let cfg_sub = base_cfg(2, TransportKind::Subprocess);
+    let (gp_sub, ds_sub) = trained(&cfg_sub);
+    assert_eq!(ds_sub.test_x, ds.test_x);
+    let got = gp_sub.predict(&ds_sub.test_x).unwrap();
+    assert_eq!(got.mean.len(), want.mean.len());
+    for i in 0..want.mean.len() {
+        assert_eq!(got.mean[i].to_bits(), want.mean[i].to_bits(), "mean[{i}] differs");
+        assert_eq!(got.var[i].to_bits(), want.var[i].to_bits(), "var[{i}] differs");
+    }
+
+    // Checkpoint written by the subprocess-trained model, restored and
+    // served on the subprocess transport.
+    let dir = std::env::temp_dir()
+        .join(format!("exactgp_it_transport_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    gp_sub.save(&dir, &ds_sub).unwrap();
+    let (gp2, ds2) = coordinator::load_model(&cfg_sub, &dir).unwrap();
+    let snap = gp2.accounting().snapshot();
+    assert_eq!(snap.mbcg_solves, 0, "restore ran a solve");
+    let again = gp2.predict(&ds2.test_x).unwrap();
+    for i in 0..want.mean.len() {
+        assert_eq!(again.mean[i].to_bits(), want.mean[i].to_bits());
+        assert_eq!(again.var[i].to_bits(), want.var[i].to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_worker_is_respawned_and_jobs_are_resubmitted() {
+    let (x, v) = toy(64); // 64 rows / r=4 at rpp=4 -> plenty of jobs
+    let want = build_op(pool(TransportKind::Local, 2, opts()), &x, SPEC.r, 0).mvm(&v);
+
+    // Worker 0's first incarnation exits(23) after its first job, with
+    // the rest of its queue in flight — the coordinator must respawn it,
+    // resubmit, and still produce identical bits.
+    let o = SubprocessOptions { kill_after_jobs: Some(1), ..opts() };
+    let op = build_op(pool(TransportKind::Subprocess, 2, o), &x, SPEC.r, 0);
+    let got = op.mvm(&v);
+    assert_eq!(got.data, want.data, "post-respawn results diverged");
+
+    let snap = op.acct.snapshot();
+    assert!(snap.worker_restarts >= 1, "no restart was counted");
+    assert!(snap.jobs_resubmitted >= 1, "no resubmission was counted");
+
+    // The revived pool keeps working: a second MVM on the same operator
+    // (same generation, fresh uploads already done) is also identical.
+    let again = op.mvm(&v);
+    assert_eq!(again.data, want.data, "pool unhealthy after a respawn");
+}
+
+#[test]
+fn hung_worker_times_out_and_the_solve_completes() {
+    let (x, v) = toy(48);
+    let want = build_op(pool(TransportKind::Local, 2, opts()), &x, SPEC.r, 0).mvm(&v);
+    let o = SubprocessOptions {
+        hang_after_jobs: Some(1),
+        job_timeout: Some(Duration::from_secs(2)),
+        ..opts()
+    };
+    let op = build_op(pool(TransportKind::Subprocess, 2, o), &x, SPEC.r, 0);
+    let got = op.mvm(&v);
+    assert_eq!(got.data, want.data, "post-timeout results diverged");
+    assert!(op.acct.snapshot().worker_restarts >= 1, "hang never tripped the timeout");
+}
+
+#[test]
+fn env_hooks_arm_fault_injection_and_timeout() {
+    // from_env is how `EXACTGP_TRANSPORT=subprocess cargo test` runs pick
+    // up the kill hook and timeout without code changes.
+    std::env::set_var("EXACTGP_KILL_WORKER_AFTER_JOBS", "3");
+    std::env::set_var("EXACTGP_WORKER_TIMEOUT_SECS", "7");
+    let o = SubprocessOptions::from_env();
+    std::env::remove_var("EXACTGP_KILL_WORKER_AFTER_JOBS");
+    std::env::remove_var("EXACTGP_WORKER_TIMEOUT_SECS");
+    assert_eq!(o.kill_after_jobs, Some(3));
+    assert_eq!(o.job_timeout, Some(Duration::from_secs(7)));
+
+    // "0" disables rather than arming a kill-before-first-job.
+    std::env::set_var("EXACTGP_KILL_WORKER_AFTER_JOBS", "0");
+    let o = SubprocessOptions::from_env();
+    std::env::remove_var("EXACTGP_KILL_WORKER_AFTER_JOBS");
+    assert_eq!(o.kill_after_jobs, None);
+}
+
+#[test]
+fn zero_workers_is_a_config_error_on_both_transports() {
+    for kind in [TransportKind::Local, TransportKind::Subprocess] {
+        let err = DevicePool::with_transport(kind, 0, &backend(), opts())
+            .err()
+            .expect("workers=0 must not construct a pool")
+            .to_string();
+        assert!(err.contains("at least one worker"), "unhelpful error: {err}");
+    }
+}
