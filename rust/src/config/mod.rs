@@ -79,6 +79,43 @@ impl TransportKind {
     }
 }
 
+/// What the serving tier does when its admission caps are exhausted
+/// (see `server::admission`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Shed immediately: the client gets an explicit retryable
+    /// "overloaded" reply the moment a cap is hit (the default — overload
+    /// degrades into fast, honest rejections, never silent queueing).
+    Reject,
+    /// Wait up to `server.shed_wait_ms` for a slot before shedding —
+    /// absorbs sub-millisecond admission spikes at the cost of holding
+    /// the connection thread.
+    Wait,
+}
+
+impl ShedPolicy {
+    /// Config/wire name of the policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPolicy::Reject => "reject",
+            ShedPolicy::Wait => "wait",
+        }
+    }
+
+    /// Parse `reject` / `wait`, with the valid values in the error.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "reject" => Ok(ShedPolicy::Reject),
+            "wait" => Ok(ShedPolicy::Wait),
+            _ => bail!(
+                "unknown server.shed_policy {s:?}: valid values are \
+                 \"reject\" (shed immediately at the cap) and \"wait\" \
+                 (wait up to server.shed_wait_ms for a slot first)"
+            ),
+        }
+    }
+}
+
 /// Which artifact flavor to prefer on the PJRT backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Flavor {
@@ -198,6 +235,26 @@ pub struct Config {
     /// serve batch flushes once its oldest query has waited this long.
     pub serve_max_delay_ms: f64,
 
+    // serving tier (the `serve --listen` front-end; see `server`)
+    /// Address the TCP front-end binds (`host:port`; port 0 picks a free
+    /// one, handy for tests).
+    pub server_listen: String,
+    /// Memory budget (MiB) shared by every resident model in the
+    /// registry; least-recently-used models are evicted to admit new
+    /// ones. Per-model cost is estimated from checkpoint metadata.
+    pub server_memory_mb: usize,
+    /// Global in-flight request cap across all models (0 = unlimited).
+    /// Requests beyond it are shed with an explicit retryable reply.
+    pub server_max_inflight: usize,
+    /// Per-model in-flight request cap (0 = unlimited).
+    pub server_max_inflight_per_model: usize,
+    /// What to do at the caps: shed immediately (`reject`) or wait up to
+    /// `server_shed_wait_ms` for a slot (`wait`).
+    pub server_shed_policy: ShedPolicy,
+    /// How long the `wait` shed policy holds an over-cap request before
+    /// shedding it anyway (milliseconds).
+    pub server_shed_wait_ms: f64,
+
     // experiment control
     /// Dataset scale policy (caps training sizes; `paper` = full size).
     pub scale: Scale,
@@ -247,6 +304,12 @@ impl Default for Config {
             predict_chunk_mb: 64,
             serve_batch: 256,
             serve_max_delay_ms: 2.0,
+            server_listen: "127.0.0.1:7470".into(),
+            server_memory_mb: 1024,
+            server_max_inflight: 256,
+            server_max_inflight_per_model: 64,
+            server_shed_policy: ShedPolicy::Reject,
+            server_shed_wait_ms: 5.0,
             scale: Scale::DEFAULT,
             trials: 1,
             seed: 0,
@@ -348,6 +411,16 @@ impl Config {
             "exec.predict_chunk_mb" => self.predict_chunk_mb = v.parse()?,
             "exec.serve_batch" => self.serve_batch = v.parse()?,
             "exec.serve_max_delay_ms" => self.serve_max_delay_ms = v.parse()?,
+            "server.listen" => self.server_listen = unquote(v),
+            "server.memory_mb" => self.server_memory_mb = v.parse()?,
+            "server.max_inflight" => self.server_max_inflight = v.parse()?,
+            "server.max_inflight_per_model" => {
+                self.server_max_inflight_per_model = v.parse()?
+            }
+            "server.shed_policy" => {
+                self.server_shed_policy = ShedPolicy::parse(&unquote(v))?
+            }
+            "server.shed_wait_ms" => self.server_shed_wait_ms = v.parse()?,
             "run.scale" => {
                 self.scale = Scale::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad scale {v:?}"))?
@@ -409,6 +482,37 @@ mod tests {
         assert_eq!(c.serve_batch, 256);
         assert_eq!(c.serve_max_delay_ms, 2.0);
         assert_eq!(c.worker_timeout_secs, 300);
+        assert_eq!(c.server_listen, "127.0.0.1:7470");
+        assert_eq!(c.server_memory_mb, 1024);
+        assert_eq!(c.server_max_inflight, 256);
+        assert_eq!(c.server_max_inflight_per_model, 64);
+        assert_eq!(c.server_shed_policy, ShedPolicy::Reject);
+        assert_eq!(c.server_shed_wait_ms, 5.0);
+    }
+
+    #[test]
+    fn server_section_overrides() {
+        let mut c = Config::default();
+        c.set("server.listen", "\"0.0.0.0:9000\"").unwrap();
+        c.set("server.memory_mb", "64").unwrap();
+        c.set("server.max_inflight", "32").unwrap();
+        c.set("server.max_inflight_per_model", "4").unwrap();
+        c.set("server.shed_policy", "wait").unwrap();
+        c.set("server.shed_wait_ms", "1.5").unwrap();
+        assert_eq!(c.server_listen, "0.0.0.0:9000");
+        assert_eq!(c.server_memory_mb, 64);
+        assert_eq!(c.server_max_inflight, 32);
+        assert_eq!(c.server_max_inflight_per_model, 4);
+        assert_eq!(c.server_shed_policy, ShedPolicy::Wait);
+        assert_eq!(c.server_shed_wait_ms, 1.5);
+        c.set("server.shed_policy", "\"reject\"").unwrap(); // quoted TOML form
+        assert_eq!(c.server_shed_policy, ShedPolicy::Reject);
+        // The parse error must teach the valid values.
+        let err = c.set("server.shed_policy", "drop").unwrap_err().to_string();
+        assert!(err.contains("reject"), "error should list valid values: {err}");
+        assert!(err.contains("wait"), "error should list valid values: {err}");
+        assert_eq!(ShedPolicy::Reject.name(), "reject");
+        assert_eq!(ShedPolicy::Wait.name(), "wait");
     }
 
     #[test]
@@ -469,6 +573,10 @@ mod tests {
         // subprocesses: transport is a runtime knob, not a model field.
         b.transport = TransportKind::Subprocess;
         b.worker_timeout_secs = 7;
+        // Serving-tier knobs shape the *server*, never the model.
+        b.server_memory_mb = 1;
+        b.server_max_inflight = 2;
+        b.server_shed_policy = ShedPolicy::Wait;
         assert_eq!(a.model_fingerprint(), b.model_fingerprint());
         // Model-shaping fields must.
         b.probes = 16;

@@ -106,6 +106,23 @@ results_dir = "results/x # not a comment"
     }
 
     #[test]
+    fn server_section_round_trips() {
+        let text = "[server]\nlisten = \"127.0.0.1:0\"\nmemory_mb = 8\n\
+                    max_inflight = 16\nmax_inflight_per_model = 2\n\
+                    shed_policy = \"wait\"\nshed_wait_ms = 0.5\n";
+        let mut cfg = crate::config::Config::default();
+        for (k, v) in parse(text).unwrap() {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.server_listen, "127.0.0.1:0");
+        assert_eq!(cfg.server_memory_mb, 8);
+        assert_eq!(cfg.server_max_inflight, 16);
+        assert_eq!(cfg.server_max_inflight_per_model, 2);
+        assert_eq!(cfg.server_shed_policy, crate::config::ShedPolicy::Wait);
+        assert_eq!(cfg.server_shed_wait_ms, 0.5);
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse("[unterminated").is_err());
         assert!(parse("novalue =").is_err());

@@ -25,15 +25,23 @@
 //! handle. The loop exits when every handle clone has been dropped and
 //! the queue is drained. Dispatch counts land in the model's
 //! `Accounting` (`serve_requests` / `serve_batches` /
-//! `serve_flush_full` / `serve_flush_deadline`).
+//! `serve_flush_full` / `serve_flush_deadline` /
+//! `serve_dispatch_failures`).
+//!
+//! Failure policy: a failed dispatch replies its error to that batch's
+//! waiters and the loop keeps serving — a single poisoned batch must not
+//! kill serving for every client. The loop gives up only after
+//! [`ServeOptions::max_consecutive_failures`] failures in a row.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::gp::exact::ExactGp;
 use crate::gp::Predictions;
+use crate::metrics::Accounting;
 
 /// A reply to one query: the predictive moments for its points, or a
 /// serving-side error description.
@@ -96,6 +104,40 @@ pub struct ServeStats {
     pub flush_full: u64,
     /// Dispatches triggered by the latency deadline (or shutdown drain).
     pub flush_deadline: u64,
+    /// Dispatches that failed: their waiters got the error reply and the
+    /// loop kept serving (a single poisoned batch must never kill serving
+    /// for every other client).
+    pub dispatch_failures: u64,
+}
+
+/// Default for [`ServeOptions::max_consecutive_failures`]: enough retries
+/// to ride out a transient backend hiccup, small enough that a model whose
+/// every dispatch fails stops burning queries quickly.
+pub const DEFAULT_MAX_CONSECUTIVE_FAILURES: usize = 8;
+
+/// Tuning for one serve loop run (the two `exec.serve_*` config knobs plus
+/// the failure-cap policy).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Flush when the accumulated batch reaches this many points.
+    pub batch_points: usize,
+    /// Flush when the oldest pending query has waited this long.
+    pub max_delay: Duration,
+    /// Give up (the loop returns an error) after this many *consecutive*
+    /// failed dispatches; any successful dispatch resets the count. Each
+    /// failed batch's waiters always receive the error reply first.
+    pub max_consecutive_failures: usize,
+}
+
+impl ServeOptions {
+    /// Options with the default consecutive-failure cap.
+    pub fn new(batch_points: usize, max_delay: Duration) -> ServeOptions {
+        ServeOptions {
+            batch_points,
+            max_delay,
+            max_consecutive_failures: DEFAULT_MAX_CONSECUTIVE_FAILURES,
+        }
+    }
 }
 
 /// Create the client handle + loop receiver pair for a model of feature
@@ -112,17 +154,46 @@ pub fn channel(d: usize) -> (ServeHandle, Receiver<ServeRequest>) {
 /// `batch_points` and `max_delay` are the two `exec.serve_*` knobs:
 /// flush when the accumulated batch reaches `batch_points`, or when
 /// `max_delay` has passed since the first query of the batch arrived.
-/// Returns the dispatch statistics; errors if a dispatch itself fails
-/// (every pending client gets the error string first).
+/// Returns the dispatch statistics. A failed dispatch replies the error
+/// to that batch's waiters and the loop keeps serving; only
+/// [`DEFAULT_MAX_CONSECUTIVE_FAILURES`] failures in a row make it give up
+/// (see [`run_opts`] to tune the cap).
 pub fn run(
     gp: &ExactGp,
     rx: Receiver<ServeRequest>,
     batch_points: usize,
     max_delay: Duration,
 ) -> Result<ServeStats> {
-    let d = gp.dim();
-    let batch_points = batch_points.max(1);
-    let acct = gp.accounting().clone();
+    run_opts(gp, rx, &ServeOptions::new(batch_points, max_delay))
+}
+
+/// [`run`] with explicit [`ServeOptions`].
+pub fn run_opts(
+    gp: &ExactGp,
+    rx: Receiver<ServeRequest>,
+    opts: &ServeOptions,
+) -> Result<ServeStats> {
+    run_with_dispatch(gp.dim(), gp.accounting().clone(), rx, opts, |xs| gp.predict(xs))
+}
+
+/// The loop itself, generalized over the dispatch function (`gp.predict`
+/// in production; tests inject failing dispatchers to exercise the
+/// poisoned-batch path). `d` is the feature dimensionality the handle was
+/// created with; `acct` receives the `serve_*` counters.
+pub fn run_with_dispatch<F>(
+    d: usize,
+    acct: Arc<Accounting>,
+    rx: Receiver<ServeRequest>,
+    opts: &ServeOptions,
+    mut dispatch: F,
+) -> Result<ServeStats>
+where
+    F: FnMut(&[f64]) -> Result<Predictions>,
+{
+    let batch_points = opts.batch_points.max(1);
+    let max_delay = opts.max_delay;
+    let failure_cap = opts.max_consecutive_failures.max(1);
+    let mut consecutive_failures = 0usize;
     let mut stats = ServeStats::default();
 
     loop {
@@ -179,8 +250,9 @@ pub fn run(
         // One memory-budgeted batched dispatch for the whole coalesced
         // batch (predict chunks it further under exec.predict_chunk_mb
         // if the batch is larger than one chunk).
-        match gp.predict(&xs) {
+        match dispatch(&xs) {
             Ok(preds) => {
+                consecutive_failures = 0;
                 let mut off = 0;
                 for (m, reply) in pending {
                     let slice = Predictions {
@@ -194,11 +266,23 @@ pub fn run(
                 }
             }
             Err(e) => {
+                // A poisoned batch fails alone: its waiters get the error
+                // reply and every other client keeps being served. Only a
+                // *streak* of failures — the model itself is broken, not
+                // one bad batch — ends the loop.
                 let msg = format!("{e:#}");
                 for (_, reply) in pending {
                     let _ = reply.send(Err(msg.clone()));
                 }
-                bail!("serve dispatch failed: {msg}");
+                stats.dispatch_failures += 1;
+                acct.note_serve_dispatch_failure();
+                consecutive_failures += 1;
+                if consecutive_failures >= failure_cap {
+                    bail!(
+                        "serve loop giving up after {consecutive_failures} \
+                         consecutive dispatch failures, last: {msg}"
+                    );
+                }
             }
         }
 

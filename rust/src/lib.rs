@@ -41,5 +41,6 @@ pub mod metrics;
 pub mod opt;
 pub mod partition;
 pub mod runtime;
+pub mod server;
 pub mod solvers;
 pub mod util;

@@ -8,7 +8,10 @@
 //!                trained model so later runs skip training entirely
 //!   serve        load a checkpoint (zero solver work at startup) and run
 //!                the coalescing request loop: concurrent single-point
-//!                queries are batched into memory-budgeted dispatches
+//!                queries are batched into memory-budgeted dispatches.
+//!                With --listen: the networked multi-tenant serving tier
+//!                (TCP front-end, LRU model registry under a shared
+//!                memory budget, admission control with explicit sheds)
 //!   reproduce    run a paper experiment (table1|table2|fig1..fig4|table3|table5)
 //!   datasets     list the benchmark suite (paper signature + scaled size)
 //!   info         runtime / artifact environment report
@@ -100,6 +103,11 @@ fn print_usage() {
                          [--queries file.csv] [--batch N] [--max-delay-ms T]\n\
                          [--no-baseline] [--baseline-points N]\n\
                          [--assert-speedup X] [--out results/BENCH_serve.json]\n\
+           exactgp serve --listen <addr> --models name=dir[,name=dir...]\n\
+                         [--memory-mb M] [--max-inflight N]\n\
+                         [--max-inflight-per-model N] [--shed-policy reject|wait]\n\
+                         [--clients C --requests R] [--assert-sheds]\n\
+                         [--assert-evictions] [--assert-p99-ms X]\n\
            exactgp reproduce --exp table1|table2|table3|table5|fig1|fig2|fig3|fig4\n\
            exactgp datasets [--scale ...]\n\
            exactgp info\n\
@@ -350,6 +358,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use exactgp::coordinator::serve;
     use exactgp::util::json::{num, obj, s};
     use std::time::{Duration, Instant};
+
+    // `--listen` (or a multi-model `--models` spec) selects the networked
+    // multi-tenant serving tier instead of the in-process benchmark.
+    if args.flag_present("listen") || args.get("models").is_some() {
+        return cmd_serve_listen(args);
+    }
 
     let mut cfg = build_config(args)?;
     if let Some(b) = args.get_usize("batch")? {
@@ -605,6 +619,301 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fields.push(("coalesced_speedup_vs_sequential", num(speedup)));
     }
     let doc = obj(fields);
+    std::fs::create_dir_all(&cfg.results_dir)?;
+    let out_default = format!("{}/BENCH_serve.json", cfg.results_dir);
+    let out = args.get_or("out", &out_default);
+    std::fs::write(out, doc.to_string_pretty())?;
+    eprintln!("wrote {out}");
+    Ok(())
+}
+
+/// The networked multi-tenant serving tier: bind `--listen <addr>`, serve
+/// `--models name=ckpt_dir[,name=dir...]` (or a single `--ckpt` dir named
+/// after its dataset) behind the LRU registry and admission control.
+///
+/// With `--clients 0` (the default) the server runs until killed. With
+/// `--clients C` it runs the overload benchmark instead: C client threads
+/// each fire `--requests R` single-point predicts round-robin across the
+/// models, retrying on shed replies. Every answer is checked bitwise
+/// against a directly-loaded copy of the same checkpoint, the server's
+/// `stats` counters are reconciled against the client-side tallies
+/// (sheds and answers must match exactly), and the run is written to
+/// `--out` (default `results/BENCH_serve.json`). Gates for CI:
+/// `--assert-sheds` (overload must shed, explicitly), `--assert-evictions`
+/// (the model churn must evict), `--assert-p99-ms X` (latency SLO over
+/// fully-successful requests).
+fn cmd_serve_listen(args: &Args) -> Result<()> {
+    use exactgp::config::ShedPolicy;
+    use exactgp::server::{parse_model_specs, Client, Server};
+    use exactgp::util::json::{num, obj, s, Json};
+    use std::time::Instant;
+
+    let mut cfg = build_config(args)?;
+    if let Some(b) = args.get_usize("batch")? {
+        cfg.serve_batch = b;
+    }
+    if let Some(ms) = args.get_f64("max-delay-ms")? {
+        cfg.serve_max_delay_ms = ms;
+    }
+    if let Some(addr) = args.get("listen") {
+        cfg.server_listen = addr.to_string();
+    }
+    if let Some(mb) = args.get_usize("memory-mb")? {
+        cfg.server_memory_mb = mb;
+    }
+    if let Some(n) = args.get_usize("max-inflight")? {
+        cfg.server_max_inflight = n;
+    }
+    if let Some(n) = args.get_usize("max-inflight-per-model")? {
+        cfg.server_max_inflight_per_model = n;
+    }
+    if let Some(p) = args.get("shed-policy") {
+        cfg.server_shed_policy = ShedPolicy::parse(p)?;
+    }
+    if let Some(ms) = args.get_f64("shed-wait-ms")? {
+        cfg.server_shed_wait_ms = ms;
+    }
+
+    let specs = match args.get("models") {
+        Some(spec) => parse_model_specs(spec)?,
+        None => {
+            let dir = args.get("ckpt").ok_or_else(|| {
+                anyhow::anyhow!(
+                    "serve --listen needs --models name=dir[,name=dir...] or --ckpt <dir>"
+                )
+            })?;
+            let dir = std::path::PathBuf::from(dir);
+            // A lone --ckpt model is named after the dataset it was
+            // trained on (what `stats` and `models` report).
+            let meta = exactgp::runtime::checkpoint::peek(&dir)?;
+            vec![(meta.name, dir)]
+        }
+    };
+
+    // Bench mode needs bitwise references *before* the server spins up
+    // its own copies: load each checkpoint directly, predict a sample of
+    // its test split, then drop the model again.
+    let clients = args.get_usize("clients")?.unwrap_or(0);
+    struct RefModel {
+        name: String,
+        d: usize,
+        x: Vec<f64>,
+        mean: Vec<f64>,
+        var: Vec<f64>,
+    }
+    let mut refs: Vec<RefModel> = Vec::new();
+    if clients > 0 {
+        for (name, dir) in &specs {
+            let (gp, ds) = coordinator::load_model(&cfg, dir)?;
+            let q = ds.n_test().min(32);
+            if q == 0 {
+                bail!("checkpoint {dir:?} carries no test split to bench with");
+            }
+            let x = ds.test_x[..q * ds.d].to_vec();
+            let p = gp.predict(&x)?;
+            refs.push(RefModel { name: name.clone(), d: ds.d, x, mean: p.mean, var: p.var });
+            eprintln!("reference predictions for {name:?}: {q} points");
+        }
+    }
+
+    let server = Server::start(&cfg, &specs)?;
+    eprintln!(
+        "serving {} model(s) on {} — budget {} MiB, caps: global={} per-model={}, \
+         shed policy {}",
+        specs.len(),
+        server.addr(),
+        cfg.server_memory_mb,
+        cfg.server_max_inflight,
+        cfg.server_max_inflight_per_model,
+        cfg.server_shed_policy.name(),
+    );
+    for e in server.registry().entries() {
+        eprintln!(
+            "  {} <- {:?} (d={}, n_train={}, ~{:.1} MiB resident)",
+            e.name,
+            e.dir,
+            e.meta.d,
+            e.meta.n_train,
+            e.meta.resident_bytes as f64 / (1 << 20) as f64
+        );
+    }
+
+    if clients == 0 {
+        eprintln!("ready; serving until killed");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    // Overload benchmark: C clients x R requests, round-robin models,
+    // retry-on-shed. Per-request latency covers the *whole* retry span;
+    // zero-shed requests are tracked separately for the SLO gate.
+    let per_client = args.get_usize("requests")?.unwrap_or(50).max(1);
+    let addr = server.addr();
+    let t_bench = Instant::now();
+    type BenchOut = Result<(Vec<f64>, Vec<f64>, u64)>; // (all lats, clean lats, sheds)
+    let outs: Vec<BenchOut> = std::thread::scope(|scope| {
+        let refs = &refs;
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> BenchOut {
+                    let mut cl = Client::connect(addr)?;
+                    let mut lats = Vec::with_capacity(per_client);
+                    let mut clean = Vec::with_capacity(per_client);
+                    let mut sheds = 0u64;
+                    for k in 0..per_client {
+                        let r = &refs[(c + k) % refs.len()];
+                        let qi = (c * per_client + k) % r.mean.len();
+                        let x = r.x[qi * r.d..(qi + 1) * r.d].to_vec();
+                        let t0 = Instant::now();
+                        let (p, shed_here) = cl.predict_retrying(&r.name, x, 10_000)?;
+                        let dt = t0.elapsed().as_secs_f64();
+                        lats.push(dt);
+                        if shed_here == 0 {
+                            clean.push(dt);
+                        }
+                        sheds += shed_here as u64;
+                        if p.mean[0].to_bits() != r.mean[qi].to_bits()
+                            || p.var[0].to_bits() != r.var[qi].to_bits()
+                        {
+                            bail!(
+                                "served answer for {}[{qi}] diverged from direct \
+                                 predict: mean {:e} vs {:e}, var {:e} vs {:e}",
+                                r.name,
+                                p.mean[0],
+                                r.mean[qi],
+                                p.var[0],
+                                r.var[qi]
+                            );
+                        }
+                    }
+                    Ok((lats, clean, sheds))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("client panicked"))))
+            .collect()
+    });
+    let bench_seconds = t_bench.elapsed().as_secs_f64();
+
+    let mut lats = Vec::new();
+    let mut clean = Vec::new();
+    let mut client_sheds = 0u64;
+    for out in outs {
+        let (l, c, sh) = out?;
+        lats.extend(l);
+        clean.extend(c);
+        client_sheds += sh;
+    }
+    let answered = (clients * per_client) as u64;
+
+    // Reconcile the server's books against the client-side tallies: every
+    // shed reply was observed by exactly one retry, every answer by
+    // exactly one request, so the stats must match *exactly*.
+    let mut cl = Client::connect(addr)?;
+    let stats = cl.stats()?;
+    let model_stats = stats.req("models")?;
+    let sum_counter = |key: &str| -> Result<u64> {
+        let mut total = 0u64;
+        for r in &refs {
+            let m = model_stats.req(&r.name)?;
+            total += m.req_f64(key)? as u64;
+        }
+        Ok(total)
+    };
+    let srv_sheds = sum_counter("sheds")?;
+    let srv_points = sum_counter("points")?;
+    let srv_requests = sum_counter("requests")?;
+    let srv_loads = sum_counter("loads")?;
+    let srv_evictions = sum_counter("evictions")?;
+    let srv_errors = sum_counter("errors")?;
+    if srv_sheds != client_sheds {
+        bail!(
+            "shed accounting mismatch: server counted {srv_sheds}, clients \
+             observed {client_sheds} — a shed was silent or double-counted"
+        );
+    }
+    if srv_points != answered || srv_requests != answered + client_sheds {
+        bail!(
+            "request accounting mismatch: server answered {srv_points} points \
+             over {srv_requests} requests; clients got {answered} answers \
+             through {client_sheds} sheds"
+        );
+    }
+    drop(cl);
+    server.shutdown();
+
+    let pcts = exactgp::metrics::percentiles(&lats, &[0.50, 0.90, 0.99]);
+    // NaN when *every* request was shed at least once; the SLO gate then
+    // fails (nothing to verify) and the JSON field goes null (NaN is not
+    // valid JSON).
+    let clean_p99 = exactgp::metrics::percentiles(&clean, &[0.99])[0];
+    let shed_rate = client_sheds as f64 / (answered + client_sheds).max(1) as f64;
+    coordinator::print_table(
+        &format!(
+            "multi-tenant serving: {answered} requests, {} model(s), \
+             {client_sheds} sheds absorbed",
+            refs.len()
+        ),
+        &["metric", "value"],
+        &[
+            vec!["throughput".into(), format!("{:.0} answers/s", answered as f64 / bench_seconds)],
+            vec!["shed rate".into(), format!("{:.1}% of attempts", shed_rate * 1e2)],
+            vec!["loads / evictions".into(), format!("{srv_loads} / {srv_evictions}")],
+            vec!["request p50".into(), format!("{:.2} ms", pcts[0] * 1e3)],
+            vec!["request p99 (with retries)".into(), format!("{:.2} ms", pcts[2] * 1e3)],
+            vec!["request p99 (no sheds)".into(), format!("{:.2} ms", clean_p99 * 1e3)],
+            vec!["parity vs direct predict".into(), "bitwise-identical".into()],
+            vec!["accounting".into(), "server/client tallies reconciled".into()],
+        ],
+    );
+
+    if args.flag_present("assert-sheds") && client_sheds == 0 {
+        bail!(
+            "--assert-sheds: the workload never tripped admission control; \
+             raise --clients or lower --max-inflight"
+        );
+    }
+    if args.flag_present("assert-evictions") && srv_evictions == 0 {
+        bail!(
+            "--assert-evictions: no LRU eviction happened; lower --memory-mb \
+             or register more models"
+        );
+    }
+    if let Some(slo) = args.get_f64("assert-p99-ms")? {
+        let got = clean_p99 * 1e3;
+        if !(got <= slo) {
+            bail!("p99 of shed-free requests is {got:.1} ms, over the {slo} ms SLO");
+        }
+    }
+
+    let doc = obj(vec![
+        ("experiment", s("serve_tier")),
+        ("models", num(refs.len() as f64)),
+        ("clients", num(clients as f64)),
+        ("requests", num(answered as f64)),
+        ("sheds", num(client_sheds as f64)),
+        ("shed_rate", num(shed_rate)),
+        ("errors", num(srv_errors as f64)),
+        ("loads", num(srv_loads as f64)),
+        ("evictions", num(srv_evictions as f64)),
+        ("memory_mb", num(cfg.server_memory_mb as f64)),
+        ("max_inflight", num(cfg.server_max_inflight as f64)),
+        ("max_inflight_per_model", num(cfg.server_max_inflight_per_model as f64)),
+        ("bench_seconds", num(bench_seconds)),
+        ("throughput_answers_per_s", num(answered as f64 / bench_seconds)),
+        ("request_latency_p50_s", num(pcts[0])),
+        ("request_latency_p90_s", num(pcts[1])),
+        ("request_latency_p99_s", num(pcts[2])),
+        (
+            "request_latency_p99_noshed_s",
+            if clean_p99.is_finite() { num(clean_p99) } else { Json::Null },
+        ),
+        ("parity_bitwise", Json::Bool(true)),
+        ("accounting_reconciled", Json::Bool(true)),
+    ]);
     std::fs::create_dir_all(&cfg.results_dir)?;
     let out_default = format!("{}/BENCH_serve.json", cfg.results_dir);
     let out = args.get_or("out", &out_default);

@@ -107,6 +107,9 @@ pub struct Accounting {
     pub serve_flush_full: AtomicU64,
     /// Serving: flushes triggered by the latency deadline (or shutdown).
     pub serve_flush_deadline: AtomicU64,
+    /// Serving: batched dispatches that failed; their waiters got the
+    /// error reply and the loop kept serving (up to its consecutive cap).
+    pub serve_dispatch_failures: AtomicU64,
     /// Transport: worker processes respawned after a death or timeout.
     pub worker_restarts: AtomicU64,
     /// Transport: in-flight jobs resubmitted after their worker died.
@@ -195,6 +198,11 @@ impl Accounting {
         }
     }
 
+    /// Record one failed serve dispatch (batch errored; loop kept going).
+    pub fn note_serve_dispatch_failure(&self) {
+        self.serve_dispatch_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one worker process respawn (death or timeout recovery).
     pub fn note_worker_restart(&self) {
         self.worker_restarts.fetch_add(1, Ordering::Relaxed);
@@ -248,6 +256,7 @@ impl Accounting {
             serve_batches: self.serve_batches.load(Ordering::Relaxed),
             serve_flush_full: self.serve_flush_full.load(Ordering::Relaxed),
             serve_flush_deadline: self.serve_flush_deadline.load(Ordering::Relaxed),
+            serve_dispatch_failures: self.serve_dispatch_failures.load(Ordering::Relaxed),
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             jobs_resubmitted: self.jobs_resubmitted.load(Ordering::Relaxed),
             ipc_bytes_tx: self.ipc_bytes_tx.load(Ordering::Relaxed),
@@ -274,6 +283,7 @@ impl Accounting {
         self.serve_batches.store(0, Ordering::Relaxed);
         self.serve_flush_full.store(0, Ordering::Relaxed);
         self.serve_flush_deadline.store(0, Ordering::Relaxed);
+        self.serve_dispatch_failures.store(0, Ordering::Relaxed);
         self.worker_restarts.store(0, Ordering::Relaxed);
         self.jobs_resubmitted.store(0, Ordering::Relaxed);
         self.ipc_bytes_tx.store(0, Ordering::Relaxed);
@@ -318,6 +328,8 @@ pub struct AccountingSnapshot {
     pub serve_flush_full: u64,
     /// Serve flushes triggered by the latency deadline (or shutdown).
     pub serve_flush_deadline: u64,
+    /// Failed serve dispatches (error replied to that batch's waiters).
+    pub serve_dispatch_failures: u64,
     /// Worker processes respawned after a death or timeout.
     pub worker_restarts: u64,
     /// In-flight jobs resubmitted after their worker died.
@@ -349,6 +361,8 @@ impl AccountingSnapshot {
             serve_batches: self.serve_batches - earlier.serve_batches,
             serve_flush_full: self.serve_flush_full - earlier.serve_flush_full,
             serve_flush_deadline: self.serve_flush_deadline - earlier.serve_flush_deadline,
+            serve_dispatch_failures: self.serve_dispatch_failures
+                - earlier.serve_dispatch_failures,
             worker_restarts: self.worker_restarts - earlier.worker_restarts,
             jobs_resubmitted: self.jobs_resubmitted - earlier.jobs_resubmitted,
             ipc_bytes_tx: self.ipc_bytes_tx - earlier.ipc_bytes_tx,
@@ -427,6 +441,7 @@ mod tests {
         acc.note_mvm();
         acc.note_worker_restart();
         acc.note_jobs_resubmitted(3);
+        acc.note_serve_dispatch_failure();
         acc.add_ipc_tx(700);
         acc.add_ipc_rx(300);
         let s = acc.snapshot();
@@ -437,6 +452,7 @@ mod tests {
         assert_eq!(s.mvms, 1);
         assert_eq!(s.worker_restarts, 1);
         assert_eq!(s.jobs_resubmitted, 3);
+        assert_eq!(s.serve_dispatch_failures, 1);
         assert_eq!(s.ipc_bytes_tx, 700);
         assert_eq!(s.ipc_bytes_rx, 300);
         // Transport counters flow through delta and reset like the rest.
@@ -446,6 +462,7 @@ mod tests {
         acc.reset();
         let z = acc.snapshot();
         assert_eq!(z.worker_restarts, 0);
+        assert_eq!(z.serve_dispatch_failures, 0);
         assert_eq!(z.jobs_resubmitted, 0);
         assert_eq!(z.ipc_bytes_tx, 0);
         assert_eq!(z.ipc_bytes_rx, 0);

@@ -59,6 +59,80 @@ pub fn exists(dir: &Path) -> bool {
     dir.join(MANIFEST).is_file()
 }
 
+/// Cheap manifest-only view of a checkpoint: identity plus a resident-cost
+/// estimate, *without* reading any array sidecar. The serving tier's model
+/// registry peeks every registered checkpoint at startup to budget its
+/// LRU eviction — loading the arrays just to learn their size would defeat
+/// the purpose.
+#[derive(Clone, Debug)]
+pub struct CheckpointMeta {
+    /// Kernel family the model was trained with.
+    pub kernel: KernelKind,
+    /// Dataset name the model was trained on.
+    pub name: String,
+    /// Feature dimensionality (post feature pipeline).
+    pub d: usize,
+    /// Training points.
+    pub n_train: usize,
+    /// Test points stored alongside the model.
+    pub n_test: usize,
+    /// Columns of the `[a | W]` prediction RHS.
+    pub pred_rhs_cols: usize,
+    /// Estimated bytes a loaded model keeps resident: the f64 payload of
+    /// every persisted array (training data, test split, prediction RHS,
+    /// projection). Runtime overhead (pool buffers, padded tiles) is not
+    /// counted — the estimate is a *relative* eviction weight, not an
+    /// allocator-accurate figure.
+    pub resident_bytes: u64,
+}
+
+/// Read a checkpoint's manifest only (format/version checked, arrays left
+/// on disk) and summarize it as a [`CheckpointMeta`].
+pub fn peek(dir: &Path) -> Result<CheckpointMeta> {
+    let path = dir.join(MANIFEST);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no checkpoint at {dir:?} (missing {MANIFEST})"))?;
+    let m = Json::parse(&text)
+        .with_context(|| format!("corrupt checkpoint manifest {path:?}"))?;
+    let format = m.req_str("format")?;
+    ensure!(
+        format == FORMAT,
+        "not an exactgp checkpoint: format is {format:?} (expected {FORMAT:?})"
+    );
+    let version = m.req_usize("version")? as u64;
+    ensure!(
+        version == VERSION,
+        "checkpoint version mismatch: directory has v{version}, this binary \
+         reads v{VERSION} — re-save the model with this binary"
+    );
+    let kernel = m.req_str("kernel")?;
+    let kernel = KernelKind::parse(kernel)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint names unknown kernel {kernel:?}"))?;
+    let ds = m.req("dataset")?;
+    let arrays = m.req("arrays")?;
+    let mut elems: u64 = 0;
+    match arrays {
+        Json::Obj(entries) => {
+            for (name, entry) in entries {
+                let len = entry
+                    .req_usize("len")
+                    .with_context(|| format!("corrupt checkpoint: array {name:?}"))?;
+                elems += len as u64;
+            }
+        }
+        _ => anyhow::bail!("corrupt checkpoint: arrays is not an object"),
+    }
+    Ok(CheckpointMeta {
+        kernel,
+        name: ds.req_str("name")?.to_string(),
+        d: ds.req_usize("d")?,
+        n_train: ds.req_usize("n_train")?,
+        n_test: ds.req_usize("n_test")?,
+        pred_rhs_cols: m.req_usize("pred_rhs_cols")?,
+        resident_bytes: elems * 8,
+    })
+}
+
 /// Borrowed view of the state `save` persists — references, so saving a
 /// million-point model never clones its O(n·d) inputs or O(n·r) slab.
 pub struct CheckpointView<'a> {
@@ -442,6 +516,36 @@ mod tests {
         assert_eq!(ck.step_log.len(), 1);
         assert_eq!(ck.step_log[0].cg_iters, 7);
         assert_eq!(ck.train_seconds, 1.5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn peek_reads_manifest_only_and_sizes_arrays() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_peek_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = toy_dataset(17, 3);
+        let hypers = Hypers::default_init(None);
+        let mut rng = Rng::new(73, 0);
+        let rhs = Mat::from_vec(17, 4, rng.normal_vec(17 * 4));
+        save(&dir, &toy_view(&ds, &hypers, &rhs, &[])).unwrap();
+
+        let meta = peek(&dir).unwrap();
+        assert_eq!(meta.kernel, KernelKind::Matern32);
+        assert_eq!(meta.name, "toy");
+        assert_eq!((meta.d, meta.n_train, meta.n_test), (3, 17, 3));
+        assert_eq!(meta.pred_rhs_cols, 4);
+        // train_x + train_y + test_x + test_y + pred_rhs, 8 bytes each.
+        let elems = 17 * 3 + 17 + 3 * 3 + 3 + 17 * 4;
+        assert_eq!(meta.resident_bytes, (elems as u64) * 8);
+
+        // peek must not depend on the sidecars: delete them all and it
+        // still answers (that is the point — no array I/O).
+        for f in ["train_x", "train_y", "test_x", "test_y", "pred_rhs"] {
+            std::fs::remove_file(dir.join(format!("{f}.bin"))).unwrap();
+        }
+        assert!(peek(&dir).is_ok());
+        assert!(load(&dir).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,210 @@
+//! Admission control: bounded in-flight work, explicit load shedding.
+//!
+//! The serving tier never queues silently. Every predict request must win
+//! an admission [`Permit`] — one slot against the global in-flight cap
+//! *and* one against its model's cap — before it may touch a serve loop.
+//! When a cap is exhausted the request is **shed**: the client gets an
+//! explicit retryable "overloaded" reply immediately (or, under the
+//! `wait` policy, after a short bounded wait). Under open-loop overload
+//! the p99 of *admitted* requests stays flat and the excess turns into
+//! fast honest rejections instead of an unbounded queue whose latency
+//! grows without limit.
+//!
+//! Permits are RAII: dropping one releases both slots, so an error path
+//! can never leak capacity.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::config::{Config, ShedPolicy};
+
+/// Shared admission state (global cap + policy). Per-model in-flight
+/// counters live with the registry's per-model counters; callers pass the
+/// target model's counter into [`Admission::try_admit`].
+pub struct Admission {
+    global: AtomicUsize,
+    max_global: usize,
+    max_per_model: usize,
+    policy: ShedPolicy,
+    wait: Duration,
+}
+
+/// RAII admission slot: holds one unit of the global cap and one of the
+/// model's cap, released on drop.
+pub struct Permit<'a> {
+    global: &'a AtomicUsize,
+    model: &'a AtomicUsize,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.global.fetch_sub(1, Ordering::SeqCst);
+        self.model.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Admission {
+    /// Build from the `[server]` config section. A cap of 0 means
+    /// unlimited (that axis never sheds).
+    pub fn from_config(cfg: &Config) -> Admission {
+        Admission::new(
+            cfg.server_max_inflight,
+            cfg.server_max_inflight_per_model,
+            cfg.server_shed_policy,
+            Duration::from_secs_f64(cfg.server_shed_wait_ms.max(0.0) / 1e3),
+        )
+    }
+
+    /// Explicit constructor (tests). Caps of 0 mean unlimited.
+    pub fn new(
+        max_global: usize,
+        max_per_model: usize,
+        policy: ShedPolicy,
+        wait: Duration,
+    ) -> Admission {
+        let unlimited = |cap: usize| if cap == 0 { usize::MAX } else { cap };
+        Admission {
+            global: AtomicUsize::new(0),
+            max_global: unlimited(max_global),
+            max_per_model: unlimited(max_per_model),
+            policy,
+            wait,
+        }
+    }
+
+    /// Requests currently holding a permit (all models).
+    pub fn inflight(&self) -> usize {
+        self.global.load(Ordering::SeqCst)
+    }
+
+    /// Global in-flight cap (`usize::MAX` = unlimited).
+    pub fn max_inflight(&self) -> usize {
+        self.max_global
+    }
+
+    /// Per-model in-flight cap (`usize::MAX` = unlimited).
+    pub fn max_inflight_per_model(&self) -> usize {
+        self.max_per_model
+    }
+
+    /// One optimistic acquisition attempt against both caps.
+    fn try_once<'a>(&'a self, model: &'a AtomicUsize) -> Option<Permit<'a>> {
+        // fetch_add-then-check: the increment claims the slot; an over-cap
+        // claim is undone before anyone observes it as admitted.
+        let g = self.global.fetch_add(1, Ordering::SeqCst);
+        if g >= self.max_global {
+            self.global.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        let m = model.fetch_add(1, Ordering::SeqCst);
+        if m >= self.max_per_model {
+            model.fetch_sub(1, Ordering::SeqCst);
+            self.global.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(Permit { global: &self.global, model })
+    }
+
+    /// Admit a request against the model whose in-flight counter is
+    /// `model`, or shed it: `Err` carries the client-facing overload
+    /// message. The `wait` policy retries until its deadline before
+    /// shedding; `reject` sheds on the first miss.
+    pub fn try_admit<'a>(
+        &'a self,
+        model: &'a AtomicUsize,
+    ) -> std::result::Result<Permit<'a>, String> {
+        if let Some(p) = self.try_once(model) {
+            return Ok(p);
+        }
+        if self.policy == ShedPolicy::Wait && !self.wait.is_zero() {
+            let deadline = Instant::now() + self.wait;
+            while Instant::now() < deadline {
+                std::thread::sleep(Duration::from_micros(200));
+                if let Some(p) = self.try_once(model) {
+                    return Ok(p);
+                }
+            }
+        }
+        Err(format!(
+            "overloaded: in-flight caps exhausted (global {} in flight, cap {}; \
+             per-model cap {}) — retry after backoff",
+            self.inflight(),
+            cap_str(self.max_global),
+            cap_str(self.max_per_model),
+        ))
+    }
+}
+
+fn cap_str(cap: usize) -> String {
+    if cap == usize::MAX {
+        "unlimited".into()
+    } else {
+        cap.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permits_are_raii_and_caps_bind() {
+        let adm = Admission::new(2, 1, ShedPolicy::Reject, Duration::ZERO);
+        let m_a = AtomicUsize::new(0);
+        let m_b = AtomicUsize::new(0);
+        let p1 = adm.try_admit(&m_a).unwrap();
+        // Per-model cap 1: a second request to model A sheds ...
+        let err = adm.try_admit(&m_a).unwrap_err();
+        assert!(err.contains("overloaded"), "{err}");
+        // ... while model B still fits under the global cap of 2.
+        let p2 = adm.try_admit(&m_b).unwrap();
+        // Global cap 2 now binds even for a fresh model.
+        let m_c = AtomicUsize::new(0);
+        assert!(adm.try_admit(&m_c).is_err());
+        assert_eq!(adm.inflight(), 2);
+        // A failed admission must not leak counts.
+        assert_eq!(m_a.load(Ordering::SeqCst), 1);
+        assert_eq!(m_c.load(Ordering::SeqCst), 0);
+        drop(p1);
+        drop(p2);
+        assert_eq!(adm.inflight(), 0);
+        assert_eq!(m_a.load(Ordering::SeqCst), 0);
+        // Capacity came back.
+        let _p3 = adm.try_admit(&m_a).unwrap();
+    }
+
+    #[test]
+    fn zero_caps_mean_unlimited() {
+        let adm = Admission::new(0, 0, ShedPolicy::Reject, Duration::ZERO);
+        let m = AtomicUsize::new(0);
+        let permits: Vec<_> = (0..64).map(|_| adm.try_admit(&m).unwrap()).collect();
+        assert_eq!(adm.inflight(), 64);
+        drop(permits);
+        assert_eq!(adm.inflight(), 0);
+    }
+
+    #[test]
+    fn wait_policy_admits_when_a_slot_frees() {
+        let adm = Admission::new(1, 1, ShedPolicy::Wait, Duration::from_millis(500));
+        let m = AtomicUsize::new(0);
+        let p = adm.try_admit(&m).unwrap();
+        // Free the slot from another thread shortly; the waiter should
+        // pick it up well before its 500ms deadline.
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| adm.try_admit(&m).map(|_| ()).is_ok());
+            std::thread::sleep(Duration::from_millis(30));
+            drop(p);
+            assert!(waiter.join().unwrap(), "waiter should admit after the release");
+        });
+    }
+
+    #[test]
+    fn wait_policy_sheds_at_the_deadline() {
+        let adm = Admission::new(1, 1, ShedPolicy::Wait, Duration::from_millis(20));
+        let m = AtomicUsize::new(0);
+        let _p = adm.try_admit(&m).unwrap();
+        let t0 = Instant::now();
+        assert!(adm.try_admit(&m).is_err());
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,38 @@
+//! The multi-tenant serving tier: a networked front-end over the
+//! checkpoint + coalescing-serve machinery.
+//!
+//! Stages, client to model (see `docs/ARCHITECTURE.md`):
+//!
+//! ```text
+//! TCP client ──frames──▶ net (accept + per-conn threads)
+//!                          │ parse, route
+//!                          ▼
+//!                       admission (global + per-model in-flight caps,
+//!                          │        explicit retryable sheds)
+//!                          ▼
+//!                       registry (name → checkpoint; LRU residency
+//!                          │       under server.memory_mb)
+//!                          ▼
+//!                       coordinator::serve loop (coalesced batched
+//!                                 predict, bitwise-exact)
+//! ```
+//!
+//! The tier adds no approximation anywhere: the JSON framing round-trips
+//! every `f64` bitwise, the coalescing loop is dispatch-order-invariant,
+//! and eviction/reload restores a model bit-for-bit from its checkpoint.
+//! So a served answer equals a local `ExactGp::predict` on the same
+//! checkpoint, bit for bit — enforced end-to-end by
+//! `rust/tests/server_e2e.rs`.
+//!
+//! Everything is `std`-only (threads + blocking sockets), matching the
+//! subprocess transport's dependency-free style.
+
+pub mod admission;
+pub mod net;
+pub mod proto;
+pub mod registry;
+
+pub use admission::{Admission, Permit};
+pub use net::{Client, Server};
+pub use proto::{PredictOutcome, Request};
+pub use registry::{parse_model_specs, ModelEntry, Registry, TenantCounters};

@@ -1,0 +1,395 @@
+//! The TCP front-end: accept loop, per-connection threads, request
+//! routing, and the matching blocking [`Client`].
+//!
+//! One thread per connection, blocking I/O, no external runtime — the
+//! same dependency-free style as the subprocess transport. Each
+//! connection thread reads length-delimited JSON frames
+//! ([`super::proto`]), routes them through admission control and the
+//! model registry, and writes one reply frame per request, in order.
+//!
+//! Request flow for `predict`:
+//!
+//! 1. look the model up in the registry (unknown → non-retryable error);
+//! 2. validate the query shape against the checkpoint's dimensionality
+//!    (before admission, so malformed queries never consume capacity);
+//! 3. win an admission [`Permit`](super::admission::Permit) or shed with
+//!    a retryable reply;
+//! 4. get the model's serve handle (cold-loading / LRU-evicting as
+//!    needed) and submit to its coalescing loop;
+//! 5. reply with the predictions — bitwise what a direct
+//!    `ExactGp::predict` returns, since neither the coalescing loop nor
+//!    the JSON framing perturbs a single bit.
+//!
+//! Shutdown: dropping the [`Server`] sets the stop flag, wakes the
+//! accept loop with a no-op connection, and joins every thread;
+//! connection threads notice the flag at their next 100 ms read timeout.
+//! The registry then drains and joins every serve loop.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Config;
+use crate::gp::Predictions;
+use crate::util::json::{num, obj, Json};
+
+use super::admission::Admission;
+use super::proto::{self, error_reply, predict_reply, PredictOutcome, Request};
+use super::registry::Registry;
+
+/// How often an idle connection thread re-checks the stop flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// A running serving tier: TCP listener + registry + admission control.
+/// Dropping it (or calling [`Server::shutdown`]) stops accepting, joins
+/// every connection thread, and drains every serve loop.
+pub struct Server {
+    addr: SocketAddr,
+    registry: Arc<Registry>,
+    admission: Arc<Admission>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.server_listen` and serve `specs` (name → checkpoint
+    /// dir) under the config's budget and admission caps. Port 0 binds
+    /// an ephemeral port; read it back with [`Server::addr`].
+    pub fn start(cfg: &Config, specs: &[(String, std::path::PathBuf)]) -> Result<Server> {
+        Server::start_with_registry(cfg, Arc::new(Registry::new(cfg, specs)?))
+    }
+
+    /// [`Server::start`] with a pre-built registry — the test seam for
+    /// byte-granular budgets ([`Registry::with_budget_bytes`]).
+    pub fn start_with_registry(cfg: &Config, registry: Arc<Registry>) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.server_listen)
+            .with_context(|| format!("binding {:?}", cfg.server_listen))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let admission = Arc::new(Admission::from_config(cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (reg, adm, stp) = (registry.clone(), admission.clone(), stop.clone());
+        let accept = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, reg, adm, stp))
+            .context("spawning accept loop")?;
+        Ok(Server { addr, registry, admission, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (the real port, even when configured as 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The registry backing this server.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Requests currently holding an admission permit.
+    pub fn inflight(&self) -> usize {
+        self.admission.inflight()
+    }
+
+    /// Stop accepting, join every connection thread, drain every serve
+    /// loop. Equivalent to dropping the server; named for call sites
+    /// where the intent should be visible.
+    pub fn shutdown(self) {
+        // Drop runs the teardown.
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() with a no-op connection; it checks
+        // the flag before serving anything.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.registry.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    admission: Arc<Admission>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(stream) => {
+                conns.retain(|h| !h.is_finished());
+                let (reg, adm, stp) = (registry.clone(), admission.clone(), stop.clone());
+                let spawned = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || {
+                        if let Err(e) = serve_conn(stream, &reg, &adm, &stp) {
+                            eprintln!("serving connection: {e:#}");
+                        }
+                    });
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    Err(e) => eprintln!("spawning connection thread: {e}"),
+                }
+            }
+            Err(e) => eprintln!("accepting connection: {e}"),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Serve one connection until the peer hangs up or shutdown. One reply
+/// frame per request frame, in order.
+fn serve_conn(
+    stream: TcpStream,
+    registry: &Registry,
+    admission: &Admission,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = BufWriter::new(stream);
+    let mut keep_going = || !stop.load(Ordering::SeqCst);
+    loop {
+        let doc = match proto::read_frame(&mut reader, &mut keep_going) {
+            Ok(Some(doc)) => doc,
+            Ok(None) => return Ok(()), // clean hang-up or shutdown
+            Err(e) => {
+                // Broken framing: the stream position is unrecoverable,
+                // so tell the peer (best effort) and drop the connection.
+                let _ = proto::write_frame(&mut writer, &error_reply(&format!("{e:#}"), false));
+                return Err(e);
+            }
+        };
+        let reply = handle_request(registry, admission, &doc);
+        proto::write_frame(&mut writer, &reply)?;
+    }
+}
+
+/// Route one parsed frame to its verb; never panics, always returns a
+/// reply body.
+fn handle_request(registry: &Registry, admission: &Admission, doc: &Json) -> Json {
+    let req = match Request::parse(doc) {
+        Ok(r) => r,
+        Err(e) => return error_reply(&format!("{e:#}"), false),
+    };
+    match req {
+        Request::Stats => stats_reply(registry, admission),
+        Request::Models => obj(vec![
+            ("ok", Json::Bool(true)),
+            ("models", registry.models_json()),
+        ]),
+        Request::Predict { model, x } => handle_predict(registry, admission, &model, x),
+    }
+}
+
+fn handle_predict(
+    registry: &Registry,
+    admission: &Admission,
+    model: &str,
+    x: Vec<f64>,
+) -> Json {
+    let Some(entry) = registry.entry(model) else {
+        return error_reply(&format!("unknown model {model:?}"), false);
+    };
+    entry.counters.requests.fetch_add(1, Ordering::SeqCst);
+
+    // Shape-check before admission: a malformed query must not consume
+    // capacity, and it makes a later submit() failure unambiguous — the
+    // loop died, not the query.
+    let d = entry.meta.d;
+    if x.is_empty() || x.len() % d != 0 {
+        return error_reply(
+            &format!("query holds {} values, not a positive multiple of d={d}", x.len()),
+            false,
+        );
+    }
+    let m = (x.len() / d) as u64;
+
+    let _permit = match admission.try_admit(&entry.counters.inflight) {
+        Ok(p) => p,
+        Err(msg) => {
+            entry.counters.sheds.fetch_add(1, Ordering::SeqCst);
+            return error_reply(&msg, true);
+        }
+    };
+
+    // Two attempts: a submit() failure after the shape check above means
+    // the model's serve loop died, so invalidate the stale residency and
+    // retry once against a fresh cold load.
+    for attempt in 0..2 {
+        let handle = match registry.handle(model) {
+            Ok(h) => h,
+            Err(e) => {
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                return error_reply(&format!("loading model {model:?}: {e:#}"), false);
+            }
+        };
+        let rx = match handle.submit(x.clone()) {
+            Ok(rx) => rx,
+            Err(_) => {
+                registry.invalidate(model);
+                if attempt == 0 {
+                    continue;
+                }
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                return error_reply(
+                    &format!("serve loop for {model:?} is unavailable (died twice)"),
+                    true,
+                );
+            }
+        };
+        return match rx.recv() {
+            Ok(Ok(p)) => {
+                entry.counters.points.fetch_add(m, Ordering::SeqCst);
+                predict_reply(model, &p)
+            }
+            Ok(Err(e)) => {
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                error_reply(&format!("dispatch failed: {e}"), true)
+            }
+            Err(_) => {
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                error_reply("serve loop dropped the request", true)
+            }
+        };
+    }
+    unreachable!("the retry loop always returns")
+}
+
+fn stats_reply(registry: &Registry, admission: &Admission) -> Json {
+    // Caps echo the config convention: 0 = unlimited.
+    let cap = |c: usize| num(if c == usize::MAX { 0.0 } else { c as f64 });
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("inflight", num(admission.inflight() as f64)),
+        ("max_inflight", cap(admission.max_inflight())),
+        ("max_inflight_per_model", cap(admission.max_inflight_per_model())),
+        ("budget_bytes", num(registry.budget_bytes() as f64)),
+        ("resident_bytes_est", num(registry.resident_bytes() as f64)),
+        ("models", registry.stats_json()),
+    ])
+}
+
+/// Blocking client for the serving tier's protocol — used by the CLI
+/// bench mode, the example, and the tests. One request in flight at a
+/// time per client (replies arrive in request order).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a serving tier.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to serving tier")?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Client { reader, writer: BufWriter::new(stream) })
+    }
+
+    /// Send one frame, wait for its reply frame.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        proto::write_frame(&mut self.writer, req)?;
+        let mut keep = || true;
+        proto::read_frame(&mut self.reader, &mut keep)?
+            .ok_or_else(|| anyhow!("server closed the connection"))
+    }
+
+    /// One predict round-trip; sheds come back as
+    /// [`PredictOutcome::Shed`], not errors.
+    pub fn predict(&mut self, model: &str, x: Vec<f64>) -> Result<PredictOutcome> {
+        let reply = self.call(&Request::Predict { model: model.to_string(), x }.to_json())?;
+        proto::parse_predict_reply(&reply)
+    }
+
+    /// Predict with bounded retry-on-shed (linear backoff). Returns the
+    /// predictions and how many sheds were absorbed. Permanent failures
+    /// and exhausted retries error.
+    pub fn predict_retrying(
+        &mut self,
+        model: &str,
+        x: Vec<f64>,
+        max_retries: usize,
+    ) -> Result<(Predictions, usize)> {
+        let mut sheds = 0usize;
+        loop {
+            match self.predict(model, x.clone())? {
+                PredictOutcome::Answer(p) => return Ok((p, sheds)),
+                PredictOutcome::Shed(msg) => {
+                    sheds += 1;
+                    if sheds > max_retries {
+                        bail!("shed {sheds} times, giving up; last: {msg}");
+                    }
+                    std::thread::sleep(Duration::from_millis(2 * sheds as u64));
+                }
+                PredictOutcome::Failed(msg) => bail!("predict failed: {msg}"),
+            }
+        }
+    }
+
+    /// The `stats` verb: global + per-model serving counters.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.call(&Request::Stats.to_json())
+    }
+
+    /// The `models` verb: registered models and their residency.
+    pub fn models(&mut self) -> Result<Json> {
+        self.call(&Request::Models.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// No checkpoints needed: an empty registry still serves the
+    /// protocol, which pins down framing, verb routing, and the
+    /// retryability convention over a real socket.
+    #[test]
+    fn empty_registry_serves_protocol_over_tcp() {
+        let mut cfg = Config::default();
+        cfg.server_listen = "127.0.0.1:0".into();
+        let server = Server::start(&cfg, &[]).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.req("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(stats.req("inflight").unwrap().as_f64(), Some(0.0));
+        assert_eq!(stats.req("budget_bytes").unwrap().as_f64(), Some((1024u64 << 20) as f64));
+
+        let models = client.models().unwrap();
+        assert!(models.req("models").unwrap().as_arr().unwrap().is_empty());
+
+        // Unknown model: permanent failure, not a shed.
+        match client.predict("ghost", vec![1.0]).unwrap() {
+            PredictOutcome::Failed(msg) => assert!(msg.contains("ghost"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+
+        // Unknown verb: error reply, connection stays usable.
+        let reply = client
+            .call(&obj(vec![("verb", crate::util::json::s("teleport"))]))
+            .unwrap();
+        assert_eq!(reply.req("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(reply.req("retryable").unwrap().as_bool(), Some(false));
+        assert!(client.stats().is_ok(), "connection survives a bad verb");
+
+        drop(client);
+        server.shutdown();
+    }
+}

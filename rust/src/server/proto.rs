@@ -1,0 +1,311 @@
+//! The serving tier's wire protocol: length-delimited JSON frames.
+//!
+//! One frame = a `u32` little-endian byte length followed by that many
+//! bytes of UTF-8 JSON. Requests carry a `verb` field (`predict`, `stats`,
+//! `models`); every reply carries `ok` (and, when `ok` is false, `error`
+//! plus `retryable` — `true` marks a shed that the client should simply
+//! retry, `false` a real failure).
+//!
+//! JSON numbers are written with Rust's shortest-round-trip `Display`
+//! (plus a `-0.0` guard in `util::json`), so every finite `f64` survives
+//! the trip bitwise — the transport never perturbs a prediction. The
+//! framing is deliberately the same shape as the subprocess transport's
+//! worker protocol (`exec::transport::wire`): length prefix first, no
+//! in-band delimiters, a hard size cap instead of trusting the peer.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::gp::Predictions;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Hard cap on one frame's payload. A million-value query is ~20 MB of
+/// JSON; anything past this cap is a protocol error, not a buffer to
+/// allocate (a garbage length prefix must not OOM the server).
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// One client request, parsed from a frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Predict mean/variance for `x` (flat row-major points in the
+    /// model's feature space) against the named model.
+    Predict {
+        /// Registry name of the target model.
+        model: String,
+        /// Flat row-major (m, d) query points.
+        x: Vec<f64>,
+    },
+    /// Per-model and global serving counters.
+    Stats,
+    /// List the registered models and their residency.
+    Models,
+}
+
+impl Request {
+    /// Encode as a JSON frame body.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Predict { model, x } => obj(vec![
+                ("verb", s("predict")),
+                ("model", s(model)),
+                ("x", arr(x.iter().map(|&v| num(v)))),
+            ]),
+            Request::Stats => obj(vec![("verb", s("stats"))]),
+            Request::Models => obj(vec![("verb", s("models"))]),
+        }
+    }
+
+    /// Parse a frame body; unknown verbs and malformed fields error with
+    /// the offending detail (the connection handler turns this into a
+    /// non-retryable error reply).
+    pub fn parse(doc: &Json) -> Result<Request> {
+        let verb = doc.req_str("verb")?;
+        match verb {
+            "predict" => Ok(Request::Predict {
+                model: doc.req_str("model")?.to_string(),
+                x: doc.req_f64_arr("x")?,
+            }),
+            "stats" => Ok(Request::Stats),
+            "models" => Ok(Request::Models),
+            _ => bail!("unknown verb {verb:?} (predict|stats|models)"),
+        }
+    }
+}
+
+/// Successful predict reply body.
+pub fn predict_reply(model: &str, p: &Predictions) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", s(model)),
+        ("mean", arr(p.mean.iter().map(|&v| num(v)))),
+        ("var", arr(p.var.iter().map(|&v| num(v)))),
+        ("noise", num(p.noise)),
+    ])
+}
+
+/// Error reply body. `retryable: true` marks an explicit shed (admission
+/// cap, transient dispatch failure) the client should retry after backing
+/// off; `false` a request that will keep failing (unknown model, bad
+/// query shape).
+pub fn error_reply(msg: &str, retryable: bool) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", s(msg)),
+        ("retryable", Json::Bool(retryable)),
+    ])
+}
+
+/// Client-side decoding of a predict reply.
+#[derive(Clone, Debug)]
+pub enum PredictOutcome {
+    /// The model answered.
+    Answer(Predictions),
+    /// The server shed the request (overload / transient failure); the
+    /// string is its explanation. Retry after backing off.
+    Shed(String),
+    /// Permanent failure — retrying the identical request will not help.
+    Failed(String),
+}
+
+/// Parse a predict reply frame into a [`PredictOutcome`].
+pub fn parse_predict_reply(doc: &Json) -> Result<PredictOutcome> {
+    match doc.req("ok")?.as_bool() {
+        Some(true) => Ok(PredictOutcome::Answer(Predictions {
+            mean: doc.req_f64_arr("mean")?,
+            var: doc.req_f64_arr("var")?,
+            noise: doc.req_f64("noise")?,
+        })),
+        Some(false) => {
+            let msg = doc.req_str("error")?.to_string();
+            let retryable = doc.req("retryable")?.as_bool().unwrap_or(false);
+            Ok(if retryable {
+                PredictOutcome::Shed(msg)
+            } else {
+                PredictOutcome::Failed(msg)
+            })
+        }
+        None => bail!("reply's \"ok\" field is not a boolean"),
+    }
+}
+
+/// Write one frame (length prefix + JSON body) and flush.
+pub fn write_frame<W: Write>(w: &mut W, doc: &Json) -> Result<()> {
+    let text = doc.to_string_pretty();
+    let bytes = text.as_bytes();
+    ensure!(
+        bytes.len() <= MAX_FRAME_BYTES,
+        "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+        bytes.len()
+    );
+    w.write_all(&(bytes.len() as u32).to_le_bytes()).context("writing frame length")?;
+    w.write_all(bytes).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame. Returns `None` on a clean end: the peer closed before
+/// starting a frame, or `keep_going` returned false while the stream was
+/// idle (no frame bytes read yet). `keep_going` is consulted on every
+/// read timeout (`WouldBlock` / `TimedOut`), which is how the server's
+/// connection threads notice shutdown without losing framing: a timeout
+/// *mid-frame* keeps waiting for the committed frame unless shutdown was
+/// requested. Clients on plain blocking sockets pass `&mut || true`.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    keep_going: &mut dyn FnMut() -> bool,
+) -> Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    if !read_full(r, &mut len, keep_going)? {
+        return Ok(None);
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    ensure!(
+        n <= MAX_FRAME_BYTES,
+        "peer announced a frame of {n} bytes, over the {MAX_FRAME_BYTES}-byte cap"
+    );
+    let mut buf = vec![0u8; n];
+    ensure!(
+        read_full(r, &mut buf, keep_going)?,
+        "connection closed mid-frame (got the length prefix, not the body)"
+    );
+    let text = std::str::from_utf8(&buf).context("frame is not UTF-8")?;
+    Ok(Some(Json::parse(text).context("frame is not valid JSON")?))
+}
+
+/// Fill `buf` exactly. `Ok(false)` on a clean stop before the first byte
+/// (EOF, or `keep_going` false at an idle timeout); errors on EOF or
+/// shutdown once the buffer is partially read — a peer that started a
+/// frame committed to finishing it.
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    keep_going: &mut dyn FnMut() -> bool,
+) -> Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-read ({off}/{} bytes)", buf.len());
+            }
+            Ok(k) => off += k,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if !keep_going() {
+                    if off == 0 {
+                        return Ok(false);
+                    }
+                    bail!("shutting down mid-read ({off}/{} bytes)", buf.len());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame"),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn always() -> impl FnMut() -> bool {
+        || true
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let req = Request::Predict {
+            model: "bike".into(),
+            x: vec![0.5, -1.25, 3.0_f64.sqrt(), -0.0],
+        };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &req.to_json()).unwrap();
+        // Length prefix matches the body.
+        let n = u32::from_le_bytes(wire[..4].try_into().unwrap()) as usize;
+        assert_eq!(n, wire.len() - 4);
+        let mut keep = always();
+        let doc = read_frame(&mut Cursor::new(&wire), &mut keep).unwrap().unwrap();
+        let back = Request::parse(&doc).unwrap();
+        match (&req, &back) {
+            (Request::Predict { x: a, .. }, Request::Predict { model, x: b }) => {
+                assert_eq!(model, "bike");
+                // Bitwise: the JSON trip must not perturb f64s (-0.0 incl).
+                let ab: Vec<u64> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u64> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb);
+            }
+            _ => panic!("verb changed shape"),
+        }
+    }
+
+    #[test]
+    fn two_frames_back_to_back_keep_framing() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Request::Stats.to_json()).unwrap();
+        write_frame(&mut wire, &Request::Models.to_json()).unwrap();
+        let mut cur = Cursor::new(&wire);
+        let mut keep = always();
+        let a = read_frame(&mut cur, &mut keep).unwrap().unwrap();
+        let b = read_frame(&mut cur, &mut keep).unwrap().unwrap();
+        assert_eq!(Request::parse(&a).unwrap(), Request::Stats);
+        assert_eq!(Request::parse(&b).unwrap(), Request::Models);
+        // Clean EOF after the last frame.
+        assert!(read_frame(&mut cur, &mut keep).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_hang() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Request::Stats.to_json()).unwrap();
+        wire.truncate(wire.len() - 3);
+        let mut keep = always();
+        let err = read_frame(&mut Cursor::new(&wire), &mut keep).unwrap_err();
+        assert!(format!("{err:#}").contains("mid-"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut wire = (u32::MAX).to_le_bytes().to_vec();
+        wire.extend_from_slice(b"xx");
+        let mut keep = always();
+        let err = read_frame(&mut Cursor::new(&wire), &mut keep).unwrap_err();
+        assert!(format!("{err}").contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn replies_parse_by_retryability() {
+        let p = Predictions { mean: vec![1.5], var: vec![0.25], noise: 0.1 };
+        let doc = predict_reply("m", &p);
+        match parse_predict_reply(&doc).unwrap() {
+            PredictOutcome::Answer(q) => {
+                assert_eq!(q.mean[0].to_bits(), p.mean[0].to_bits());
+                assert_eq!(q.var[0].to_bits(), p.var[0].to_bits());
+                assert_eq!(q.noise.to_bits(), p.noise.to_bits());
+            }
+            other => panic!("expected an answer, got {other:?}"),
+        }
+        match parse_predict_reply(&error_reply("overloaded", true)).unwrap() {
+            PredictOutcome::Shed(m) => assert!(m.contains("overloaded")),
+            other => panic!("expected a shed, got {other:?}"),
+        }
+        match parse_predict_reply(&error_reply("unknown model", false)).unwrap() {
+            PredictOutcome::Failed(m) => assert!(m.contains("unknown")),
+            other => panic!("expected a failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_name_the_problem() {
+        let doc = Json::parse(r#"{"verb": "teleport"}"#).unwrap();
+        let err = Request::parse(&doc).unwrap_err();
+        assert!(format!("{err}").contains("teleport"));
+        let doc = Json::parse(r#"{"verb": "predict", "model": "m"}"#).unwrap();
+        assert!(Request::parse(&doc).is_err()); // missing x
+    }
+}

@@ -1,0 +1,401 @@
+//! The model registry: hot-loading, LRU residency, per-tenant counters.
+//!
+//! The registry owns the mapping from model *names* to checkpoint
+//! directories and decides which models are **resident** — loaded into
+//! memory with a running coalescing serve loop — under a shared byte
+//! budget (`server.memory_mb`). Models load lazily on first request and
+//! are evicted least-recently-used when admitting another model would
+//! exceed the budget. A model's resident cost is estimated up front from
+//! its checkpoint manifest alone ([`checkpoint::peek`] — no array reads),
+//! so the admit/evict decision never requires loading the candidate
+//! first.
+//!
+//! Eviction is graceful and bitwise-invisible: the registry drops *its*
+//! clone of the model's [`ServeHandle`], so the serve loop drains every
+//! in-flight query (clients holding their own clones still get answers)
+//! and exits; a later request for the same name reloads from the same
+//! checkpoint, which restores the model bit-for-bit
+//! (`rust/tests/server_registry.rs` asserts evict-then-reload parity).
+//!
+//! Locking: one coarse mutex guards the resident set and is held across
+//! checkpoint loads. That serializes cold loads — deliberately: loads
+//! are the expensive, budget-changing operation, and serializing them
+//! makes "evict then load" atomic, so two concurrent cold requests can
+//! never both admit under a budget that only fits one. Hot hits do a
+//! find + clone under the same lock (microseconds). No other lock is
+//! ever taken while this one is held, so the registry cannot deadlock
+//! by construction.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::coordinator;
+use crate::coordinator::serve::{self, ServeHandle, ServeOptions};
+use crate::runtime::checkpoint::{self, CheckpointMeta};
+use crate::util::json::{obj, s, Json};
+
+/// Per-model serving counters, shared between the registry, admission
+/// control, and the `stats` verb. All monotonic except `inflight`.
+#[derive(Default)]
+pub struct TenantCounters {
+    /// Requests currently holding an admission permit for this model
+    /// (the per-model axis of `server.max_inflight_per_model`).
+    pub inflight: AtomicUsize,
+    /// Predict requests routed to this model (admitted or shed).
+    pub requests: AtomicU64,
+    /// Test points answered for this model.
+    pub points: AtomicU64,
+    /// Predict requests shed by admission control.
+    pub sheds: AtomicU64,
+    /// Predict requests that failed (load error, dispatch error).
+    pub errors: AtomicU64,
+    /// Cold loads from the checkpoint (first request + every reload
+    /// after an eviction).
+    pub loads: AtomicU64,
+    /// LRU evictions.
+    pub evictions: AtomicU64,
+}
+
+/// One registered model: static identity + live counters. The model's
+/// weights are *not* here — residency is the registry's business.
+pub struct ModelEntry {
+    /// Registry name (the `model` field of predict requests).
+    pub name: String,
+    /// Checkpoint directory backing this model.
+    pub dir: PathBuf,
+    /// Manifest summary: dimensionality, sizes, estimated resident bytes.
+    pub meta: CheckpointMeta,
+    /// Serving counters for this model.
+    pub counters: Arc<TenantCounters>,
+}
+
+/// A resident model: the registry's handle clone keeps its serve loop
+/// alive; dropping it (eviction) lets the loop drain and exit.
+struct Live {
+    name: String,
+    handle: ServeHandle,
+    bytes: u64,
+    /// Logical timestamp of the last request (LRU key).
+    last_used: u64,
+    thread: JoinHandle<()>,
+}
+
+/// The mutable residency state, behind the registry's one mutex.
+#[derive(Default)]
+struct Resident {
+    live: Vec<Live>,
+    /// Logical clock; bumped per request, stamps `last_used`.
+    clock: u64,
+    /// Estimated bytes of all live models.
+    bytes: u64,
+    /// Serve threads of evicted models, still draining their in-flight
+    /// queries. Joined opportunistically once finished, and at shutdown.
+    draining: Vec<JoinHandle<()>>,
+}
+
+/// The model registry. See the module docs for the residency protocol.
+pub struct Registry {
+    cfg: Config,
+    budget_bytes: u64,
+    models: BTreeMap<String, ModelEntry>,
+    resident: Mutex<Resident>,
+}
+
+impl Registry {
+    /// Register `specs` (name → checkpoint dir) under the config's
+    /// `server.memory_mb` budget. Every checkpoint manifest is peeked up
+    /// front, so a bad path or corrupt manifest fails at startup, not on
+    /// first request.
+    pub fn new(cfg: &Config, specs: &[(String, PathBuf)]) -> Result<Registry> {
+        Registry::with_budget_bytes(cfg, specs, (cfg.server_memory_mb as u64) << 20)
+    }
+
+    /// [`Registry::new`] with the budget in raw bytes — the test seam for
+    /// exercising eviction with models far smaller than a mebibyte.
+    pub fn with_budget_bytes(
+        cfg: &Config,
+        specs: &[(String, PathBuf)],
+        budget_bytes: u64,
+    ) -> Result<Registry> {
+        let mut models = BTreeMap::new();
+        for (name, dir) in specs {
+            if name.is_empty() {
+                bail!("empty model name (in {:?})", dir);
+            }
+            let meta = checkpoint::peek(dir)
+                .with_context(|| format!("peeking checkpoint for model {name:?}"))?;
+            let entry = ModelEntry {
+                name: name.clone(),
+                dir: dir.clone(),
+                meta,
+                counters: Arc::new(TenantCounters::default()),
+            };
+            if models.insert(name.clone(), entry).is_some() {
+                bail!("model {name:?} registered twice");
+            }
+        }
+        Ok(Registry {
+            cfg: cfg.clone(),
+            budget_bytes,
+            models,
+            resident: Mutex::new(Resident::default()),
+        })
+    }
+
+    /// The registered entry for `name`, if any.
+    pub fn entry(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.get(name)
+    }
+
+    /// Registered entries, in name order.
+    pub fn entries(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.models.values()
+    }
+
+    /// The shared residency budget, in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Estimated bytes of the currently resident models.
+    pub fn resident_bytes(&self) -> u64 {
+        self.lock().bytes
+    }
+
+    /// Whether `name` is currently resident (serve loop running).
+    pub fn is_resident(&self, name: &str) -> bool {
+        self.lock().live.iter().any(|l| l.name == name)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Resident> {
+        // A panicking serve-spawn can poison the lock; the resident state
+        // is still internally consistent (every mutation completes before
+        // anything that can panic), so recover rather than cascade.
+        self.resident.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// A serve handle for `name`: clone the live one on a hit, or evict
+    /// LRU models until the budget fits and cold-load on a miss. Errors
+    /// if the name is unknown or the checkpoint fails to load.
+    pub fn handle(&self, name: &str) -> Result<ServeHandle> {
+        let entry = self
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
+        let mut res = self.lock();
+        res.clock += 1;
+        let now = res.clock;
+        if let Some(live) = res.live.iter_mut().find(|l| l.name == name) {
+            live.last_used = now;
+            return Ok(live.handle.clone());
+        }
+
+        // Reap drained serve threads of past evictions (non-blocking:
+        // only threads that already finished are joined here).
+        let mut still = Vec::new();
+        for t in res.draining.drain(..) {
+            if t.is_finished() {
+                let _ = t.join();
+            } else {
+                still.push(t);
+            }
+        }
+        res.draining = still;
+
+        // Evict LRU until the newcomer fits. A single model larger than
+        // the whole budget still loads once the set is empty — refusing
+        // would make that model unservable, which is worse than a
+        // documented overshoot.
+        let need = entry.meta.resident_bytes;
+        while res.bytes + need > self.budget_bytes && !res.live.is_empty() {
+            let lru = res
+                .live
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, l)| l.last_used)
+                .map(|(i, _)| i)
+                .expect("non-empty live set");
+            let victim = res.live.swap_remove(lru);
+            res.bytes -= victim.bytes;
+            if let Some(v) = self.models.get(&victim.name) {
+                v.counters.evictions.fetch_add(1, Ordering::SeqCst);
+            }
+            // Dropping the registry's handle clone lets the loop drain
+            // its queue (clients holding clones still get replies) and
+            // exit; the thread parks in `draining` until then.
+            drop(victim.handle);
+            res.draining.push(victim.thread);
+        }
+
+        // Cold load, still under the lock: loads are serialized so
+        // "evict then load" is atomic under the budget.
+        let (gp, _ds) = coordinator::load_model(&self.cfg, &entry.dir)
+            .with_context(|| format!("loading model {name:?} from {:?}", entry.dir))?;
+        let (handle, rx) = serve::channel(gp.dim());
+        let opts = ServeOptions::new(
+            self.cfg.serve_batch,
+            Duration::from_secs_f64(self.cfg.serve_max_delay_ms.max(0.0) / 1e3),
+        );
+        let loop_name = name.to_string();
+        let thread = std::thread::Builder::new()
+            .name(format!("serve-{name}"))
+            .spawn(move || {
+                if let Err(e) = serve::run_opts(&gp, rx, &opts) {
+                    eprintln!("serve loop for model {loop_name:?} died: {e:#}");
+                }
+            })
+            .context("spawning serve loop thread")?;
+        entry.counters.loads.fetch_add(1, Ordering::SeqCst);
+        res.bytes += need;
+        res.live.push(Live {
+            name: name.to_string(),
+            handle: handle.clone(),
+            bytes: need,
+            last_used: now,
+            thread,
+        });
+        Ok(handle)
+    }
+
+    /// Drop a model whose serve loop died (a [`ServeHandle::submit`] to a
+    /// live entry failed): removes it from the resident set so the next
+    /// request cold-loads a fresh copy. Returns whether it was resident.
+    pub fn invalidate(&self, name: &str) -> bool {
+        let mut res = self.lock();
+        let Some(i) = res.live.iter().position(|l| l.name == name) else {
+            return false;
+        };
+        let victim = res.live.swap_remove(i);
+        res.bytes -= victim.bytes;
+        drop(victim.handle);
+        res.draining.push(victim.thread);
+        true
+    }
+
+    /// Per-model counters as JSON (the `stats` verb's `models` object).
+    pub fn stats_json(&self) -> Json {
+        let res = self.lock();
+        let mut models = BTreeMap::new();
+        for e in self.models.values() {
+            let c = &e.counters;
+            models.insert(
+                e.name.clone(),
+                obj(vec![
+                    ("resident", Json::Bool(res.live.iter().any(|l| l.name == e.name))),
+                    ("resident_bytes_est", Json::Num(e.meta.resident_bytes as f64)),
+                    ("loads", Json::Num(c.loads.load(Ordering::SeqCst) as f64)),
+                    ("evictions", Json::Num(c.evictions.load(Ordering::SeqCst) as f64)),
+                    ("requests", Json::Num(c.requests.load(Ordering::SeqCst) as f64)),
+                    ("points", Json::Num(c.points.load(Ordering::SeqCst) as f64)),
+                    ("sheds", Json::Num(c.sheds.load(Ordering::SeqCst) as f64)),
+                    ("errors", Json::Num(c.errors.load(Ordering::SeqCst) as f64)),
+                    ("inflight", Json::Num(c.inflight.load(Ordering::SeqCst) as f64)),
+                ]),
+            );
+        }
+        Json::Obj(models)
+    }
+
+    /// Registered models as JSON rows (the `models` verb).
+    pub fn models_json(&self) -> Json {
+        let res = self.lock();
+        Json::Arr(
+            self.models
+                .values()
+                .map(|e| {
+                    obj(vec![
+                        ("name", s(&e.name)),
+                        ("dir", s(&e.dir.display().to_string())),
+                        ("resident", Json::Bool(res.live.iter().any(|l| l.name == e.name))),
+                        ("resident_bytes_est", Json::Num(e.meta.resident_bytes as f64)),
+                        ("d", Json::Num(e.meta.d as f64)),
+                        ("n_train", Json::Num(e.meta.n_train as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Evict everything and join every serve thread. Idempotent; also run
+    /// by `Drop`, so a registry never leaks serve threads.
+    pub fn shutdown(&self) {
+        let (live, draining) = {
+            let mut res = self.lock();
+            res.bytes = 0;
+            (std::mem::take(&mut res.live), std::mem::take(&mut res.draining))
+        };
+        // Handles drop here (outside the lock); each loop drains and
+        // exits, then its thread joins.
+        let threads: Vec<JoinHandle<()>> =
+            live.into_iter().map(|l| l.thread).chain(draining).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Parse a `--models name=dir,name2=dir2` spec list.
+pub fn parse_model_specs(spec: &str) -> Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((name, dir)) = part.split_once('=') else {
+            bail!("model spec {part:?} is not name=dir");
+        };
+        let (name, dir) = (name.trim(), dir.trim());
+        if name.is_empty() || dir.is_empty() {
+            bail!("model spec {part:?} has an empty name or dir");
+        }
+        out.push((name.to_string(), PathBuf::from(dir)));
+    }
+    if out.is_empty() {
+        bail!("no models in spec {spec:?} (expected name=dir[,name=dir...])");
+    }
+    Ok(out)
+}
+
+/// Convenience for callers holding `&Path`s.
+pub fn spec(name: &str, dir: &Path) -> (String, PathBuf) {
+    (name.to_string(), dir.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_specs_parse() {
+        let specs = parse_model_specs("bike=ckpt/bike, elevators=ckpt/elev").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].0, "bike");
+        assert_eq!(specs[0].1, PathBuf::from("ckpt/bike"));
+        assert_eq!(specs[1].0, "elevators");
+        assert!(parse_model_specs("").is_err());
+        assert!(parse_model_specs("justaname").is_err());
+        assert!(parse_model_specs("=dir").is_err());
+    }
+
+    #[test]
+    fn unknown_checkpoint_dir_fails_at_registration() {
+        let cfg = Config::default();
+        let specs = vec![("ghost".to_string(), PathBuf::from("/nonexistent/ckpt"))];
+        let err = Registry::new(&cfg, &specs).unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+    }
+}

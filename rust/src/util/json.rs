@@ -277,7 +277,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // -0.0 must keep its sign: the serving protocol relies on
+                // JSON round-trips preserving f64 bits (Rust's shortest
+                // Display round-trips every finite value, but the i64
+                // collapse below would turn -0.0 into "0").
+                if x.fract() == 0.0 && x.abs() < 1e15 && (*x != 0.0 || x.is_sign_positive()) {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -403,6 +407,22 @@ mod tests {
         for (txt, want) in [("0", 0.0), ("-1.5", -1.5), ("2e3", 2000.0), ("1.25e-2", 0.0125)] {
             assert_eq!(Json::parse(txt).unwrap().as_f64().unwrap(), want);
         }
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bitwise() {
+        // The serving protocol ships predictions as JSON numbers and
+        // promises bitwise round-trips; -0.0 must not collapse to "0"
+        // through the writer's integer fast-path.
+        let text = num(-0.0).to_string_pretty();
+        assert_eq!(text, "-0");
+        let back = Json::parse(&text).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(num(0.0).to_string_pretty(), "0");
+        // Shortest-round-trip Display: a full-precision f64 survives.
+        let x = 0.1234567890123456789_f64;
+        let t = num(x).to_string_pretty();
+        assert_eq!(Json::parse(&t).unwrap().as_f64().unwrap().to_bits(), x.to_bits());
     }
 
     #[test]

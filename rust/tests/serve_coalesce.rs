@@ -132,3 +132,95 @@ fn concurrent_clients_get_correct_answers() {
         }
     }
 }
+
+/// Regression: a failed dispatch used to kill the whole loop, silently
+/// dropping every other client's pending and future queries. Now the
+/// poisoned batch's waiters get the error reply and serving continues.
+#[test]
+fn failed_dispatch_poisons_only_its_batch() {
+    use exactgp::coordinator::serve::ServeOptions;
+    use exactgp::gp::Predictions;
+    use exactgp::metrics::Accounting;
+    use std::sync::Arc;
+
+    let d = 2;
+    let (handle, rx) = serve::channel(d);
+    // Pre-queued so batch membership is deterministic at batch_points=1:
+    // three dispatches, the middle one poisoned.
+    let r1 = handle.submit(vec![1.0, 1.0]).unwrap();
+    let r2 = handle.submit(vec![666.0, 0.0]).unwrap();
+    let r3 = handle.submit(vec![2.0, 2.0]).unwrap();
+    drop(handle);
+
+    let acct = Arc::new(Accounting::default());
+    let opts = ServeOptions {
+        batch_points: 1,
+        max_delay: Duration::ZERO,
+        max_consecutive_failures: 3,
+    };
+    let stats = serve::run_with_dispatch(d, acct.clone(), rx, &opts, |xs| {
+        if xs.contains(&666.0) {
+            anyhow::bail!("poisoned batch");
+        }
+        let m = xs.len() / d;
+        Ok(Predictions { mean: vec![0.5; m], var: vec![0.25; m], noise: 0.1 })
+    })
+    .unwrap();
+
+    assert!(r1.recv().unwrap().is_ok());
+    let err = r2.recv().unwrap().unwrap_err();
+    assert!(err.contains("poisoned"), "waiters must see the dispatch error: {err}");
+    assert!(
+        r3.recv().unwrap().is_ok(),
+        "a failed batch must not take down batches after it"
+    );
+    assert_eq!(stats.batches, 3);
+    assert_eq!(stats.dispatch_failures, 1);
+    assert_eq!(acct.snapshot().serve_dispatch_failures, 1);
+}
+
+/// A model whose *every* dispatch fails must not burn queries forever:
+/// after the consecutive-failure cap the loop returns an error, and the
+/// waiters it did reach all received explicit error replies first.
+#[test]
+fn persistent_dispatch_failure_ends_the_loop_at_the_cap() {
+    use exactgp::coordinator::serve::ServeOptions;
+    use exactgp::metrics::Accounting;
+    use std::sync::Arc;
+
+    let d = 1;
+    let (handle, rx) = serve::channel(d);
+    let replies: Vec<_> =
+        (0..5).map(|i| handle.submit(vec![i as f64]).unwrap()).collect();
+    drop(handle);
+
+    let acct = Arc::new(Accounting::default());
+    let opts = ServeOptions {
+        batch_points: 1,
+        max_delay: Duration::ZERO,
+        max_consecutive_failures: 3,
+    };
+    let err = serve::run_with_dispatch(d, acct.clone(), rx, &opts, |_| {
+        anyhow::bail!("backend gone")
+    })
+    .unwrap_err();
+    assert!(format!("{err}").contains("consecutive"), "{err}");
+
+    // Exactly the cap's worth of batches were dispatched and answered
+    // with explicit errors; the rest were dropped when the loop died
+    // (their recv errors — no silent hang).
+    let (mut errored, mut dropped) = (0, 0);
+    for r in replies {
+        match r.recv() {
+            Ok(Err(e)) => {
+                assert!(e.contains("backend gone"), "{e}");
+                errored += 1;
+            }
+            Err(_) => dropped += 1,
+            Ok(Ok(_)) => panic!("no dispatch can have succeeded"),
+        }
+    }
+    assert_eq!(errored, 3);
+    assert_eq!(dropped, 2);
+    assert_eq!(acct.snapshot().serve_dispatch_failures, 3);
+}

@@ -1,0 +1,126 @@
+//! Shared fixture for the serving-tier integration tests: two small
+//! trained-and-checkpointed models ("bike" and "elevators") plus their
+//! direct-predict reference answers, built once per test process.
+//!
+//! Not a test crate itself — `tests/server_registry.rs` and
+//! `tests/server_e2e.rs` pull it in with `mod server_common;`.
+
+#![allow(dead_code)] // each including crate uses a different subset
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use exactgp::config::{Backend, Config};
+use exactgp::coordinator;
+use exactgp::data::synthetic::Scale;
+use exactgp::gp::exact::{ExactGp, Recipe};
+use exactgp::util::rng::Rng;
+
+/// One checkpointed model plus its ground truth: the first `q` test
+/// points and what a direct `ExactGp::predict` answers for them.
+pub struct RefModel {
+    /// Registry name (also the dataset name).
+    pub name: &'static str,
+    /// Checkpoint directory.
+    pub dir: PathBuf,
+    /// Feature dimensionality.
+    pub d: usize,
+    /// Flat (q, d) query points.
+    pub x: Vec<f64>,
+    /// Direct-predict means for `x`.
+    pub mean: Vec<f64>,
+    /// Direct-predict variances for `x`.
+    pub var: Vec<f64>,
+    /// Direct-predict noise.
+    pub noise: f64,
+    /// `checkpoint::peek` resident-bytes estimate.
+    pub bytes: u64,
+}
+
+impl RefModel {
+    /// The `qi`-th query point, flat.
+    pub fn point(&self, qi: usize) -> Vec<f64> {
+        self.x[qi * self.d..(qi + 1) * self.d].to_vec()
+    }
+
+    /// Number of reference points.
+    pub fn points(&self) -> usize {
+        self.mean.len()
+    }
+}
+
+/// The fixture: a serving config and two reference models.
+pub struct Fixture {
+    /// Serving-side config (native backend, small serve batches).
+    pub cfg: Config,
+    /// `[bike, elevators]`.
+    pub models: Vec<RefModel>,
+}
+
+/// The config every serving-tier test starts from.
+pub fn serve_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.workers = 2;
+    cfg.precond_rank = 12;
+    cfg.variance_rank = 16;
+    cfg.serve_batch = 16;
+    cfg.serve_max_delay_ms = 5.0;
+    cfg
+}
+
+static FIXTURE: OnceLock<Fixture> = OnceLock::new();
+
+/// Build (once) and return the fixture.
+pub fn fixture() -> &'static Fixture {
+    FIXTURE.get_or_init(build)
+}
+
+fn build() -> Fixture {
+    let specs: [(&'static str, usize); 2] = [("bike", 192), ("elevators", 160)];
+    let mut models = Vec::new();
+    for (name, cap) in specs {
+        let mut cfg = serve_cfg();
+        cfg.scale = Scale { train_cap: cap };
+        let dir = std::env::temp_dir()
+            .join(format!("exactgp_srv_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let ds = coordinator::load_dataset(&cfg, name, 0).unwrap();
+        let (pool, spec) = coordinator::make_pool(&cfg, ds.d).unwrap();
+        let mut rng = Rng::new(21, 0);
+        let mut gp = ExactGp::new(&cfg, cfg.kernel, &ds, pool, spec);
+        gp.train(Recipe { pretrain: false, adam_steps: 1 }, &mut rng).unwrap();
+        gp.precompute(&mut rng).unwrap();
+        gp.save(&dir, &ds).unwrap();
+
+        let q = ds.n_test().min(24);
+        assert!(q > 0, "{name} has no test split");
+        let x = ds.test_x[..q * ds.d].to_vec();
+        let p = gp.predict(&x).unwrap();
+        let bytes = exactgp::runtime::checkpoint::peek(&dir).unwrap().resident_bytes;
+        models.push(RefModel {
+            name,
+            dir,
+            d: ds.d,
+            x,
+            mean: p.mean,
+            var: p.var,
+            noise: p.noise,
+            bytes,
+        });
+    }
+    Fixture { cfg: serve_cfg(), models }
+}
+
+/// `(name, dir)` specs for registering both fixture models.
+pub fn specs(fx: &Fixture) -> Vec<(String, PathBuf)> {
+    fx.models.iter().map(|m| (m.name.to_string(), m.dir.clone())).collect()
+}
+
+/// A budget that fits either model alone but never both.
+pub fn one_model_budget(fx: &Fixture) -> u64 {
+    let (a, b) = (fx.models[0].bytes, fx.models[1].bytes);
+    assert!(a + b > a.max(b), "degenerate fixture sizes");
+    a.max(b)
+}

@@ -1,0 +1,170 @@
+//! Serving-tier acceptance test (the PR's end-to-end contract): a real
+//! TCP server over two checkpointed models under a one-model memory
+//! budget, asserting
+//!
+//! (a) **bitwise parity** — every served answer equals a direct
+//!     `ExactGp::predict` on the same checkpoint, across LRU
+//!     evict/reload churn;
+//! (b) **explicit sheds** — overload past the admission cap produces a
+//!     retryable shed reply, never silent queueing, and the retry
+//!     succeeds once capacity frees;
+//! (c) **honest books** — the `stats` verb's per-model
+//!     load/evict/shed/request counters match the scenario exactly.
+
+mod server_common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use exactgp::server::{Client, PredictOutcome, Registry, Server};
+use exactgp::util::json::Json;
+use server_common::{fixture, one_model_budget, specs, RefModel};
+
+fn answer(cl: &mut Client, m: &RefModel, qi: usize) -> exactgp::gp::Predictions {
+    match cl.predict(m.name, m.point(qi)).unwrap() {
+        PredictOutcome::Answer(p) => p,
+        other => panic!("expected an answer for {}[{qi}], got {other:?}", m.name),
+    }
+}
+
+fn assert_bitwise(p: &exactgp::gp::Predictions, m: &RefModel, qi: usize) {
+    assert_eq!(
+        p.mean[0].to_bits(),
+        m.mean[qi].to_bits(),
+        "served mean for {}[{qi}] is not bitwise the direct predict",
+        m.name
+    );
+    assert_eq!(
+        p.var[0].to_bits(),
+        m.var[qi].to_bits(),
+        "served var for {}[{qi}] is not bitwise the direct predict",
+        m.name
+    );
+    assert_eq!(p.noise.to_bits(), m.noise.to_bits());
+}
+
+fn counter(stats: &Json, model: &str, key: &str) -> u64 {
+    stats.req("models").unwrap().req(model).unwrap().req_f64(key).unwrap() as u64
+}
+
+#[test]
+fn tcp_tier_serves_two_models_with_parity_sheds_and_honest_stats() {
+    let fx = fixture();
+    let (a, b) = (&fx.models[0], &fx.models[1]);
+
+    let mut cfg = fx.cfg.clone();
+    cfg.server_listen = "127.0.0.1:0".into();
+    cfg.server_max_inflight = 1;
+    cfg.server_max_inflight_per_model = 1;
+    // Deterministic overload: with a huge batch and a long deadline, one
+    // in-flight predict holds its admission permit for ~500ms, so a
+    // second request inside that window *must* shed under cap 1.
+    cfg.serve_batch = 512;
+    cfg.serve_max_delay_ms = 500.0;
+
+    let registry =
+        Arc::new(Registry::with_budget_bytes(&cfg, &specs(fx), one_model_budget(fx)).unwrap());
+    let server = Server::start_with_registry(&cfg, registry.clone()).unwrap();
+    let addr = server.addr();
+
+    // (a) Parity through churn: A twice, then B (evicts A), then A again
+    // (evicts B, reloads A) — five answers, all bitwise.
+    let mut cl = Client::connect(addr).unwrap();
+    assert_bitwise(&answer(&mut cl, a, 0), a, 0);
+    assert_bitwise(&answer(&mut cl, a, 1), a, 1);
+    assert!(registry.is_resident(a.name));
+    assert_bitwise(&answer(&mut cl, b, 0), b, 0);
+    assert_bitwise(&answer(&mut cl, b, 1), b, 1);
+    assert!(!registry.is_resident(a.name), "B must have evicted A");
+    assert_bitwise(&answer(&mut cl, a, 2), a, 2);
+    assert!(!registry.is_resident(b.name), "A's reload must have evicted B");
+
+    // (b) Explicit shed under overload, then success on retry.
+    std::thread::scope(|scope| {
+        let holder = scope.spawn(|| {
+            let mut c1 = Client::connect(addr).unwrap();
+            answer(&mut c1, a, 0)
+        });
+        // Let the holder's request win the only permit (it then sits in
+        // the coalescing window for ~500ms)...
+        std::thread::sleep(Duration::from_millis(250));
+        let mut c2 = Client::connect(addr).unwrap();
+        match c2.predict(a.name, a.point(1)).unwrap() {
+            PredictOutcome::Shed(msg) => {
+                assert!(msg.contains("overloaded"), "shed reply should say why: {msg}")
+            }
+            other => panic!("second in-flight request past cap 1 must shed, got {other:?}"),
+        }
+        // ...and once the holder's reply lands, capacity is back.
+        assert_bitwise(&holder.join().unwrap(), a, 0);
+        assert_bitwise(&answer(&mut c2, a, 1), a, 1);
+    });
+
+    // (c) The books match the scenario exactly.
+    let stats = cl.stats().unwrap();
+    assert_eq!(stats.req("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(stats.req("inflight").unwrap().as_f64(), Some(0.0));
+    // A: 3 parity answers + holder + shed + retry = 6 requests, 5 points.
+    assert_eq!(counter(&stats, a.name, "requests"), 6);
+    assert_eq!(counter(&stats, a.name, "points"), 5);
+    assert_eq!(counter(&stats, a.name, "sheds"), 1);
+    assert_eq!(counter(&stats, a.name, "errors"), 0);
+    assert_eq!(counter(&stats, a.name, "loads"), 2);
+    assert_eq!(counter(&stats, a.name, "evictions"), 1);
+    // B: 2 parity answers; evicted once when A came back.
+    assert_eq!(counter(&stats, b.name, "requests"), 2);
+    assert_eq!(counter(&stats, b.name, "points"), 2);
+    assert_eq!(counter(&stats, b.name, "sheds"), 0);
+    assert_eq!(counter(&stats, b.name, "loads"), 1);
+    assert_eq!(counter(&stats, b.name, "evictions"), 1);
+    // Residency never exceeded the one-model budget.
+    let resident = stats.req("resident_bytes_est").unwrap().as_f64().unwrap();
+    let budget = stats.req("budget_bytes").unwrap().as_f64().unwrap();
+    assert!(resident <= budget, "resident {resident} over budget {budget}");
+
+    // The models verb agrees about who is resident right now.
+    let models = cl.models().unwrap();
+    let rows = models.req("models").unwrap().as_arr().unwrap().clone();
+    for row in &rows {
+        let name = row.req_str("name").unwrap();
+        let resident = row.req("resident").unwrap().as_bool().unwrap();
+        assert_eq!(resident, name == a.name, "{name} residency wrong");
+    }
+
+    drop(cl);
+    server.shutdown();
+}
+
+/// Malformed queries are rejected before admission: they consume no
+/// capacity, reply non-retryable, and leave the books clean.
+#[test]
+fn malformed_queries_never_reach_admission() {
+    let fx = fixture();
+    let a = &fx.models[0];
+    let mut cfg = fx.cfg.clone();
+    cfg.server_listen = "127.0.0.1:0".into();
+
+    let registry =
+        Arc::new(Registry::with_budget_bytes(&cfg, &specs(fx), one_model_budget(fx)).unwrap());
+    let server = Server::start_with_registry(&cfg, registry.clone()).unwrap();
+    let mut cl = Client::connect(server.addr()).unwrap();
+
+    // Wrong arity: d+1 values cannot be a (m, d) query.
+    match cl.predict(a.name, vec![0.0; a.d + 1]).unwrap() {
+        PredictOutcome::Failed(msg) => {
+            assert!(msg.contains("multiple of d"), "{msg}")
+        }
+        other => panic!("expected a permanent failure, got {other:?}"),
+    }
+    // Rejected before load: the model never became resident, and the
+    // request was counted but shed/error-free capacity-wise.
+    assert!(!registry.is_resident(a.name), "malformed query must not trigger a load");
+    let stats = cl.stats().unwrap();
+    assert_eq!(counter(&stats, a.name, "requests"), 1);
+    assert_eq!(counter(&stats, a.name, "points"), 0);
+    assert_eq!(counter(&stats, a.name, "sheds"), 0);
+    assert_eq!(counter(&stats, a.name, "loads"), 0);
+
+    drop(cl);
+    server.shutdown();
+}

@@ -1,0 +1,123 @@
+//! Model-registry contract (the serving tier's residency layer):
+//!
+//! * evict-then-reload is **bitwise invisible** — a model that was LRU'd
+//!   out and hot-loaded again answers exactly what it answered before;
+//! * two models churning through a one-model budget from concurrent
+//!   threads never deadlock and never cross-wire answers;
+//! * the per-model load/eviction counters record exactly the churn that
+//!   happened.
+
+mod server_common;
+
+use std::sync::atomic::Ordering;
+
+use exactgp::server::Registry;
+use server_common::{fixture, one_model_budget, specs};
+
+#[test]
+fn evict_then_reload_is_bitwise_invisible() {
+    let fx = fixture();
+    let (a, b) = (&fx.models[0], &fx.models[1]);
+    let reg = Registry::with_budget_bytes(&fx.cfg, &specs(fx), one_model_budget(fx)).unwrap();
+
+    // Cold-load A and take its answers.
+    let h = reg.handle(a.name).unwrap();
+    let first = h.query(a.point(0)).unwrap();
+    drop(h);
+    assert!(reg.is_resident(a.name));
+    assert_eq!(first.mean[0].to_bits(), a.mean[0].to_bits());
+    assert_eq!(first.var[0].to_bits(), a.var[0].to_bits());
+
+    // B does not fit next to A: loading it must evict A.
+    let h = reg.handle(b.name).unwrap();
+    let other = h.query(b.point(0)).unwrap();
+    drop(h);
+    assert!(!reg.is_resident(a.name), "one-model budget: B must evict A");
+    assert!(reg.is_resident(b.name));
+    assert_eq!(other.mean[0].to_bits(), b.mean[0].to_bits());
+
+    // Reload A: a fresh cold load from the same checkpoint must answer
+    // bitwise what the first residency answered.
+    let h = reg.handle(a.name).unwrap();
+    let again = h.query(a.point(0)).unwrap();
+    drop(h);
+    assert_eq!(again.mean[0].to_bits(), first.mean[0].to_bits(), "mean changed across evict/reload");
+    assert_eq!(again.var[0].to_bits(), first.var[0].to_bits(), "var changed across evict/reload");
+    assert_eq!(again.noise.to_bits(), first.noise.to_bits());
+
+    // The counters record exactly this churn: A loaded twice and evicted
+    // once, B loaded once and evicted once (when A came back).
+    let ca = &reg.entry(a.name).unwrap().counters;
+    let cb = &reg.entry(b.name).unwrap().counters;
+    assert_eq!(ca.loads.load(Ordering::SeqCst), 2);
+    assert_eq!(ca.evictions.load(Ordering::SeqCst), 1);
+    assert_eq!(cb.loads.load(Ordering::SeqCst), 1);
+    assert_eq!(cb.evictions.load(Ordering::SeqCst), 1);
+    assert!(reg.resident_bytes() <= reg.budget_bytes());
+
+    reg.shutdown();
+}
+
+#[test]
+fn concurrent_churn_under_one_model_budget_never_deadlocks_or_cross_wires() {
+    let fx = fixture();
+    let reg = Registry::with_budget_bytes(&fx.cfg, &specs(fx), one_model_budget(fx)).unwrap();
+
+    // One thread per model, each repeatedly forcing the other's eviction.
+    // In-flight queries survive eviction (the client's handle clone keeps
+    // the draining loop alive), so every answer must still be the right
+    // model's, bit for bit.
+    const ROUNDS: usize = 10;
+    std::thread::scope(|scope| {
+        for (t, m) in fx.models.iter().enumerate() {
+            let reg = &reg;
+            scope.spawn(move || {
+                for k in 0..ROUNDS {
+                    let qi = (t + k) % m.points();
+                    let h = reg.handle(m.name).unwrap();
+                    let p = h.query(m.point(qi)).unwrap();
+                    assert_eq!(
+                        p.mean[0].to_bits(),
+                        m.mean[qi].to_bits(),
+                        "cross-wired or perturbed mean for {}[{qi}] round {k}",
+                        m.name
+                    );
+                    assert_eq!(
+                        p.var[0].to_bits(),
+                        m.var[qi].to_bits(),
+                        "cross-wired or perturbed var for {}[{qi}] round {k}",
+                        m.name
+                    );
+                }
+            });
+        }
+    });
+
+    // The threads churned (at least one eviction) and the invariants
+    // held: never more resident than the budget, books balanced.
+    let evictions: u64 = fx
+        .models
+        .iter()
+        .map(|m| reg.entry(m.name).unwrap().counters.evictions.load(Ordering::SeqCst))
+        .sum();
+    assert!(evictions >= 1, "two models through a one-model budget must evict");
+    assert!(reg.resident_bytes() <= reg.budget_bytes());
+
+    reg.shutdown();
+    // After shutdown nothing is resident and the books are empty.
+    assert_eq!(reg.resident_bytes(), 0);
+    assert!(!reg.is_resident(fx.models[0].name));
+}
+
+#[test]
+fn unknown_model_and_duplicate_registration_fail_loud() {
+    let fx = fixture();
+    let reg = Registry::with_budget_bytes(&fx.cfg, &specs(fx), one_model_budget(fx)).unwrap();
+    let err = reg.handle("nope").unwrap_err();
+    assert!(format!("{err}").contains("nope"), "{err}");
+
+    let mut dup = specs(fx);
+    dup.push(dup[0].clone());
+    let err = Registry::with_budget_bytes(&fx.cfg, &dup, 1 << 30).unwrap_err();
+    assert!(format!("{err}").contains("twice"), "{err}");
+}
