@@ -182,6 +182,10 @@ pub struct Config {
     pub adam_lr: f64,
     /// Adam steps for the no-pretraining recipe (Table 5: 100).
     pub full_adam_steps: usize,
+    /// Write a resumable training-state record every this many completed
+    /// Adam steps when `train --ckpt` is set (0 = only the final model).
+    /// A runtime knob: checkpoint cadence never shapes the trained model.
+    pub ckpt_every: usize,
 
     // baselines
     /// SGPR inducing points (paper: 512).
@@ -262,6 +266,10 @@ pub struct Config {
     pub trials: usize,
     /// Base RNG seed.
     pub seed: u64,
+    /// Deterministic fault plan, `seam[@worker]:count` comma-separated
+    /// (see `faults`); empty = inert. Merged with `EXACTGP_FAULTS` at
+    /// resolution time. A runtime knob — never part of the model.
+    pub faults: String,
     /// Directory holding the AOT artifact manifest.
     pub artifacts_dir: String,
     /// Directory where experiment/bench JSON reports are written.
@@ -286,6 +294,7 @@ impl Default for Config {
             finetune_adam_steps: 3,
             adam_lr: 0.1,
             full_adam_steps: 100,
+            ckpt_every: 0,
             sgpr_m: 512,
             svgp_m: 1024,
             svgp_batch: 1024,
@@ -313,6 +322,7 @@ impl Default for Config {
             scale: Scale::DEFAULT,
             trials: 1,
             seed: 0,
+            faults: String::new(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -393,6 +403,7 @@ impl Config {
             "train.finetune_adam_steps" => self.finetune_adam_steps = v.parse()?,
             "train.adam_lr" => self.adam_lr = v.parse()?,
             "train.full_adam_steps" => self.full_adam_steps = v.parse()?,
+            "train.ckpt_every" => self.ckpt_every = v.parse()?,
             "baselines.sgpr_m" => self.sgpr_m = v.parse()?,
             "baselines.svgp_m" => self.svgp_m = v.parse()?,
             "baselines.svgp_batch" => self.svgp_batch = v.parse()?,
@@ -427,6 +438,7 @@ impl Config {
             }
             "run.trials" => self.trials = v.parse()?,
             "run.seed" => self.seed = v.parse()?,
+            "run.faults" => self.faults = unquote(v),
             "run.artifacts_dir" => self.artifacts_dir = unquote(v),
             "run.results_dir" => self.results_dir = unquote(v),
             _ => bail!("unknown config key {key:?}"),
@@ -528,6 +540,10 @@ mod tests {
         c.set("exec.predict_chunk_mb", "128").unwrap();
         c.set("exec.serve_batch", "64").unwrap();
         c.set("exec.serve_max_delay_ms", "0.5").unwrap();
+        c.set("train.ckpt_every", "5").unwrap();
+        c.set("run.faults", "\"ckpt.enospc:1,worker.kill@0:3\"").unwrap();
+        assert_eq!(c.ckpt_every, 5);
+        assert_eq!(c.faults, "ckpt.enospc:1,worker.kill@0:3");
         assert!(!c.cache_kernel_blocks);
         assert_eq!(c.cache_memory_mb, 64);
         assert_eq!(c.predict_chunk, 2048);
@@ -577,6 +593,10 @@ mod tests {
         b.server_memory_mb = 1;
         b.server_max_inflight = 2;
         b.server_shed_policy = ShedPolicy::Wait;
+        // Fault injection and checkpoint cadence are harness/runtime
+        // knobs: a run crash-tested at every step trains the same model.
+        b.faults = "train.crash:2".into();
+        b.ckpt_every = 1;
         assert_eq!(a.model_fingerprint(), b.model_fingerprint());
         // Model-shaping fields must.
         b.probes = 16;

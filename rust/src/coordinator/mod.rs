@@ -20,8 +20,10 @@ use crate::data::Dataset;
 use crate::exec::transport::subprocess::SubprocessOptions;
 use crate::exec::transport::BackendSpec;
 use crate::exec::{pool::DevicePool, TileSpec};
-use crate::gp::exact::{ExactGp, Recipe};
+use crate::faults::FaultPlan;
+use crate::gp::exact::{ExactGp, Recipe, TrainCheckpointing};
 use crate::gp::{FitReport, Predictions};
+use crate::runtime::checkpoint;
 use crate::kernels::Hypers;
 use crate::metrics::Stopwatch;
 use crate::util::rng::{fnv1a, Rng};
@@ -100,6 +102,141 @@ pub fn run_model(
     run_model_with_recipe(cfg, model, ds, trial, ExactRecipe::PretrainFinetune)
 }
 
+/// Durable-training options for [`run_exact`]: where the model checkpoint
+/// lands, how often training-state records are written, and whether to
+/// resume from the newest durable record instead of starting fresh.
+#[derive(Clone, Debug)]
+pub struct Durability {
+    /// Model checkpoint directory. Training-state records live in a
+    /// `<dir>.train` sibling and are cleared once the final model is
+    /// durable here.
+    pub dir: std::path::PathBuf,
+    /// Write a training-state record every N optimizer steps (min 1).
+    pub every: usize,
+    /// Restart from the newest durable training-state record. The resumed
+    /// run converges to a **bitwise-identical** final model vs an
+    /// uninterrupted run — optimizer moments, RNG stream (including the
+    /// Box-Muller spare), and the step log are all restored exactly.
+    pub resume: bool,
+}
+
+/// Train + evaluate the exact GP, optionally with crash-safe resumable
+/// training. This is the one path the CLI, the benches, and the
+/// fault-injection harness share; `run_model_with_recipe` delegates its
+/// `ExactBbmm` arm here with `durability = None`.
+pub fn run_exact(
+    cfg: &Config,
+    ds: &Dataset,
+    trial: u64,
+    recipe: ExactRecipe,
+    durability: Option<&Durability>,
+) -> Result<FitReport> {
+    let plan = FaultPlan::resolve(&cfg.faults);
+    if !plan.is_inert() {
+        eprintln!("fault plan armed: {}", plan.describe());
+    }
+    let mut rng = Rng::new(cfg.seed ^ fnv1a(ds.name.as_str()), 7000 + trial);
+    let mut extra: Vec<(String, f64)> = vec![];
+
+    // Resume before any pool spin-up: a corrupt or mismatched record must
+    // fail loudly here, not after workers are already running.
+    let resume_state = match durability {
+        Some(dur) if dur.resume => {
+            if !checkpoint::train_state_exists(&dur.dir) {
+                bail!(
+                    "--resume: no training-state records under {:?} (nothing \
+                     to resume; run without --resume to train from scratch)",
+                    checkpoint::train_state_root(&dur.dir)
+                );
+            }
+            let st = checkpoint::load_train_state(&dur.dir)?;
+            if st.dataset_name != ds.name {
+                bail!(
+                    "--resume: training state under {:?} belongs to dataset \
+                     {:?}, not {:?}",
+                    checkpoint::train_state_root(&dur.dir),
+                    st.dataset_name,
+                    ds.name
+                );
+            }
+            eprintln!(
+                "resumed at step {} of {}; skipped {} completed steps",
+                st.step, st.total_steps, st.step
+            );
+            extra.push(("resumed_from_step".into(), st.step as f64));
+            Some(st)
+        }
+        _ => None,
+    };
+
+    let (pool, spec) = make_pool(cfg, ds.d)?;
+    let mut gp = ExactGp::new(cfg, cfg.kernel, ds, pool, spec);
+    let r = match recipe {
+        ExactRecipe::PretrainFinetune => Recipe::paper_default(cfg),
+        ExactRecipe::FullAdam => Recipe::full_adam(cfg),
+    };
+    let ck = durability.map(|dur| TrainCheckpointing {
+        dir: dur.dir.clone(),
+        every: dur.every.max(1),
+        dataset_name: ds.name.clone(),
+        plan: plan.clone(),
+    });
+    gp.train_ckpt(r, &mut rng, ck.as_ref(), resume_state.as_ref())?;
+    let train_s = gp.train_seconds;
+    let train_snap = gp.accounting().snapshot();
+    eprintln!(
+        "training accounting: mbcg_solves={} mvms={} cg_breakdowns={}",
+        train_snap.mbcg_solves, train_snap.mvms, train_snap.cg_breakdowns
+    );
+    extra.push(("train_mbcg_solves".into(), train_snap.mbcg_solves as f64));
+    gp.precompute(&mut rng)?;
+    extra.push(("partitions".into(), gp.partitions as f64));
+    extra.push(("workers".into(), cfg.workers as f64));
+    extra.push((
+        "cg_iters_mean".into(),
+        if gp.step_log.is_empty() {
+            0.0
+        } else {
+            gp.step_log.iter().map(|s| s.cg_iters as f64).sum::<f64>()
+                / gp.step_log.len() as f64
+        },
+    ));
+    let snap = gp.accounting().snapshot();
+    extra.push(("bytes_moved".into(), (snap.bytes_to_device + snap.bytes_from_device) as f64));
+    extra.push(("peak_tile_bytes".into(), snap.peak_tile_bytes as f64));
+
+    // The final model is persisted (through the same fault seams as the
+    // per-step records) *before* the training state is cleared: a crash
+    // between the two leaves both a complete model and a resumable
+    // record, never neither.
+    if let Some(dur) = durability {
+        gp.save_with(&dur.dir, ds, &plan)?;
+        checkpoint::clear_train_state(&dur.dir);
+        eprintln!("saved checkpoint {:?} (training state cleared)", dur.dir);
+    }
+
+    let preds = gp.predict(&ds.test_x)?;
+    let k = ds.n_test().min(1000).max(1);
+    let t0 = std::time::Instant::now();
+    let _ = gp.predict(&ds.test_x[..k * ds.d])?;
+    let predict_seconds = t0.elapsed().as_secs_f64();
+    extra.push(("predict_1k_seconds".into(), predict_seconds));
+
+    let (rmse, nll) = crate::gp::evaluate(&preds, ds);
+    Ok(FitReport {
+        model: Model::ExactBbmm.name().to_string(),
+        dataset: ds.name.clone(),
+        n_train: ds.n_train(),
+        d: ds.d,
+        rmse,
+        nll,
+        train_seconds: train_s,
+        precompute_seconds: gp.precompute_seconds,
+        predict_seconds,
+        extra,
+    })
+}
+
 pub fn run_model_with_recipe(
     cfg: &Config,
     model: Model,
@@ -107,43 +244,15 @@ pub fn run_model_with_recipe(
     trial: u64,
     recipe: ExactRecipe,
 ) -> Result<FitReport> {
+    if model == Model::ExactBbmm {
+        return run_exact(cfg, ds, trial, recipe, None);
+    }
     let mut rng = Rng::new(cfg.seed ^ fnv1a(ds.name.as_str()), 7000 + trial);
     let mut extra: Vec<(String, f64)> = vec![];
     let mut sw = Stopwatch::start();
 
     let (preds, train_s, pre_s): (Predictions, f64, f64) = match model {
-        Model::ExactBbmm => {
-            let (pool, spec) = make_pool(cfg, ds.d)?;
-            let mut gp = ExactGp::new(cfg, cfg.kernel, ds, pool, spec);
-            let r = match recipe {
-                ExactRecipe::PretrainFinetune => Recipe::paper_default(cfg),
-                ExactRecipe::FullAdam => Recipe::full_adam(cfg),
-            };
-            gp.train(r, &mut rng)?;
-            let train_s = gp.train_seconds;
-            gp.precompute(&mut rng)?;
-            extra.push(("partitions".into(), gp.partitions as f64));
-            extra.push(("workers".into(), cfg.workers as f64));
-            extra.push((
-                "cg_iters_mean".into(),
-                if gp.step_log.is_empty() {
-                    0.0
-                } else {
-                    gp.step_log.iter().map(|s| s.cg_iters as f64).sum::<f64>()
-                        / gp.step_log.len() as f64
-                },
-            ));
-            let snap = gp.accounting().snapshot();
-            extra.push(("bytes_moved".into(), (snap.bytes_to_device + snap.bytes_from_device) as f64));
-            extra.push(("peak_tile_bytes".into(), snap.peak_tile_bytes as f64));
-            sw.lap("train+pre");
-            let preds = gp.predict(&ds.test_x)?;
-            let k = ds.n_test().min(1000).max(1);
-            let t0 = std::time::Instant::now();
-            let _ = gp.predict(&ds.test_x[..k * ds.d])?;
-            extra.push(("predict_1k_seconds".into(), t0.elapsed().as_secs_f64()));
-            (preds, train_s, gp.precompute_seconds)
-        }
+        Model::ExactBbmm => unreachable!("handled by run_exact above"),
         Model::Cholesky => {
             let mut gp = crate::gp::cholesky::CholeskyGp::new(
                 cfg.kernel,

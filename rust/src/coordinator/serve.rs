@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::faults::{FaultPlan, Seam};
 use crate::gp::exact::ExactGp;
 use crate::gp::Predictions;
 use crate::metrics::Accounting;
@@ -116,8 +117,8 @@ pub struct ServeStats {
 pub const DEFAULT_MAX_CONSECUTIVE_FAILURES: usize = 8;
 
 /// Tuning for one serve loop run (the two `exec.serve_*` config knobs plus
-/// the failure-cap policy).
-#[derive(Clone, Copy, Debug)]
+/// the failure-cap policy and the fault-injection plan).
+#[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Flush when the accumulated batch reaches this many points.
     pub batch_points: usize,
@@ -127,15 +128,22 @@ pub struct ServeOptions {
     /// failed dispatches; any successful dispatch resets the count. Each
     /// failed batch's waiters always receive the error reply first.
     pub max_consecutive_failures: usize,
+    /// Fault plan for the `serve.dispatch` seam: the armed dispatch fails
+    /// exactly like a backend error (its waiters get the error reply, the
+    /// failure counters advance, the loop keeps serving). Inert by
+    /// default.
+    pub plan: Arc<FaultPlan>,
 }
 
 impl ServeOptions {
-    /// Options with the default consecutive-failure cap.
+    /// Options with the default consecutive-failure cap and no faults
+    /// armed.
     pub fn new(batch_points: usize, max_delay: Duration) -> ServeOptions {
         ServeOptions {
             batch_points,
             max_delay,
             max_consecutive_failures: DEFAULT_MAX_CONSECUTIVE_FAILURES,
+            plan: FaultPlan::inert(),
         }
     }
 }
@@ -249,8 +257,14 @@ where
 
         // One memory-budgeted batched dispatch for the whole coalesced
         // batch (predict chunks it further under exec.predict_chunk_mb
-        // if the batch is larger than one chunk).
-        match dispatch(&xs) {
+        // if the batch is larger than one chunk). The `serve.dispatch`
+        // fault seam fails the armed dispatch exactly like a backend
+        // error, exercising the poisoned-batch reply path on demand.
+        match opts
+            .plan
+            .fire_as_error(Seam::ServeDispatch, "batched predict dispatch")
+            .and_then(|()| dispatch(&xs))
+        {
             Ok(preds) => {
                 consecutive_failures = 0;
                 let mut off = 0;

@@ -18,10 +18,12 @@
 //! in-flight job) is killed, respawned, re-initialized, re-uploaded, and
 //! its in-flight jobs are resubmitted — counted in `Accounting`
 //! (`worker_restarts`, `jobs_resubmitted`). Stale events from a dead
-//! incarnation are fenced off by an incarnation number. The
-//! `EXACTGP_KILL_WORKER_AFTER_JOBS` hook (or `SubprocessOptions`) arms a
-//! deterministic mid-solve death on worker 0's first incarnation to prove
-//! the path.
+//! incarnation are fenced off by an incarnation number. Deterministic
+//! mid-solve deaths and hangs are scripted through the [`crate::faults`]
+//! plan (`worker.kill@W:N`, `worker.hang@W:N`, with
+//! `EXACTGP_KILL_WORKER_AFTER_JOBS` kept as a legacy alias for
+//! `worker.kill@0:N`); each armed entry is consumed at spawn time, so
+//! respawned incarnations always come up clean.
 
 use std::collections::{BTreeMap, HashSet};
 use std::io::BufReader;
@@ -37,6 +39,7 @@ use crate::config::Config;
 use crate::exec::pool::Job;
 use crate::exec::transport::{wire, BackendSpec, Transport};
 use crate::exec::PaddedData;
+use crate::faults::FaultPlan;
 use crate::metrics::Accounting;
 
 /// Spawning knobs for the subprocess transport.
@@ -47,42 +50,37 @@ pub struct SubprocessOptions {
     /// sibling of the current executable (covers `target/*/deps` test
     /// binaries finding `target/*/exactgp`).
     pub worker_bin: Option<PathBuf>,
-    /// Fault injection: worker 0's first incarnation exits after this
-    /// many jobs.
-    pub kill_after_jobs: Option<u64>,
-    /// Fault injection: worker 0's first incarnation hangs after this
-    /// many jobs (exercises the timeout path).
-    pub hang_after_jobs: Option<u64>,
+    /// Fault plan whose `worker.kill@W:N` / `worker.hang@W:N` seams arm
+    /// worker W's *first* incarnation to exit / hang after N jobs (each
+    /// entry is consumed at spawn; respawns come up clean).
+    pub plan: Arc<FaultPlan>,
     /// Declare a worker hung when it has in-flight jobs but no progress
     /// for this long; `None` disables the timeout.
     pub job_timeout: Option<Duration>,
 }
 
 impl SubprocessOptions {
-    /// Read the environment hooks: `EXACTGP_KILL_WORKER_AFTER_JOBS`
-    /// (fault injection) and `EXACTGP_WORKER_TIMEOUT_SECS` (hang
+    /// Read the environment hooks: `EXACTGP_FAULTS` (with
+    /// `EXACTGP_KILL_WORKER_AFTER_JOBS` as a legacy alias for
+    /// `worker.kill@0:N`) and `EXACTGP_WORKER_TIMEOUT_SECS` (hang
     /// detection; 0 disables).
     pub fn from_env() -> SubprocessOptions {
-        let kill = std::env::var("EXACTGP_KILL_WORKER_AFTER_JOBS")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .filter(|&n| n > 0);
         let timeout = std::env::var("EXACTGP_WORKER_TIMEOUT_SECS")
             .ok()
             .and_then(|v| v.parse::<u64>().ok());
         SubprocessOptions {
             worker_bin: None,
-            kill_after_jobs: kill,
-            hang_after_jobs: None,
+            plan: FaultPlan::resolve(""),
             job_timeout: timeout.filter(|&t| t > 0).map(Duration::from_secs),
         }
     }
 
-    /// Environment hooks plus the config's `exec.worker_timeout_secs`
-    /// (the env timeout, when set, wins so a run can be unstuck without
-    /// editing configs).
+    /// Environment hooks plus the config's `run.faults` plan and
+    /// `exec.worker_timeout_secs` (the env timeout, when set, wins so a
+    /// run can be unstuck without editing configs).
     pub fn from_config(cfg: &Config) -> SubprocessOptions {
         let mut o = SubprocessOptions::from_env();
+        o.plan = FaultPlan::resolve(&cfg.faults);
         if o.job_timeout.is_none() && cfg.worker_timeout_secs > 0 {
             o.job_timeout = Some(Duration::from_secs(cfg.worker_timeout_secs));
         }
@@ -200,11 +198,13 @@ fn spawn_slot(
         .stdin(Stdio::piped())
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit())
-        // The kill hook is coordinator-owned: it arms worker 0's first
-        // incarnation via Init, and must not leak into children (a worker
-        // never reads it, but being explicit keeps respawns obviously
-        // unarmed). A worker is a leaf, never a coordinator.
+        // Fault plans are coordinator-owned: worker seams arm a child via
+        // its Init frame, and the plan env vars must not leak into
+        // children (a worker never reads them, but being explicit keeps
+        // respawns obviously unarmed). A worker is a leaf, never a
+        // coordinator.
         .env_remove("EXACTGP_KILL_WORKER_AFTER_JOBS")
+        .env_remove("EXACTGP_FAULTS")
         .env_remove("EXACTGP_TRANSPORT")
         .spawn()
         .with_context(|| format!("spawning worker process {}", bin.display()))?;
@@ -314,11 +314,10 @@ impl SubprocessTransport {
         let mut slots: Vec<Slot> = Vec::with_capacity(workers);
         let spawn_all = (|| -> Result<()> {
             for wid in 0..workers {
-                let (kill, hang) = if wid == 0 {
-                    (opts.kill_after_jobs.unwrap_or(0), opts.hang_after_jobs.unwrap_or(0))
-                } else {
-                    (0, 0)
-                };
+                // Each worker seam is consumed here, once: any worker
+                // (not just 0) can be armed, and a killed worker's
+                // respawn never re-arms itself.
+                let (kill, hang) = opts.plan.worker_arming(wid as u64);
                 slots.push(spawn_slot(&bin, &backend, wid, 0, tx.clone(), kill, hang)?);
             }
             Ok(())
@@ -339,7 +338,11 @@ impl SubprocessTransport {
         let mut ready = vec![false; workers];
         while ready.iter().any(|r| !r) {
             let remain = deadline.saturating_duration_since(Instant::now());
-            let ev = if remain.is_zero() { Err(RecvTimeoutError::Timeout) } else { rx.recv_timeout(remain) };
+            let ev = if remain.is_zero() {
+                Err(RecvTimeoutError::Timeout)
+            } else {
+                rx.recv_timeout(remain)
+            };
             match ev {
                 Ok((wid, _inc, Event::Frame(_, wire::Response::Ready))) => ready[wid] = true,
                 Ok((wid, _inc, Event::Frame(_, wire::Response::InitErr(msg)))) => {

@@ -1,0 +1,354 @@
+//! Deterministic fault injection: named seams × trigger counts.
+//!
+//! Production-grade crash safety is unprovable without a way to crash on
+//! demand at exact points. This module provides that harness: a
+//! [`FaultPlan`] names *seams* — fixed injection points compiled into the
+//! system — and arms each with a trigger count, so an integration test or
+//! a CI leg can script "fail the 2nd checkpoint write" or "kill worker 1
+//! after 3 jobs" and get the same crash on every run. The seams are
+//! compiled in unconditionally but cost one atomic load when inert, and
+//! an unarmed plan never fires.
+//!
+//! Seams and their firing sites:
+//!
+//! * `ckpt.partial` — checkpoint staging writes half the manifest bytes
+//!   and errors, simulating a crash mid-write
+//!   ([`runtime::checkpoint`](crate::runtime::checkpoint)).
+//! * `ckpt.enospc` — a checkpoint sidecar write fails with a simulated
+//!   out-of-space error before any bytes land.
+//! * `train.crash` — the Adam loop aborts after completing (and
+//!   checkpointing) the N-th step
+//!   ([`ExactGp::train_ckpt`](crate::gp::exact::ExactGp::train_ckpt)),
+//!   the scripted crash for resume-parity tests.
+//! * `worker.kill@W:N` / `worker.hang@W:N` — subprocess worker `W` exits
+//!   abruptly / hangs after `N` jobs (enacted worker-side via the `Init`
+//!   frame; the seam decides the arming at spawn time and is consumed
+//!   once, so respawned incarnations come up clean).
+//! * `serve.dispatch` — a coalescing serve-loop dispatch fails
+//!   ([`coordinator::serve`](crate::coordinator::serve)).
+//! * `registry.load` — a registry cold load fails
+//!   ([`server::registry`](crate::server::registry)).
+//!
+//! Plans are written as a comma-separated spec, `seam[@worker]:count`,
+//! e.g. `ckpt.partial:2,worker.kill@1:3`, supplied via the `run.faults`
+//! config key or the `EXACTGP_FAULTS` environment variable (both merge).
+//! The legacy `EXACTGP_KILL_WORKER_AFTER_JOBS=N` variable is kept as an
+//! alias for `worker.kill@0:N`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// A named injection point. See the module docs for where each fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Seam {
+    /// Checkpoint staging: the manifest write stops halfway and errors.
+    CkptPartial,
+    /// Checkpoint staging: a sidecar write fails with simulated ENOSPC.
+    CkptEnospc,
+    /// Training: abort after completing (and checkpointing) step N.
+    TrainCrash,
+    /// Subprocess worker: exit abruptly after N jobs.
+    WorkerKill,
+    /// Subprocess worker: hang forever after N jobs.
+    WorkerHang,
+    /// Coalescing serve loop: one dispatch fails.
+    ServeDispatch,
+    /// Model registry: one cold load fails.
+    RegistryLoad,
+}
+
+impl Seam {
+    /// The spec-string name of this seam.
+    pub fn name(self) -> &'static str {
+        match self {
+            Seam::CkptPartial => "ckpt.partial",
+            Seam::CkptEnospc => "ckpt.enospc",
+            Seam::TrainCrash => "train.crash",
+            Seam::WorkerKill => "worker.kill",
+            Seam::WorkerHang => "worker.hang",
+            Seam::ServeDispatch => "serve.dispatch",
+            Seam::RegistryLoad => "registry.load",
+        }
+    }
+
+    /// Parse a spec-string name.
+    pub fn parse(s: &str) -> Option<Seam> {
+        match s {
+            "ckpt.partial" => Some(Seam::CkptPartial),
+            "ckpt.enospc" => Some(Seam::CkptEnospc),
+            "train.crash" => Some(Seam::TrainCrash),
+            "worker.kill" => Some(Seam::WorkerKill),
+            "worker.hang" => Some(Seam::WorkerHang),
+            "serve.dispatch" => Some(Seam::ServeDispatch),
+            "registry.load" => Some(Seam::RegistryLoad),
+            _ => None,
+        }
+    }
+
+    /// Every seam name, for "valid values are ..." error messages.
+    pub const ALL: [Seam; 7] = [
+        Seam::CkptPartial,
+        Seam::CkptEnospc,
+        Seam::TrainCrash,
+        Seam::WorkerKill,
+        Seam::WorkerHang,
+        Seam::ServeDispatch,
+        Seam::RegistryLoad,
+    ];
+
+    /// Whether this seam is consumed at worker spawn time (carries an
+    /// optional `@worker` selector) rather than fired in-process.
+    pub fn is_worker_seam(self) -> bool {
+        matches!(self, Seam::WorkerKill | Seam::WorkerHang)
+    }
+}
+
+/// One armed seam.
+#[derive(Debug)]
+struct Entry {
+    seam: Seam,
+    /// Worker selector for worker seams (defaults to 0, matching the
+    /// legacy env hook). `None` for in-process seams.
+    worker: Option<u64>,
+    /// In-process seams: fire on the `count`-th hit. Worker seams: the
+    /// kill/hang-after-jobs value shipped in the `Init` frame.
+    count: u64,
+    /// In-process seams: hits so far. Worker seams: 1 once consumed.
+    hits: AtomicU64,
+}
+
+/// A deterministic fault plan: a set of armed seams. Cheap to share
+/// (`Arc`), inert when empty, and single-shot per entry — every armed
+/// seam fires exactly once, so a scripted crash cannot cascade into the
+/// recovery path it is meant to exercise.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    entries: Vec<Entry>,
+}
+
+impl FaultPlan {
+    /// A plan with nothing armed (the production default).
+    pub fn inert() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::default())
+    }
+
+    /// Whether nothing is armed (the fast path at every seam).
+    pub fn is_inert(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Parse a `seam[@worker]:count[,seam:count...]` spec. Empty specs
+    /// (and empty elements) are allowed and arm nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((lhs, count)) = part.split_once(':') else {
+                bail!("fault {part:?} is not seam[@worker]:count");
+            };
+            let (name, worker) = match lhs.split_once('@') {
+                Some((n, w)) => {
+                    let w: u64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fault {part:?} has a bad worker id"))?;
+                    (n.trim(), Some(w))
+                }
+                None => (lhs.trim(), None),
+            };
+            let Some(seam) = Seam::parse(name) else {
+                let all: Vec<&str> = Seam::ALL.iter().map(|s| s.name()).collect();
+                bail!("unknown fault seam {name:?} (valid: {})", all.join(", "));
+            };
+            if worker.is_some() && !seam.is_worker_seam() {
+                bail!("fault {part:?}: only worker.kill/worker.hang take @worker");
+            }
+            let count: u64 = count
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault {part:?} has a bad count"))?;
+            if count == 0 {
+                bail!("fault {part:?}: count must be >= 1");
+            }
+            let worker = if seam.is_worker_seam() { Some(worker.unwrap_or(0)) } else { None };
+            entries.push(Entry { seam, worker, count, hits: AtomicU64::new(0) });
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// Build the effective plan for a process: the config spec merged
+    /// with `EXACTGP_FAULTS` and the legacy
+    /// `EXACTGP_KILL_WORKER_AFTER_JOBS` alias. Invalid specs warn and are
+    /// ignored (same convention as `EXACTGP_TRANSPORT`) — a typo must not
+    /// turn into a surprise fault, or silently disarm a run that relies
+    /// on one elsewhere.
+    pub fn resolve(config_spec: &str) -> Arc<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for (origin, spec) in [
+            ("run.faults", Some(config_spec.to_string())),
+            ("EXACTGP_FAULTS", std::env::var("EXACTGP_FAULTS").ok()),
+        ] {
+            let Some(spec) = spec else { continue };
+            match FaultPlan::parse(&spec) {
+                Ok(p) => plan.entries.extend(p.entries),
+                Err(e) => eprintln!("warning: ignoring invalid fault spec in {origin}: {e}"),
+            }
+        }
+        // Legacy alias: arm worker 0's first spawn, exactly as the old
+        // subprocess-transport hook did.
+        if let Ok(v) = std::env::var("EXACTGP_KILL_WORKER_AFTER_JOBS") {
+            match v.parse::<u64>() {
+                Ok(n) if n > 0 => plan.entries.push(Entry {
+                    seam: Seam::WorkerKill,
+                    worker: Some(0),
+                    count: n,
+                    hits: AtomicU64::new(0),
+                }),
+                _ => eprintln!(
+                    "warning: ignoring invalid EXACTGP_KILL_WORKER_AFTER_JOBS={v:?} \
+                     (want a positive integer)"
+                ),
+            }
+        }
+        Arc::new(plan)
+    }
+
+    /// Hit an in-process seam; `true` means the fault fires *now*. Each
+    /// armed entry fires exactly once, on its `count`-th hit.
+    pub fn should_fire(&self, seam: Seam) -> bool {
+        debug_assert!(!seam.is_worker_seam(), "worker seams use worker_arming");
+        for e in &self.entries {
+            if e.seam == seam {
+                let hit = e.hits.fetch_add(1, Ordering::SeqCst) + 1;
+                if hit == e.count {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Hit an in-process seam and turn a firing into an error carrying
+    /// the seam name (the common case at IO/dispatch seams).
+    pub fn fire_as_error(&self, seam: Seam, what: &str) -> Result<()> {
+        if self.should_fire(seam) {
+            bail!("fault injected ({}): {what}", seam.name());
+        }
+        Ok(())
+    }
+
+    /// The (kill_after_jobs, hang_after_jobs) arming for one spawn of
+    /// worker `worker`, consuming each matching entry — a respawned
+    /// incarnation therefore always comes up clean, which is what makes
+    /// a kill/hang fault a *test of recovery* rather than a crash loop.
+    pub fn worker_arming(&self, worker: u64) -> (u64, u64) {
+        let mut kill = 0u64;
+        let mut hang = 0u64;
+        for e in &self.entries {
+            if e.worker != Some(worker) {
+                continue;
+            }
+            // Consume-once: first spawn that asks gets the arming.
+            if e.hits.compare_exchange(0, 1, Ordering::SeqCst, Ordering::SeqCst).is_err() {
+                continue;
+            }
+            match e.seam {
+                Seam::WorkerKill => kill = e.count,
+                Seam::WorkerHang => hang = e.count,
+                _ => unreachable!("non-worker seams have no worker selector"),
+            }
+        }
+        (kill, hang)
+    }
+
+    /// Human-readable summary of what is armed (startup logging), e.g.
+    /// `worker.kill@0:3, ckpt.partial:2`. Empty string when inert.
+    pub fn describe(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| match e.worker {
+                Some(w) => format!("{}@{}:{}", e.seam.name(), w, e.count),
+                None => format!("{}:{}", e.seam.name(), e.count),
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_describes_specs() {
+        let p = FaultPlan::parse("ckpt.partial:2, worker.kill@1:3,serve.dispatch:1").unwrap();
+        assert!(!p.is_inert());
+        assert_eq!(p.describe(), "ckpt.partial:2, worker.kill@1:3, serve.dispatch:1");
+        assert!(FaultPlan::parse("").unwrap().is_inert());
+        assert!(FaultPlan::parse(" , ").unwrap().is_inert());
+        // Worker seams default to worker 0 (the legacy hook's target).
+        let p = FaultPlan::parse("worker.hang:5").unwrap();
+        assert_eq!(p.worker_arming(0), (0, 5));
+    }
+
+    #[test]
+    fn rejects_malformed_specs_loudly() {
+        for bad in [
+            "nonsense",          // no count
+            "ckpt.partial:zero", // bad count
+            "ckpt.partial:0",    // zero count
+            "teleport:1",        // unknown seam
+            "ckpt.partial@2:1",  // @worker on a non-worker seam
+            "worker.kill@x:1",   // bad worker id
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+        // Unknown-seam errors list the valid names.
+        let err = FaultPlan::parse("teleport:1").unwrap_err().to_string();
+        assert!(err.contains("ckpt.partial") && err.contains("registry.load"), "{err}");
+    }
+
+    #[test]
+    fn point_seams_fire_exactly_once_on_the_nth_hit() {
+        let p = FaultPlan::parse("serve.dispatch:3").unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| p.should_fire(Seam::ServeDispatch)).collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        // Other seams are untouched.
+        assert!(!p.should_fire(Seam::RegistryLoad));
+        // fire_as_error surfaces the seam name.
+        let p = FaultPlan::parse("ckpt.enospc:1").unwrap();
+        let err = p.fire_as_error(Seam::CkptEnospc, "writing train_x.bin").unwrap_err();
+        assert!(err.to_string().contains("ckpt.enospc"), "{err}");
+        assert!(p.fire_as_error(Seam::CkptEnospc, "again").is_ok(), "single-shot");
+    }
+
+    #[test]
+    fn worker_arming_is_consumed_once_per_entry() {
+        let p = FaultPlan::parse("worker.kill@1:4,worker.hang@2:6").unwrap();
+        // Worker 0 is not targeted.
+        assert_eq!(p.worker_arming(0), (0, 0));
+        // First spawn of worker 1 is armed; its respawn is clean.
+        assert_eq!(p.worker_arming(1), (4, 0));
+        assert_eq!(p.worker_arming(1), (0, 0));
+        assert_eq!(p.worker_arming(2), (0, 6));
+        assert_eq!(p.worker_arming(2), (0, 0));
+    }
+
+    #[test]
+    fn inert_plan_never_fires() {
+        let p = FaultPlan::inert();
+        assert!(p.is_inert());
+        for s in Seam::ALL {
+            if !s.is_worker_seam() {
+                assert!(!p.should_fire(s));
+            }
+        }
+        assert_eq!(p.worker_arming(0), (0, 0));
+        assert_eq!(p.describe(), "");
+    }
+}

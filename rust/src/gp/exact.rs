@@ -18,6 +18,7 @@
 //! solves (eps <= 0.01) plus the LOVE variance cache — O(n) per test point,
 //! milliseconds for thousands of predictions.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -25,10 +26,12 @@ use anyhow::Result;
 use crate::config::Config;
 use crate::data::Dataset;
 use crate::exec::{pool::DevicePool, CrossKernelOp, PaddedData, PartitionedKernelOp, TileSpec};
+use crate::faults::{FaultPlan, Seam};
 use crate::kernels::{Hypers, KernelEval, KernelKind};
 use crate::linalg::Mat;
 use crate::metrics::{Accounting, Stopwatch, LOG_2PI};
 use crate::opt::Adam;
+use crate::runtime::checkpoint::{self, TrainState};
 use crate::partition::Plan;
 use crate::solvers::lanczos::{lanczos, VarianceCache};
 use crate::solvers::mbcg::{logdet_from_tridiags, mbcg};
@@ -57,6 +60,23 @@ impl Recipe {
     pub fn full_adam(cfg: &Config) -> Recipe {
         Recipe { pretrain: false, adam_steps: cfg.full_adam_steps }
     }
+}
+
+/// Crash-safe training controls for [`ExactGp::train_ckpt`]: where to
+/// write resumable training-state records, how often, and the fault
+/// plan governing the checkpoint-IO and scripted-crash seams.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpointing {
+    /// The final model checkpoint directory; training-state records live
+    /// at the `<dir>.train` sibling (see `runtime::checkpoint`).
+    pub dir: PathBuf,
+    /// Write a record every this many completed Adam steps (0 = never).
+    pub every: usize,
+    /// Dataset name recorded for resume validation.
+    pub dataset_name: String,
+    /// Armed fault seams (`ckpt.*` fire inside record writes,
+    /// `train.crash` aborts training after the counted step).
+    pub plan: Arc<FaultPlan>,
 }
 
 /// Per-step training diagnostics (Figure 1 / Figure 5 curves).
@@ -351,8 +371,69 @@ impl ExactGp {
 
     /// Train with the given recipe; logs per-step NLL and timing.
     pub fn train(&mut self, recipe: Recipe, rng: &mut Rng) -> Result<()> {
+        self.train_ckpt(recipe, rng, None, None)
+    }
+
+    /// [`train`](Self::train) with crash safety: when `ckpt` is set,
+    /// a resumable training-state record (params, Adam moments, RNG
+    /// state, step log, accounting) is written crash-atomically every
+    /// `ckpt.every` completed steps; when `resume` carries a record
+    /// loaded by `runtime::checkpoint::load_train_state`, pretraining is
+    /// skipped and the Adam loop restarts at the recorded step with the
+    /// recorded optimizer and RNG state — producing a final model
+    /// **bitwise identical** to the uninterrupted run (probe vectors and
+    /// moments round-trip exactly; see the resume-parity tests).
+    pub fn train_ckpt(
+        &mut self,
+        recipe: Recipe,
+        rng: &mut Rng,
+        ckpt: Option<&TrainCheckpointing>,
+        resume: Option<&TrainState>,
+    ) -> Result<()> {
+        if let Some(st) = resume {
+            anyhow::ensure!(
+                st.kernel == self.kind,
+                "resume: training state is for kernel {} but this run uses {}",
+                st.kernel.name(),
+                self.kind.name()
+            );
+            anyhow::ensure!(
+                st.config_fingerprint == self.cfg.model_fingerprint(),
+                "resume: training state was written under config fingerprint \
+                 {:016x} but this run's is {:016x} — the model configuration \
+                 changed; restart training from scratch",
+                st.config_fingerprint,
+                self.cfg.model_fingerprint()
+            );
+            anyhow::ensure!(
+                st.d == self.d && st.n_train == self.n(),
+                "resume: training state is for a (n={}, d={}) dataset, this \
+                 run has (n={}, d={})",
+                st.n_train,
+                st.d,
+                self.n(),
+                self.d
+            );
+            anyhow::ensure!(
+                st.total_steps == recipe.adam_steps && st.pretrain == recipe.pretrain,
+                "resume: training state recipe ({} steps, pretrain={}) does \
+                 not match this run's ({} steps, pretrain={})",
+                st.total_steps,
+                st.pretrain,
+                recipe.adam_steps,
+                recipe.pretrain
+            );
+            anyhow::ensure!(
+                st.n_ls == self.hypers.log_lengthscales.len(),
+                "resume: training state has {} lengthscales, this model {}",
+                st.n_ls,
+                self.hypers.log_lengthscales.len()
+            );
+        }
         let mut sw = Stopwatch::start();
-        if recipe.pretrain {
+        let mut base_train_seconds = 0.0;
+        let mut start_step = 0;
+        if recipe.pretrain && resume.is_none() {
             // Paper SS5: fit a Cholesky GP on a random subset (10k at paper
             // scale) with 10 L-BFGS + 10 Adam steps; transfer the hypers.
             let subset = self
@@ -396,10 +477,32 @@ impl ExactGp {
             self.pretrain_seconds = sw.lap("pretrain");
         }
 
-        let n_ls = self.hypers.log_lengthscales.len();
-        let mut params = self.hypers.to_vec();
-        let mut adam = Adam::new(params.len(), self.cfg.adam_lr);
-        for step in 0..recipe.adam_steps {
+        let (n_ls, mut params, mut adam) = match resume {
+            Some(st) => {
+                // Restart exactly where the record left off: parameters,
+                // optimizer moments, RNG (probe-vector stream) and the
+                // step log all come from the record; the RNG handed in by
+                // the caller is overwritten wholesale.
+                self.hypers = Hypers::from_vec(&st.params, st.n_ls);
+                *rng = Rng::from_state(st.rng);
+                self.step_log = st.step_log.clone();
+                self.pretrain_seconds = st.pretrain_seconds;
+                base_train_seconds = st.train_seconds;
+                start_step = st.step;
+                (
+                    st.n_ls,
+                    st.params.clone(),
+                    Adam::from_state(self.cfg.adam_lr, st.adam.clone())?,
+                )
+            }
+            None => {
+                let n_ls = self.hypers.log_lengthscales.len();
+                let params = self.hypers.to_vec();
+                let adam = Adam::new(params.len(), self.cfg.adam_lr);
+                (n_ls, params, adam)
+            }
+        };
+        for step in start_step..recipe.adam_steps {
             let (nll, grad, iters) = self.nll_and_grad(rng)?;
             adam.step(&mut params, &grad);
             let lnf = self.cfg.noise_floor.ln();
@@ -410,8 +513,45 @@ impl ExactGp {
             self.hypers = Hypers::from_vec(&params, n_ls);
             let dt = sw.lap(&format!("adam{step}"));
             self.step_log.push(StepLog { step, nll, cg_iters: iters, seconds: dt });
+            if let Some(ck) = ckpt {
+                if ck.every > 0 && (step + 1) % ck.every == 0 {
+                    checkpoint::save_train_state(
+                        &ck.dir,
+                        &TrainState {
+                            kernel: self.kind,
+                            config_fingerprint: self.cfg.model_fingerprint(),
+                            dataset_name: ck.dataset_name.clone(),
+                            d: self.d,
+                            n_train: self.n(),
+                            total_steps: recipe.adam_steps,
+                            pretrain: recipe.pretrain,
+                            step: step + 1,
+                            n_ls,
+                            params: params.clone(),
+                            adam: adam.state(),
+                            rng: rng.state(),
+                            step_log: self.step_log.clone(),
+                            pretrain_seconds: self.pretrain_seconds,
+                            train_seconds: base_train_seconds + sw.total(),
+                            acct: self.acct.snapshot(),
+                        },
+                        &ck.plan,
+                    )?;
+                }
+                // Scripted crash for the resume-parity harness: fires
+                // *after* this step's record write, so the crash point is
+                // always resumable. The count is in completed Adam steps.
+                if ck.plan.should_fire(Seam::TrainCrash) {
+                    anyhow::bail!(
+                        "fault injected (train.crash): training aborted after \
+                         step {} of {}",
+                        step + 1,
+                        recipe.adam_steps
+                    );
+                }
+            }
         }
-        self.train_seconds = sw.total();
+        self.train_seconds = base_train_seconds + sw.total();
         self.pred_rhs = None;
         Ok(())
     }
@@ -550,6 +690,19 @@ impl ExactGp {
     /// after a restart. Requires `precompute()` to have run: the whole
     /// point of a checkpoint is skipping that work on load.
     pub fn save(&self, dir: &std::path::Path, ds: &Dataset) -> Result<()> {
+        self.save_with(dir, ds, &FaultPlan::default())
+    }
+
+    /// [`save`](Self::save) with an explicit fault plan threaded into the
+    /// checkpoint writer, so the `ckpt.partial` / `ckpt.enospc` seams can
+    /// fire during the final model save as well as during per-step
+    /// training-state records. Inert plans behave exactly like `save`.
+    pub fn save_with(
+        &self,
+        dir: &std::path::Path,
+        ds: &Dataset,
+        plan: &FaultPlan,
+    ) -> Result<()> {
         let pred_rhs = self.pred_rhs.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
                 "save: call precompute() first — a checkpoint captures the \
@@ -566,7 +719,7 @@ impl ExactGp {
             self.n(),
             self.d
         );
-        crate::runtime::checkpoint::save(
+        crate::runtime::checkpoint::save_with(
             dir,
             &crate::runtime::checkpoint::CheckpointView {
                 kernel: self.kind,
@@ -579,6 +732,7 @@ impl ExactGp {
                 train_seconds: self.train_seconds,
                 precompute_seconds: self.precompute_seconds,
             },
+            plan,
         )
     }
 
@@ -803,5 +957,90 @@ mod tests {
         // substantially better on this smooth function.
         assert!(rmse < 0.5, "rmse={rmse}");
         assert!(!gp.step_log.is_empty());
+    }
+
+    #[test]
+    fn crashed_training_resumes_bitwise_identical() {
+        let ds = toy_dataset(240, 2, 87);
+        let mut cfg = Config::default();
+        cfg.pretrain_subset = 64;
+        cfg.probes = 4;
+        cfg.precond_rank = 10;
+        cfg.variance_rank = 16;
+        let recipe = Recipe { pretrain: true, adam_steps: 6 };
+        let dir = std::env::temp_dir().join(format!("exactgp_resume_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        checkpoint::clear_train_state(&dir);
+
+        // Straight-through reference run.
+        let mut gp_a = native_gp(&cfg, &ds, 2);
+        let mut rng_a = Rng::new(88, 0);
+        gp_a.train(recipe, &mut rng_a).unwrap();
+
+        // Checkpointed run, scripted to crash after step 3.
+        let mut gp_b = native_gp(&cfg, &ds, 2);
+        let mut rng_b = Rng::new(88, 0);
+        let crash = TrainCheckpointing {
+            dir: dir.clone(),
+            every: 1,
+            dataset_name: "toy".into(),
+            plan: Arc::new(FaultPlan::parse("train.crash:3").unwrap()),
+        };
+        let err = format!(
+            "{:#}",
+            gp_b.train_ckpt(recipe, &mut rng_b, Some(&crash), None).unwrap_err()
+        );
+        assert!(err.contains("train.crash"), "{err}");
+        assert!(checkpoint::train_state_exists(&dir));
+
+        // Resume in a fresh model with a garbage RNG — everything that
+        // matters must come from the record, as in a fresh process.
+        let st = checkpoint::load_train_state(&dir).unwrap();
+        assert_eq!(st.step, 3);
+        let mut gp_c = native_gp(&cfg, &ds, 2);
+        let mut rng_c = Rng::new(999, 7);
+        let cont = TrainCheckpointing {
+            dir: dir.clone(),
+            every: 1,
+            dataset_name: "toy".into(),
+            plan: FaultPlan::inert(),
+        };
+        gp_c.train_ckpt(recipe, &mut rng_c, Some(&cont), Some(&st)).unwrap();
+
+        // Bitwise parity: hypers, RNG stream position, and (after
+        // precompute) the full prediction cache.
+        for (a, b) in gp_a.hypers.to_vec().iter().zip(&gp_c.hypers.to_vec()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(rng_a.state(), rng_c.state());
+        assert_eq!(gp_a.step_log.len(), gp_c.step_log.len());
+        for (a, b) in gp_a.step_log.iter().zip(&gp_c.step_log) {
+            assert_eq!(a.nll.to_bits(), b.nll.to_bits(), "step {}", a.step);
+            assert_eq!(a.cg_iters, b.cg_iters, "step {}", a.step);
+        }
+        // Skipped-step proof via accounting: one mBCG solve per step, so
+        // the resumed model did only the remaining 3 of 6.
+        assert_eq!(gp_a.accounting().snapshot().mbcg_solves, 6);
+        assert_eq!(gp_c.accounting().snapshot().mbcg_solves, 3);
+
+        gp_a.precompute(&mut rng_a).unwrap();
+        gp_c.precompute(&mut rng_c).unwrap();
+        let (pa, pc) = (gp_a.pred_rhs.as_ref().unwrap(), gp_c.pred_rhs.as_ref().unwrap());
+        assert_eq!((pa.rows, pa.cols), (pc.rows, pc.cols));
+        for (a, b) in pa.data.iter().zip(&pc.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // A mismatched config is refused loudly.
+        let mut cfg2 = cfg.clone();
+        cfg2.probes = 8;
+        let mut gp_d = native_gp(&cfg2, &ds, 2);
+        let mut rng_d = Rng::new(88, 0);
+        let err = format!(
+            "{:#}",
+            gp_d.train_ckpt(recipe, &mut rng_d, Some(&cont), Some(&st)).unwrap_err()
+        );
+        assert!(err.contains("fingerprint"), "{err}");
+        checkpoint::clear_train_state(&dir);
     }
 }

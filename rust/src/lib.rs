@@ -34,6 +34,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod faults;
 pub mod gp;
 pub mod kernels;
 pub mod linalg;

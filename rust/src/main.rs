@@ -94,6 +94,10 @@ fn print_usage() {
                          [--scale smoke|default|large|paper|<cap>] [--workers N]\n\
                          [--backend pjrt|native] [--flavor jnp|pallas] [--ard]\n\
                          [--transport local|subprocess]\n\
+                         [--ckpt dir [--ckpt-every N]]  (durable training-state\n\
+                         records every N steps + final model checkpoint)\n\
+                         [--resume dir]  (restart from the newest record;\n\
+                         bitwise-identical final model vs an unbroken run)\n\
                          [--config file.toml] [--set sec.key=value]...\n\
            exactgp predict --dataset <name> [--test-csv file.csv] [--batch N]\n\
                            [--chunk N] [--out results/predict_<name>.json]\n\
@@ -116,9 +120,50 @@ fn print_usage() {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = build_config(args)?;
-    let name = args.get_or("dataset", "bike");
+    let mut cfg = build_config(args)?;
+    if let Some(n) = args.get_usize("ckpt-every")? {
+        cfg.ckpt_every = n;
+    }
     let model = Model::parse(args.get_or("model", "exact"))?;
+
+    // Durable training: `--ckpt <dir>` writes a training-state record
+    // every `--ckpt-every N` steps (and the final model checkpoint);
+    // `--resume <dir>` restarts from the newest durable record and
+    // converges to a bitwise-identical final model. `--resume` implies
+    // `--ckpt` at the same directory.
+    let resume = args.flag_present("resume");
+    let ckpt_dir = args
+        .get("ckpt")
+        .or_else(|| args.get("resume"))
+        .map(std::path::PathBuf::from);
+    if resume && ckpt_dir.is_none() {
+        bail!("--resume needs a checkpoint directory (--resume <dir> or --ckpt <dir>)");
+    }
+    if ckpt_dir.is_some() {
+        if model != Model::ExactBbmm {
+            bail!("--ckpt/--resume apply to the exact GP only (--model exact)");
+        }
+        if cfg.trials.max(1) != 1 {
+            bail!(
+                "checkpointed training writes one durable model per directory; \
+                 run with --trials 1"
+            );
+        }
+    }
+
+    // When resuming without an explicit --dataset, the training-state
+    // record names the dataset it belongs to.
+    let resumed_name;
+    let name = match (resume, args.get("dataset")) {
+        (true, None) => {
+            let dir = ckpt_dir.as_deref().expect("checked above");
+            let st = exactgp::runtime::checkpoint::load_train_state(dir)?;
+            resumed_name = st.dataset_name;
+            resumed_name.as_str()
+        }
+        (_, explicit) => explicit.unwrap_or("bike"),
+    };
+
     let mut rows = Vec::new();
     for trial in 0..cfg.trials.max(1) as u64 {
         let ds = coordinator::load_dataset(&cfg, name, trial)?;
@@ -129,7 +174,23 @@ fn cmd_train(args: &Args) -> Result<()> {
             exactgp::data::synthetic::spec_by_name(name).map(|s| s.n_train_paper).unwrap_or(0),
             model.name(),
         );
-        let report = coordinator::run_model(&cfg, model, &ds, trial)?;
+        let report = match &ckpt_dir {
+            Some(dir) => {
+                let dur = coordinator::Durability {
+                    dir: dir.clone(),
+                    every: cfg.ckpt_every.max(1),
+                    resume,
+                };
+                coordinator::run_exact(
+                    &cfg,
+                    &ds,
+                    trial,
+                    coordinator::ExactRecipe::PretrainFinetune,
+                    Some(&dur),
+                )?
+            }
+            None => coordinator::run_model(&cfg, model, &ds, trial)?,
+        };
         eprintln!(
             "  rmse={:.4} nll={:.4} train={:.1}s precompute={:.2}s predict(1k)={:.0}ms",
             report.rmse,
@@ -717,6 +778,11 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     }
 
     let server = Server::start(&cfg, &specs)?;
+    // Machine-readable (stdout) so wrappers and the shutdown integration
+    // test can find the bound address under an ephemeral --listen :0.
+    println!("listening on {}", server.addr());
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
     eprintln!(
         "serving {} model(s) on {} — budget {} MiB, caps: global={} per-model={}, \
          shed policy {}",
@@ -739,10 +805,23 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     }
 
     if clients == 0 {
-        eprintln!("ready; serving until killed");
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+        // Graceful shutdown: SIGTERM/SIGINT sets a flag; the server then
+        // stops accepting, drains every in-flight request (no torn
+        // replies — each client gets its full frame or a clean close),
+        // flushes the final per-model stats, and exits 0.
+        exactgp::util::signals::install_shutdown_handler();
+        eprintln!("ready; serving until SIGTERM/SIGINT");
+        while !exactgp::util::signals::shutdown_requested() {
+            std::thread::sleep(std::time::Duration::from_millis(50));
         }
+        eprintln!("shutdown signal received; draining in-flight requests");
+        let registry = server.registry().clone();
+        server.shutdown();
+        // Stats are read *after* the drain so the final flush counts
+        // every answered request.
+        eprintln!("final per-model stats: {}", registry.stats_json().to_string_pretty());
+        eprintln!("drained; exiting cleanly");
+        return Ok(());
     }
 
     // Overload benchmark: C clients x R requests, round-robin models,

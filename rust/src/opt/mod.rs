@@ -15,7 +15,7 @@
 pub mod adam;
 pub mod lbfgs;
 
-pub use adam::Adam;
+pub use adam::{Adam, AdamState};
 pub use lbfgs::Lbfgs;
 
 /// An objective evaluated with its gradient: returns (loss, grad).

@@ -27,21 +27,45 @@
 //! Large arrays live in binary sidecars — exact bitwise f64 round-trip by
 //! construction — with their element count and an FNV-1a checksum recorded
 //! in the manifest, so truncation or corruption is rejected with a clear
-//! error instead of producing silently wrong predictions. The manifest is
-//! written after every sidecar, so an interrupted save never looks like a
-//! valid checkpoint. Unknown format versions are rejected (no silent
-//! best-effort parsing of a future layout).
+//! error instead of producing silently wrong predictions. Unknown format
+//! versions are rejected (no silent best-effort parsing of a future
+//! layout).
+//!
+//! ## Crash atomicity
+//!
+//! Every save is staged into a `<dir>.tmp` sibling: sidecars are written
+//! and fsynced first, the manifest last (also fsynced), and only then is
+//! the staged directory renamed into place. A crash at any point leaves
+//! either the previous checkpoint or a `.tmp` leftover that `load`/`peek`
+//! ignore and garbage-collect — **a visible checkpoint directory is
+//! always complete**. Fault seams (`ckpt.partial`, `ckpt.enospc`; see
+//! [`crate::faults`]) are compiled into the staging path so tests can
+//! crash a save at exact points and prove that invariant.
+//!
+//! ## Training-state records
+//!
+//! Alongside the predict-ready model checkpoint, mid-training state
+//! (step index, params, Adam moments, RNG state, step log, accounting)
+//! is persisted under a `<dir>.train/step-N` record with the same atomic
+//! protocol, so a crashed training run resumes from its last durable
+//! step — bit-for-bit, because every float round-trips through binary
+//! sidecars and the RNG/optimizer state is captured exactly. See
+//! [`TrainState`].
 
-use std::path::Path;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
+use crate::faults::{FaultPlan, Seam};
 use crate::gp::exact::StepLog;
 use crate::kernels::{Hypers, KernelKind};
 use crate::linalg::Mat;
+use crate::metrics::AccountingSnapshot;
+use crate::opt::AdamState;
 use crate::util::json::{arr, num, obj, s, Json};
-use crate::util::rng::fnv1a_bytes;
+use crate::util::rng::{fnv1a_bytes, RngState};
 
 /// Manifest `format` tag — identifies the directory as one of ours.
 pub const FORMAT: &str = "exactgp-checkpoint";
@@ -53,10 +77,81 @@ pub const VERSION: u64 = 1;
 /// Manifest file name inside a checkpoint directory.
 pub const MANIFEST: &str = "checkpoint.json";
 
+/// Manifest `format` tag of a training-state record.
+pub const TRAIN_FORMAT: &str = "exactgp-train-state";
+
+/// Training-state record layout version.
+pub const TRAIN_VERSION: u64 = 1;
+
+/// Manifest file name inside a training-state record directory.
+pub const TRAIN_MANIFEST: &str = "train_state.json";
+
 /// True if `dir` looks like a checkpoint (manifest present). Used by the
 /// CLI to decide between "load" and "train then save".
 pub fn exists(dir: &Path) -> bool {
     dir.join(MANIFEST).is_file()
+}
+
+/// `dir` with `suffix` appended to its final component (`ckpt/bike` +
+/// `.tmp` → `ckpt/bike.tmp`). Staging and training-state siblings both
+/// derive from this, so they always land on the same filesystem as the
+/// target — a requirement for the atomic rename.
+fn sibling(dir: &Path, suffix: &str) -> PathBuf {
+    let mut name = dir.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(suffix);
+    dir.with_file_name(name)
+}
+
+/// Remove stale `<dir>.tmp` / `<dir>.old` leftovers of an interrupted
+/// save (best effort — a GC failure must never block a load).
+pub fn gc_stale(dir: &Path) {
+    for suffix in [".tmp", ".old"] {
+        let leftover = sibling(dir, suffix);
+        if leftover.is_dir() {
+            let _ = std::fs::remove_dir_all(&leftover);
+        }
+    }
+}
+
+/// Write `bytes` and flush them to stable storage before returning.
+fn write_durable(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    f.write_all(bytes).with_context(|| format!("writing {path:?}"))?;
+    f.sync_all().with_context(|| format!("syncing {path:?}"))?;
+    Ok(())
+}
+
+/// Flush a directory's entries to stable storage (so renames/creates in
+/// it survive a crash). Best effort: directory fds are a Unix-ism, and a
+/// missed dir sync degrades durability, not atomicity.
+fn fsync_dir(dir: &Path) {
+    if let Ok(f) = std::fs::File::open(dir) {
+        let _ = f.sync_all();
+    }
+}
+
+/// Atomically publish a fully-staged directory at `dir`. If `dir` already
+/// exists it is parked at `<dir>.old` for the instant between the two
+/// renames, then removed; `load`/`peek` ignore `.old` exactly like
+/// `.tmp`, so no crash window ever exposes a half-written checkpoint.
+fn publish_staged(staged: &Path, dir: &Path) -> Result<()> {
+    if dir.exists() {
+        let old = sibling(dir, ".old");
+        let _ = std::fs::remove_dir_all(&old);
+        std::fs::rename(dir, &old)
+            .with_context(|| format!("parking previous checkpoint {dir:?}"))?;
+        std::fs::rename(staged, dir)
+            .with_context(|| format!("publishing checkpoint {dir:?}"))?;
+        let _ = std::fs::remove_dir_all(&old);
+    } else {
+        std::fs::rename(staged, dir)
+            .with_context(|| format!("publishing checkpoint {dir:?}"))?;
+    }
+    if let Some(parent) = dir.parent() {
+        fsync_dir(parent);
+    }
+    Ok(())
 }
 
 /// Cheap manifest-only view of a checkpoint: identity plus a resident-cost
@@ -89,6 +184,7 @@ pub struct CheckpointMeta {
 /// Read a checkpoint's manifest only (format/version checked, arrays left
 /// on disk) and summarize it as a [`CheckpointMeta`].
 pub fn peek(dir: &Path) -> Result<CheckpointMeta> {
+    gc_stale(dir);
     let path = dir.join(MANIFEST);
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("no checkpoint at {dir:?} (missing {MANIFEST})"))?;
@@ -184,22 +280,51 @@ pub struct Checkpoint {
     pub precompute_seconds: f64,
 }
 
-/// Write one f64 array as a raw little-endian sidecar; returns its
-/// manifest entry (file name, element count, checksum).
-fn write_array(dir: &Path, name: &str, data: &[f64]) -> Result<Json> {
+/// Write one f64 array as a raw little-endian sidecar (fsynced — the
+/// manifest-last protocol only works if sidecars are durable before the
+/// manifest names them); returns its manifest entry (file name, element
+/// count, checksum). The `ckpt.enospc` seam fires here, simulating a
+/// full disk before any bytes land.
+fn write_array(dir: &Path, name: &str, data: &[f64], plan: &FaultPlan) -> Result<Json> {
+    let file = format!("{name}.bin");
+    if plan.should_fire(Seam::CkptEnospc) {
+        anyhow::bail!(
+            "writing checkpoint array {file:?}: no space left on device \
+             (injected fault {})",
+            Seam::CkptEnospc.name()
+        );
+    }
     let mut bytes = Vec::with_capacity(data.len() * 8);
     for v in data {
         bytes.extend_from_slice(&v.to_le_bytes());
     }
     let fnv = fnv1a_bytes(&bytes);
-    let file = format!("{name}.bin");
-    std::fs::write(dir.join(&file), &bytes)
+    write_durable(&dir.join(&file), &bytes)
         .with_context(|| format!("writing checkpoint array {file:?}"))?;
     Ok(obj(vec![
         ("file", s(&file)),
         ("len", num(data.len() as f64)),
         ("fnv", s(&format!("{fnv:016x}"))),
     ]))
+}
+
+/// Write a staged directory's manifest, durably and last. The
+/// `ckpt.partial` seam fires here: it leaves a half-written manifest
+/// behind and errors, simulating a crash mid-write — which must be
+/// invisible, because the staged directory is never renamed into place.
+fn write_manifest(staged: &Path, file: &str, manifest: &Json, plan: &FaultPlan) -> Result<()> {
+    let text = manifest.to_string_pretty();
+    let path = staged.join(file);
+    if plan.should_fire(Seam::CkptPartial) {
+        let half = &text.as_bytes()[..text.len() / 2];
+        let _ = std::fs::write(&path, half);
+        anyhow::bail!(
+            "crashed halfway through the manifest write (injected fault {})",
+            Seam::CkptPartial.name()
+        );
+    }
+    write_durable(&path, text.as_bytes())
+        .with_context(|| format!("writing checkpoint manifest in {staged:?}"))
 }
 
 /// Read one sidecar back, verifying length and checksum.
@@ -227,12 +352,18 @@ fn read_array(dir: &Path, entry: &Json, what: &str) -> Result<Vec<f64>> {
     Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
-/// Persist a model checkpoint into `dir` (created if missing). The
-/// manifest is written last, so a partial save is never mistaken for a
-/// valid checkpoint.
+/// Persist a model checkpoint at `dir`, crash-atomically: everything is
+/// staged into `<dir>.tmp` (sidecars fsynced, manifest last), then the
+/// staged directory is renamed into place. A crash at any point leaves
+/// the previous checkpoint (if any) intact and never a loadable-but-
+/// incomplete directory.
 pub fn save(dir: &Path, view: &CheckpointView) -> Result<()> {
-    std::fs::create_dir_all(dir)
-        .with_context(|| format!("creating checkpoint directory {dir:?}"))?;
+    save_with(dir, view, &FaultPlan::default())
+}
+
+/// [`save`] with an explicit fault plan — the seam tests and the CLI
+/// (which threads the process-wide plan) come through here.
+pub fn save_with(dir: &Path, view: &CheckpointView, plan: &FaultPlan) -> Result<()> {
     let ds = view.dataset;
     ensure!(
         view.pred_rhs.rows == ds.n_train(),
@@ -240,16 +371,28 @@ pub fn save(dir: &Path, view: &CheckpointView) -> Result<()> {
         view.pred_rhs.rows,
         ds.n_train()
     );
+    if let Some(parent) = dir.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating checkpoint parent {parent:?}"))?;
+        }
+    }
+    let staged = sibling(dir, ".tmp");
+    let _ = std::fs::remove_dir_all(&staged);
+    std::fs::create_dir_all(&staged)
+        .with_context(|| format!("creating checkpoint staging directory {staged:?}"))?;
+    let target = dir;
+    let dir = &staged;
 
     let mut arrays = vec![
-        ("train_x", write_array(dir, "train_x", &ds.train_x)?),
-        ("train_y", write_array(dir, "train_y", &ds.train_y)?),
-        ("test_x", write_array(dir, "test_x", &ds.test_x)?),
-        ("test_y", write_array(dir, "test_y", &ds.test_y)?),
-        ("pred_rhs", write_array(dir, "pred_rhs", &view.pred_rhs.data)?),
+        ("train_x", write_array(dir, "train_x", &ds.train_x, plan)?),
+        ("train_y", write_array(dir, "train_y", &ds.train_y, plan)?),
+        ("test_x", write_array(dir, "test_x", &ds.test_x, plan)?),
+        ("test_y", write_array(dir, "test_y", &ds.test_y, plan)?),
+        ("pred_rhs", write_array(dir, "pred_rhs", &view.pred_rhs.data, plan)?),
     ];
     if let Some(proj) = &ds.projection {
-        arrays.push(("projection", write_array(dir, "projection", proj)?));
+        arrays.push(("projection", write_array(dir, "projection", proj, plan)?));
     }
 
     let manifest = obj(vec![
@@ -304,15 +447,16 @@ pub fn save(dir: &Path, view: &CheckpointView) -> Result<()> {
             ]),
         ),
     ]);
-    std::fs::write(dir.join(MANIFEST), manifest.to_string_pretty())
-        .with_context(|| format!("writing checkpoint manifest in {dir:?}"))?;
-    Ok(())
+    write_manifest(dir, MANIFEST, &manifest, plan)?;
+    fsync_dir(dir);
+    publish_staged(&staged, target)
 }
 
 /// Load a checkpoint from `dir`, verifying format, version, lengths, and
 /// checksums. Every failure mode names what is wrong — a checkpoint that
 /// cannot be trusted must never load into a model that serves traffic.
 pub fn load(dir: &Path) -> Result<Checkpoint> {
+    gc_stale(dir);
     let path = dir.join(MANIFEST);
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("no checkpoint at {dir:?} (missing {MANIFEST})"))?;
@@ -437,6 +581,405 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
         train_seconds: t.req_f64("train_seconds")?,
         precompute_seconds: t.req_f64("precompute_seconds")?,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Training-state records
+// ---------------------------------------------------------------------------
+
+/// Mid-training state: everything the Adam loop in `ExactGp::train`
+/// needs to restart from a completed step and reproduce the rest of the
+/// run bit-for-bit. Floats travel through binary sidecars (params and
+/// Adam moments), the RNG state is captured exactly (including the
+/// Box-Muller spare), and the step log / accounting snapshot ride along
+/// for diagnostics and the "resume skipped N steps" proof.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// Kernel family being trained.
+    pub kernel: KernelKind,
+    /// `Config::model_fingerprint()` of the training configuration —
+    /// resume refuses to continue under a different model config.
+    pub config_fingerprint: u64,
+    /// Dataset name (resume re-derives the data and must find the same).
+    pub dataset_name: String,
+    /// Feature dimensionality of the training data.
+    pub d: usize,
+    /// Training points.
+    pub n_train: usize,
+    /// Total Adam steps the recipe runs.
+    pub total_steps: usize,
+    /// Whether the recipe pretrained on a subset before the Adam loop.
+    pub pretrain: bool,
+    /// Completed Adam steps (resume restarts the loop at this index).
+    pub step: usize,
+    /// Lengthscale count (`params` = lengthscales ++ [outputscale, noise]).
+    pub n_ls: usize,
+    /// The optimizer's parameter vector after `step` steps.
+    pub params: Vec<f64>,
+    /// Adam first/second moments and step counter.
+    pub adam: AdamState,
+    /// RNG state after `step` steps (probe vectors are drawn from this,
+    /// so an exact round-trip is what makes resume bitwise).
+    pub rng: RngState,
+    /// Per-step diagnostics for the completed steps.
+    pub step_log: Vec<StepLog>,
+    /// Wall-clock seconds spent in subset pretraining.
+    pub pretrain_seconds: f64,
+    /// Wall-clock seconds of training completed so far.
+    pub train_seconds: f64,
+    /// Accounting snapshot at checkpoint time (solver-call counters let
+    /// a resumed run prove it skipped the completed steps).
+    pub acct: AccountingSnapshot,
+}
+
+/// Where training-state records for `ckpt_dir` live: the `<dir>.train`
+/// sibling, holding one `step-N` record directory per retained step.
+pub fn train_state_root(ckpt_dir: &Path) -> PathBuf {
+    sibling(ckpt_dir, ".train")
+}
+
+fn parse_step_dir(name: &str) -> Option<usize> {
+    name.strip_prefix("step-")?.parse().ok()
+}
+
+fn acct_to_json(a: &AccountingSnapshot) -> Json {
+    obj(vec![
+        ("bytes_to_device", num(a.bytes_to_device as f64)),
+        ("bytes_from_device", num(a.bytes_from_device as f64)),
+        ("peak_tile_bytes", num(a.peak_tile_bytes as f64)),
+        ("tile_execs", num(a.tile_execs as f64)),
+        ("mvms", num(a.mvms as f64)),
+        ("cache_fills", num(a.cache_fills as f64)),
+        ("cache_hits", num(a.cache_hits as f64)),
+        ("predict_points", num(a.predict_points as f64)),
+        ("predict_chunks", num(a.predict_chunks as f64)),
+        ("mbcg_solves", num(a.mbcg_solves as f64)),
+        ("lanczos_passes", num(a.lanczos_passes as f64)),
+        ("cg_breakdowns", num(a.cg_breakdowns as f64)),
+        ("precond_builds", num(a.precond_builds as f64)),
+        ("serve_requests", num(a.serve_requests as f64)),
+        ("serve_batches", num(a.serve_batches as f64)),
+        ("serve_flush_full", num(a.serve_flush_full as f64)),
+        ("serve_flush_deadline", num(a.serve_flush_deadline as f64)),
+        ("serve_dispatch_failures", num(a.serve_dispatch_failures as f64)),
+        ("worker_restarts", num(a.worker_restarts as f64)),
+        ("jobs_resubmitted", num(a.jobs_resubmitted as f64)),
+        ("ipc_bytes_tx", num(a.ipc_bytes_tx as f64)),
+        ("ipc_bytes_rx", num(a.ipc_bytes_rx as f64)),
+    ])
+}
+
+fn acct_from_json(j: &Json) -> AccountingSnapshot {
+    // Lenient by design: counters are diagnostics, not model state — a
+    // missing key reads as 0 rather than failing the whole resume.
+    let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    AccountingSnapshot {
+        bytes_to_device: g("bytes_to_device"),
+        bytes_from_device: g("bytes_from_device"),
+        peak_tile_bytes: g("peak_tile_bytes"),
+        tile_execs: g("tile_execs"),
+        mvms: g("mvms"),
+        cache_fills: g("cache_fills"),
+        cache_hits: g("cache_hits"),
+        predict_points: g("predict_points"),
+        predict_chunks: g("predict_chunks"),
+        mbcg_solves: g("mbcg_solves"),
+        lanczos_passes: g("lanczos_passes"),
+        cg_breakdowns: g("cg_breakdowns"),
+        precond_builds: g("precond_builds"),
+        serve_requests: g("serve_requests"),
+        serve_batches: g("serve_batches"),
+        serve_flush_full: g("serve_flush_full"),
+        serve_flush_deadline: g("serve_flush_deadline"),
+        serve_dispatch_failures: g("serve_dispatch_failures"),
+        worker_restarts: g("worker_restarts"),
+        jobs_resubmitted: g("jobs_resubmitted"),
+        ipc_bytes_tx: g("ipc_bytes_tx"),
+        ipc_bytes_rx: g("ipc_bytes_rx"),
+    }
+}
+
+/// Persist one training-state record, crash-atomically (same staged →
+/// fsync → rename, manifest-last protocol as model checkpoints). Only
+/// after the new record is durable are older records and stale staging
+/// leftovers garbage-collected, so a crash at any instant leaves at
+/// least one complete, visible record.
+pub fn save_train_state(ckpt_dir: &Path, st: &TrainState, plan: &FaultPlan) -> Result<()> {
+    ensure!(
+        st.params.len() == st.n_ls + 2,
+        "train state: {} params but n_ls={} (expected n_ls + 2)",
+        st.params.len(),
+        st.n_ls
+    );
+    ensure!(
+        st.adam.m.len() == st.params.len() && st.adam.v.len() == st.params.len(),
+        "train state: Adam moments ({}/{}) disagree with {} params",
+        st.adam.m.len(),
+        st.adam.v.len(),
+        st.params.len()
+    );
+    ensure!(
+        st.step_log.len() == st.step,
+        "train state: {} step-log entries for {} completed steps",
+        st.step_log.len(),
+        st.step
+    );
+    let root = train_state_root(ckpt_dir);
+    std::fs::create_dir_all(&root)
+        .with_context(|| format!("creating training-state root {root:?}"))?;
+    let record = root.join(format!("step-{:06}", st.step));
+    let staged = sibling(&record, ".tmp");
+    let _ = std::fs::remove_dir_all(&staged);
+    std::fs::create_dir_all(&staged)
+        .with_context(|| format!("creating training-state staging {staged:?}"))?;
+
+    let arrays = vec![
+        ("params", write_array(&staged, "params", &st.params, plan)?),
+        ("adam_m", write_array(&staged, "adam_m", &st.adam.m, plan)?),
+        ("adam_v", write_array(&staged, "adam_v", &st.adam.v, plan)?),
+    ];
+    let manifest = obj(vec![
+        ("format", s(TRAIN_FORMAT)),
+        ("version", num(TRAIN_VERSION as f64)),
+        ("kernel", s(st.kernel.name())),
+        ("config_fingerprint", s(&format!("{:016x}", st.config_fingerprint))),
+        (
+            "dataset",
+            obj(vec![
+                ("name", s(&st.dataset_name)),
+                ("d", num(st.d as f64)),
+                ("n_train", num(st.n_train as f64)),
+            ]),
+        ),
+        ("total_steps", num(st.total_steps as f64)),
+        ("pretrain", Json::Bool(st.pretrain)),
+        ("step", num(st.step as f64)),
+        ("n_ls", num(st.n_ls as f64)),
+        ("adam_t", num(st.adam.t as f64)),
+        (
+            "rng",
+            obj(vec![
+                // Full-range u64s do not survive a f64 JSON number; hex
+                // strings round-trip exactly (the fingerprint convention).
+                ("state", s(&format!("{:016x}", st.rng.state))),
+                ("inc", s(&format!("{:016x}", st.rng.inc))),
+                (
+                    "spare_normal",
+                    match st.rng.spare_normal {
+                        // Finite f64s round-trip bitwise through the JSON
+                        // writer's shortest-display path (see util::json).
+                        Some(x) => num(x),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+        ("arrays", Json::Obj(arrays.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+        (
+            "step_log",
+            arr(st.step_log.iter().map(|sl| {
+                obj(vec![
+                    ("step", num(sl.step as f64)),
+                    ("nll", num(sl.nll)),
+                    ("cg_iters", num(sl.cg_iters as f64)),
+                    ("seconds", num(sl.seconds)),
+                ])
+            })),
+        ),
+        (
+            "timings",
+            obj(vec![
+                ("pretrain_seconds", num(st.pretrain_seconds)),
+                ("train_seconds", num(st.train_seconds)),
+            ]),
+        ),
+        ("accounting", acct_to_json(&st.acct)),
+    ]);
+    write_manifest(&staged, TRAIN_MANIFEST, &manifest, plan)?;
+    fsync_dir(&staged);
+    publish_staged(&staged, &record)?;
+    fsync_dir(&root);
+
+    // Retention: the new record is durable — now (and only now) drop
+    // older records and any stale staging leftovers.
+    if let Ok(rd) = std::fs::read_dir(&root) {
+        for e in rd.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".tmp") || name.ends_with(".old") {
+                let _ = std::fs::remove_dir_all(e.path());
+            } else if let Some(n) = parse_step_dir(&name) {
+                if n < st.step {
+                    let _ = std::fs::remove_dir_all(e.path());
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Whether a resumable training-state record exists for `ckpt_dir`.
+pub fn train_state_exists(ckpt_dir: &Path) -> bool {
+    let Ok(rd) = std::fs::read_dir(train_state_root(ckpt_dir)) else {
+        return false;
+    };
+    rd.flatten().any(|e| {
+        let name = e.file_name();
+        parse_step_dir(&name.to_string_lossy()).is_some()
+            && e.path().join(TRAIN_MANIFEST).is_file()
+    })
+}
+
+/// Load the latest training-state record for `ckpt_dir`, ignoring and
+/// garbage-collecting stale `.tmp`/`.old` leftovers. A *visible* record
+/// that fails validation is corruption and errors loudly — the atomic
+/// save protocol guarantees visible records are complete, so silently
+/// falling back to an older step would mask real damage.
+pub fn load_train_state(ckpt_dir: &Path) -> Result<TrainState> {
+    let root = train_state_root(ckpt_dir);
+    let rd = std::fs::read_dir(&root)
+        .with_context(|| format!("no training state for {ckpt_dir:?} (missing {root:?})"))?;
+    let mut steps: Vec<(usize, PathBuf)> = Vec::new();
+    for e in rd.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy().to_string();
+        if name.ends_with(".tmp") || name.ends_with(".old") {
+            let _ = std::fs::remove_dir_all(e.path());
+            continue;
+        }
+        if let Some(n) = parse_step_dir(&name) {
+            steps.push((n, e.path()));
+        }
+    }
+    steps.sort();
+    let Some((_, dir)) = steps.pop() else {
+        anyhow::bail!("no training-state records under {root:?}");
+    };
+    load_train_record(&dir)
+}
+
+/// Load one specific training-state record directory (the `load` of the
+/// train-state format: format/version/lengths/checksums all verified).
+pub fn load_train_record(dir: &Path) -> Result<TrainState> {
+    let path = dir.join(TRAIN_MANIFEST);
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!("no training-state record at {dir:?} (missing {TRAIN_MANIFEST})")
+    })?;
+    let m = Json::parse(&text)
+        .with_context(|| format!("corrupt training-state manifest {path:?}"))?;
+
+    let format = m.req_str("format")?;
+    ensure!(
+        format == TRAIN_FORMAT,
+        "not a training-state record: format is {format:?} (expected {TRAIN_FORMAT:?})"
+    );
+    let version = m.req_usize("version")? as u64;
+    ensure!(
+        version == TRAIN_VERSION,
+        "training-state version mismatch: record has v{version}, this binary \
+         reads v{TRAIN_VERSION} — restart training from scratch"
+    );
+    let kernel = m.req_str("kernel")?;
+    let kernel = KernelKind::parse(kernel)
+        .ok_or_else(|| anyhow::anyhow!("training state names unknown kernel {kernel:?}"))?;
+    let config_fingerprint = u64::from_str_radix(m.req_str("config_fingerprint")?, 16)
+        .context("corrupt training state: bad config_fingerprint")?;
+
+    let d = m.req("dataset")?;
+    let dataset_name = d.req_str("name")?.to_string();
+    let dim = d.req_usize("d")?;
+    let n_train = d.req_usize("n_train")?;
+    ensure!(dim > 0 && n_train > 0, "corrupt training state: empty dataset");
+
+    let total_steps = m.req_usize("total_steps")?;
+    let pretrain = m
+        .req("pretrain")?
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("corrupt training state: pretrain is not a bool"))?;
+    let step = m.req_usize("step")?;
+    let n_ls = m.req_usize("n_ls")?;
+    ensure!(
+        step >= 1 && step <= total_steps,
+        "corrupt training state: step {step} outside 1..={total_steps}"
+    );
+
+    let r = m.req("rng")?;
+    let rng = RngState {
+        state: u64::from_str_radix(r.req_str("state")?, 16)
+            .context("corrupt training state: bad rng state")?,
+        inc: u64::from_str_radix(r.req_str("inc")?, 16)
+            .context("corrupt training state: bad rng inc")?,
+        spare_normal: match r.req("spare_normal")? {
+            Json::Null => None,
+            v => Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("corrupt training state: bad rng spare"))?,
+            ),
+        },
+    };
+
+    let arrays = m.req("arrays")?;
+    let params = read_array(dir, arrays.req("params")?, "parameter vector")?;
+    let adam_m = read_array(dir, arrays.req("adam_m")?, "Adam first moments")?;
+    let adam_v = read_array(dir, arrays.req("adam_v")?, "Adam second moments")?;
+    ensure!(
+        params.len() == n_ls + 2,
+        "corrupt training state: {} params for n_ls={n_ls} (expected n_ls + 2)",
+        params.len()
+    );
+    ensure!(
+        adam_m.len() == params.len() && adam_v.len() == params.len(),
+        "corrupt training state: Adam moments ({}/{}) disagree with {} params",
+        adam_m.len(),
+        adam_v.len(),
+        params.len()
+    );
+    let adam_t = m.req_usize("adam_t")? as u64;
+
+    let mut step_log = Vec::new();
+    for sl in m.req_arr("step_log")? {
+        step_log.push(StepLog {
+            step: sl.req_usize("step")?,
+            nll: sl.req_f64("nll")?,
+            cg_iters: sl.req_usize("cg_iters")?,
+            seconds: sl.req_f64("seconds")?,
+        });
+    }
+    ensure!(
+        step_log.len() == step,
+        "corrupt training state: {} step-log entries for {step} completed steps",
+        step_log.len()
+    );
+    let t = m.req("timings")?;
+
+    Ok(TrainState {
+        kernel,
+        config_fingerprint,
+        dataset_name,
+        d: dim,
+        n_train,
+        total_steps,
+        pretrain,
+        step,
+        n_ls,
+        params,
+        adam: AdamState { m: adam_m, v: adam_v, t: adam_t },
+        rng,
+        step_log,
+        pretrain_seconds: t.req_f64("pretrain_seconds")?,
+        train_seconds: t.req_f64("train_seconds")?,
+        acct: acct_from_json(m.req("accounting")?),
+    })
+}
+
+/// Remove every training-state record for `ckpt_dir` — called after the
+/// final model checkpoint is durable (the records are superseded) or to
+/// abandon a run. Best effort.
+pub fn clear_train_state(ckpt_dir: &Path) {
+    let root = train_state_root(ckpt_dir);
+    if root.is_dir() {
+        let _ = std::fs::remove_dir_all(&root);
+    }
 }
 
 #[cfg(test)]
@@ -629,6 +1172,168 @@ mod tests {
         std::fs::write(dir.join(MANIFEST), skewed).unwrap();
         let err = format!("{}", load(&dir).unwrap_err());
         assert!(err.contains("feature projection"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_overwrites_atomically_and_gc_removes_stale_staging() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_atomic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = toy_dataset(6, 2);
+        let rhs = Mat::zeros(6, 1);
+        let first =
+            Hypers { log_lengthscales: vec![0.1, 0.2], log_outputscale: 0.3, log_noise: -1.0 };
+        save(&dir, &toy_view(&ds, &first, &rhs, &[])).unwrap();
+        let second =
+            Hypers { log_lengthscales: vec![-0.4, 0.7], log_outputscale: -0.1, log_noise: -2.0 };
+        // Overwrite in place: the target already exists, publish must swap.
+        save(&dir, &toy_view(&ds, &second, &rhs, &[])).unwrap();
+        assert_eq!(load(&dir).unwrap().hypers, second);
+        assert!(!sibling(&dir, ".old").exists(), "swap parking dir left behind");
+
+        // Stale staging leftovers (a crash between write and rename) are
+        // ignored and garbage-collected by load/peek.
+        let stale = sibling(&dir, ".tmp");
+        std::fs::create_dir_all(&stale).unwrap();
+        std::fs::write(stale.join("junk.bin"), b"torn").unwrap();
+        assert!(load(&dir).is_ok());
+        assert!(!stale.exists(), "load did not GC the stale .tmp sibling");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_ckpt_faults_never_publish_a_visible_checkpoint() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_fault_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = toy_dataset(6, 2);
+        let rhs = Mat::zeros(6, 1);
+        let good =
+            Hypers { log_lengthscales: vec![0.1, 0.2], log_outputscale: 0.3, log_noise: -1.0 };
+
+        // ENOSPC during a sidecar write: save fails, nothing visible.
+        let plan = FaultPlan::parse("ckpt.enospc:1").unwrap();
+        let err = format!(
+            "{:#}",
+            save_with(&dir, &toy_view(&ds, &good, &rhs, &[]), &plan).unwrap_err()
+        );
+        assert!(err.contains("ckpt.enospc"), "{err}");
+        assert!(!exists(&dir), "failed save published a checkpoint");
+        assert!(load(&dir).is_err());
+
+        // Now land a good checkpoint, then crash halfway through the
+        // manifest while overwriting it: the old checkpoint must survive.
+        save(&dir, &toy_view(&ds, &good, &rhs, &[])).unwrap();
+        let newer =
+            Hypers { log_lengthscales: vec![9.0, 9.0], log_outputscale: 9.0, log_noise: -9.0 };
+        let plan = FaultPlan::parse("ckpt.partial:1").unwrap();
+        let err = format!(
+            "{:#}",
+            save_with(&dir, &toy_view(&ds, &newer, &rhs, &[]), &plan).unwrap_err()
+        );
+        assert!(err.contains("ckpt.partial"), "{err}");
+        assert_eq!(load(&dir).unwrap().hypers, good, "crashed overwrite damaged the target");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn toy_train_state(step: usize) -> TrainState {
+        let mut rng = Rng::new(91, step as u64);
+        // Burn a normal so the Box-Muller spare is Some — the hard case.
+        let _ = rng.normal();
+        let mut acct = AccountingSnapshot::default();
+        acct.mbcg_solves = 5 + step as u64;
+        acct.mvms = 120;
+        acct.worker_restarts = 1;
+        TrainState {
+            kernel: KernelKind::Matern32,
+            config_fingerprint: 0xFEED_F00D_1234_5678,
+            dataset_name: "toy".into(),
+            d: 3,
+            n_train: 17,
+            total_steps: 10,
+            pretrain: true,
+            step,
+            n_ls: 2,
+            params: vec![0.125, -0.25, 0.5, -2.302585092994046],
+            adam: AdamState { m: vec![0.01, -0.02, 0.03, 0.04], v: vec![1e-4; 4], t: step as u64 },
+            rng: rng.state(),
+            step_log: (0..step)
+                .map(|i| StepLog { step: i, nll: 10.0 - i as f64, cg_iters: 6 + i, seconds: 0.1 })
+                .collect(),
+            pretrain_seconds: 0.75,
+            train_seconds: 2.5 * step as f64,
+            acct,
+        }
+    }
+
+    #[test]
+    fn train_state_roundtrips_bitwise() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_ts_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(train_state_root(&dir));
+        assert!(!train_state_exists(&dir));
+        let st = toy_train_state(4);
+        assert!(st.rng.spare_normal.is_some(), "test must cover the spare");
+        save_train_state(&dir, &st, &FaultPlan::default()).unwrap();
+        assert!(train_state_exists(&dir));
+
+        let back = load_train_state(&dir).unwrap();
+        assert_eq!(back.kernel, st.kernel);
+        assert_eq!(back.config_fingerprint, st.config_fingerprint);
+        assert_eq!(back.dataset_name, st.dataset_name);
+        assert_eq!((back.d, back.n_train), (st.d, st.n_train));
+        assert_eq!((back.total_steps, back.pretrain), (st.total_steps, st.pretrain));
+        assert_eq!((back.step, back.n_ls), (st.step, st.n_ls));
+        // Bitwise: params and Adam moments via sidecars, RNG via hex.
+        for (a, b) in back.params.iter().zip(&st.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.adam, st.adam);
+        assert_eq!(back.rng, st.rng);
+        assert_eq!(
+            back.rng.spare_normal.unwrap().to_bits(),
+            st.rng.spare_normal.unwrap().to_bits()
+        );
+        assert_eq!(back.step_log.len(), 4);
+        assert_eq!(back.acct, st.acct);
+        // And the restored RNG continues the exact sequence.
+        let mut rng_a = Rng::from_state(st.rng);
+        let mut rng_b = Rng::from_state(back.rng);
+        for _ in 0..8 {
+            assert_eq!(rng_a.normal().to_bits(), rng_b.normal().to_bits());
+        }
+        clear_train_state(&dir);
+        assert!(!train_state_exists(&dir));
+    }
+
+    #[test]
+    fn train_state_retention_keeps_only_the_newest_record() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_ret_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(train_state_root(&dir));
+        save_train_state(&dir, &toy_train_state(3), &FaultPlan::default()).unwrap();
+        save_train_state(&dir, &toy_train_state(6), &FaultPlan::default()).unwrap();
+        let root = train_state_root(&dir);
+        let names: Vec<String> = std::fs::read_dir(&root)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .collect();
+        assert_eq!(names, vec!["step-000006".to_string()], "old records not GC'd: {names:?}");
+        assert_eq!(load_train_state(&dir).unwrap().step, 6);
+
+        // A fault while writing the next record must leave step 6 intact.
+        let plan = FaultPlan::parse("ckpt.enospc:1").unwrap();
+        assert!(save_train_state(&dir, &toy_train_state(9), &plan).is_err());
+        assert_eq!(load_train_state(&dir).unwrap().step, 6);
+        // Torn in-memory state is rejected before any IO.
+        let mut torn = toy_train_state(6);
+        torn.step_log.pop();
+        assert!(save_train_state(&dir, &torn, &FaultPlan::default()).is_err());
+        clear_train_state(&dir);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -38,6 +38,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::Config;
 use crate::coordinator;
 use crate::coordinator::serve::{self, ServeHandle, ServeOptions};
+use crate::faults::{FaultPlan, Seam};
 use crate::runtime::checkpoint::{self, CheckpointMeta};
 use crate::util::json::{obj, s, Json};
 
@@ -106,6 +107,10 @@ pub struct Registry {
     budget_bytes: u64,
     models: BTreeMap<String, ModelEntry>,
     resident: Mutex<Resident>,
+    /// Fault plan (resolved from `run.faults` + `EXACTGP_FAULTS`): the
+    /// `registry.load` seam fails one scripted cold load, and the plan is
+    /// threaded into every serve loop for the `serve.dispatch` seam.
+    plan: Arc<FaultPlan>,
 }
 
 impl Registry {
@@ -146,6 +151,7 @@ impl Registry {
             budget_bytes,
             models,
             resident: Mutex::new(Resident::default()),
+            plan: FaultPlan::resolve(&cfg.faults),
         })
     }
 
@@ -235,14 +241,22 @@ impl Registry {
         }
 
         // Cold load, still under the lock: loads are serialized so
-        // "evict then load" is atomic under the budget.
+        // "evict then load" is atomic under the budget. The
+        // `registry.load` fault seam fails the armed load exactly like a
+        // corrupt checkpoint would — the caller's error path, counters,
+        // and the next request's retry-by-reload are all exercised.
+        self.plan
+            .fire_as_error(Seam::RegistryLoad, &format!("cold load of model {name:?}"))?;
         let (gp, _ds) = coordinator::load_model(&self.cfg, &entry.dir)
             .with_context(|| format!("loading model {name:?} from {:?}", entry.dir))?;
         let (handle, rx) = serve::channel(gp.dim());
-        let opts = ServeOptions::new(
-            self.cfg.serve_batch,
-            Duration::from_secs_f64(self.cfg.serve_max_delay_ms.max(0.0) / 1e3),
-        );
+        let opts = ServeOptions {
+            plan: self.plan.clone(),
+            ..ServeOptions::new(
+                self.cfg.serve_batch,
+                Duration::from_secs_f64(self.cfg.serve_max_delay_ms.max(0.0) / 1e3),
+            )
+        };
         let loop_name = name.to_string();
         let thread = std::thread::Builder::new()
             .name(format!("serve-{name}"))

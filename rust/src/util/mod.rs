@@ -8,3 +8,4 @@
 pub mod json;
 pub mod quickcheck;
 pub mod rng;
+pub mod signals;

@@ -1,0 +1,254 @@
+//! Checkpoint-corruption matrix (the "fail at load, never at predict"
+//! contract): every way a checkpoint directory can be damaged — truncated
+//! sidecar, flipped byte, missing manifest, a crash that left only the
+//! half-written `.tmp` staging directory — is rejected loudly by
+//! `load`/`peek`, and a checkpoint that *does* load serves bitwise-correct
+//! predictions. Training-state records get the same treatment.
+
+use exactgp::config::{Backend, Config};
+use exactgp::coordinator;
+use exactgp::data::synthetic::Scale;
+use exactgp::faults::FaultPlan;
+use exactgp::gp::exact::{ExactGp, Recipe, StepLog};
+use exactgp::metrics::AccountingSnapshot;
+use exactgp::opt::AdamState;
+use exactgp::runtime::checkpoint::{self, TrainState};
+use exactgp::util::rng::{Rng, RngState};
+use std::path::{Path, PathBuf};
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.scale = Scale { train_cap: 128 };
+    cfg.workers = 1;
+    cfg.pretrain_subset = 64;
+    cfg.pretrain_lbfgs_steps = 2;
+    cfg.pretrain_adam_steps = 2;
+    cfg.finetune_adam_steps = 2;
+    cfg.precond_rank = 16;
+    cfg.variance_rank = 24;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("exactgp_cc_{tag}_{}", std::process::id()))
+}
+
+fn trained_model(cfg: &Config, name: &str) -> (ExactGp, exactgp::data::Dataset) {
+    let ds = coordinator::load_dataset(cfg, name, 0).unwrap();
+    let (pool, spec) = coordinator::make_pool(cfg, ds.d).unwrap();
+    let mut rng = Rng::new(11, 0);
+    let mut gp = ExactGp::new(cfg, cfg.kernel, &ds, pool, spec);
+    gp.train(Recipe::paper_default(cfg), &mut rng).unwrap();
+    gp.precompute(&mut rng).unwrap();
+    (gp, ds)
+}
+
+fn load_err(dir: &Path) -> String {
+    format!("{:#}", checkpoint::load(dir).unwrap_err())
+}
+
+/// Every sidecar, two damage modes each: truncation must fail the length
+/// check, a flipped byte must fail the checksum — always at load, with
+/// the original bytes restored (and load re-verified) between cases.
+#[test]
+fn every_sidecar_rejects_truncation_and_bitflips_at_load() {
+    let cfg = base_cfg();
+    let (gp, ds) = trained_model(&cfg, "bike");
+    let dir = tmp_dir("matrix");
+    let _ = std::fs::remove_dir_all(&dir);
+    gp.save(&dir, &ds).unwrap();
+
+    let mut sidecars: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "bin"))
+        .collect();
+    sidecars.sort();
+    assert!(sidecars.len() >= 5, "expected the full sidecar set, got {sidecars:?}");
+
+    for file in &sidecars {
+        let original = std::fs::read(file).unwrap();
+
+        // Truncated: the manifest's element count no longer matches.
+        std::fs::write(file, &original[..original.len() / 2]).unwrap();
+        let err = load_err(&dir);
+        assert!(
+            err.contains("corrupt checkpoint") && err.contains("holds"),
+            "truncated {file:?}: {err}"
+        );
+
+        // One flipped byte: the FNV checksum catches it.
+        let mut bytes = original.clone();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(file, &bytes).unwrap();
+        let err = load_err(&dir);
+        assert!(err.contains("checksum"), "bitflipped {file:?}: {err}");
+
+        // Deleted: a clear "missing array" error, not a panic.
+        std::fs::remove_file(file).unwrap();
+        let err = load_err(&dir);
+        assert!(err.contains("reading checkpoint array"), "deleted {file:?}: {err}");
+
+        std::fs::write(file, &original).unwrap();
+        checkpoint::load(&dir).unwrap_or_else(|e| {
+            panic!("restored {file:?} but load still fails: {e:#}")
+        });
+    }
+
+    // A checkpoint that loads serves bitwise-correct predictions — the
+    // corruption checks above are what lets predict trust its inputs.
+    let want = gp.predict(&ds.test_x).unwrap();
+    let (gp2, ds2) = coordinator::load_model(&cfg, &dir).unwrap();
+    let got = gp2.predict(&ds2.test_x).unwrap();
+    for i in 0..want.mean.len() {
+        assert_eq!(got.mean[i].to_bits(), want.mean[i].to_bits());
+        assert_eq!(got.var[i].to_bits(), want.var[i].to_bits());
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Manifest damage: deleting it makes the directory "not a checkpoint";
+/// corrupting its JSON is reported as such. `peek` (the registry's cheap
+/// scan) applies the same checks.
+#[test]
+fn manifest_damage_fails_load_and_peek() {
+    let cfg = base_cfg();
+    let (gp, ds) = trained_model(&cfg, "bike");
+    let dir = tmp_dir("manifest");
+    let _ = std::fs::remove_dir_all(&dir);
+    gp.save(&dir, &ds).unwrap();
+
+    let manifest = dir.join("checkpoint.json");
+    let original = std::fs::read(&manifest).unwrap();
+
+    // Garbage JSON.
+    std::fs::write(&manifest, b"{ not json").unwrap();
+    assert!(load_err(&dir).contains("corrupt checkpoint manifest"));
+    let perr = format!("{:#}", checkpoint::peek(&dir).unwrap_err());
+    assert!(perr.contains("corrupt checkpoint manifest"), "{perr}");
+
+    // Missing manifest: the directory is simply not a checkpoint.
+    std::fs::remove_file(&manifest).unwrap();
+    assert!(!checkpoint::exists(&dir));
+    assert!(load_err(&dir).contains("no checkpoint at"));
+    let perr = format!("{:#}", checkpoint::peek(&dir).unwrap_err());
+    assert!(perr.contains("no checkpoint at"), "{perr}");
+
+    std::fs::write(&manifest, &original).unwrap();
+    checkpoint::load(&dir).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A crash mid-save (injected at the manifest write, after all sidecars
+/// landed in staging) must leave nothing visible: the target directory
+/// does not exist, only a `<dir>.tmp` staging leftover — which the next
+/// load attempt garbage-collects — and a retry produces a good checkpoint.
+#[test]
+fn crash_during_save_leaves_no_visible_checkpoint() {
+    let cfg = base_cfg();
+    let (gp, ds) = trained_model(&cfg, "elevators");
+    let dir = tmp_dir("halfrename");
+    let staged = PathBuf::from(format!("{}.tmp", dir.display()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&staged);
+
+    let plan = FaultPlan::parse("ckpt.partial:1").unwrap();
+    let err = format!("{:#}", gp.save_with(&dir, &ds, &plan).unwrap_err());
+    assert!(err.contains("ckpt.partial"), "{err}");
+
+    // The invariant: a visible checkpoint directory is always complete.
+    assert!(!dir.exists(), "crash mid-save published a partial checkpoint");
+    assert!(!checkpoint::exists(&dir));
+    assert!(staged.is_dir(), "the staging leftover should still be on disk");
+    assert!(load_err(&dir).contains("no checkpoint at"));
+    assert!(!staged.exists(), "load must garbage-collect stale staging dirs");
+
+    // Same story when the simulated disk fills mid-sidecar.
+    let plan = FaultPlan::parse("ckpt.enospc:2").unwrap();
+    let err = format!("{:#}", gp.save_with(&dir, &ds, &plan).unwrap_err());
+    assert!(err.contains("no space left on device"), "{err}");
+    assert!(!dir.exists());
+
+    // The retry (no armed faults) succeeds where the crashed save failed.
+    gp.save(&dir, &ds).unwrap();
+    checkpoint::load(&dir).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn toy_train_state() -> TrainState {
+    TrainState {
+        kernel: Config::default().kernel,
+        config_fingerprint: 0xabcd,
+        dataset_name: "toy".into(),
+        d: 3,
+        n_train: 16,
+        total_steps: 4,
+        pretrain: true,
+        step: 1,
+        n_ls: 3,
+        params: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+        adam: AdamState { m: vec![0.0; 5], v: vec![0.0; 5], t: 1 },
+        rng: RngState { state: 7, inc: 13, spare_normal: Some(0.25) },
+        step_log: vec![StepLog { step: 0, nll: 1.5, cg_iters: 9, seconds: 0.1 }],
+        pretrain_seconds: 0.0,
+        train_seconds: 0.2,
+        acct: AccountingSnapshot::default(),
+    }
+}
+
+/// Training-state records refuse corruption just as loudly: a damaged
+/// record must never silently restart training from wrong state.
+#[test]
+fn corrupt_train_state_records_fail_loudly() {
+    let ckpt_dir = tmp_dir("trainstate");
+    let root = checkpoint::train_state_root(&ckpt_dir);
+    let _ = std::fs::remove_dir_all(&root);
+
+    let st = toy_train_state();
+    checkpoint::save_train_state(&ckpt_dir, &st, &FaultPlan::default()).unwrap();
+    assert!(checkpoint::train_state_exists(&ckpt_dir));
+    let record = root.join("step-000001");
+    assert!(record.is_dir());
+
+    // Round-trips bit-for-bit first.
+    let back = checkpoint::load_train_state(&ckpt_dir).unwrap();
+    assert_eq!(back.params, st.params);
+    assert_eq!(back.rng, st.rng);
+    assert_eq!(back.adam, st.adam);
+
+    let params = record.join("params.bin");
+    let original = std::fs::read(&params).unwrap();
+
+    // Truncated sidecar.
+    std::fs::write(&params, &original[..8]).unwrap();
+    let err = format!("{:#}", checkpoint::load_train_state(&ckpt_dir).unwrap_err());
+    assert!(err.contains("holds"), "{err}");
+
+    // Flipped byte.
+    let mut bytes = original.clone();
+    bytes[3] ^= 0x80;
+    std::fs::write(&params, &bytes).unwrap();
+    let err = format!("{:#}", checkpoint::load_train_state(&ckpt_dir).unwrap_err());
+    assert!(err.contains("checksum"), "{err}");
+    std::fs::write(&params, &original).unwrap();
+
+    // Missing record manifest: loud, no silent fallback to nothing.
+    std::fs::remove_file(record.join("train_state.json")).unwrap();
+    let err = format!("{:#}", checkpoint::load_train_state(&ckpt_dir).unwrap_err());
+    assert!(err.contains("no training-state record at"), "{err}");
+
+    // A stale staging dir next to the records is ignored and collected.
+    let _ = std::fs::remove_dir_all(&root);
+    checkpoint::save_train_state(&ckpt_dir, &st, &FaultPlan::default()).unwrap();
+    let junk = root.join("step-000009.tmp");
+    std::fs::create_dir_all(&junk).unwrap();
+    let back = checkpoint::load_train_state(&ckpt_dir).unwrap();
+    assert_eq!(back.step, 1, "a .tmp leftover must never win over a real record");
+    assert!(!junk.exists(), "stale staging dirs are garbage-collected");
+
+    let _ = std::fs::remove_dir_all(&root);
+}

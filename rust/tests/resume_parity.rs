@@ -1,0 +1,243 @@
+//! Crash-safe resumable training (the robustness contract of PR 8):
+//!
+//! * a run crashed at a scripted step via the `train.crash` fault seam —
+//!   under both the `local` and `subprocess` transports — resumes from
+//!   its last durable training-state record and converges to a final
+//!   checkpoint **bitwise identical** to an uninterrupted run (every
+//!   sidecar byte, every hyperparameter bit, every step-log NLL);
+//! * the accounting proves the resumed run actually *skipped* the
+//!   completed steps (one mBCG solve per Adam step);
+//! * a crash inside the checkpoint writer itself (`ckpt.enospc`) aborts
+//!   training but leaves the previous record durable, and resume from it
+//!   is still bitwise;
+//! * the training-state records are cleared once the final model is
+//!   durable.
+
+use std::path::{Path, PathBuf};
+
+use exactgp::config::{Backend, Config, TransportKind};
+use exactgp::coordinator::{self, Durability, ExactRecipe};
+use exactgp::gp::FitReport;
+use exactgp::runtime::checkpoint;
+
+fn base_cfg(transport: TransportKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.scale = exactgp::data::synthetic::Scale { train_cap: 192 };
+    cfg.workers = 2;
+    cfg.transport = transport;
+    cfg.pretrain_subset = 64;
+    cfg.pretrain_lbfgs_steps = 2;
+    cfg.pretrain_adam_steps = 2;
+    cfg.finetune_adam_steps = 6;
+    cfg.probes = 4;
+    cfg.precond_rank = 10;
+    cfg.variance_rank = 16;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("exactgp_rp_{tag}_{}", std::process::id()))
+}
+
+fn extra(report: &FitReport, key: &str) -> f64 {
+    report
+        .extra
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| *v)
+        .unwrap_or_else(|| panic!("report has no extra {key:?}"))
+}
+
+fn run_durable(cfg: &Config, dir: &Path, resume: bool) -> anyhow::Result<FitReport> {
+    let ds = coordinator::load_dataset(cfg, "bike", 0).unwrap();
+    let dur = Durability { dir: dir.to_path_buf(), every: 1, resume };
+    coordinator::run_exact(cfg, &ds, 0, ExactRecipe::PretrainFinetune, Some(&dur))
+}
+
+/// Byte-compare every binary sidecar of two checkpoints; the manifests'
+/// array checksums then pin the rest.
+fn assert_sidecars_identical(a: &Path, b: &Path) {
+    let mut names: Vec<String> = std::fs::read_dir(a)
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().to_string())
+        .filter(|n| n.ends_with(".bin"))
+        .collect();
+    names.sort();
+    assert!(!names.is_empty(), "checkpoint {a:?} has no sidecars");
+    for n in &names {
+        let ba = std::fs::read(a.join(n)).unwrap();
+        let bb = std::fs::read(b.join(n))
+            .unwrap_or_else(|e| panic!("{b:?} is missing sidecar {n}: {e}"));
+        assert_eq!(ba, bb, "sidecar {n} differs between {a:?} and {b:?}");
+    }
+}
+
+/// The loaded-model view of bitwise parity: hypers, prediction cache, and
+/// the step log (timings excluded — wall clock is the one thing a resumed
+/// run may legitimately differ in).
+fn assert_checkpoints_identical(a: &Path, b: &Path) {
+    assert_sidecars_identical(a, b);
+    let ca = checkpoint::load(a).unwrap();
+    let cb = checkpoint::load(b).unwrap();
+    assert_eq!(ca.kernel, cb.kernel);
+    assert_eq!(ca.config_fingerprint, cb.config_fingerprint);
+    assert_eq!(
+        ca.hypers.log_lengthscales.len(),
+        cb.hypers.log_lengthscales.len()
+    );
+    for (x, y) in ca.hypers.log_lengthscales.iter().zip(&cb.hypers.log_lengthscales) {
+        assert_eq!(x.to_bits(), y.to_bits(), "lengthscale bits differ");
+    }
+    assert_eq!(
+        ca.hypers.log_outputscale.to_bits(),
+        cb.hypers.log_outputscale.to_bits()
+    );
+    assert_eq!(ca.hypers.log_noise.to_bits(), cb.hypers.log_noise.to_bits());
+    assert_eq!(ca.pred_rhs.rows, cb.pred_rhs.rows);
+    assert_eq!(ca.pred_rhs.cols, cb.pred_rhs.cols);
+    for (x, y) in ca.pred_rhs.data.iter().zip(&cb.pred_rhs.data) {
+        assert_eq!(x.to_bits(), y.to_bits(), "pred_rhs bits differ");
+    }
+    assert_eq!(ca.step_log.len(), cb.step_log.len());
+    for (x, y) in ca.step_log.iter().zip(&cb.step_log) {
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.nll.to_bits(), y.nll.to_bits(), "step {} NLL differs", x.step);
+        assert_eq!(x.cg_iters, y.cg_iters);
+    }
+}
+
+fn crash_resume_case(transport: TransportKind, tname: &str, crash_at: usize) {
+    // Subprocess workers are the exactgp binary, not this test binary.
+    std::env::set_var("EXACTGP_WORKER_BIN", env!("CARGO_BIN_EXE_exactgp"));
+
+    let dir_a = tmp_dir(&format!("straight_{tname}_{crash_at}"));
+    let dir_b = tmp_dir(&format!("crashed_{tname}_{crash_at}"));
+    for d in [&dir_a, &dir_b] {
+        let _ = std::fs::remove_dir_all(d);
+        let _ = std::fs::remove_dir_all(checkpoint::train_state_root(d));
+    }
+
+    // Uninterrupted reference run.
+    let cfg = base_cfg(transport);
+    let report_a = run_durable(&cfg, &dir_a, false).unwrap();
+    assert!(checkpoint::exists(&dir_a));
+    assert!(
+        !checkpoint::train_state_exists(&dir_a),
+        "training state must be cleared once the final model is durable"
+    );
+
+    // Scripted crash after `crash_at` completed (and checkpointed) steps.
+    let mut crashed = base_cfg(transport);
+    crashed.faults = format!("train.crash:{crash_at}");
+    let err = run_durable(&crashed, &dir_b, false).unwrap_err();
+    assert!(format!("{err}").contains("train.crash"), "{err}");
+    assert!(
+        !checkpoint::exists(&dir_b),
+        "a crashed run must not publish a final model checkpoint"
+    );
+    assert!(checkpoint::train_state_exists(&dir_b));
+    let st = checkpoint::load_train_state(&dir_b).unwrap();
+    assert_eq!(st.step, crash_at, "last durable record is the crash step");
+
+    // Resume; the final checkpoint must be bitwise what run A produced.
+    let report_b = run_durable(&cfg, &dir_b, true).unwrap();
+    assert!(checkpoint::exists(&dir_b));
+    assert!(!checkpoint::train_state_exists(&dir_b));
+    assert_checkpoints_identical(&dir_a, &dir_b);
+
+    // Skipped-steps accounting: one mBCG solve per Adam step, so the
+    // resumed run performed exactly `crash_at` fewer of them.
+    assert_eq!(extra(&report_b, "resumed_from_step") as usize, crash_at);
+    let solves_a = extra(&report_a, "train_mbcg_solves") as i64;
+    let solves_b = extra(&report_b, "train_mbcg_solves") as i64;
+    assert_eq!(
+        solves_a - solves_b,
+        crash_at as i64,
+        "resumed run must skip exactly the completed steps \
+         (straight {solves_a} vs resumed {solves_b})"
+    );
+
+    for d in [&dir_a, &dir_b] {
+        let _ = std::fs::remove_dir_all(d);
+        let _ = std::fs::remove_dir_all(checkpoint::train_state_root(d));
+    }
+}
+
+#[test]
+fn crash_and_resume_is_bitwise_local_early() {
+    crash_resume_case(TransportKind::Local, "local", 1);
+}
+
+#[test]
+fn crash_and_resume_is_bitwise_local_late() {
+    crash_resume_case(TransportKind::Local, "local", 4);
+}
+
+#[test]
+fn crash_and_resume_is_bitwise_subprocess() {
+    crash_resume_case(TransportKind::Subprocess, "subproc", 4);
+}
+
+/// A crash *inside the checkpoint writer* (simulated full disk while
+/// writing the step-3 record) aborts training, but the step-2 record is
+/// already durable — resume from it is still bitwise.
+#[test]
+fn enospc_during_record_write_resumes_from_previous_record() {
+    let dir_a = tmp_dir("straight_enospc");
+    let dir_b = tmp_dir("crashed_enospc");
+    for d in [&dir_a, &dir_b] {
+        let _ = std::fs::remove_dir_all(d);
+        let _ = std::fs::remove_dir_all(checkpoint::train_state_root(d));
+    }
+
+    let cfg = base_cfg(TransportKind::Local);
+    let report_a = run_durable(&cfg, &dir_a, false).unwrap();
+
+    // Each record writes 3 sidecars (params, adam_m, adam_v); hit 7 is
+    // the first sidecar of the step-3 record.
+    let mut crashed = base_cfg(TransportKind::Local);
+    crashed.faults = "ckpt.enospc:7".into();
+    let err = run_durable(&crashed, &dir_b, false).unwrap_err();
+    assert!(format!("{err:#}").contains("ckpt.enospc"), "{err:#}");
+    let st = checkpoint::load_train_state(&dir_b).unwrap();
+    assert_eq!(st.step, 2, "the step-2 record must have survived the ENOSPC crash");
+
+    let report_b = run_durable(&cfg, &dir_b, true).unwrap();
+    assert_checkpoints_identical(&dir_a, &dir_b);
+    let solves_a = extra(&report_a, "train_mbcg_solves") as i64;
+    let solves_b = extra(&report_b, "train_mbcg_solves") as i64;
+    assert_eq!(solves_a - solves_b, 2);
+
+    for d in [&dir_a, &dir_b] {
+        let _ = std::fs::remove_dir_all(d);
+        let _ = std::fs::remove_dir_all(checkpoint::train_state_root(d));
+    }
+}
+
+/// `--resume` against a directory with no records fails with guidance,
+/// and a dataset mismatch is refused before any training runs.
+#[test]
+fn resume_guardrails() {
+    let dir = tmp_dir("guardrails");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(checkpoint::train_state_root(&dir));
+
+    let cfg = base_cfg(TransportKind::Local);
+    let err = run_durable(&cfg, &dir, true).unwrap_err();
+    assert!(format!("{err}").contains("nothing to resume"), "{err}");
+
+    // Crash a run on "bike", then try to resume it as "elevators".
+    let mut crashed = base_cfg(TransportKind::Local);
+    crashed.faults = "train.crash:1".into();
+    let _ = run_durable(&crashed, &dir, false).unwrap_err();
+    let ds = coordinator::load_dataset(&cfg, "elevators", 0).unwrap();
+    let dur = Durability { dir: dir.clone(), every: 1, resume: true };
+    let err = coordinator::run_exact(&cfg, &ds, 0, ExactRecipe::PretrainFinetune, Some(&dur))
+        .unwrap_err();
+    assert!(format!("{err}").contains("belongs to dataset"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(checkpoint::train_state_root(&dir));
+}

@@ -154,9 +154,8 @@ fn failed_dispatch_poisons_only_its_batch() {
 
     let acct = Arc::new(Accounting::default());
     let opts = ServeOptions {
-        batch_points: 1,
-        max_delay: Duration::ZERO,
         max_consecutive_failures: 3,
+        ..ServeOptions::new(1, Duration::ZERO)
     };
     let stats = serve::run_with_dispatch(d, acct.clone(), rx, &opts, |xs| {
         if xs.contains(&666.0) {
@@ -196,9 +195,8 @@ fn persistent_dispatch_failure_ends_the_loop_at_the_cap() {
 
     let acct = Arc::new(Accounting::default());
     let opts = ServeOptions {
-        batch_points: 1,
-        max_delay: Duration::ZERO,
         max_consecutive_failures: 3,
+        ..ServeOptions::new(1, Duration::ZERO)
     };
     let err = serve::run_with_dispatch(d, acct.clone(), rx, &opts, |_| {
         anyhow::bail!("backend gone")
@@ -223,4 +221,47 @@ fn persistent_dispatch_failure_ends_the_loop_at_the_cap() {
     assert_eq!(errored, 3);
     assert_eq!(dropped, 2);
     assert_eq!(acct.snapshot().serve_dispatch_failures, 3);
+}
+
+/// The `serve.dispatch` fault seam fails exactly one scripted dispatch:
+/// its waiter sees the injected error, every other query is answered, and
+/// the failure is accounted like any backend error — the deterministic
+/// handle the fault-injection harness needs on the serving path.
+#[test]
+fn injected_dispatch_fault_fails_one_batch_and_serving_continues() {
+    use exactgp::coordinator::serve::ServeOptions;
+    use exactgp::faults::FaultPlan;
+    use exactgp::gp::Predictions;
+    use exactgp::metrics::Accounting;
+    use std::sync::Arc;
+
+    let d = 1;
+    let (handle, rx) = serve::channel(d);
+    let replies: Vec<_> =
+        (0..4).map(|i| handle.submit(vec![i as f64]).unwrap()).collect();
+    drop(handle);
+
+    let acct = Arc::new(Accounting::default());
+    let opts = ServeOptions {
+        plan: Arc::new(FaultPlan::parse("serve.dispatch:2").unwrap()),
+        ..ServeOptions::new(1, Duration::ZERO)
+    };
+    let stats = serve::run_with_dispatch(d, acct.clone(), rx, &opts, |xs| {
+        let m = xs.len() / d;
+        Ok(Predictions { mean: vec![1.0; m], var: vec![2.0; m], noise: 0.1 })
+    })
+    .unwrap();
+
+    for (i, r) in replies.into_iter().enumerate() {
+        match r.recv().unwrap() {
+            Ok(_) => assert_ne!(i, 1, "the 2nd dispatch was armed to fail"),
+            Err(e) => {
+                assert_eq!(i, 1, "only the armed dispatch may fail: {e}");
+                assert!(e.contains("serve.dispatch"), "{e}");
+            }
+        }
+    }
+    assert_eq!(stats.batches, 4);
+    assert_eq!(stats.dispatch_failures, 1);
+    assert_eq!(acct.snapshot().serve_dispatch_failures, 1);
 }

@@ -1,0 +1,161 @@
+//! Graceful shutdown of the networked serving tier (`serve --listen`):
+//! a real `exactgp` process under client load receives SIGTERM and must
+//! drain every in-flight request — every reply that arrives is complete
+//! and bitwise-correct, never a torn frame — flush its final stats, and
+//! exit 0.
+
+mod server_common;
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use exactgp::server::{Client, PredictOutcome};
+
+fn wait_with_deadline(child: &mut Child, deadline: Duration) -> std::process::ExitStatus {
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status;
+        }
+        if t0.elapsed() > deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("server did not exit within {deadline:?} of SIGTERM");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// An error on a drained connection must look like a close, never like a
+/// half-delivered frame.
+fn assert_not_torn(err: &str) {
+    for torn in ["mid-frame", "not valid JSON", "not UTF-8"] {
+        assert!(
+            !err.contains(torn),
+            "client observed a torn reply during shutdown: {err}"
+        );
+    }
+}
+
+#[test]
+fn sigterm_under_load_drains_and_exits_zero() {
+    let fx = server_common::fixture();
+    let m = &fx.models[0];
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_exactgp"))
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--models",
+            &format!("{}={}", m.name, m.dir.display()),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning serve --listen");
+
+    // The server prints its bound address (ephemeral port) on stdout.
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    let addr = {
+        let mut line = String::new();
+        let t0 = Instant::now();
+        loop {
+            line.clear();
+            let n = stdout.read_line(&mut line).unwrap();
+            if let Some(rest) = line.trim().strip_prefix("listening on ") {
+                break rest.to_string();
+            }
+            assert!(
+                n > 0 && t0.elapsed() < Duration::from_secs(60),
+                "server never announced its address (last line: {line:?})"
+            );
+        }
+    };
+
+    // Client load: three threads hammer single-point predicts, verifying
+    // every answer bitwise against the direct-predict reference, until
+    // the drained server closes their connections.
+    let ok_count = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for t in 0..3usize {
+        let addr = addr.clone();
+        let ok_count = ok_count.clone();
+        clients.push(std::thread::spawn(move || -> Option<String> {
+            let m = &server_common::fixture().models[0];
+            let mut cl = match Client::connect(&addr) {
+                Ok(cl) => cl,
+                Err(e) => return Some(format!("{e:#}")),
+            };
+            let mut qi = t; // distinct query streams per thread
+            loop {
+                qi = (qi + 1) % m.points();
+                match cl.predict(m.name, m.point(qi)) {
+                    Ok(PredictOutcome::Answer(p)) => {
+                        assert_eq!(p.mean.len(), 1);
+                        assert_eq!(
+                            p.mean[0].to_bits(),
+                            m.mean[qi].to_bits(),
+                            "reply mean differs from direct predict"
+                        );
+                        assert_eq!(p.var[0].to_bits(), m.var[qi].to_bits());
+                        ok_count.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Ok(PredictOutcome::Shed(_)) => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Ok(PredictOutcome::Failed(msg)) => {
+                        panic!("non-retryable predict failure: {msg}")
+                    }
+                    Err(e) => return Some(format!("{e:#}")),
+                }
+            }
+        }));
+    }
+
+    // Let real traffic flow, then SIGTERM mid-load.
+    let t0 = Instant::now();
+    while ok_count.load(Ordering::SeqCst) < 10 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "server answered only {} requests in 120s",
+            ok_count.load(Ordering::SeqCst)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let term = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("running kill");
+    assert!(term.success(), "kill -TERM failed");
+
+    // Every client either keeps getting complete bitwise-correct replies
+    // or sees a clean close — never a torn frame.
+    for handle in clients {
+        if let Some(err) = handle.join().expect("client thread panicked") {
+            assert_not_torn(&err);
+        }
+    }
+
+    let status = wait_with_deadline(&mut child, Duration::from_secs(60));
+    assert!(status.success(), "serve --listen exited nonzero: {status:?}");
+    assert!(ok_count.load(Ordering::SeqCst) >= 10);
+
+    let mut err_text = String::new();
+    child.stderr.take().unwrap().read_to_string(&mut err_text).unwrap();
+    assert!(
+        err_text.contains("shutdown signal received; draining in-flight requests"),
+        "stderr missing drain marker:\n{err_text}"
+    );
+    assert!(
+        err_text.contains("final per-model stats:"),
+        "stderr missing the final stats flush:\n{err_text}"
+    );
+    assert!(
+        err_text.contains("drained; exiting cleanly"),
+        "stderr missing clean-exit marker:\n{err_text}"
+    );
+}

@@ -121,3 +121,28 @@ fn unknown_model_and_duplicate_registration_fail_loud() {
     let err = Registry::with_budget_bytes(&fx.cfg, &dup, 1 << 30).unwrap_err();
     assert!(format!("{err}").contains("twice"), "{err}");
 }
+
+/// An injected cold-load failure (the `registry.load` fault seam) errors
+/// that one request; the registry stays up, and the next request's retry
+/// of the load succeeds and answers bitwise.
+#[test]
+fn injected_load_fault_fails_once_then_recovers() {
+    let fx = fixture();
+    let m = &fx.models[0];
+    let mut cfg = fx.cfg.clone();
+    cfg.faults = "registry.load:1".into();
+    let reg = Registry::with_budget_bytes(&cfg, &specs(fx), 1 << 30).unwrap();
+
+    let err = reg.handle(m.name).unwrap_err();
+    assert!(format!("{err}").contains("registry.load"), "{err}");
+    assert!(!reg.is_resident(m.name), "a failed load must not look resident");
+
+    // The seam fired once; the retry is a normal cold load.
+    let h = reg.handle(m.name).unwrap();
+    let p = h.query(m.point(0)).unwrap();
+    drop(h);
+    assert_eq!(p.mean[0].to_bits(), m.mean[0].to_bits());
+    assert_eq!(p.var[0].to_bits(), m.var[0].to_bits());
+
+    reg.shutdown();
+}

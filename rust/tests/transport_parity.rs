@@ -15,6 +15,7 @@ use exactgp::data::synthetic::Scale;
 use exactgp::exec::transport::subprocess::SubprocessOptions;
 use exactgp::exec::transport::BackendSpec;
 use exactgp::exec::{pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
+use exactgp::faults::FaultPlan;
 use exactgp::gp::exact::{ExactGp, Recipe};
 use exactgp::kernels::{Hypers, KernelKind};
 use exactgp::linalg::Mat;
@@ -185,10 +186,14 @@ fn killed_worker_is_respawned_and_jobs_are_resubmitted() {
     let (x, v) = toy(64); // 64 rows / r=4 at rpp=4 -> plenty of jobs
     let want = build_op(pool(TransportKind::Local, 2, opts()), &x, SPEC.r, 0).mvm(&v);
 
-    // Worker 0's first incarnation exits(23) after its first job, with
+    // Worker 1's first incarnation exits(23) after its first job, with
     // the rest of its queue in flight — the coordinator must respawn it,
-    // resubmit, and still produce identical bits.
-    let o = SubprocessOptions { kill_after_jobs: Some(1), ..opts() };
+    // resubmit, and still produce identical bits. Worker 1 (not 0) also
+    // proves fault seams are not limited to worker 0 like the old hook.
+    let o = SubprocessOptions {
+        plan: Arc::new(FaultPlan::parse("worker.kill@1:1").unwrap()),
+        ..opts()
+    };
     let op = build_op(pool(TransportKind::Subprocess, 2, o), &x, SPEC.r, 0);
     let got = op.mvm(&v);
     assert_eq!(got.data, want.data, "post-respawn results diverged");
@@ -208,7 +213,7 @@ fn hung_worker_times_out_and_the_solve_completes() {
     let (x, v) = toy(48);
     let want = build_op(pool(TransportKind::Local, 2, opts()), &x, SPEC.r, 0).mvm(&v);
     let o = SubprocessOptions {
-        hang_after_jobs: Some(1),
+        plan: Arc::new(FaultPlan::parse("worker.hang@0:1").unwrap()),
         job_timeout: Some(Duration::from_secs(2)),
         ..opts()
     };
@@ -221,20 +226,33 @@ fn hung_worker_times_out_and_the_solve_completes() {
 #[test]
 fn env_hooks_arm_fault_injection_and_timeout() {
     // from_env is how `EXACTGP_TRANSPORT=subprocess cargo test` runs pick
-    // up the kill hook and timeout without code changes.
+    // up fault plans and the timeout without code changes. The legacy
+    // EXACTGP_KILL_WORKER_AFTER_JOBS variable stays an alias for
+    // worker.kill@0:N.
     std::env::set_var("EXACTGP_KILL_WORKER_AFTER_JOBS", "3");
     std::env::set_var("EXACTGP_WORKER_TIMEOUT_SECS", "7");
     let o = SubprocessOptions::from_env();
     std::env::remove_var("EXACTGP_KILL_WORKER_AFTER_JOBS");
     std::env::remove_var("EXACTGP_WORKER_TIMEOUT_SECS");
-    assert_eq!(o.kill_after_jobs, Some(3));
+    assert_eq!(o.plan.worker_arming(0), (3, 0));
+    assert_eq!(o.plan.worker_arming(1), (0, 0));
     assert_eq!(o.job_timeout, Some(Duration::from_secs(7)));
 
     // "0" disables rather than arming a kill-before-first-job.
     std::env::set_var("EXACTGP_KILL_WORKER_AFTER_JOBS", "0");
     let o = SubprocessOptions::from_env();
     std::env::remove_var("EXACTGP_KILL_WORKER_AFTER_JOBS");
-    assert_eq!(o.kill_after_jobs, None);
+    assert!(o.plan.is_inert());
+
+    // EXACTGP_FAULTS speaks the full seam grammar, any worker index.
+    std::env::set_var("EXACTGP_FAULTS", "worker.hang@1:2");
+    let o = SubprocessOptions::from_env();
+    std::env::remove_var("EXACTGP_FAULTS");
+    assert_eq!(o.plan.worker_arming(1), (0, 2));
+    // Arming is consumed at spawn: a respawn of the same worker id comes
+    // up clean (the old worker-0-first-incarnation special case, now a
+    // property of every seam).
+    assert_eq!(o.plan.worker_arming(1), (0, 0));
 }
 
 #[test]
