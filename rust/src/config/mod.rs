@@ -152,6 +152,19 @@ pub struct Config {
     pub kernel: KernelKind,
     /// Independent per-dimension lengthscales (Table 3) vs one shared.
     pub ard: bool,
+    /// Support radius in scaled-distance units for compactly-supported
+    /// kernels (`wendland_c2`/`wendland_c4`/`tapered_matern32`): pairs
+    /// farther apart than this are *exactly* uncorrelated, which is what
+    /// lets workers skip provably-zero kernel tiles. Dense kernels ignore
+    /// it. A structural model parameter (validated > 0, finite), not a
+    /// trained hyperparameter.
+    pub support_radius: f64,
+    /// Sort training rows by spatial locality (recursive kd-bisection)
+    /// before training, so nearby points share row partitions and column
+    /// tiles and the compact-kernel tile-skip proof has tiles to skip.
+    /// A GP is exchangeable in its rows, but the sort reorders the
+    /// floating-point reductions, so it is part of the model fingerprint.
+    pub locality_sort: bool,
     /// Noise floor sigma^2 >= this (paper: 0.1 for houseelectric).
     pub noise_floor: f64,
 
@@ -281,6 +294,8 @@ impl Default for Config {
         Config {
             kernel: KernelKind::Matern32,
             ard: false,
+            support_radius: 1.0,
+            locality_sort: false,
             noise_floor: 1e-4,
             train_tol: 1.0,
             predict_tol: 0.01,
@@ -357,12 +372,15 @@ impl Config {
     /// invalidating the model.
     pub fn model_fingerprint(&self) -> u64 {
         let canon = format!(
-            "kernel={};ard={};noise_floor={:e};train_tol={:e};predict_tol={:e};\
+            "kernel={};ard={};support_radius={:e};locality_sort={};\
+             noise_floor={:e};train_tol={:e};predict_tol={:e};\
              max_cg_iters={};probes={};precond_rank={};variance_rank={};\
              pretrain_subset={};pretrain_lbfgs={};pretrain_adam={};\
              finetune_adam={};adam_lr={:e};full_adam={};seed={}",
             self.kernel.name(),
             self.ard,
+            self.support_radius,
+            self.locality_sort,
             self.noise_floor,
             self.train_tol,
             self.predict_tol,
@@ -385,11 +403,14 @@ impl Config {
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
         match key {
-            "model.kernel" => {
-                self.kernel = KernelKind::parse(v)
-                    .ok_or_else(|| anyhow::anyhow!("bad kernel {v:?}"))?
-            }
+            "model.kernel" => self.kernel = KernelKind::parse_strict(&unquote(v))?,
             "model.ard" => self.ard = parse_bool(v)?,
+            "model.support_radius" => {
+                let r: f64 = v.parse()?;
+                crate::kernels::validate_support_radius(r)?;
+                self.support_radius = r;
+            }
+            "model.locality_sort" => self.locality_sort = parse_bool(v)?,
             "model.noise_floor" => self.noise_floor = v.parse()?,
             "solver.train_tol" => self.train_tol = v.parse()?,
             "solver.predict_tol" => self.predict_tol = v.parse()?,
@@ -601,6 +622,30 @@ mod tests {
         // Model-shaping fields must.
         b.probes = 16;
         assert_ne!(a.model_fingerprint(), b.model_fingerprint());
+        // The support radius and the locality sort both shape the trained
+        // model (kernel shape; reduction order), so each must move it.
+        let mut c = Config::default();
+        c.support_radius = 2.0;
+        assert_ne!(a.model_fingerprint(), c.model_fingerprint());
+        let mut s = Config::default();
+        s.locality_sort = true;
+        assert_ne!(a.model_fingerprint(), s.model_fingerprint());
+    }
+
+    #[test]
+    fn compact_kernel_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.support_radius, 1.0);
+        assert!(!c.locality_sort);
+        c.set("model.kernel", "wendland_c4").unwrap();
+        c.set("model.support_radius", "3.25").unwrap();
+        c.set("model.locality_sort", "true").unwrap();
+        assert_eq!(c.kernel, KernelKind::WendlandC4);
+        assert_eq!(c.support_radius, 3.25);
+        assert!(c.locality_sort);
+        assert!(c.set("model.support_radius", "0").is_err());
+        assert!(c.set("model.support_radius", "-2").is_err());
+        assert!(c.set("model.kernel", "wendland").is_err());
     }
 
     #[test]

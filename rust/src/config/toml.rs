@@ -123,6 +123,37 @@ results_dir = "results/x # not a comment"
     }
 
     #[test]
+    fn sparse_kernel_knobs_round_trip() {
+        // Both quoted (real TOML) and bare (override style) kernel names.
+        let text = "[model]\nkernel = \"wendland_c2\"\nsupport_radius = 2.5\n\
+                    locality_sort = true\nard = true\n";
+        let mut cfg = crate::config::Config::default();
+        for (k, v) in parse(text).unwrap() {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.kernel, crate::kernels::KernelKind::WendlandC2);
+        assert_eq!(cfg.support_radius, 2.5);
+        assert!(cfg.locality_sort);
+        assert!(cfg.ard);
+        let mut cfg = crate::config::Config::default();
+        for (k, v) in parse("[model]\nkernel = tapered_matern32\n").unwrap() {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.kernel, crate::kernels::KernelKind::TaperedMatern32);
+        // An unknown kernel fails at parse time, listing the valid names.
+        let mut cfg = crate::config::Config::default();
+        let err = cfg.set("model.kernel", "wendland_c99").unwrap_err().to_string();
+        assert!(err.contains("wendland_c2"), "error should list kernels: {err}");
+        assert!(err.contains("matern32"), "error should list kernels: {err}");
+        // A nonsensical support radius fails at parse time too, loudly —
+        // not as a runtime panic inside the tile kernel.
+        for bad in ["0", "-1.5", "nan", "inf"] {
+            let err = cfg.set("model.support_radius", bad).unwrap_err().to_string();
+            assert!(err.contains("support"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse("[unterminated").is_err());
         assert!(parse("novalue =").is_err());

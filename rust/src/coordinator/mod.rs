@@ -185,10 +185,17 @@ pub fn run_exact(
     let train_s = gp.train_seconds;
     let train_snap = gp.accounting().snapshot();
     eprintln!(
-        "training accounting: mbcg_solves={} mvms={} cg_breakdowns={}",
-        train_snap.mbcg_solves, train_snap.mvms, train_snap.cg_breakdowns
+        "training accounting: mbcg_solves={} mvms={} cg_breakdowns={} \
+         tiles_total={} tiles_skipped={}",
+        train_snap.mbcg_solves,
+        train_snap.mvms,
+        train_snap.cg_breakdowns,
+        train_snap.tiles_total,
+        train_snap.tiles_skipped
     );
     extra.push(("train_mbcg_solves".into(), train_snap.mbcg_solves as f64));
+    extra.push(("tiles_total".into(), train_snap.tiles_total as f64));
+    extra.push(("tiles_skipped".into(), train_snap.tiles_skipped as f64));
     gp.precompute(&mut rng)?;
     extra.push(("partitions".into(), gp.partitions as f64));
     extra.push(("workers".into(), cfg.workers as f64));
@@ -264,7 +271,8 @@ pub fn run_model_with_recipe(
                 ds.train_x.clone(),
                 ds.train_y.clone(),
                 ds.d,
-            );
+            )
+            .with_support_radius(cfg.support_radius);
             gp.fit(
                 cfg.pretrain_lbfgs_steps,
                 cfg.pretrain_adam_steps,
@@ -370,17 +378,34 @@ pub fn load_model(
     let mut cfg = cfg.clone();
     cfg.kernel = ckpt.kernel;
     cfg.ard = ckpt.hypers.is_ard();
+    // A checkpoint whose ARD lengthscale vector does not match the stored
+    // dataset's dimensionality is corrupt; fail loudly here rather than
+    // panicking inside a tile kernel later.
+    ckpt.hypers.validate_dims(ckpt.dataset.d)?;
     let (pool, spec) = make_pool(&cfg, ckpt.dataset.d)?;
     ExactGp::from_checkpoint(&cfg, ckpt, pool, spec)
 }
 
-/// Load a dataset by name at the config's scale.
+/// Load a dataset by name at the config's scale. When
+/// `model.locality_sort` is set, the training rows are reordered by the
+/// deterministic kd-bisection (see [`Dataset::locality_sort_train`]) so
+/// compact-support kernels can prove whole tiles zero — the sorted order
+/// is then what gets checkpointed, so train and serve see the same rows.
 pub fn load_dataset(cfg: &Config, name: &str, trial: u64) -> Result<Dataset> {
-    synthetic::load(name, cfg.scale, trial)
+    let mut ds = synthetic::load(name, cfg.scale, trial)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown dataset {name:?}; known: {}",
-            synthetic::SUITE.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
-        ))
+            synthetic::SUITE
+                .iter()
+                .chain(synthetic::DEMOS.iter())
+                .map(|s| s.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))?;
+    if cfg.locality_sort {
+        ds.locality_sort_train();
+    }
+    Ok(ds)
 }
 
 /// Write a set of reports to `results/<exp>.json`.

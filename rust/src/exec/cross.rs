@@ -55,6 +55,9 @@ pub struct CrossKernelOp {
     pub cache_budget_bytes: usize,
     /// Test rows per chunk (0 = the whole batch in one chunk).
     pub chunk_rows: usize,
+    /// Disable bbox tile skipping in the per-chunk rect ops (the
+    /// `EXACTGP_FORCE_DENSE_TILES=1` parity escape hatch).
+    pub force_dense: bool,
 }
 
 impl CrossKernelOp {
@@ -81,7 +84,14 @@ impl CrossKernelOp {
             generation: 0,
             cache_budget_bytes: 0,
             chunk_rows: 0,
+            force_dense: crate::exec::force_dense_tiles_from_env(),
         }
+    }
+
+    /// Force dense tile execution (skip proof off) regardless of the env.
+    pub fn with_force_dense(mut self, force_dense: bool) -> CrossKernelOp {
+        self.force_dense = force_dense;
+        self
     }
 
     /// Enable the worker-resident block cache with a byte budget
@@ -142,7 +152,8 @@ impl CrossKernelOp {
                 self.hypers.clone(),
                 self.acct.clone(),
             )
-            .with_cache_budget(budget);
+            .with_cache_budget(budget)
+            .with_force_dense(self.force_dense);
             // Stable identity across the operator's lifetime; fresh
             // generation per chunk (row offsets repeat between chunks).
             op.op_id = self.op_id;

@@ -23,7 +23,7 @@ pub mod transport;
 
 pub use cross::CrossKernelOp;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -31,7 +31,7 @@ use crate::config::Config;
 use crate::kernels::{Hypers, KernelKind};
 use crate::linalg::Mat;
 use crate::metrics::Accounting;
-use crate::partition::{CacheBudget, Plan};
+use crate::partition::{CacheBudget, Plan, TileBounds};
 use crate::solvers::BatchMvm;
 
 /// Fixed tile geometry (must match the compiled artifacts for PJRT).
@@ -60,6 +60,49 @@ impl TileSpec {
             32
         }
     }
+}
+
+/// Proof parameters for compactly-supported tile skipping, reported by a
+/// backend whose kernel is exactly zero beyond a support cutoff.
+///
+/// The worker proves a tile zero by lower-bounding the *scaled* squared
+/// distance between the tile's row and column bounding boxes (raw
+/// coordinates scaled by `inv_ls`) and comparing against `r2` — the same
+/// f32 cutoff the kernel itself branches on, widened to f64. `inv_ls` are
+/// f64 copies of the exact f32 inverse lengthscales the backend folds into
+/// its inputs, so the proof reasons about the arithmetic the kernel
+/// actually performs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SupportCutoff {
+    /// The kernel's zero cutoff on the scaled squared distance: the exact
+    /// f32 value `(radius as f32)^2`, widened to f64.
+    pub r2: f64,
+    /// Per-(padded-)dimension inverse lengthscales, f64 copies of the
+    /// exact f32 values the backend uses.
+    pub inv_ls: Vec<f64>,
+}
+
+impl SupportCutoff {
+    /// True when a lower bound `min_r2` on every pair's scaled squared
+    /// distance proves the whole tile is exactly zero.
+    ///
+    /// The 1e-3 relative margin dwarfs the f32 rounding between the f64
+    /// bound and the kernel's f32 distance accumulation (one rounding per
+    /// scale multiply plus a d-term sum: relative error well under 1e-5 at
+    /// d <= 32), so a proved tile can never contain a pair the kernel
+    /// would evaluate below the cutoff — unsoundness here is a bug, and
+    /// `tests/sparsity_soundness.rs` hunts for it.
+    pub fn proves_zero(&self, min_r2: f64) -> bool {
+        min_r2 * (1.0 - 1e-3) >= self.r2
+    }
+}
+
+/// The tile-skip escape hatch: `EXACTGP_FORCE_DENSE_TILES=1` disables
+/// proved tile skipping process-wide. Read at operator construction (the
+/// per-operator `force_dense` field is what jobs actually consult, so
+/// tests can also flip it programmatically without env races).
+pub fn force_dense_tiles_from_env() -> bool {
+    std::env::var("EXACTGP_FORCE_DENSE_TILES").map(|v| v == "1").unwrap_or(false)
 }
 
 /// What a tile backend must compute. All slices are flat f32 row-major with
@@ -109,6 +152,13 @@ pub trait TileBackend {
     fn mvm_cached(&mut self, _rho: &[f32], _v: &[f32], _theta: &[f32]) -> Result<Vec<f32>> {
         anyhow::bail!("tile backend does not support cached MVMs")
     }
+
+    /// Tile-skip proof parameters at `theta`, for backends whose kernel is
+    /// compactly supported (exactly zero beyond a cutoff). `None` (the
+    /// default) means no tile may ever be skipped for this backend.
+    fn support_cutoff(&self, _theta: &[f32]) -> Option<SupportCutoff> {
+        None
+    }
 }
 
 /// Factory that builds one backend per worker thread (PJRT objects are not
@@ -135,6 +185,11 @@ pub struct PaddedData {
     pub x: Vec<f32>,
     /// Process-unique identity (see [`PaddedData::data_id`]).
     id: u64,
+    /// Memoized column-tile bounding boxes (one entry per tile width
+    /// requested so far — in practice exactly one, `spec.c`). Computed
+    /// over *true* rows only: padding rows are zeros and would corrupt
+    /// the boxes.
+    bounds: Mutex<Option<Arc<TileBounds>>>,
 }
 
 impl PaddedData {
@@ -167,6 +222,7 @@ impl PaddedData {
             d_pad: spec.d,
             x: out,
             id: DATA_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            bounds: Mutex::new(None),
         }
     }
 
@@ -188,6 +244,7 @@ impl PaddedData {
             d_pad,
             x,
             id: DATA_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            bounds: Mutex::new(None),
         }
     }
 
@@ -200,6 +257,23 @@ impl PaddedData {
     /// Borrow `rows` consecutive padded feature rows starting at `start`.
     pub fn row_block(&self, start: usize, rows: usize) -> &[f32] {
         &self.x[start * self.d_pad..(start + rows) * self.d_pad]
+    }
+
+    /// Column-tile bounding boxes at tile width `width`, memoized (every
+    /// job of an operator shares the same width, so this is computed once
+    /// per operand per process — workers on the far side of a transport
+    /// compute their own from the uploaded features, which are bitwise
+    /// equal to the coordinator's).
+    pub fn tile_bounds(&self, width: usize) -> Arc<TileBounds> {
+        let mut guard = self.bounds.lock().unwrap();
+        if let Some(b) = guard.as_ref() {
+            if b.width == width {
+                return b.clone();
+            }
+        }
+        let b = Arc::new(TileBounds::for_rows(&self.x, self.d_pad, self.n, width));
+        *guard = Some(b.clone());
+        b
     }
 }
 
@@ -243,6 +317,11 @@ pub struct PartitionedKernelOp {
     /// Byte budget for worker-resident correlation blocks (0 = stream
     /// every tile, the pre-cache behavior).
     pub cache_budget_bytes: usize,
+    /// When true, workers may never skip proved-zero tiles for this
+    /// operator's jobs (the `EXACTGP_FORCE_DENSE_TILES=1` escape hatch,
+    /// read at construction; also settable programmatically). Skipped and
+    /// force-dense runs are bitwise identical — this exists to prove it.
+    pub force_dense: bool,
 }
 
 impl PartitionedKernelOp {
@@ -256,6 +335,11 @@ impl PartitionedKernelOp {
         acct: Arc<Accounting>,
     ) -> Self {
         let noise = hypers.noise();
+        let mut plan = plan;
+        // Per-partition bounding boxes (raw coordinates, true rows only):
+        // partition-level metadata for the tile-skip proof; workers refine
+        // to per-row-block boxes, which are sub-boxes of these.
+        plan.attach_bboxes(&data.x, data.d_pad, data.n);
         PartitionedKernelOp {
             row_data: data.clone(),
             col_data: data,
@@ -269,6 +353,7 @@ impl PartitionedKernelOp {
             op_id: next_op_id(),
             generation: 0,
             cache_budget_bytes: 0,
+            force_dense: force_dense_tiles_from_env(),
         }
     }
 
@@ -281,7 +366,8 @@ impl PartitionedKernelOp {
         hypers: Hypers,
         acct: Arc<Accounting>,
     ) -> Self {
-        let plan = Plan::with_rows(row_data.n_pad, col_data.n_pad, spec.r.max(512));
+        let mut plan = Plan::with_rows(row_data.n_pad, col_data.n_pad, spec.r.max(512));
+        plan.attach_bboxes(&row_data.x, row_data.d_pad, row_data.n);
         PartitionedKernelOp {
             row_data,
             col_data,
@@ -295,6 +381,7 @@ impl PartitionedKernelOp {
             op_id: next_op_id(),
             generation: 0,
             cache_budget_bytes: 0,
+            force_dense: force_dense_tiles_from_env(),
         }
     }
 
@@ -302,6 +389,13 @@ impl PartitionedKernelOp {
     /// (0 disables; tiles beyond the budget stream as before).
     pub fn with_cache_budget(mut self, bytes: usize) -> Self {
         self.cache_budget_bytes = bytes;
+        self
+    }
+
+    /// Programmatic form of the `EXACTGP_FORCE_DENSE_TILES` escape hatch:
+    /// when true, jobs from this operator never skip proved-zero tiles.
+    pub fn with_force_dense(mut self, force_dense: bool) -> Self {
+        self.force_dense = force_dense;
         self
     }
 
@@ -534,6 +628,7 @@ impl PartitionedKernelOp {
                 op_id: self.op_id,
                 generation: self.generation,
                 cache_tiles: quotas[id],
+                allow_skip: !self.force_dense,
             })
             .collect();
         let results = self.pool.run(jobs);

@@ -3,15 +3,20 @@
 //! (b) the numerics oracle for the PJRT path (integration tests), and
 //! (c) the apples-to-apples CPU baseline in the perf pass.
 //!
-//! Math mirrors python/compile/kernels/matern.py: hyperparameters are
-//! folded into scaled inputs, gradients use the closed forms
-//!   matern32: d/dlog_l_i K = 3 e^{-u} d_i^2_scaled;  shared: e^{-u} u^2
-//!   rbf:      d/dlog_l_i K = rho d_i^2_scaled;       shared: rho r^2
-//! (os folded into V).
+//! Math mirrors `kernels::rho_g` (the single f64 source of the kernel
+//! math), here in f32: hyperparameters are folded into scaled inputs, and
+//! every family exposes `(rho, gcoef)` with `gcoef = -2 d rho / d r2`, so
+//! the log-lengthscale gradients are uniformly `gcoef * d_i^2` (ARD) and
+//! `gcoef * r2` (shared), with the outputscale folded into V.
+//!
+//! The compactly-supported families (Wendland C2/C4, tapered Matern)
+//! branch to an exact `(0.0, 0.0)` once the scaled squared distance
+//! reaches the support cutoff `r2_cut = (radius as f32)^2` — the same f32
+//! comparison the tile-skip proof reasons about (`support_cutoff`).
 
 use anyhow::Result;
 
-use crate::exec::{TileBackend, TileSpec};
+use crate::exec::{SupportCutoff, TileBackend, TileSpec};
 use crate::kernels::KernelKind;
 
 /// The pure-Rust tile backend (see the module docs).
@@ -19,6 +24,12 @@ pub struct NativeBackend {
     kind: KernelKind,
     ard: bool,
     spec: TileSpec,
+    /// Support radius for compact kernels, in scaled-distance units.
+    radius: f64,
+    /// `1 / radius` in f32 (the kernels multiply, never divide).
+    inv_r: f32,
+    /// `(radius as f32)^2`: the exact f32 cutoff the kernels branch on.
+    r2_cut: f32,
     // Scratch (reused across tiles to keep the hot loop allocation-free).
     xr_s: Vec<f32>,
     xc_s: Vec<f32>,
@@ -27,12 +38,27 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Build a backend for one worker at the given tile geometry.
+    /// Build a backend for one worker at the given tile geometry, with the
+    /// default support radius 1 (exact for the dense families).
     pub fn new(kind: KernelKind, ard: bool, spec: TileSpec) -> NativeBackend {
+        Self::with_radius(kind, ard, spec, 1.0)
+    }
+
+    /// Build a backend with an explicit support radius for the compact
+    /// kernel families (ignored by the dense ones).
+    pub fn with_radius(kind: KernelKind, ard: bool, spec: TileSpec, radius: f64) -> NativeBackend {
+        assert!(
+            radius.is_finite() && radius > 0.0,
+            "support radius must be positive and finite, got {radius}"
+        );
+        let rf = radius as f32;
         NativeBackend {
             kind,
             ard,
             spec,
+            radius,
+            inv_r: 1.0 / rf,
+            r2_cut: rf * rf,
             xr_s: vec![0.0; spec.r * spec.d],
             xc_s: vec![0.0; spec.c * spec.d],
             v_s: vec![0.0; spec.c * spec.t],
@@ -74,30 +100,79 @@ impl NativeBackend {
         self.scale_v(v, theta);
     }
 
+    /// (correlation, gradient coefficient) at scaled r^2 — the f32 mirror
+    /// of `kernels::rho_g`.
     #[inline]
-    fn rho_e(&self, r2: f32) -> (f32, f32) {
+    fn rho_g(&self, r2: f32) -> (f32, f32) {
         match self.kind {
-            KernelKind::Matern32 => matern32_rho_e(r2),
-            KernelKind::Rbf => rbf_rho_e(r2),
+            KernelKind::Matern32 => matern32_rho_g(r2),
+            KernelKind::Rbf => rbf_rho_g(r2),
+            KernelKind::WendlandC2 => wendland_c2_rho_g(r2, self.inv_r, self.r2_cut),
+            KernelKind::WendlandC4 => wendland_c4_rho_g(r2, self.inv_r, self.r2_cut),
+            KernelKind::TaperedMatern32 => tapered_matern32_rho_g(r2, self.inv_r, self.r2_cut),
         }
     }
 }
 
-/// (correlation, shared exponential factor) for Matern-3/2 at scaled r^2 —
-/// the single source of the kernel math for both the per-element
-/// `rho_e` path (mvm_grads) and the hoisted per-kind loops in `mvm`.
+/// (correlation, gcoef) for Matern-3/2 at scaled r^2 — the single source
+/// of the kernel math for both the per-element `rho_g` path (mvm_grads)
+/// and the hoisted per-kind loops in `mvm`.
 #[inline]
-fn matern32_rho_e(r2: f32) -> (f32, f32) {
+fn matern32_rho_g(r2: f32) -> (f32, f32) {
     let u = (3.0 * r2).sqrt();
     let e = (-u).exp();
-    ((1.0 + u) * e, e)
+    ((1.0 + u) * e, 3.0 * e)
 }
 
-/// (correlation, shared exponential factor) for RBF at scaled r^2.
+/// (correlation, gcoef) for RBF at scaled r^2.
 #[inline]
-fn rbf_rho_e(r2: f32) -> (f32, f32) {
+fn rbf_rho_g(r2: f32) -> (f32, f32) {
     let rho = (-0.5 * r2).exp();
     (rho, rho)
+}
+
+/// (correlation, gcoef) for Wendland C2 at scaled r^2: exactly (0, 0) once
+/// `r2 >= r2_cut` — the branch the tile-skip proof relies on.
+#[inline]
+fn wendland_c2_rho_g(r2: f32, inv_r: f32, r2_cut: f32) -> (f32, f32) {
+    if r2 >= r2_cut {
+        return (0.0, 0.0);
+    }
+    let s = r2.sqrt() * inv_r;
+    let om = 1.0 - s;
+    let om3 = om * om * om;
+    (om3 * om * (4.0 * s + 1.0), 20.0 * om3 * inv_r * inv_r)
+}
+
+/// (correlation, gcoef) for Wendland C4 at scaled r^2.
+#[inline]
+fn wendland_c4_rho_g(r2: f32, inv_r: f32, r2_cut: f32) -> (f32, f32) {
+    if r2 >= r2_cut {
+        return (0.0, 0.0);
+    }
+    let s = r2.sqrt() * inv_r;
+    let om = 1.0 - s;
+    let om2 = om * om;
+    let om5 = om2 * om2 * om;
+    let rho = om5 * om * (35.0 * s * s + 18.0 * s + 3.0) * (1.0 / 3.0);
+    let g = (56.0 / 3.0) * om5 * (5.0 * s + 1.0) * inv_r * inv_r;
+    (rho, g)
+}
+
+/// (correlation, gcoef) for the Wendland-tapered Matern-3/2 at scaled r^2.
+#[inline]
+fn tapered_matern32_rho_g(r2: f32, inv_r: f32, r2_cut: f32) -> (f32, f32) {
+    if r2 >= r2_cut {
+        return (0.0, 0.0);
+    }
+    let u = (3.0 * r2).sqrt();
+    let e = (-u).exp();
+    let m = (1.0 + u) * e;
+    let s = r2.sqrt() * inv_r;
+    let om = 1.0 - s;
+    let om3 = om * om * om;
+    let w = om3 * om * (4.0 * s + 1.0);
+    (m * w, 3.0 * e * w + 20.0 * m * om3 * inv_r * inv_r)
 }
 
 /// Accumulate one tile row of the matvec: `orow[j] += rho[jc] * v_s[jc*t+j]`.
@@ -154,6 +229,7 @@ impl TileBackend for NativeBackend {
         let TileSpec { r, c, t, d } = self.spec;
         self.scale_inputs(xr, xc, v, theta);
         let kind = self.kind;
+        let (inv_r, r2_cut) = (self.inv_r, self.r2_cut);
         let mut out = vec![0.0f32; r * t];
         // Three passes per tile row, each over contiguous memory with the
         // kernel-kind branch hoisted out of the element loops: distances
@@ -167,12 +243,27 @@ impl TileBackend for NativeBackend {
             match kind {
                 KernelKind::Matern32 => {
                     for rho in &mut self.rho_s {
-                        *rho = matern32_rho_e(*rho).0;
+                        *rho = matern32_rho_g(*rho).0;
                     }
                 }
                 KernelKind::Rbf => {
                     for rho in &mut self.rho_s {
-                        *rho = rbf_rho_e(*rho).0;
+                        *rho = rbf_rho_g(*rho).0;
+                    }
+                }
+                KernelKind::WendlandC2 => {
+                    for rho in &mut self.rho_s {
+                        *rho = wendland_c2_rho_g(*rho, inv_r, r2_cut).0;
+                    }
+                }
+                KernelKind::WendlandC4 => {
+                    for rho in &mut self.rho_s {
+                        *rho = wendland_c4_rho_g(*rho, inv_r, r2_cut).0;
+                    }
+                }
+                KernelKind::TaperedMatern32 => {
+                    for rho in &mut self.rho_s {
+                        *rho = tapered_matern32_rho_g(*rho, inv_r, r2_cut).0;
                     }
                 }
             }
@@ -195,6 +286,7 @@ impl TileBackend for NativeBackend {
         let TileSpec { r, c, d, .. } = self.spec;
         anyhow::ensure!(out.len() == r * c, "rho block len {} != {}", out.len(), r * c);
         self.scale_x(xr, xc, theta);
+        let (inv_r, r2_cut) = (self.inv_r, self.r2_cut);
         // Same two passes as the streaming `mvm` (distances, then
         // distance -> correlation in place), writing the correlation row
         // into the block instead of the per-row scratch: the stored rho
@@ -208,12 +300,27 @@ impl TileBackend for NativeBackend {
             match self.kind {
                 KernelKind::Matern32 => {
                     for rho in orow.iter_mut() {
-                        *rho = matern32_rho_e(*rho).0;
+                        *rho = matern32_rho_g(*rho).0;
                     }
                 }
                 KernelKind::Rbf => {
                     for rho in orow.iter_mut() {
-                        *rho = rbf_rho_e(*rho).0;
+                        *rho = rbf_rho_g(*rho).0;
+                    }
+                }
+                KernelKind::WendlandC2 => {
+                    for rho in orow.iter_mut() {
+                        *rho = wendland_c2_rho_g(*rho, inv_r, r2_cut).0;
+                    }
+                }
+                KernelKind::WendlandC4 => {
+                    for rho in orow.iter_mut() {
+                        *rho = wendland_c4_rho_g(*rho, inv_r, r2_cut).0;
+                    }
+                }
+                KernelKind::TaperedMatern32 => {
+                    for rho in orow.iter_mut() {
+                        *rho = tapered_matern32_rho_g(*rho, inv_r, r2_cut).0;
                     }
                 }
             }
@@ -249,19 +356,15 @@ impl TileBackend for NativeBackend {
             for jc in 0..c {
                 let b = &self.xc_s[jc * d..(jc + 1) * d];
                 let r2 = sq_dist(a, b);
-                let (rho, e) = self.rho_e(r2);
+                let (rho, gc) = self.rho_g(r2);
                 let vrow = &self.v_s[jc * t..(jc + 1) * t];
                 for j in 0..t {
                     kv[i * t + j] += rho * vrow[j];
                 }
                 if self.ard {
-                    let w = match self.kind {
-                        KernelKind::Matern32 => 3.0 * e,
-                        KernelKind::Rbf => e,
-                    };
                     for l in 0..d {
                         let diff = a[l] - b[l];
-                        let coeff = w * diff * diff;
+                        let coeff = gc * diff * diff;
                         if coeff != 0.0 {
                             let grow = &mut g[(l * r + i) * t..(l * r + i + 1) * t];
                             for j in 0..t {
@@ -270,10 +373,7 @@ impl TileBackend for NativeBackend {
                         }
                     }
                 } else {
-                    let w = match self.kind {
-                        KernelKind::Matern32 => e * 3.0 * r2, // e^{-u} u^2
-                        KernelKind::Rbf => e * r2,
-                    };
+                    let w = gc * r2;
                     let grow = &mut g[i * t..(i + 1) * t];
                     for j in 0..t {
                         grow[j] += w * vrow[j];
@@ -291,6 +391,23 @@ impl TileBackend for NativeBackend {
             1
         }
     }
+
+    fn support_cutoff(&self, theta: &[f32]) -> Option<SupportCutoff> {
+        if !self.kind.is_compact() {
+            return None;
+        }
+        // Mirror `scale_x` exactly: the proof multiplies raw-coordinate
+        // gaps by f64 copies of the same f32 inverse lengthscales the
+        // kernel folds into its inputs, and compares against the same
+        // f32 cutoff the kernel branches on.
+        let d = self.spec.d;
+        let inv_ls: Vec<f64> = if self.ard {
+            (0..d).map(|i| (-theta[i]).exp() as f64).collect()
+        } else {
+            vec![(-theta[0]).exp() as f64; d]
+        };
+        Some(SupportCutoff { r2: self.r2_cut as f64, inv_ls })
+    }
 }
 
 #[cfg(test)]
@@ -299,7 +416,7 @@ mod tests {
     use crate::kernels::{Hypers, KernelEval};
     use crate::util::rng::Rng;
 
-    fn run_case(kind: KernelKind, ard: bool) {
+    fn run_case(kind: KernelKind, ard: bool, radius: f64) {
         let spec = TileSpec { r: 4, c: 8, t: 3, d: 5 };
         let mut rng = Rng::new(41, 0);
         let xr: Vec<f32> = (0..spec.r * spec.d).map(|_| rng.normal() as f32).collect();
@@ -310,7 +427,7 @@ mod tests {
         } else {
             vec![0.2, -0.1]
         };
-        let mut be = NativeBackend::new(kind, ard, spec);
+        let mut be = NativeBackend::with_radius(kind, ard, spec, radius);
         let kv = be.mvm(&xr, &xc, &v, &theta).unwrap();
 
         // Oracle via the f64 KernelEval.
@@ -324,7 +441,7 @@ mod tests {
             log_noise: 0.0,
         };
         let h = Hypers { log_outputscale: if ard { theta[spec.d] as f64 } else { theta[1] as f64 }, ..h };
-        let eval = KernelEval::new(kind, &h);
+        let eval = KernelEval::with_radius(kind, &h, radius);
         let xr64: Vec<f64> = xr.iter().map(|&x| x as f64).collect();
         let xc64: Vec<f64> = xc.iter().map(|&x| x as f64).collect();
         let k = eval.cross(&xr64, &xc64, spec.d);
@@ -335,7 +452,7 @@ mod tests {
                     .sum();
                 assert!(
                     (kv[i * spec.t + j] as f64 - want).abs() < 1e-4,
-                    "{kind:?} ard={ard} ({i},{j}): {} vs {want}",
+                    "{kind:?} ard={ard} R={radius} ({i},{j}): {} vs {want}",
                     kv[i * spec.t + j]
                 );
             }
@@ -344,17 +461,21 @@ mod tests {
 
     #[test]
     fn mvm_matches_kernel_eval() {
-        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
+        for kind in KernelKind::ALL {
             for ard in [false, true] {
-                run_case(kind, ard);
+                // Radius 2.5 keeps a healthy mix of pairs inside and
+                // outside the support for the compact families.
+                run_case(kind, ard, if kind.is_compact() { 2.5 } else { 1.0 });
             }
         }
     }
 
     #[test]
     fn grads_match_finite_differences() {
-        // d/dlog_l [K v] via central differences on the f64 oracle.
-        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
+        // d/dlog_l [K v] via central differences on the f32 tile path —
+        // for the compact families this crosses the support boundary (the
+        // random cloud at radius 2.0 has pairs on both sides).
+        for kind in KernelKind::ALL {
             for ard in [false, true] {
                 let spec = TileSpec { r: 3, c: 6, t: 2, d: 4 };
                 let mut rng = Rng::new(42, 7);
@@ -368,7 +489,8 @@ mod tests {
                 let theta: Vec<f32> =
                     (0..nls + 1).map(|_| (rng.normal() * 0.3) as f32).collect();
 
-                let mut be = NativeBackend::new(kind, ard, spec);
+                let radius = if kind.is_compact() { 2.0 } else { 1.0 };
+                let mut be = NativeBackend::with_radius(kind, ard, spec, radius);
                 let (_, g) = be.mvm_grads(&xr, &xc, &v, &theta).unwrap();
 
                 let eps = 1e-3f32;
@@ -396,7 +518,7 @@ mod tests {
     fn cached_tile_path_is_bitwise_identical() {
         // materialize_tile + mvm_cached must reproduce the streaming mvm
         // exactly (same f32 op sequence), for every kernel/ard combination.
-        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
+        for kind in KernelKind::ALL {
             for ard in [false, true] {
                 let spec = TileSpec { r: 4, c: 8, t: 3, d: 5 };
                 let mut rng = Rng::new(44, 0);
@@ -411,7 +533,7 @@ mod tests {
                 } else {
                     vec![0.2, -0.1]
                 };
-                let mut be = NativeBackend::new(kind, ard, spec);
+                let mut be = NativeBackend::with_radius(kind, ard, spec, 2.0);
                 assert!(be.supports_cache());
                 let stream = be.mvm(&xr, &xc, &v, &theta).unwrap();
                 let mut rho = vec![0.0f32; spec.r * spec.c];
@@ -420,6 +542,66 @@ mod tests {
                 assert_eq!(stream, cached, "{kind:?} ard={ard}");
             }
         }
+    }
+
+    #[test]
+    fn compact_tile_is_exactly_zero_beyond_the_cutoff() {
+        // A tile whose row and column points are farther than the support
+        // radius must produce +0.0 bits everywhere: the MVM output, the
+        // materialized block, and the gradient trace. (This is the
+        // invariant that makes skipping such tiles bitwise-safe.)
+        let spec = TileSpec { r: 2, c: 4, t: 2, d: 3 };
+        for kind in [KernelKind::WendlandC2, KernelKind::WendlandC4, KernelKind::TaperedMatern32] {
+            for ard in [false, true] {
+                let nls = if ard { spec.d } else { 1 };
+                let theta: Vec<f32> = vec![0.0; nls + 1]; // unit scales
+                // Rows near the origin, columns shifted far past R = 1.5.
+                let xr: Vec<f32> = (0..spec.r * spec.d).map(|i| (i % 3) as f32 * 0.01).collect();
+                let xc: Vec<f32> =
+                    (0..spec.c * spec.d).map(|i| 50.0 + (i % 3) as f32 * 0.01).collect();
+                let v: Vec<f32> = (0..spec.c * spec.t)
+                    .map(|i| if i % 2 == 0 { -1.25 } else { 0.75 })
+                    .collect();
+                let mut be = NativeBackend::with_radius(kind, ard, spec, 1.5);
+                let kv = be.mvm(&xr, &xc, &v, &theta).unwrap();
+                for x in &kv {
+                    assert_eq!(x.to_bits(), 0.0f32.to_bits(), "{kind:?} ard={ard} mvm");
+                }
+                let mut rho = vec![7.0f32; spec.r * spec.c];
+                be.materialize_tile(&xr, &xc, &theta, &mut rho).unwrap();
+                for x in &rho {
+                    assert_eq!(x.to_bits(), 0.0f32.to_bits(), "{kind:?} ard={ard} block");
+                }
+                let (kv2, g) = be.mvm_grads(&xr, &xc, &v, &theta).unwrap();
+                for x in kv2.iter().chain(&g) {
+                    assert_eq!(x.to_bits(), 0.0f32.to_bits(), "{kind:?} ard={ard} grads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn support_cutoff_mirrors_the_kernel_exactly() {
+        let spec = TileSpec { r: 2, c: 4, t: 2, d: 3 };
+        // Dense kernels never report a cutoff.
+        let be = NativeBackend::new(KernelKind::Matern32, false, spec);
+        assert!(be.support_cutoff(&[0.1, 0.2]).is_none());
+        // Compact: the cutoff is the exact f32 (radius^2), and inv_ls are
+        // f64 copies of the exact f32 values scale_x folds in.
+        let radius = 1.7f64;
+        let be = NativeBackend::with_radius(KernelKind::WendlandC2, true, spec, radius);
+        let theta = [0.25f32, -0.5, 0.125, 0.0];
+        let cut = be.support_cutoff(&theta).unwrap();
+        let rf = radius as f32;
+        assert_eq!(cut.r2, (rf * rf) as f64);
+        assert_eq!(cut.inv_ls.len(), spec.d);
+        for i in 0..spec.d {
+            assert_eq!(cut.inv_ls[i], (-theta[i]).exp() as f64);
+        }
+        // Shared lengthscale: one value replicated across all dims.
+        let be = NativeBackend::with_radius(KernelKind::WendlandC4, false, spec, radius);
+        let cut = be.support_cutoff(&[0.5f32, 0.0]).unwrap();
+        assert!(cut.inv_ls.iter().all(|&x| x == (-0.5f32).exp() as f64));
     }
 
     #[test]

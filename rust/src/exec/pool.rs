@@ -83,6 +83,10 @@ pub struct Job {
     /// Leading (row-tile x col-tile) blocks of this job's strip the worker
     /// may hold resident (0 = streaming only).
     pub cache_tiles: usize,
+    /// Whether the worker may skip tiles whose bounding-box proof shows
+    /// every correlation is exactly zero (compact-support kernels only).
+    /// `false` forces dense execution — the parity escape hatch.
+    pub allow_skip: bool,
 }
 
 /// Worker pool facade over a [`Transport`]. `run` is synchronous: submit

@@ -80,6 +80,9 @@ pub enum BackendSpec {
         ard: bool,
         /// Tile geometry.
         spec: TileSpec,
+        /// Support radius (scaled units) for compact kernels; dense
+        /// kernels ignore it. A structural run parameter, not a hyper.
+        radius: f64,
     },
     /// AOT artifacts through the PJRT client (`exec::transport::pjrt`).
     Pjrt {
@@ -109,7 +112,12 @@ impl BackendSpec {
         spec: TileSpec,
     ) -> Result<BackendSpec> {
         match cfg.backend {
-            Backend::Native => Ok(BackendSpec::Native { kernel: kind, ard, spec }),
+            Backend::Native => Ok(BackendSpec::Native {
+                kernel: kind,
+                ard,
+                spec,
+                radius: cfg.support_radius,
+            }),
             Backend::Pjrt => {
                 let mode = if ard { "ard" } else { "shared" };
                 let manifest =
@@ -143,8 +151,9 @@ impl BackendSpec {
     /// after decoding the spec from its `Init` frame).
     pub fn build(&self) -> Result<Box<dyn TileBackend>> {
         match self {
-            BackendSpec::Native { kernel, ard, spec } => {
-                Ok(Box::new(NativeBackend::new(*kernel, *ard, *spec)) as Box<dyn TileBackend>)
+            BackendSpec::Native { kernel, ard, spec, radius } => {
+                Ok(Box::new(NativeBackend::with_radius(*kernel, *ard, *spec, *radius))
+                    as Box<dyn TileBackend>)
             }
             BackendSpec::Pjrt { artifacts_dir, kernel, ard, flavor, spec } => {
                 let manifest = Manifest::load(std::path::Path::new(artifacts_dir))?;
@@ -167,9 +176,12 @@ impl BackendSpec {
     /// from it — the same sharing the closure-based factory always did.
     pub fn factory(&self) -> Result<BackendFactory> {
         match self.clone() {
-            BackendSpec::Native { kernel, ard, spec } => Ok(std::sync::Arc::new(move |_wid| {
-                Ok(Box::new(NativeBackend::new(kernel, ard, spec)) as Box<dyn TileBackend>)
-            })),
+            BackendSpec::Native { kernel, ard, spec, radius } => {
+                Ok(std::sync::Arc::new(move |_wid| {
+                    Ok(Box::new(NativeBackend::with_radius(kernel, ard, spec, radius))
+                        as Box<dyn TileBackend>)
+                }))
+            }
             BackendSpec::Pjrt { artifacts_dir, kernel, ard, flavor, spec } => {
                 let manifest = std::sync::Arc::new(Manifest::load(std::path::Path::new(
                     &artifacts_dir,

@@ -216,6 +216,8 @@ pub(crate) struct WireJob {
     pub generation: u64,
     /// Leading blocks of the strip the worker may hold resident.
     pub cache_tiles: u64,
+    /// Whether the worker may skip bbox-proved-zero tiles.
+    pub allow_skip: bool,
     /// (n_pad, t) RHS, f32 flat.
     pub v: Vec<f32>,
     /// Kernel-only theta in the wire layout.
@@ -263,6 +265,10 @@ pub(crate) struct WireAcct {
     pub cache_fills: u64,
     /// Cache hits.
     pub cache_hits: u64,
+    /// Candidate kernel blocks considered (skipped + executed).
+    pub tiles_total: u64,
+    /// Blocks skipped by the bounding-box zero proof.
+    pub tiles_skipped: u64,
 }
 
 impl WireAcct {
@@ -275,6 +281,8 @@ impl WireAcct {
             tile_execs: d.tile_execs,
             cache_fills: d.cache_fills,
             cache_hits: d.cache_hits,
+            tiles_total: d.tiles_total,
+            tiles_skipped: d.tiles_skipped,
         }
     }
 
@@ -287,6 +295,8 @@ impl WireAcct {
             tile_execs: self.tile_execs,
             cache_fills: self.cache_fills,
             cache_hits: self.cache_hits,
+            tiles_total: self.tiles_total,
+            tiles_skipped: self.tiles_skipped,
             ..Default::default()
         }
     }
@@ -300,11 +310,13 @@ fn put_backend(buf: &mut Vec<u8>, b: &BackendSpec) {
         put_u64(buf, s.d as u64);
     };
     match b {
-        BackendSpec::Native { kernel, ard, spec } => {
+        BackendSpec::Native { kernel, ard, spec, radius } => {
             put_u8(buf, BACKEND_NATIVE);
             put_str(buf, kernel.name());
             put_u8(buf, u8::from(*ard));
             put_spec(buf, spec);
+            // f64 as raw bits so the radius survives bitwise.
+            put_u64(buf, radius.to_bits());
         }
         BackendSpec::Pjrt { artifacts_dir, kernel, ard, flavor, spec } => {
             put_u8(buf, BACKEND_PJRT);
@@ -325,7 +337,10 @@ fn get_backend(d: &mut Dec) -> Result<BackendSpec> {
     let ard = d.u8()? != 0;
     let spec = TileSpec { r: d.usize()?, c: d.usize()?, t: d.usize()?, d: d.usize()? };
     match tag {
-        BACKEND_NATIVE => Ok(BackendSpec::Native { kernel, ard, spec }),
+        BACKEND_NATIVE => {
+            let radius = f64::from_bits(d.u64()?);
+            Ok(BackendSpec::Native { kernel, ard, spec, radius })
+        }
         BACKEND_PJRT => {
             let artifacts_dir = d.str()?;
             let flavor = Flavor::parse(&d.str()?)?;
@@ -386,6 +401,7 @@ pub(crate) fn encode_run(job: &Job) -> Vec<u8> {
     put_u64(&mut buf, job.op_id);
     put_u64(&mut buf, job.generation);
     put_u64(&mut buf, job.cache_tiles as u64);
+    put_u8(&mut buf, u8::from(job.allow_skip));
     put_f32s(&mut buf, &job.v);
     put_f32s(&mut buf, &job.theta);
     buf
@@ -433,6 +449,7 @@ pub(crate) fn decode_request(payload: &[u8]) -> Result<Request> {
                 op_id: d.u64()?,
                 generation: d.u64()?,
                 cache_tiles: d.u64()?,
+                allow_skip: d.u8()? != 0,
                 v: d.f32s()?,
                 theta: d.f32s()?,
             }))
@@ -466,6 +483,8 @@ pub(crate) fn encode_job_ok(id: u64, acct: &WireAcct, out: &[f64]) -> Vec<u8> {
     put_u64(&mut buf, acct.tile_execs);
     put_u64(&mut buf, acct.cache_fills);
     put_u64(&mut buf, acct.cache_hits);
+    put_u64(&mut buf, acct.tiles_total);
+    put_u64(&mut buf, acct.tiles_skipped);
     put_f64s(&mut buf, out);
     buf
 }
@@ -494,6 +513,8 @@ pub(crate) fn decode_response(payload: &[u8]) -> Result<Response> {
                 tile_execs: d.u64()?,
                 cache_fills: d.u64()?,
                 cache_hits: d.u64()?,
+                tiles_total: d.u64()?,
+                tiles_skipped: d.u64()?,
             },
             out: d.f64s()?,
         }),
@@ -532,7 +553,19 @@ mod tests {
     #[test]
     fn init_round_trips_both_backend_specs() {
         for spec in [
-            BackendSpec::Native { kernel: KernelKind::Matern32, ard: true, spec: SPEC },
+            BackendSpec::Native {
+                kernel: KernelKind::Matern32,
+                ard: true,
+                spec: SPEC,
+                radius: 1.0,
+            },
+            // The radius must survive bitwise — including awkward values.
+            BackendSpec::Native {
+                kernel: KernelKind::WendlandC2,
+                ard: false,
+                spec: SPEC,
+                radius: 2.5 + f64::EPSILON,
+            },
             BackendSpec::Pjrt {
                 artifacts_dir: "artifacts".into(),
                 kernel: KernelKind::Rbf,
@@ -583,6 +616,7 @@ mod tests {
             op_id: 77,
             generation: 9,
             cache_tiles: 6,
+            allow_skip: true,
         };
         match decode_request(&encode_run(&job)).unwrap() {
             Request::Run(wj) => {
@@ -591,9 +625,16 @@ mod tests {
                 assert_eq!((wj.row_start, wj.row_len), (4, 4));
                 assert_eq!((wj.row_data, wj.col_data), (data.data_id(), data.data_id()));
                 assert_eq!((wj.col_limit, wj.op_id, wj.generation, wj.cache_tiles), (5, 77, 9, 6));
+                assert!(wj.allow_skip);
                 assert_eq!(wj.v, *job.v, "RHS must survive bitwise");
                 assert_eq!(wj.theta, *job.theta);
             }
+            _ => panic!("wrong request variant"),
+        }
+        // The force-dense escape hatch travels too.
+        let dense = Job { allow_skip: false, ..job.clone() };
+        match decode_request(&encode_run(&dense)).unwrap() {
+            Request::Run(wj) => assert!(!wj.allow_skip),
             _ => panic!("wrong request variant"),
         }
         assert!(matches!(decode_request(&encode_shutdown()).unwrap(), Request::Shutdown));
@@ -613,6 +654,8 @@ mod tests {
             tile_execs: 4,
             cache_fills: 5,
             cache_hits: 6,
+            tiles_total: 7,
+            tiles_skipped: 3,
         };
         // f64 results must survive bitwise — including signed zero & ulp.
         let out = [1.0f64, -0.0, f64::MIN_POSITIVE, 1.0 + f64::EPSILON];

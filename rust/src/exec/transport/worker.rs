@@ -18,6 +18,7 @@ use crate::exec::pool::{Job, JobKind};
 use crate::exec::transport::wire::{self, Request, WireAcct, WireJob};
 use crate::exec::{PaddedData, TileBackend};
 use crate::metrics::Accounting;
+use crate::partition::BBox;
 
 /// One cached strip: the leading `filled` blocks (each spec.r * spec.c
 /// f32 correlations) of a job's tile traversal.
@@ -91,6 +92,19 @@ pub(crate) fn run_partition(
         CachedStrip::default()
     };
 
+    // Tile skipping: with a compact-support kernel (and the job allowing
+    // it), a (row-block x col-tile) whose bounding boxes are provably
+    // farther apart than the support radius is all-zero — no
+    // materialization, no gemm, no cache fill, and nothing added to the
+    // f64 accumulator. The decision is made at the fixed (spec.r x spec.c)
+    // granularity, independent of how jobs sub-split rows, so it is
+    // invariant across worker counts and job splits. Skipping is bitwise
+    // invisible: a dense all-zero tile contributes exactly +0.0 to every
+    // accumulator lane (f32 sums of +/-0.0 products round to +0.0), which
+    // is what not adding anything leaves behind.
+    let cutoff = if job.allow_skip { backend.support_cutoff(&job.theta) } else { None };
+    let col_bounds = cutoff.as_ref().map(|_| job.col_data.tile_bounds(spec.c));
+
     // Partitions need not be tile-aligned (memory budgets can give
     // rows-per-partition < tile height); clamp the row block to the padded
     // data and zero-fill the overhang in a scratch tile.
@@ -98,6 +112,13 @@ pub(crate) fn run_partition(
     let mut tile_idx = 0usize;
     let mut row = job.row_start;
     while row < job.row_start + job.row_len {
+        // Row-block bounding box over *true* rows only (padding rows sit
+        // at the origin and would poison the box; their outputs are
+        // discarded by the coordinator, so skipping them is sound).
+        let row_box = cutoff.as_ref().map(|_| {
+            let true_rows = job.row_data.n.saturating_sub(row).min(spec.r);
+            BBox::from_rows(&job.row_data.x, job.row_data.d_pad, row, true_rows)
+        });
         let avail = job.row_data.n_pad.saturating_sub(row).min(spec.r);
         let xr: &[f32] = if avail == spec.r {
             job.row_data.row_block(row, spec.r)
@@ -109,6 +130,22 @@ pub(crate) fn run_partition(
         };
         let mut col = 0;
         while col < job.col_limit {
+            // Every candidate block counts toward the skip-rate
+            // denominator — in force-dense mode too, so the two modes
+            // report the same tiles_total.
+            job.acct.note_tile_candidate();
+            if let (Some(cut), Some(rb)) = (&cutoff, &row_box) {
+                let cb = col_bounds.as_ref().unwrap().tile(col / spec.c);
+                if cut.proves_zero(rb.min_scaled_sq_dist(&cb, &cut.inv_ls)) {
+                    // Proved all-zero: skip materialization, gemm, and the
+                    // cache entirely. tile_idx does NOT advance — cache
+                    // slots stay a prefix of the *live* tile traversal,
+                    // which is deterministic per (theta, generation).
+                    job.acct.note_tile_skipped();
+                    col += spec.c;
+                    continue;
+                }
+            }
             let xc = job.col_data.row_block(col, spec.c);
             let vt = &job.v[col * t..(col + spec.c) * t];
             job.acct
@@ -202,6 +239,7 @@ fn job_from_wire(
         op_id: wj.op_id,
         generation: wj.generation,
         cache_tiles: wj.cache_tiles as usize,
+        allow_skip: wj.allow_skip,
     })
 }
 

@@ -26,12 +26,15 @@ pub struct CholeskyGp {
     pub x: Vec<f64>,
     pub y: Vec<f64>,
     pub d: usize,
+    /// Support radius for compact kernels (`Config::support_radius`);
+    /// ignored by the dense families. Default 1.
+    pub support_radius: f64,
     factor: Option<CholeskyFactor>,
     alpha: Option<Vec<f64>>,
 }
 
 /// Exact negative log marginal likelihood and its gradient w.r.t. the
-/// log-hypers, by dense factorization.
+/// log-hypers, by dense factorization, at the default support radius 1.
 pub fn nll_and_grad(
     kind: KernelKind,
     hypers: &Hypers,
@@ -39,8 +42,21 @@ pub fn nll_and_grad(
     y: &[f64],
     d: usize,
 ) -> Result<(f64, Vec<f64>)> {
+    nll_and_grad_with_radius(kind, hypers, x, y, d, 1.0)
+}
+
+/// [`nll_and_grad`] with an explicit support radius for the compact
+/// kernel families (the dense families ignore it).
+pub fn nll_and_grad_with_radius(
+    kind: KernelKind,
+    hypers: &Hypers,
+    x: &[f64],
+    y: &[f64],
+    d: usize,
+    radius: f64,
+) -> Result<(f64, Vec<f64>)> {
     let n = y.len();
-    let eval = KernelEval::new(kind, hypers);
+    let eval = KernelEval::with_radius(kind, hypers, radius);
     let khat = eval.gram_with_noise(x, d, hypers.noise());
     let f = cholesky(&khat)?;
     let alpha = f.solve_vec(y);
@@ -78,7 +94,14 @@ pub fn nll_and_grad(
 
 impl CholeskyGp {
     pub fn new(kind: KernelKind, hypers: Hypers, x: Vec<f64>, y: Vec<f64>, d: usize) -> Self {
-        CholeskyGp { kind, hypers, x, y, d, factor: None, alpha: None }
+        CholeskyGp { kind, hypers, x, y, d, support_radius: 1.0, factor: None, alpha: None }
+    }
+
+    /// Builder: set the compact-kernel support radius (no-op for the
+    /// dense families).
+    pub fn with_support_radius(mut self, radius: f64) -> Self {
+        self.support_radius = radius;
+        self
     }
 
     pub fn n(&self) -> usize {
@@ -96,6 +119,7 @@ impl CholeskyGp {
     ) -> Result<f64> {
         let n_ls = self.hypers.log_lengthscales.len();
         let (kind, d) = (self.kind, self.d);
+        let radius = self.support_radius;
         let (x, y) = (self.x.clone(), self.y.clone());
         let clamp = |p: &mut [f64]| {
             // log_noise is the last parameter.
@@ -109,7 +133,7 @@ impl CholeskyGp {
         let mut params = self.hypers.to_vec();
         let mut obj = |p: &[f64]| -> (f64, Vec<f64>) {
             let h = Hypers::from_vec(p, n_ls);
-            match nll_and_grad(kind, &h, &x, &y, d) {
+            match nll_and_grad_with_radius(kind, &h, &x, &y, d, radius) {
                 Ok(r) => r,
                 // Non-PD draw during line search: return +inf to reject.
                 Err(_) => (f64::INFINITY, vec![0.0; p.len()]),
@@ -138,7 +162,7 @@ impl CholeskyGp {
 
     /// Factor K^ and cache alpha = K^{-1} y.
     pub fn precompute(&mut self) -> Result<()> {
-        let eval = KernelEval::new(self.kind, &self.hypers);
+        let eval = KernelEval::with_radius(self.kind, &self.hypers, self.support_radius);
         let khat = eval.gram_with_noise(&self.x, self.d, self.hypers.noise());
         let f = cholesky(&khat)?;
         self.alpha = Some(f.solve_vec(&self.y));
@@ -153,7 +177,7 @@ impl CholeskyGp {
         }
         let f = self.factor.as_ref().unwrap();
         let alpha = self.alpha.as_ref().unwrap();
-        let eval = KernelEval::new(self.kind, &self.hypers);
+        let eval = KernelEval::with_radius(self.kind, &self.hypers, self.support_radius);
         let s = xstar.len() / self.d;
         let mut mean = Vec::with_capacity(s);
         let mut var = Vec::with_capacity(s);
@@ -170,7 +194,14 @@ impl CholeskyGp {
     }
 
     pub fn nll_value(&self) -> Result<f64> {
-        let (nll, _) = nll_and_grad(self.kind, &self.hypers, &self.x, &self.y, self.d)?;
+        let (nll, _) = nll_and_grad_with_radius(
+            self.kind,
+            &self.hypers,
+            &self.x,
+            &self.y,
+            self.d,
+            self.support_radius,
+        )?;
         Ok(nll)
     }
 }

@@ -258,7 +258,8 @@ impl ExactGp {
         if self.precond.is_some() && self.precond_hypers.as_ref() == Some(&self.hypers) {
             return Ok(());
         }
-        let eval = KernelEval::new(self.kind, &self.hypers);
+        let eval =
+            KernelEval::with_radius(self.kind, &self.hypers, self.cfg.support_radius);
         let rank = self.cfg.precond_rank.min(self.n().saturating_sub(1)).max(1);
         let pc = {
             let kr = NativeKernelRows { eval: &eval, x: &self.x, d: self.d };
@@ -466,7 +467,8 @@ impl ExactGp {
                 sx,
                 sy,
                 self.d,
-            );
+            )
+            .with_support_radius(self.cfg.support_radius);
             pre.fit(
                 self.cfg.pretrain_lbfgs_steps,
                 self.cfg.pretrain_adam_steps,

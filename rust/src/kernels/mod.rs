@@ -5,36 +5,91 @@
 //! to ship to a device), SGPR/SVGP prediction-time cross-covariances, the
 //! native fallback tile backend (`exec::native`), and as a test oracle for
 //! the PJRT path.
+//!
+//! Besides the paper's dense families (Matern-3/2, RBF), this module ships
+//! three *compactly supported* families (Wendland C2 / C4 and a
+//! Wendland-tapered Matern-3/2) whose correlation is exactly zero once the
+//! lengthscale-scaled distance exceeds a support radius `R`. Compact
+//! support is what lets the execution layer prove whole kernel tiles are
+//! zero and skip them (see `exec` and `partition::BBox`); the gp2Scale
+//! line of work scales exact GPs past the paper's 10^6 points this way.
+//!
+//! Gradient convention: every family exposes `gcoef(r2) = -2 d rho / d r2`
+//! at the scaled squared distance `r2`. Because `r2 = sum_i (d_i / l_i)^2`,
+//! the log-lengthscale gradients are then uniformly
+//! `d k / d log_l_i = os * gcoef * d_i^2_scaled` (ARD) and
+//! `d k / d log_l = os * gcoef * r2` (shared) for every family.
 
-// Rustdoc debt: public items here are not yet individually documented;
-// lib.rs warns on missing_docs crate-wide. Remove this allow (and add
-// the docs) when this module is next touched.
-#![allow(missing_docs)]
+use anyhow::{bail, ensure, Result};
 
+/// sqrt(3), used by the Matern-3/2 closed forms.
 pub const SQRT3: f64 = 1.732_050_807_568_877_2;
 
 /// Kernel family. The paper's experiments use Matern-3/2 throughout; RBF is
-/// wired for ablations.
+/// wired for ablations. The Wendland / tapered families are compactly
+/// supported: correlation is identically zero beyond the support radius
+/// (in lengthscale-scaled distance), which the execution layer exploits to
+/// skip provably-zero tiles.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelKind {
+    /// Matern nu=3/2 (the paper's default). Dense support.
     Matern32,
+    /// Squared-exponential / RBF. Dense support.
     Rbf,
+    /// Wendland phi_{3,1}: C2-smooth, zero beyond the support radius.
+    WendlandC2,
+    /// Wendland phi_{3,2}: C4-smooth, zero beyond the support radius.
+    WendlandC4,
+    /// Matern-3/2 multiplied by the Wendland C2 taper: keeps the Matern
+    /// shape near zero but is exactly zero beyond the support radius.
+    TaperedMatern32,
 }
 
 impl KernelKind {
+    /// Every kernel family, in the order used for docs and error messages.
+    pub const ALL: [KernelKind; 5] = [
+        KernelKind::Matern32,
+        KernelKind::Rbf,
+        KernelKind::WendlandC2,
+        KernelKind::WendlandC4,
+        KernelKind::TaperedMatern32,
+    ];
+
+    /// Canonical config / wire name.
     pub fn name(&self) -> &'static str {
         match self {
             KernelKind::Matern32 => "matern32",
             KernelKind::Rbf => "rbf",
+            KernelKind::WendlandC2 => "wendland_c2",
+            KernelKind::WendlandC4 => "wendland_c4",
+            KernelKind::TaperedMatern32 => "tapered_matern32",
         }
     }
 
+    /// Parse a canonical name (`None` for unknown names).
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "matern32" => Some(KernelKind::Matern32),
-            "rbf" => Some(KernelKind::Rbf),
-            _ => None,
-        }
+        KernelKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Parse a canonical name with a loud error that lists every valid
+    /// kernel — the config / CLI entry point, so a typo'd kernel (or a
+    /// kernel from a newer binary) fails at parse time, not as a runtime
+    /// panic inside the tile path.
+    pub fn parse_strict(s: &str) -> Result<Self> {
+        KernelKind::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = KernelKind::ALL.iter().map(|k| k.name()).collect();
+            anyhow::anyhow!("unknown kernel {s:?}; valid kernels: {}", names.join(", "))
+        })
+    }
+
+    /// True for compactly-supported families: rho(r2) == 0 exactly when
+    /// the scaled distance reaches the support radius. Only these are
+    /// eligible for proved tile skipping.
+    pub fn is_compact(&self) -> bool {
+        matches!(
+            self,
+            KernelKind::WendlandC2 | KernelKind::WendlandC4 | KernelKind::TaperedMatern32
+        )
     }
 }
 
@@ -43,14 +98,23 @@ impl KernelKind {
 /// `log_lengthscales` has length 1 (shared across dimensions — Table 1) or
 /// d (independent/ARD — Table 3). `log_outputscale` is log s^2,
 /// `log_noise` is log sigma^2.
+///
+/// The support radius of the compact kernels is deliberately NOT a hyper:
+/// it is a structural run parameter (`Config::support_radius`) — tile-skip
+/// proofs depend on it, so it stays fixed over an optimization run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Hypers {
+    /// Log lengthscales: length 1 (shared) or d (ARD).
     pub log_lengthscales: Vec<f64>,
+    /// Log outputscale (log s^2).
     pub log_outputscale: f64,
+    /// Log noise variance (log sigma^2).
     pub log_noise: f64,
 }
 
 impl Hypers {
+    /// The paper's initialization (unit lengthscales / outputscale, noise
+    /// 0.1); `ard_dims = Some(d)` for per-dimension lengthscales.
     pub fn default_init(ard_dims: Option<usize>) -> Self {
         Hypers {
             log_lengthscales: vec![0.0; ard_dims.unwrap_or(1)],
@@ -59,14 +123,17 @@ impl Hypers {
         }
     }
 
+    /// True when lengthscales are per-dimension.
     pub fn is_ard(&self) -> bool {
         self.log_lengthscales.len() > 1
     }
 
+    /// Noise variance sigma^2.
     pub fn noise(&self) -> f64 {
         self.log_noise.exp()
     }
 
+    /// Outputscale s^2.
     pub fn outputscale(&self) -> f64 {
         self.log_outputscale.exp()
     }
@@ -74,6 +141,20 @@ impl Hypers {
     /// Number of optimizable parameters.
     pub fn dim(&self) -> usize {
         self.log_lengthscales.len() + 2
+    }
+
+    /// Check the lengthscale count against a dataset dimensionality: 1
+    /// (shared) or exactly `d` (ARD). Called on every path that marries
+    /// hypers to data (config / checkpoint load), so a mismatch is a loud
+    /// setup-time error instead of a runtime panic in the tile kernel.
+    pub fn validate_dims(&self, d: usize) -> Result<()> {
+        let n_ls = self.log_lengthscales.len();
+        ensure!(
+            n_ls == 1 || n_ls == d,
+            "hyperparameters carry {n_ls} lengthscales but the data has d={d} \
+             dimensions (want 1 shared or exactly d ARD lengthscales)"
+        );
+        Ok(())
     }
 
     /// Flatten to the optimizer's parameter vector:
@@ -85,6 +166,7 @@ impl Hypers {
         v
     }
 
+    /// Rebuild from the optimizer's parameter vector (`to_vec` layout).
     pub fn from_vec(v: &[f64], n_ls: usize) -> Self {
         assert_eq!(v.len(), n_ls + 2);
         Hypers {
@@ -139,73 +221,133 @@ pub fn scaled_sq_dist(a: &[f64], b: &[f64], inv_ls: &[f64]) -> f64 {
     }
 }
 
-/// Correlation rho(r2_scaled) — covariance is outputscale * rho.
+/// Correlation rho together with the gradient coefficient
+/// `gcoef = -2 d rho / d r2`, at scaled squared distance `r2` and support
+/// radius `radius` (ignored by the dense families). This is the single
+/// source of the f64 kernel math; `exec::native` mirrors it in f32.
+///
+/// Compact families return exactly `(0.0, 0.0)` once `r2 >= radius^2` —
+/// the invariant the tile-skip proof relies on.
 #[inline]
-pub fn rho(kind: KernelKind, r2: f64) -> f64 {
+pub fn rho_g(kind: KernelKind, r2: f64, radius: f64) -> (f64, f64) {
     match kind {
         KernelKind::Matern32 => {
             let u = (3.0 * r2).sqrt();
-            (1.0 + u) * (-u).exp()
+            let e = (-u).exp();
+            ((1.0 + u) * e, 3.0 * e)
         }
-        KernelKind::Rbf => (-0.5 * r2).exp(),
+        KernelKind::Rbf => {
+            let rho = (-0.5 * r2).exp();
+            (rho, rho)
+        }
+        KernelKind::WendlandC2 => {
+            if r2 >= radius * radius {
+                return (0.0, 0.0);
+            }
+            let inv_r = 1.0 / radius;
+            let s = r2.sqrt() * inv_r;
+            let om = 1.0 - s;
+            let om3 = om * om * om;
+            // rho = (1-s)^4 (4s+1);  d rho/d r2 = -10 (1-s)^3 / R^2
+            (om3 * om * (4.0 * s + 1.0), 20.0 * om3 * inv_r * inv_r)
+        }
+        KernelKind::WendlandC4 => {
+            if r2 >= radius * radius {
+                return (0.0, 0.0);
+            }
+            let inv_r = 1.0 / radius;
+            let s = r2.sqrt() * inv_r;
+            let om = 1.0 - s;
+            let om2 = om * om;
+            let om5 = om2 * om2 * om;
+            // rho = (1-s)^6 (35 s^2 + 18 s + 3)/3
+            // d rho/d r2 = -(28/3)(1-s)^5 (5s+1) / R^2
+            let rho = om5 * om * (35.0 * s * s + 18.0 * s + 3.0) * (1.0 / 3.0);
+            let g = (56.0 / 3.0) * om5 * (5.0 * s + 1.0) * inv_r * inv_r;
+            (rho, g)
+        }
+        KernelKind::TaperedMatern32 => {
+            if r2 >= radius * radius {
+                return (0.0, 0.0);
+            }
+            let u = (3.0 * r2).sqrt();
+            let e = (-u).exp();
+            let m = (1.0 + u) * e;
+            let inv_r = 1.0 / radius;
+            let s = r2.sqrt() * inv_r;
+            let om = 1.0 - s;
+            let om3 = om * om * om;
+            let w = om3 * om * (4.0 * s + 1.0);
+            // rho = m(r2) w(s); product rule on the gcoef convention.
+            (m * w, 3.0 * e * w + 20.0 * m * om3 * inv_r * inv_r)
+        }
     }
+}
+
+/// Correlation rho(r2_scaled) — covariance is outputscale * rho. Compact
+/// families use the default support radius 1 here; radius-aware callers go
+/// through [`KernelEval`] or [`rho_g`].
+#[inline]
+pub fn rho(kind: KernelKind, r2: f64) -> f64 {
+    rho_g(kind, r2, 1.0).0
 }
 
 /// Precomputed per-hyper state for fast row evaluation.
 pub struct KernelEval {
+    /// Kernel family.
     pub kind: KernelKind,
+    /// Per-dimension inverse lengthscales (length 1 when shared).
     pub inv_ls: Vec<f64>,
+    /// Outputscale s^2.
     pub outputscale: f64,
+    /// Support radius for compact families (scaled distance units);
+    /// ignored by the dense families.
+    pub radius: f64,
 }
 
 impl KernelEval {
+    /// Evaluator with the default support radius 1 (exact for the dense
+    /// families, which ignore it).
     pub fn new(kind: KernelKind, h: &Hypers) -> Self {
+        Self::with_radius(kind, h, 1.0)
+    }
+
+    /// Evaluator with an explicit support radius (must be positive and
+    /// finite — the tile-skip proof squares it).
+    pub fn with_radius(kind: KernelKind, h: &Hypers, radius: f64) -> Self {
+        assert!(
+            radius.is_finite() && radius > 0.0,
+            "support radius must be positive and finite, got {radius}"
+        );
         KernelEval {
             kind,
             inv_ls: h.log_lengthscales.iter().map(|&l| (-l).exp()).collect(),
             outputscale: h.outputscale(),
+            radius,
         }
     }
 
     /// k(a, b).
     #[inline]
     pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
-        self.outputscale * rho(self.kind, scaled_sq_dist(a, b, &self.inv_ls))
+        let r2 = scaled_sq_dist(a, b, &self.inv_ls);
+        self.outputscale * rho_g(self.kind, r2, self.radius).0
     }
 
     /// k(a, b) together with d k / d log_l_i for each lengthscale
-    /// parameter (1 shared / d ARD). Closed forms (see
-    /// python/compile/kernels/matern.py):
-    ///   matern32: dk/dlog_l_i = 3 os e^{-u} w_i d_i^2 ; shared: os u^2 e^{-u}
-    ///   rbf:      dk/dlog_l_i = k w_i d_i^2 ;           shared: k r~^2
+    /// parameter (1 shared / d ARD), via the uniform gcoef convention
+    /// (module docs): shared `os * gcoef * r2`, ARD `os * gcoef * d_i^2`.
     pub fn eval_with_grads(&self, a: &[f64], b: &[f64]) -> (f64, Vec<f64>) {
         let r2 = scaled_sq_dist(a, b, &self.inv_ls);
-        let (k, e) = match self.kind {
-            KernelKind::Matern32 => {
-                let u = (3.0 * r2).sqrt();
-                let e = (-u).exp();
-                (self.outputscale * (1.0 + u) * e, e)
-            }
-            KernelKind::Rbf => {
-                let rho = (-0.5 * r2).exp();
-                (self.outputscale * rho, rho)
-            }
-        };
+        let (rho, gcoef) = rho_g(self.kind, r2, self.radius);
+        let k = self.outputscale * rho;
         let grads = if self.inv_ls.len() == 1 {
-            let g = match self.kind {
-                KernelKind::Matern32 => self.outputscale * e * 3.0 * r2,
-                KernelKind::Rbf => k * r2,
-            };
-            vec![g]
+            vec![self.outputscale * gcoef * r2]
         } else {
             (0..a.len())
                 .map(|i| {
                     let di = (a[i] - b[i]) * self.inv_ls[i];
-                    let d2 = di * di;
-                    match self.kind {
-                        KernelKind::Matern32 => 3.0 * self.outputscale * e * d2,
-                        KernelKind::Rbf => k * d2,
-                    }
+                    self.outputscale * gcoef * (di * di)
                 })
                 .collect()
         };
@@ -244,6 +386,15 @@ impl KernelEval {
     }
 }
 
+/// Validate a support radius from config / CLI input: positive and finite,
+/// or a loud error (shared by `Config::set` and checkpoint load).
+pub fn validate_support_radius(radius: f64) -> Result<()> {
+    if !radius.is_finite() || radius <= 0.0 {
+        bail!("model.support_radius must be a positive finite number, got {radius}");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,30 +426,168 @@ mod tests {
     }
 
     #[test]
+    fn wendland_known_values() {
+        let h = Hypers { log_lengthscales: vec![0.0], log_outputscale: 0.0, log_noise: 0.0 };
+        // s = 1/2 at r = 0.5, R = 1: C2 rho = (1/2)^4 * 3 = 3/16.
+        let c2 = KernelEval::new(KernelKind::WendlandC2, &h);
+        assert!((c2.eval(&[0.0], &[0.5]) - 3.0 / 16.0).abs() < 1e-12);
+        // C4 rho = (1/2)^6 (35/4 + 9 + 3)/3 = (1/64)(83/12).
+        let c4 = KernelEval::new(KernelKind::WendlandC4, &h);
+        assert!((c4.eval(&[0.0], &[0.5]) - 83.0 / 768.0).abs() < 1e-12);
+        // Tapered = matern32 * C2 taper.
+        let tm = KernelEval::new(KernelKind::TaperedMatern32, &h);
+        let m = KernelEval::new(KernelKind::Matern32, &h);
+        let want = m.eval(&[0.0], &[0.5]) * 3.0 / 16.0;
+        assert!((tm.eval(&[0.0], &[0.5]) - want).abs() < 1e-12);
+        // All are exactly 1 at zero distance (correlations).
+        for kind in [KernelKind::WendlandC2, KernelKind::WendlandC4, KernelKind::TaperedMatern32] {
+            let e = KernelEval::new(kind, &h);
+            assert!((e.eval(&[0.3], &[0.3]) - 1.0).abs() < 1e-12, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn compact_kernels_are_exactly_zero_beyond_radius() {
+        let h = Hypers { log_lengthscales: vec![0.2], log_outputscale: 0.4, log_noise: 0.0 };
+        for kind in KernelKind::ALL {
+            for radius in [1.0, 2.5] {
+                let e = KernelEval::with_radius(kind, &h, radius);
+                // Scaled distance = |a-b| * e^{-0.2}; pick |a-b| so the
+                // scaled distance sits just past the radius.
+                let at = radius * (0.2f64).exp() * 1.0001;
+                let (k, g) = e.eval_with_grads(&[0.0], &[at]);
+                if kind.is_compact() {
+                    assert_eq!(k, 0.0, "{kind:?} R={radius} must vanish exactly");
+                    assert_eq!(g[0], 0.0, "{kind:?} R={radius} grad must vanish exactly");
+                } else {
+                    assert!(k > 0.0, "{kind:?} is dense");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compact_kernels_are_continuous_at_the_boundary() {
+        let h = Hypers::default_init(None);
+        for kind in [KernelKind::WendlandC2, KernelKind::WendlandC4, KernelKind::TaperedMatern32] {
+            let e = KernelEval::with_radius(kind, &h, 2.0);
+            // Approach the boundary from inside: rho and gcoef -> 0.
+            let k_in = e.eval(&[0.0], &[2.0 * (1.0 - 1e-7)]);
+            assert!(k_in > 0.0 && k_in < 1e-20, "{kind:?}: k just inside = {k_in}");
+            let (_, g) = e.eval_with_grads(&[0.0], &[2.0 * (1.0 - 1e-7)]);
+            assert!(g[0].abs() < 1e-15, "{kind:?}: grad just inside = {}", g[0]);
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_for_all_kernels() {
+        // Central differences on log-lengthscales, shared and ARD, at
+        // several distances including at/near the support boundary —
+        // where the piecewise polynomial's derivative must not kink wrong.
+        let radius = 1.5;
+        for kind in KernelKind::ALL {
+            for ard in [false, true] {
+                let d = 3;
+                let base = Hypers {
+                    log_lengthscales: if ard { vec![0.1, -0.2, 0.3] } else { vec![0.15] },
+                    log_outputscale: 0.2,
+                    log_noise: 0.0,
+                };
+                let a = [0.0, 0.0, 0.0];
+                // Fractions of the support radius, including just inside,
+                // at, and beyond the boundary.
+                for frac in [0.1, 0.5, 0.9, 0.999, 1.0, 1.2] {
+                    // Place b so the scaled distance is ~frac * radius.
+                    let scale = (0.15f64).exp(); // undo the shared lengthscale
+                    let b = [
+                        frac * radius * scale / (3.0f64).sqrt(),
+                        frac * radius * scale / (3.0f64).sqrt(),
+                        frac * radius * scale / (3.0f64).sqrt(),
+                    ];
+                    let e = KernelEval::with_radius(kind, &base, radius);
+                    let (_, grads) = e.eval_with_grads(&a, &b);
+                    let n_ls = base.log_lengthscales.len();
+                    assert_eq!(grads.len(), if ard { d } else { 1 });
+                    let eps = 1e-6;
+                    for l in 0..n_ls {
+                        let mut hp = base.clone();
+                        hp.log_lengthscales[l] += eps;
+                        let mut hm = base.clone();
+                        hm.log_lengthscales[l] -= eps;
+                        let kp = KernelEval::with_radius(kind, &hp, radius).eval(&a, &b);
+                        let km = KernelEval::with_radius(kind, &hm, radius).eval(&a, &b);
+                        let fd = (kp - km) / (2.0 * eps);
+                        assert!(
+                            (fd - grads[l]).abs() < 1e-6 * (1.0 + fd.abs()),
+                            "{kind:?} ard={ard} frac={frac} l={l}: fd={fd} an={}",
+                            grads[l]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn ard_matches_shared_when_tied() {
         let d = 4;
         let shared = Hypers { log_lengthscales: vec![0.4], log_outputscale: 0.1, log_noise: 0.0 };
         let ard = Hypers { log_lengthscales: vec![0.4; d], log_outputscale: 0.1, log_noise: 0.0 };
-        let es = KernelEval::new(KernelKind::Matern32, &shared);
-        let ea = KernelEval::new(KernelKind::Matern32, &ard);
         let a = [0.1, -0.2, 0.5, 1.0];
         let b = [1.0, 0.3, -0.7, 0.2];
-        assert!((es.eval(&a, &b) - ea.eval(&a, &b)).abs() < 1e-12);
+        for kind in KernelKind::ALL {
+            let es = KernelEval::with_radius(kind, &shared, 2.0);
+            let ea = KernelEval::with_radius(kind, &ard, 2.0);
+            assert!((es.eval(&a, &b) - ea.eval(&a, &b)).abs() < 1e-12, "{kind:?}");
+        }
     }
 
     #[test]
     fn kernel_decreases_with_distance() {
         let h = Hypers::default_init(None);
-        for kind in [KernelKind::Matern32, KernelKind::Rbf] {
-            let e = KernelEval::new(kind, &h);
+        for kind in KernelKind::ALL {
+            let e = KernelEval::with_radius(kind, &h, 8.5);
             let mut last = f64::INFINITY;
             for r in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0] {
                 let k = e.eval(&[0.0], &[r]);
-                assert!(k <= last + 1e-15);
-                assert!(k > 0.0);
+                assert!(k <= last + 1e-15, "{kind:?} at r={r}");
+                assert!(k > 0.0, "{kind:?} at r={r} (inside the support)");
                 last = k;
             }
         }
+    }
+
+    #[test]
+    fn kernel_names_round_trip() {
+        for kind in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+            assert_eq!(KernelKind::parse_strict(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(KernelKind::parse("wendland"), None);
+        let err = KernelKind::parse_strict("wendland").unwrap_err().to_string();
+        assert!(err.contains("valid kernels"), "{err}");
+        assert!(err.contains("wendland_c2"), "{err}");
+        assert!(err.contains("tapered_matern32"), "{err}");
+    }
+
+    #[test]
+    fn hypers_dimension_validation() {
+        let shared = Hypers::default_init(None);
+        shared.validate_dims(7).unwrap();
+        let ard = Hypers::default_init(Some(7));
+        ard.validate_dims(7).unwrap();
+        let err = ard.validate_dims(5).unwrap_err().to_string();
+        assert!(err.contains("7 lengthscales"), "{err}");
+        assert!(err.contains("d=5"), "{err}");
+    }
+
+    #[test]
+    fn support_radius_validation_is_loud() {
+        assert!(validate_support_radius(1.0).is_ok());
+        assert!(validate_support_radius(0.0).is_err());
+        assert!(validate_support_radius(-2.0).is_err());
+        assert!(validate_support_radius(f64::NAN).is_err());
+        assert!(validate_support_radius(f64::INFINITY).is_err());
     }
 
     #[test]
@@ -315,13 +604,15 @@ mod tests {
     #[test]
     fn gram_is_symmetric_with_noise_diag() {
         let h = Hypers::default_init(None);
-        let e = KernelEval::new(KernelKind::Matern32, &h);
-        let x = [0.0, 1.0, 2.0, 5.0];
-        let k = e.gram_with_noise(&x, 1, 0.25);
-        for i in 0..4 {
-            assert!((k[(i, i)] - (1.0 + 0.25)).abs() < 1e-12);
-            for j in 0..4 {
-                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12);
+        for kind in [KernelKind::Matern32, KernelKind::WendlandC2] {
+            let e = KernelEval::new(kind, &h);
+            let x = [0.0, 1.0, 2.0, 5.0];
+            let k = e.gram_with_noise(&x, 1, 0.25);
+            for i in 0..4 {
+                assert!((k[(i, i)] - (1.0 + 0.25)).abs() < 1e-12);
+                for j in 0..4 {
+                    assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12);
+                }
             }
         }
     }

@@ -20,7 +20,7 @@
 //!                never run by hand
 //!
 //! Common flags: --config <file.toml>, --set sec.key=value (repeatable),
-//! --dataset, --model, --scale, --workers, --backend, --flavor,
+//! --dataset, --model, --scale, --workers, --backend, --flavor, --kernel,
 //! --transport local|subprocess, --trials.
 
 use anyhow::{bail, Result};
@@ -53,6 +53,9 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(t) = args.get("transport") {
         cfg.transport = exactgp::config::TransportKind::parse(t)?;
+    }
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = exactgp::kernels::KernelKind::parse_strict(k)?;
     }
     if let Some(t) = args.get_usize("trials")? {
         cfg.trials = t;
@@ -93,6 +96,9 @@ fn print_usage() {
            exactgp train --dataset <name> [--model exact|cholesky|sgpr|svgp]\n\
                          [--scale smoke|default|large|paper|<cap>] [--workers N]\n\
                          [--backend pjrt|native] [--flavor jnp|pallas] [--ard]\n\
+                         [--kernel matern32|rbf|wendland_c2|wendland_c4|\n\
+                         tapered_matern32]  (compact kernels skip proved-zero\n\
+                         tiles; see model.support_radius / model.locality_sort)\n\
                          [--transport local|subprocess]\n\
                          [--ckpt dir [--ckpt-every N]]  (durable training-state\n\
                          records every N steps + final model checkpoint)\n\

@@ -84,6 +84,12 @@ pub struct Accounting {
     /// Kernel-block cache: tile MVMs served from a cached block (kernel
     /// evaluation skipped entirely).
     pub cache_hits: AtomicU64,
+    /// Sparsity: candidate (row-tile x col-tile) kernel blocks considered
+    /// by workers (skipped + executed); the skip-rate denominator.
+    pub tiles_total: AtomicU64,
+    /// Sparsity: blocks the bounding-box proof showed to be exactly zero,
+    /// so neither materialization, gemm, nor cache fill happened.
+    pub tiles_skipped: AtomicU64,
     /// Prediction: test points served through the batch engine.
     pub predict_points: AtomicU64,
     /// Prediction: memory-budgeted test chunks dispatched to the pool.
@@ -150,6 +156,16 @@ impl Accounting {
     /// Record one tile MVM served from a cached block.
     pub fn note_cache_hit(&self) {
         self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one candidate kernel block considered (skipped or executed).
+    pub fn note_tile_candidate(&self) {
+        self.tiles_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one kernel block skipped by the bounding-box zero proof.
+    pub fn note_tile_skipped(&self) {
+        self.tiles_skipped.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record `points` test points served by a batch-prediction call.
@@ -234,6 +250,8 @@ impl Accounting {
         self.tile_execs.fetch_add(d.tile_execs, Ordering::Relaxed);
         self.cache_fills.fetch_add(d.cache_fills, Ordering::Relaxed);
         self.cache_hits.fetch_add(d.cache_hits, Ordering::Relaxed);
+        self.tiles_total.fetch_add(d.tiles_total, Ordering::Relaxed);
+        self.tiles_skipped.fetch_add(d.tiles_skipped, Ordering::Relaxed);
     }
 
     /// Consistent point-in-time copy of all counters.
@@ -246,6 +264,8 @@ impl Accounting {
             mvms: self.mvms.load(Ordering::Relaxed),
             cache_fills: self.cache_fills.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            tiles_total: self.tiles_total.load(Ordering::Relaxed),
+            tiles_skipped: self.tiles_skipped.load(Ordering::Relaxed),
             predict_points: self.predict_points.load(Ordering::Relaxed),
             predict_chunks: self.predict_chunks.load(Ordering::Relaxed),
             mbcg_solves: self.mbcg_solves.load(Ordering::Relaxed),
@@ -273,6 +293,8 @@ impl Accounting {
         self.mvms.store(0, Ordering::Relaxed);
         self.cache_fills.store(0, Ordering::Relaxed);
         self.cache_hits.store(0, Ordering::Relaxed);
+        self.tiles_total.store(0, Ordering::Relaxed);
+        self.tiles_skipped.store(0, Ordering::Relaxed);
         self.predict_points.store(0, Ordering::Relaxed);
         self.predict_chunks.store(0, Ordering::Relaxed);
         self.mbcg_solves.store(0, Ordering::Relaxed);
@@ -308,6 +330,10 @@ pub struct AccountingSnapshot {
     pub cache_fills: u64,
     /// Tile MVMs served from cached blocks.
     pub cache_hits: u64,
+    /// Candidate kernel blocks considered by workers (skipped + executed).
+    pub tiles_total: u64,
+    /// Kernel blocks skipped by the bounding-box zero proof.
+    pub tiles_skipped: u64,
     /// Test points served through the batch prediction engine.
     pub predict_points: u64,
     /// Prediction chunks dispatched to the pool.
@@ -351,6 +377,8 @@ impl AccountingSnapshot {
             mvms: self.mvms - earlier.mvms,
             cache_fills: self.cache_fills - earlier.cache_fills,
             cache_hits: self.cache_hits - earlier.cache_hits,
+            tiles_total: self.tiles_total - earlier.tiles_total,
+            tiles_skipped: self.tiles_skipped - earlier.tiles_skipped,
             predict_points: self.predict_points - earlier.predict_points,
             predict_chunks: self.predict_chunks - earlier.predict_chunks,
             mbcg_solves: self.mbcg_solves - earlier.mbcg_solves,
@@ -479,6 +507,8 @@ mod tests {
             tile_execs: 5,
             cache_fills: 2,
             cache_hits: 3,
+            tiles_total: 9,
+            tiles_skipped: 4,
             ..Default::default()
         };
         acc.merge_remote(&delta);
@@ -490,6 +520,27 @@ mod tests {
         assert_eq!(s.tile_execs, 6);
         assert_eq!(s.cache_fills, 2);
         assert_eq!(s.cache_hits, 3);
+        assert_eq!(s.tiles_total, 9);
+        assert_eq!(s.tiles_skipped, 4);
+    }
+
+    #[test]
+    fn sparsity_counters_flow_through_snapshot_delta_reset() {
+        let acc = Accounting::default();
+        acc.note_tile_candidate();
+        acc.note_tile_candidate();
+        acc.note_tile_skipped();
+        let s = acc.snapshot();
+        assert_eq!(s.tiles_total, 2);
+        assert_eq!(s.tiles_skipped, 1);
+        acc.note_tile_candidate();
+        let d = acc.snapshot().delta(&s);
+        assert_eq!(d.tiles_total, 1);
+        assert_eq!(d.tiles_skipped, 0);
+        acc.reset();
+        let z = acc.snapshot();
+        assert_eq!(z.tiles_total, 0);
+        assert_eq!(z.tiles_skipped, 0);
     }
 
     #[test]

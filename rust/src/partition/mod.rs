@@ -29,6 +29,106 @@ impl Partition {
     }
 }
 
+/// Axis-aligned bounding box over a row range of (padded-layout) feature
+/// data, in RAW (unscaled) coordinates.
+///
+/// Raw coordinates make the box hyper-independent: for positive per-dim
+/// scales, the box of the scaled points IS the scaled box, so the
+/// tile-skip proof scales the per-dim gaps at proof time instead of
+/// rebuilding boxes on every hyperparameter step.
+///
+/// An empty row range yields `lo = +inf, hi = -inf` per dim, which makes
+/// `min_scaled_sq_dist` return `+inf` — an empty box is "infinitely far",
+/// which is exactly right: rows that do not exist contribute nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BBox {
+    /// Per-dimension lower bounds.
+    pub lo: Vec<f64>,
+    /// Per-dimension upper bounds.
+    pub hi: Vec<f64>,
+}
+
+impl BBox {
+    /// Box over `rows` rows of flat row-major `x` (stride `d`) starting at
+    /// row `start`. The f32 -> f64 widening is exact, so the bounds are
+    /// exact bounds on the stored coordinates.
+    pub fn from_rows(x: &[f32], d: usize, start: usize, rows: usize) -> BBox {
+        let mut lo = vec![f64::INFINITY; d];
+        let mut hi = vec![f64::NEG_INFINITY; d];
+        for i in start..start + rows {
+            for j in 0..d {
+                let v = x[i * d + j] as f64;
+                if v < lo[j] {
+                    lo[j] = v;
+                }
+                if v > hi[j] {
+                    hi[j] = v;
+                }
+            }
+        }
+        BBox { lo, hi }
+    }
+
+    /// True when the box covers no rows.
+    pub fn is_empty(&self) -> bool {
+        self.lo.first().is_none_or(|&l| l == f64::INFINITY)
+    }
+
+    /// Lower bound on the scaled squared distance between any point in
+    /// `self` and any point in `other`: per-dim axis gaps (0 where the
+    /// projections overlap), scaled by `inv_ls`, summed in quadrature.
+    ///
+    /// Sub-boxes can only shrink toward each other's complement — a box
+    /// over a subset of rows is contained in the full box, so its gaps
+    /// are at least as large. That containment is what makes the tile-skip
+    /// decision monotone (never less sound) under row/column sub-splits.
+    pub fn min_scaled_sq_dist(&self, other: &BBox, inv_ls: &[f64]) -> f64 {
+        debug_assert_eq!(self.lo.len(), other.lo.len());
+        let mut s = 0.0;
+        for j in 0..self.lo.len() {
+            let gap = (self.lo[j] - other.hi[j]).max(other.lo[j] - self.hi[j]).max(0.0);
+            let g = gap * inv_ls[j];
+            s += g * g;
+        }
+        s
+    }
+}
+
+/// Bounding boxes for the fixed-width tiles of one operand: box `k` covers
+/// rows `[k*width, min((k+1)*width, n))` — clamped to the true row count,
+/// never the padded one (padding rows are zeros and would corrupt boxes).
+#[derive(Clone, Debug)]
+pub struct TileBounds {
+    /// The tile width the boxes were computed at.
+    pub width: usize,
+    /// One box per tile, in row order.
+    pub boxes: Vec<BBox>,
+}
+
+impl TileBounds {
+    /// Boxes over the first `n` (true) rows of flat row-major `x`
+    /// (stride `d`), one per `width`-row tile.
+    pub fn for_rows(x: &[f32], d: usize, n: usize, width: usize) -> TileBounds {
+        let width = width.max(1);
+        let boxes = (0..n.div_ceil(width))
+            .map(|k| {
+                let start = k * width;
+                BBox::from_rows(x, d, start, width.min(n - start))
+            })
+            .collect();
+        TileBounds { width, boxes }
+    }
+
+    /// The box for tile `idx`; an all-padding tile (possible when the
+    /// padded row count exceeds `n` by a whole tile) reads as empty.
+    pub fn tile(&self, idx: usize) -> BBox {
+        self.boxes.get(idx).cloned().unwrap_or(BBox {
+            lo: vec![f64::INFINITY],
+            hi: vec![f64::NEG_INFINITY],
+        })
+    }
+}
+
 /// A full plan for one n x n (or n_rows x n_cols rectangular) operator.
 #[derive(Clone, Debug)]
 pub struct Plan {
@@ -40,6 +140,9 @@ pub struct Plan {
     pub rows_per_partition: usize,
     /// The row partitions, in row order, covering `[0, n_rows)` exactly.
     pub partitions: Vec<Partition>,
+    /// Per-partition bounding boxes in raw coordinates (empty until
+    /// `attach_bboxes`); partition-level metadata for the tile-skip proof.
+    pub bboxes: Vec<BBox>,
 }
 
 impl Plan {
@@ -53,7 +156,21 @@ impl Plan {
             partitions.push(Partition { start, end });
             start = end;
         }
-        Plan { n_rows, n_cols, rows_per_partition, partitions }
+        Plan { n_rows, n_cols, rows_per_partition, partitions, bboxes: Vec::new() }
+    }
+
+    /// Attach one bounding box per partition, over the first `n` true rows
+    /// of the operand `x` (flat row-major, stride `d`): rows at or past
+    /// `n` are padding and are excluded.
+    pub fn attach_bboxes(&mut self, x: &[f32], d: usize, n: usize) {
+        self.bboxes = self
+            .partitions
+            .iter()
+            .map(|p| {
+                let start = p.start.min(n);
+                BBox::from_rows(x, d, start, p.end.min(n) - start)
+            })
+            .collect();
     }
 
     /// Plan from a per-device transient-memory budget (bytes): the largest
@@ -180,6 +297,113 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn bbox_distance_is_a_true_lower_bound() {
+        // For random clouds, the box-to-box scaled distance never exceeds
+        // any pairwise scaled distance: the bound may be loose, never
+        // unsound. This is the primitive the tile-skip proof rests on.
+        check("bbox-lower-bound", 64, |g| {
+            let d = 1 + g.rng.below(5);
+            let na = 1 + g.rng.below(12);
+            let nb = 1 + g.rng.below(12);
+            let mut pts = |n: usize| -> Vec<f32> {
+                (0..n * d).map(|_| (g.rng.below(2000) as f32 - 1000.0) / 97.0).collect()
+            };
+            let xa = pts(na);
+            let xb = pts(nb);
+            let inv_ls: Vec<f64> =
+                (0..d).map(|_| (1 + g.rng.below(30)) as f64 / 10.0).collect();
+            let ba = BBox::from_rows(&xa, d, 0, na);
+            let bb = BBox::from_rows(&xb, d, 0, nb);
+            let bound = ba.min_scaled_sq_dist(&bb, &inv_ls);
+            for i in 0..na {
+                for j in 0..nb {
+                    let mut r2 = 0.0;
+                    for k in 0..d {
+                        let diff =
+                            (xa[i * d + k] as f64 - xb[j * d + k] as f64) * inv_ls[k];
+                        r2 += diff * diff;
+                    }
+                    if bound > r2 + 1e-9 {
+                        return Err(format!("bound {bound} exceeds pair dist {r2}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bbox_bound_is_monotone_under_subsplits() {
+        // A box over a subset of rows is contained in the full box, so the
+        // sub-box bound can only grow: a tile proved zero at coarse
+        // granularity stays proved at any finer split.
+        check("bbox-subsplit", 64, |g| {
+            let d = 1 + g.rng.below(4);
+            let n = 2 + g.rng.below(20);
+            let x: Vec<f32> =
+                (0..n * d).map(|_| (g.rng.below(2000) as f32 - 1000.0) / 53.0).collect();
+            let other = BBox::from_rows(&x, d, 0, 1);
+            let inv_ls: Vec<f64> = (0..d).map(|_| (1 + g.rng.below(20)) as f64 / 7.0).collect();
+            let full = BBox::from_rows(&x, d, 0, n);
+            let coarse = full.min_scaled_sq_dist(&other, &inv_ls);
+            let split = 1 + g.rng.below(n - 1);
+            for (s, r) in [(0, split), (split, n - split)] {
+                let sub = BBox::from_rows(&x, d, s, r);
+                let fine = sub.min_scaled_sq_dist(&other, &inv_ls);
+                if fine + 1e-12 < coarse {
+                    return Err(format!("sub-box bound {fine} below coarse {coarse}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_bbox_is_infinitely_far() {
+        let b = BBox::from_rows(&[], 3, 0, 0);
+        assert!(b.is_empty());
+        let pts = [1.0f32, 2.0, 3.0];
+        let other = BBox::from_rows(&pts, 3, 0, 1);
+        assert!(!other.is_empty());
+        let d = b.min_scaled_sq_dist(&other, &[1.0, 1.0, 1.0]);
+        assert_eq!(d, f64::INFINITY);
+        assert!(!d.is_nan());
+    }
+
+    #[test]
+    fn tile_bounds_clamp_to_true_rows() {
+        // 5 true rows, width 2 => 3 tiles, last covering a single row; a
+        // query past the end (an all-padding tile) reads as empty.
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let tb = TileBounds::for_rows(&x, 2, 5, 2);
+        assert_eq!(tb.width, 2);
+        assert_eq!(tb.boxes.len(), 3);
+        assert_eq!(tb.tile(2).lo, vec![8.0, 9.0]);
+        assert_eq!(tb.tile(2).hi, vec![8.0, 9.0]);
+        assert!(tb.tile(3).is_empty());
+    }
+
+    #[test]
+    fn plan_bboxes_cover_partitions_and_exclude_padding() {
+        let d = 2;
+        let n = 5;
+        let mut x = vec![0.0f32; 8 * d]; // padded to 8 rows of zeros
+        for i in 0..n {
+            x[i * d] = 10.0 + i as f32;
+            x[i * d + 1] = -(i as f32);
+        }
+        let mut plan = Plan::with_rows(8, 8, 3);
+        plan.attach_bboxes(&x, d, n);
+        assert_eq!(plan.bboxes.len(), plan.p());
+        // Partition [3, 6) clamps to true rows [3, 5): padding row zeros
+        // must not drag the box toward the origin.
+        assert_eq!(plan.bboxes[1].lo, vec![13.0, -4.0]);
+        assert_eq!(plan.bboxes[1].hi, vec![14.0, -3.0]);
+        // Partition [6, 8) is all padding => empty box.
+        assert!(plan.bboxes[2].is_empty());
     }
 
     #[test]

@@ -31,8 +31,12 @@ fn hypers() -> Hypers {
 /// local) — the CI subprocess leg runs this whole suite, counters and
 /// all, over real worker processes.
 fn build_pool(workers: usize) -> Arc<DevicePool> {
+    build_pool_with(workers, KernelKind::Matern32, 1.0)
+}
+
+fn build_pool_with(workers: usize, kernel: KernelKind, radius: f64) -> Arc<DevicePool> {
     let kind = TransportKind::from_env().unwrap_or(TransportKind::Local);
-    let backend = BackendSpec::Native { kernel: KernelKind::Matern32, ard: false, spec: SPEC };
+    let backend = BackendSpec::Native { kernel, ard: false, spec: SPEC, radius };
     let mut opts = SubprocessOptions::from_env();
     opts.worker_bin = Some(env!("CARGO_BIN_EXE_exactgp").into());
     Arc::new(DevicePool::with_transport(kind, workers, &backend, opts).unwrap())
@@ -164,6 +168,112 @@ fn zero_budget_never_touches_the_cache() {
     let snap = op.acct.snapshot();
     assert_eq!(snap.cache_fills, 0);
     assert_eq!(snap.cache_hits, 0);
+}
+
+/// Two tight d = 3 clusters, `sep` apart on the diagonal, pre-sorted so
+/// every tile is pure one blob — the geometry under which a compact
+/// kernel's bbox proof clears all cross-blob tiles.
+fn blobs(n_per: usize, sep: f64) -> Vec<f64> {
+    let mut rng = Rng::new(103, n_per as u64);
+    let mut x = Vec::with_capacity(2 * n_per * SPEC.d);
+    for blob in 0..2 {
+        let center = blob as f64 * sep;
+        for _ in 0..n_per * SPEC.d {
+            x.push(center + 0.3 * rng.normal());
+        }
+    }
+    x
+}
+
+/// A Wendland C2 op at support radius 2 with the skip decision pinned
+/// explicitly (env-independent, so this suite can run under
+/// `EXACTGP_FORCE_DENSE_TILES` sweeps without changing meaning).
+fn build_compact_op(
+    x: &[f64],
+    workers: usize,
+    rows_per_partition: usize,
+    cache_budget: usize,
+    force_dense: bool,
+) -> PartitionedKernelOp {
+    let pool = build_pool_with(workers, KernelKind::WendlandC2, 2.0);
+    let data = Arc::new(PaddedData::new(x, SPEC.d, &SPEC));
+    let plan = Plan::with_rows(data.n_pad, data.n_pad, rows_per_partition);
+    PartitionedKernelOp::square(
+        data,
+        pool,
+        plan,
+        SPEC,
+        hypers(),
+        Arc::new(Accounting::default()),
+    )
+    .with_cache_budget(cache_budget)
+    .with_force_dense(force_dense)
+}
+
+#[test]
+fn skipped_tiles_consume_no_cache_quota_and_are_reproved_each_pass() {
+    // Cache slots are a prefix of the *live* tile traversal: a proved-zero
+    // tile never fills a slot, never hits, and never advances the slot
+    // index. The skip proof itself is re-run on every pass (it is a pure
+    // function of theta and the bboxes, never cached), so warm passes
+    // report the same skip count as cold ones — and stay bitwise equal to
+    // a force-dense op with the same budget.
+    let x = blobs(24, 10.0);
+    let mut rng = Rng::new(104, 0);
+    let v = Mat::from_vec(48, SPEC.t, rng.normal_vec(48 * SPEC.t));
+
+    let dense = build_compact_op(&x, 2, SPEC.r * 2, 64 << 20, true);
+    let want_cold = dense.mvm(&v);
+    let want_warm = dense.mvm(&v);
+    assert_eq!(dense.acct.snapshot().tiles_skipped, 0);
+
+    let op = build_compact_op(&x, 2, SPEC.r * 2, 64 << 20, false);
+    let cold = op.mvm(&v);
+    let s_cold = op.acct.snapshot();
+    assert_eq!(cold.data, want_cold.data, "skip != dense on the cold pass");
+    assert!(s_cold.tiles_skipped > 0, "cross-blob tiles were not skipped");
+    assert!(s_cold.cache_fills > 0, "live tiles never filled the cache");
+    // Only live tiles occupy slots: fills + skips account for every
+    // candidate tile of the cold pass.
+    assert_eq!(s_cold.cache_fills + s_cold.tiles_skipped, s_cold.tiles_total);
+
+    let warm = op.mvm(&v);
+    let d_warm = op.acct.snapshot().delta(&s_cold);
+    assert_eq!(warm.data, want_warm.data, "skip != dense on the warm pass");
+    assert_eq!(d_warm.cache_fills, 0, "warm pass re-materialized live tiles");
+    assert_eq!(d_warm.cache_hits, s_cold.cache_fills, "warm pass must hit every live slot");
+    assert_eq!(d_warm.tiles_skipped, s_cold.tiles_skipped, "skip proof not re-run on warm pass");
+}
+
+#[test]
+fn set_hypers_reproves_skips_and_invalidates_compact_blocks() {
+    // A lengthscale move flips which tiles the proof clears *and* makes
+    // every cached block stale. After set_hypers the op must refill (not
+    // replay) and still match a fresh force-dense op bitwise — in both
+    // directions of the flip.
+    let x = blobs(24, 10.0);
+    let mut rng = Rng::new(105, 0);
+    let v = Mat::from_vec(48, SPEC.t, rng.normal_vec(48 * SPEC.t));
+    let mut wide = hypers();
+    wide.log_lengthscales[0] = 2.5; // scaled blob gap drops below the radius
+
+    let mut op = build_compact_op(&x, 2, SPEC.r * 2, 64 << 20, false);
+    let mut dense = build_compact_op(&x, 2, SPEC.r * 2, 64 << 20, true);
+    assert_eq!(op.mvm(&v).data, dense.mvm(&v).data);
+    let s1 = op.acct.snapshot();
+    assert!(s1.tiles_skipped > 0);
+
+    op.set_hypers(wide.clone());
+    dense.set_hypers(wide);
+    assert_eq!(op.mvm(&v).data, dense.mvm(&v).data, "stale block served after flip to live");
+    let s2 = op.acct.snapshot();
+    assert_eq!(s2.delta(&s1).tiles_skipped, 0, "wide lengthscale must not skip");
+    assert!(s2.delta(&s1).cache_fills > 0, "flipped-live tiles never refilled");
+
+    op.set_hypers(hypers());
+    dense.set_hypers(hypers());
+    assert_eq!(op.mvm(&v).data, dense.mvm(&v).data, "stale block served after flip back");
+    assert!(op.acct.snapshot().delta(&s2).tiles_skipped > 0, "tiles did not flip back");
 }
 
 #[test]

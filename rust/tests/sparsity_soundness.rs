@@ -1,0 +1,277 @@
+//! Sparsity soundness: the bbox tile-skip proof may be loose, but it must
+//! NEVER be unsound. For every tile the proof clears, the production f32
+//! tile path must materialize an exactly-zero block, and a dense per-pair
+//! f64 evaluation of every true (row, col) pair must agree — across
+//! kernels, ARD settings, support radii, and adversarial data layouts
+//! (clusters, interleavings, duplicates, tile-misaligned sizes). The
+//! proof must also be monotone under sub-splitting: any sub-range of a
+//! proved row block is still proved, so no job split can resurrect a
+//! skipped tile. An assertion failure in this file means a skipped tile
+//! could have contributed nonzero mass to an MVM — a correctness bug, not
+//! a tuning issue.
+
+use exactgp::config::{Backend, Config};
+use exactgp::exec::{backend_factory, PaddedData, TileBackend, TileSpec};
+use exactgp::kernels::{Hypers, KernelEval, KernelKind};
+use exactgp::partition::BBox;
+use exactgp::util::rng::Rng;
+
+const SPEC: TileSpec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
+const COMPACT: [KernelKind; 3] =
+    [KernelKind::WendlandC2, KernelKind::WendlandC4, KernelKind::TaperedMatern32];
+
+fn make_backend(kind: KernelKind, ard: bool, radius: f64) -> Box<dyn TileBackend> {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.support_radius = radius;
+    backend_factory(&cfg, kind, ard, SPEC.d, SPEC).unwrap()(0).unwrap()
+}
+
+fn hypers(ard: bool) -> Hypers {
+    Hypers {
+        log_lengthscales: if ard { vec![0.3, -0.2, 0.1] } else { vec![0.15] },
+        log_outputscale: 0.1,
+        log_noise: (0.3f64).ln(),
+    }
+}
+
+/// Kernel-only theta in the layout the native backend consumes (true
+/// d == SPEC.d here, so no padding entries are needed).
+fn theta(h: &Hypers) -> Vec<f32> {
+    h.theta_f32()
+}
+
+/// Adversarial data layouts, flat (n, 3) row-major.
+fn cases() -> Vec<(&'static str, Vec<f64>)> {
+    let mut out = Vec::new();
+
+    // Two tight blobs 10 apart, rows sorted by blob: the canonical
+    // skippable layout (every tile pure one blob).
+    let mut rng = Rng::new(501, 0);
+    let mut sorted = Vec::new();
+    for blob in 0..2 {
+        for _ in 0..24 * SPEC.d {
+            sorted.push(blob as f64 * 10.0 + 0.3 * rng.normal());
+        }
+    }
+    // The same points interleaved row-by-row: every tile straddles both
+    // blobs, so (almost) nothing is provable — the proof must stay sound
+    // while being maximally loose.
+    let mut interleaved = Vec::new();
+    for i in 0..24 {
+        for src in [i, 24 + i] {
+            interleaved.extend_from_slice(&sorted[src * SPEC.d..(src + 1) * SPEC.d]);
+        }
+    }
+    out.push(("sorted-blobs", sorted));
+    out.push(("interleaved-blobs", interleaved));
+
+    // Uniform box, tile-misaligned n.
+    let mut rng = Rng::new(502, 0);
+    out.push(("uniform-45", (0..45 * SPEC.d).map(|_| rng.uniform_in(-4.0, 4.0)).collect()));
+
+    // Four clusters at the corners of a square, sorted, n = 33 (misaligned
+    // with r, c, and the cluster size).
+    let mut rng = Rng::new(503, 0);
+    let mut clusters = Vec::new();
+    for i in 0..33 {
+        let (cx, cy) = ([-6.0, 6.0][(i / 9) % 2], [-6.0, 6.0][(i / 18) % 2]);
+        clusters.push(cx + 0.2 * rng.normal());
+        clusters.push(cy + 0.2 * rng.normal());
+        clusters.push(0.2 * rng.normal());
+    }
+    out.push(("four-clusters-33", clusters));
+
+    // A point duplicated 17 times (zero-width bbox) plus a far cluster.
+    let mut rng = Rng::new(504, 0);
+    let mut dupes = Vec::new();
+    for _ in 0..17 {
+        dupes.extend_from_slice(&[1.25, -0.5, 3.0]);
+    }
+    for _ in 0..16 {
+        for j in 0..SPEC.d {
+            dupes.push(if j == 0 { 20.0 } else { 0.0 } + 0.1 * rng.normal());
+        }
+    }
+    out.push(("duplicates-plus-far", dupes));
+
+    // A long line: wide spread along one axis, degenerate in the others.
+    let mut line = Vec::new();
+    for i in 0..64 {
+        line.extend_from_slice(&[i as f64 * 0.7, 0.0, 0.0]);
+    }
+    out.push(("line-64", line));
+
+    out
+}
+
+/// Padded row block for row tile `i`, zero-filling the overhang exactly
+/// like the worker's scratch path.
+fn row_block(data: &PaddedData, i: usize) -> Vec<f32> {
+    let start = i * SPEC.r;
+    let avail = data.n_pad.saturating_sub(start).min(SPEC.r);
+    let mut xr = vec![0.0f32; SPEC.r * data.d_pad];
+    xr[..avail * data.d_pad].copy_from_slice(data.row_block(start, avail));
+    xr
+}
+
+#[test]
+fn proved_tiles_are_exactly_zero_and_the_bound_is_a_true_lower_bound() {
+    let mut proved_total = 0usize;
+    let mut proved_sorted_blobs = 0usize;
+    let mut tiles_sorted_blobs = 0usize;
+
+    for (name, x) in cases() {
+        let n = x.len() / SPEC.d;
+        let data = PaddedData::new(&x, SPEC.d, &SPEC);
+        let col_bounds = data.tile_bounds(SPEC.c);
+        for kind in COMPACT {
+            for ard in [false, true] {
+                for radius in [0.5, 2.0] {
+                    let h = hypers(ard);
+                    let th = theta(&h);
+                    let mut be = make_backend(kind, ard, radius);
+                    let cut = be.support_cutoff(&th).expect("compact kernel must report a cutoff");
+                    let eval = KernelEval::with_radius(kind, &h, radius);
+
+                    for i in 0..n.div_ceil(SPEC.r) {
+                        let true_rows = (n - i * SPEC.r).min(SPEC.r);
+                        let rb = BBox::from_rows(&data.x, data.d_pad, i * SPEC.r, true_rows);
+                        for j in 0..data.n_pad / SPEC.c {
+                            let cb = col_bounds.tile(j);
+                            let bound = rb.min_scaled_sq_dist(&cb, &cut.inv_ls);
+
+                            // The bound is a true lower bound on every
+                            // pair's scaled squared distance (f64, over
+                            // the same f32 coordinates the tile path
+                            // consumes).
+                            let mut actual_min = f64::INFINITY;
+                            for a in i * SPEC.r..i * SPEC.r + true_rows {
+                                for b in j * SPEC.c..((j + 1) * SPEC.c).min(n) {
+                                    let mut s = 0.0;
+                                    for dim in 0..SPEC.d {
+                                        let g = (data.x[a * SPEC.d + dim] as f64
+                                            - data.x[b * SPEC.d + dim] as f64)
+                                            * cut.inv_ls[dim];
+                                        s += g * g;
+                                    }
+                                    actual_min = actual_min.min(s);
+                                }
+                            }
+                            assert!(
+                                bound <= actual_min * (1.0 + 1e-12) + 1e-300,
+                                "{name} {kind:?} ard={ard} radius={radius} tile ({i},{j}): \
+                                 bound {bound} exceeds the true min {actual_min}"
+                            );
+
+                            if !cut.proves_zero(bound) {
+                                continue;
+                            }
+                            proved_total += 1;
+
+                            // Soundness on the production path: the block
+                            // the worker would have materialized is
+                            // exactly +0.0 everywhere.
+                            let xr = row_block(&data, i);
+                            let xc = data.row_block(j * SPEC.c, SPEC.c);
+                            let mut rho = vec![1.0f32; SPEC.r * SPEC.c];
+                            be.materialize_tile(&xr, xc, &th, &mut rho).unwrap();
+                            for (e, v) in rho.iter().enumerate() {
+                                assert_eq!(
+                                    v.to_bits(),
+                                    0.0f32.to_bits(),
+                                    "{name} {kind:?} ard={ard} radius={radius} tile ({i},{j}) \
+                                     entry {e}: proved-zero tile materialized {v}"
+                                );
+                            }
+
+                            // And on a dense f64 per-pair evaluation of
+                            // every true pair.
+                            for a in i * SPEC.r..i * SPEC.r + true_rows {
+                                for b in j * SPEC.c..((j + 1) * SPEC.c).min(n) {
+                                    let xa: Vec<f64> = (0..SPEC.d)
+                                        .map(|dim| data.x[a * SPEC.d + dim] as f64)
+                                        .collect();
+                                    let xb: Vec<f64> = (0..SPEC.d)
+                                        .map(|dim| data.x[b * SPEC.d + dim] as f64)
+                                        .collect();
+                                    let k = eval.eval(&xa, &xb);
+                                    assert_eq!(
+                                        k, 0.0,
+                                        "{name} {kind:?} ard={ard} radius={radius}: proved tile \
+                                         ({i},{j}) holds pair ({a},{b}) with k={k}"
+                                    );
+                                }
+                            }
+
+                            // Monotone under sub-splitting: every
+                            // sub-range of the proved row block (down to
+                            // single rows) is still proved, so no job
+                            // split can resurrect this tile.
+                            for lo in 0..true_rows {
+                                for hi in lo + 1..=true_rows {
+                                    let sub = BBox::from_rows(
+                                        &data.x,
+                                        data.d_pad,
+                                        i * SPEC.r + lo,
+                                        hi - lo,
+                                    );
+                                    let sb = sub.min_scaled_sq_dist(&cb, &cut.inv_ls);
+                                    assert!(
+                                        sb >= bound,
+                                        "{name} {kind:?} tile ({i},{j}) rows [{lo},{hi}): \
+                                         sub-box bound {sb} < parent bound {bound}"
+                                    );
+                                    assert!(cut.proves_zero(sb));
+                                }
+                            }
+
+                            if name == "sorted-blobs" && !ard && radius == 0.5 {
+                                proved_sorted_blobs += 1;
+                            }
+                        }
+                    }
+                    if name == "sorted-blobs" && !ard && radius == 0.5 && kind == COMPACT[0] {
+                        tiles_sorted_blobs = n.div_ceil(SPEC.r) * (data.n_pad / SPEC.c);
+                    }
+                }
+            }
+        }
+    }
+
+    // Non-vacuity: the suite must actually exercise the skip path, and on
+    // the canonical sorted-blobs layout the proof clears at least the
+    // cross-blob half of the grid (the acceptance floor is 30%).
+    assert!(proved_total > 0, "no tile was ever proved zero — the property test is vacuous");
+    let per_kernel = proved_sorted_blobs / COMPACT.len();
+    assert!(
+        per_kernel * 10 >= tiles_sorted_blobs * 3,
+        "sorted blobs at radius 0.5: only {per_kernel}/{tiles_sorted_blobs} tiles proved (< 30%)"
+    );
+}
+
+#[test]
+fn dense_kernels_never_report_a_cutoff_and_compact_always_do() {
+    for kind in KernelKind::ALL {
+        let be = make_backend(kind, false, 1.5);
+        let cut = be.support_cutoff(&theta(&hypers(false)));
+        assert_eq!(cut.is_some(), kind.is_compact(), "{kind:?}");
+    }
+}
+
+#[test]
+fn all_padding_row_blocks_prove_zero() {
+    // A row block consisting entirely of padding rows has an empty bbox
+    // (lo = +inf), which proves zero against any column tile: padding
+    // outputs are discarded by the coordinator, so skipping them is sound
+    // — and mandatory, or the skip-rate denominator would count tiles
+    // that carry no information.
+    let x: Vec<f64> = vec![0.5; 6 * SPEC.d];
+    let data = PaddedData::new(&x, SPEC.d, &SPEC);
+    let empty = BBox::from_rows(&data.x, data.d_pad, data.n_pad, 0);
+    assert!(empty.is_empty());
+    let be = make_backend(KernelKind::WendlandC2, false, 2.0);
+    let cut = be.support_cutoff(&theta(&hypers(false))).unwrap();
+    let cb = data.tile_bounds(SPEC.c).tile(0);
+    assert!(cut.proves_zero(empty.min_scaled_sq_dist(&cb, &cut.inv_ls)));
+}

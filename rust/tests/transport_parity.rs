@@ -14,7 +14,7 @@ use exactgp::coordinator;
 use exactgp::data::synthetic::Scale;
 use exactgp::exec::transport::subprocess::SubprocessOptions;
 use exactgp::exec::transport::BackendSpec;
-use exactgp::exec::{pool::DevicePool, PaddedData, PartitionedKernelOp, TileSpec};
+use exactgp::exec::{pool::DevicePool, CrossKernelOp, PaddedData, PartitionedKernelOp, TileSpec};
 use exactgp::faults::FaultPlan;
 use exactgp::gp::exact::{ExactGp, Recipe};
 use exactgp::kernels::{Hypers, KernelKind};
@@ -27,7 +27,14 @@ use exactgp::util::rng::Rng;
 const SPEC: TileSpec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
 
 fn backend() -> BackendSpec {
-    BackendSpec::Native { kernel: KernelKind::Matern32, ard: false, spec: SPEC }
+    BackendSpec::Native { kernel: KernelKind::Matern32, ard: false, spec: SPEC, radius: 1.0 }
+}
+
+/// A compact-support backend: same tile geometry, Wendland C2 kernel at
+/// an explicit support radius — the configuration under which the bbox
+/// proof can skip tiles.
+fn compact_backend(radius: f64) -> BackendSpec {
+    BackendSpec::Native { kernel: KernelKind::WendlandC2, ard: false, spec: SPEC, radius }
 }
 
 /// Options pinned to the test build's own `exactgp` binary, so the
@@ -41,6 +48,10 @@ fn opts() -> SubprocessOptions {
 
 fn pool(kind: TransportKind, workers: usize, o: SubprocessOptions) -> Arc<DevicePool> {
     Arc::new(DevicePool::with_transport(kind, workers, &backend(), o).unwrap())
+}
+
+fn cpool(kind: TransportKind, workers: usize, radius: f64) -> Arc<DevicePool> {
+    Arc::new(DevicePool::with_transport(kind, workers, &compact_backend(radius), opts()).unwrap())
 }
 
 fn build_op(pool: Arc<DevicePool>, x: &[f64], rpp: usize, cache_budget: usize) -> PartitionedKernelOp {
@@ -263,5 +274,287 @@ fn zero_workers_is_a_config_error_on_both_transports() {
             .expect("workers=0 must not construct a pool")
             .to_string();
         assert!(err.contains("at least one worker"), "unhelpful error: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparsity parity: proved tile skipping must be *bitwise invisible*.
+// ---------------------------------------------------------------------------
+
+/// Two tight clusters in d = 3 (SPEC.d), `sep` apart along the diagonal,
+/// rows pre-sorted so every r x c tile is pure one blob. With a compact
+/// kernel whose scaled support radius is far below the cluster gap, every
+/// cross-blob tile is provably zero; within-blob tiles stay live.
+/// `n_per = 24` gives n = 48, divisible by both r = 4 and c = 8, so the
+/// square op has no padding rows to think about.
+fn blobs(n_per: usize, sep: f64) -> Vec<f64> {
+    let mut rng = Rng::new(902, n_per as u64);
+    let mut x = Vec::with_capacity(2 * n_per * SPEC.d);
+    for blob in 0..2 {
+        let center = blob as f64 * sep;
+        for _ in 0..n_per * SPEC.d {
+            x.push(center + 0.3 * rng.normal());
+        }
+    }
+    x
+}
+
+/// A square op over the compact backend with the skip/dense decision
+/// pinned explicitly (not via the env hook, so parallel tests can't race
+/// on process-global state).
+fn build_compact_op(
+    pool: Arc<DevicePool>,
+    x: &[f64],
+    rpp: usize,
+    cache_budget: usize,
+    force_dense: bool,
+) -> PartitionedKernelOp {
+    let data = Arc::new(PaddedData::new(x, SPEC.d, &SPEC));
+    let plan = Plan::with_rows(data.n_pad, data.n_pad, rpp);
+    let hypers = Hypers {
+        log_lengthscales: vec![0.15],
+        log_outputscale: 0.1,
+        log_noise: (0.3f64).ln(),
+    };
+    PartitionedKernelOp::square(data, pool, plan, SPEC, hypers, Arc::new(Accounting::default()))
+        .with_cache_budget(cache_budget)
+        .with_force_dense(force_dense)
+}
+
+#[test]
+fn proved_tile_skipping_is_bitwise_invisible_on_both_transports() {
+    // A skipped tile contributes exactly +0.0 to every accumulator a dense
+    // materialization would have touched, so MVMs and gradient traces must
+    // agree with the force-dense op to the last bit — across transports,
+    // worker counts, and partition sub-splits. The *decision* is made at
+    // fixed tile granularity, so the skip counters are invariant too.
+    let x = blobs(24, 10.0);
+    let n = 48;
+    let radius = 2.0;
+    let mut rng = Rng::new(903, 0);
+    let v = Mat::from_vec(n, SPEC.t, rng.normal_vec(n * SPEC.t));
+
+    let dense = build_compact_op(cpool(TransportKind::Local, 1, radius), &x, 16, 0, true);
+    let want = dense.mvm(&v);
+    let (want_kv, want_gs) = dense.apply_grads(&v);
+    let dsnap = dense.acct.snapshot();
+    assert_eq!(dsnap.tiles_skipped, 0, "force-dense must never skip");
+    assert!(dsnap.tiles_total > 0, "no candidate tiles counted");
+
+    for kind in [TransportKind::Local, TransportKind::Subprocess] {
+        for workers in [1usize, 3] {
+            for rpp in [SPEC.r, SPEC.r * 3] {
+                let tag = format!("{kind:?} workers={workers} rpp={rpp}");
+                let op = build_compact_op(cpool(kind, workers, radius), &x, rpp, 0, false);
+                assert_eq!(op.mvm(&v).data, want.data, "MVM diverged ({tag})");
+                let (kv, gs) = op.apply_grads(&v);
+                assert_eq!(kv.data, want_kv.data, "gradient KV diverged ({tag})");
+                assert_eq!(gs.len(), want_gs.len());
+                for (g, rg) in gs.iter().zip(&want_gs) {
+                    assert_eq!(g.data, rg.data, "lengthscale gradient diverged ({tag})");
+                }
+                let snap = op.acct.snapshot();
+                assert!(snap.tiles_skipped > 0, "cross-blob tiles were not skipped ({tag})");
+                assert!(
+                    snap.tiles_skipped < snap.tiles_total,
+                    "within-blob tiles must stay live ({tag})"
+                );
+                // Same candidate count and same skip count regardless of
+                // how jobs were split: the proof is per fixed-size tile.
+                assert_eq!(snap.tiles_total, dsnap.tiles_total, "candidate count drifted ({tag})");
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_kernel_skipping_matches_force_dense_bitwise() {
+    // The rect (test x train) path: queries sit on blob A only, so every
+    // blob-B column strip of K(X*, X) is provably zero. Skip and
+    // force-dense must agree bitwise on both transports, with and without
+    // row chunking (chunk padding rows are discarded at assembly).
+    let x = blobs(24, 10.0);
+    let n = 48;
+    let radius = 2.0;
+    let mut rng = Rng::new(904, 0);
+    let q: Vec<f64> = (0..12 * SPEC.d).map(|_| 0.3 * rng.normal()).collect();
+    // 5 RHS columns > t = 2 so the cache budget path engages.
+    let v = Mat::from_vec(n, 5, rng.normal_vec(n * 5));
+    let hypers = Hypers {
+        log_lengthscales: vec![0.15],
+        log_outputscale: 0.1,
+        log_noise: (0.3f64).ln(),
+    };
+
+    let mk = |kind: TransportKind, force_dense: bool, chunk: usize| {
+        let data = Arc::new(PaddedData::new(&x, SPEC.d, &SPEC));
+        let mut op = CrossKernelOp::new(
+            data,
+            cpool(kind, 2, radius),
+            SPEC,
+            hypers.clone(),
+            Arc::new(Accounting::default()),
+        )
+        .with_cache_budget(64 << 20)
+        .with_chunk_rows(chunk)
+        .with_force_dense(force_dense);
+        let kv = op.apply(&q, SPEC.d, &v);
+        let snap = op.acct.snapshot();
+        (kv, snap)
+    };
+
+    let (want, dsnap) = mk(TransportKind::Local, true, 0);
+    assert_eq!(dsnap.tiles_skipped, 0, "force-dense must never skip");
+    for kind in [TransportKind::Local, TransportKind::Subprocess] {
+        for chunk in [0usize, 5] {
+            let (got, snap) = mk(kind, false, chunk);
+            assert_eq!(got.data, want.data, "cross-op diverged ({kind:?} chunk={chunk})");
+            assert!(snap.tiles_skipped > 0, "rect path never skipped ({kind:?} chunk={chunk})");
+        }
+    }
+}
+
+#[test]
+fn set_hypers_flips_tiles_between_skipped_and_live_without_stale_reads() {
+    // A lengthscale update changes which tiles the bbox proof can clear.
+    // Short lengthscale: the blobs sit ~15 scaled units apart, far past
+    // the radius — cross-blob tiles skip. Long lengthscale: every scaled
+    // distance shrinks below the radius — those same tiles come alive, and
+    // the generation bump must refill (not replay) any cached strips.
+    // Then back again. At every phase the skipping op must match the
+    // force-dense op bitwise.
+    let x = blobs(24, 10.0);
+    let n = 48;
+    let radius = 2.0;
+    let mut rng = Rng::new(905, 0);
+    let v = Mat::from_vec(n, SPEC.t, rng.normal_vec(n * SPEC.t));
+    let h0 = Hypers {
+        log_lengthscales: vec![0.15],
+        log_outputscale: 0.1,
+        log_noise: (0.3f64).ln(),
+    };
+    let wide = Hypers { log_lengthscales: vec![2.5], ..h0.clone() };
+
+    for kind in [TransportKind::Local, TransportKind::Subprocess] {
+        for budget in [0usize, 64 << 20] {
+            let tag = format!("{kind:?} budget={budget}");
+            let mut skip = build_compact_op(cpool(kind, 2, radius), &x, SPEC.r * 2, budget, false);
+            let mut dense = build_compact_op(cpool(kind, 2, radius), &x, SPEC.r * 2, budget, true);
+
+            // Phase 1: short lengthscale — cross-blob tiles skip. Run the
+            // MVM twice so the cached-replay path is exercised too.
+            for pass in 0..2 {
+                assert_eq!(skip.mvm(&v).data, dense.mvm(&v).data, "phase 1 pass {pass} ({tag})");
+            }
+            let s1 = skip.acct.snapshot();
+            assert!(s1.tiles_skipped > 0, "nothing skipped in phase 1 ({tag})");
+            assert_eq!(s1.tiles_total, dense.acct.snapshot().tiles_total, "({tag})");
+            if budget > 0 {
+                assert!(s1.cache_fills > 0 && s1.cache_hits > 0, "cache never engaged ({tag})");
+            }
+
+            // Phase 2: long lengthscale — previously-skipped tiles are now
+            // live; no tile may skip, and no stale strip may be replayed.
+            skip.set_hypers(wide.clone());
+            dense.set_hypers(wide.clone());
+            for pass in 0..2 {
+                assert_eq!(skip.mvm(&v).data, dense.mvm(&v).data, "phase 2 pass {pass} ({tag})");
+            }
+            let s2 = skip.acct.snapshot();
+            assert_eq!(s2.delta(&s1).tiles_skipped, 0, "wide lengthscale still skipped ({tag})");
+            if budget > 0 {
+                assert!(
+                    s2.delta(&s1).cache_fills > 0,
+                    "tiles that flipped live never refilled the cache ({tag})"
+                );
+            }
+
+            // Phase 3: back to the short lengthscale — tiles flip back to
+            // skipped and results still agree with force-dense.
+            skip.set_hypers(h0.clone());
+            dense.set_hypers(h0.clone());
+            assert_eq!(skip.mvm(&v).data, dense.mvm(&v).data, "phase 3 ({tag})");
+            let s3 = skip.acct.snapshot();
+            assert!(s3.delta(&s2).tiles_skipped > 0, "tiles did not flip back ({tag})");
+        }
+    }
+}
+
+#[test]
+fn sparse_end_to_end_train_checkpoint_predict_matches_force_dense() {
+    // Wendland C2 on the 3droad stand-in (d = 3, where phi_{3,1} is a
+    // valid positive-definite kernel), locality-sorted so cross-cluster
+    // tiles are provably zero. The whole pipeline — pretrain, optimizer
+    // steps, precompute, predict — must produce bitwise-identical results
+    // with tile skipping on and off (EXACTGP_FORCE_DENSE_TILES=1), on both
+    // transports, while the skipping leg actually skips tiles. This is
+    // the only test in the binary that uses the env hook; it is safe from
+    // races because every other concurrent test either pins the decision
+    // via with_force_dense or runs Matern32, for which force-dense is a
+    // no-op (no support cutoff exists to skip).
+    let spec = TileSpec { r: 4, c: 8, t: 2, d: 3 };
+    let run = |cfg: &Config, force_dense: bool| {
+        if force_dense {
+            std::env::set_var("EXACTGP_FORCE_DENSE_TILES", "1");
+        }
+        // The env hook is read at op construction, so it must stay set
+        // through train + precompute + predict for the dense leg.
+        let ds = coordinator::load_dataset(cfg, "3droad", 0).unwrap();
+        let bs = BackendSpec::from_config(cfg, cfg.kernel, cfg.ard, spec.d, spec).unwrap();
+        let pool =
+            Arc::new(DevicePool::with_transport(cfg.transport, cfg.workers, &bs, opts()).unwrap());
+        let mut rng = Rng::new(11, 0);
+        let mut gp = ExactGp::new(cfg, cfg.kernel, &ds, pool, spec);
+        gp.train(Recipe::paper_default(cfg), &mut rng).unwrap();
+        gp.precompute(&mut rng).unwrap();
+        let preds = gp.predict(&ds.test_x).unwrap();
+        if force_dense {
+            std::env::remove_var("EXACTGP_FORCE_DENSE_TILES");
+        }
+        (gp, ds, preds)
+    };
+
+    for kind in [TransportKind::Local, TransportKind::Subprocess] {
+        let mut cfg = base_cfg(2, kind);
+        cfg.kernel = KernelKind::WendlandC2;
+        cfg.support_radius = 0.5;
+        cfg.locality_sort = true;
+
+        let (gp_dense, _, want) = run(&cfg, true);
+        let dsnap = gp_dense.accounting().snapshot();
+        assert_eq!(dsnap.tiles_skipped, 0, "force-dense must never skip ({kind:?})");
+        assert!(dsnap.tiles_total > 0, "no candidate tiles counted ({kind:?})");
+
+        let (gp_skip, ds, got) = run(&cfg, false);
+        let ssnap = gp_skip.accounting().snapshot();
+        assert!(ssnap.tiles_skipped > 0, "sparse training never skipped a tile ({kind:?})");
+        assert_eq!(ssnap.tiles_total, dsnap.tiles_total, "candidate tiles diverged ({kind:?})");
+        for (i, (a, b)) in gp_dense.hypers.to_vec().iter().zip(gp_skip.hypers.to_vec()).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "trained hyper {i} diverged ({kind:?})");
+        }
+        assert_eq!(got.mean.len(), want.mean.len());
+        for i in 0..want.mean.len() {
+            assert_eq!(got.mean[i].to_bits(), want.mean[i].to_bits(), "mean[{i}] ({kind:?})");
+            assert_eq!(got.var[i].to_bits(), want.var[i].to_bits(), "var[{i}] ({kind:?})");
+        }
+
+        // Checkpoint round trip on the skipping leg: restore onto a pool
+        // with the *same* tile geometry and predict again — the sparse
+        // model serves the same bits it trained.
+        let dir = std::env::temp_dir()
+            .join(format!("exactgp_it_sparse_{}_{kind:?}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        gp_skip.save(&dir, &ds).unwrap();
+        let bs = BackendSpec::from_config(&cfg, cfg.kernel, cfg.ard, spec.d, spec).unwrap();
+        let pool2 =
+            Arc::new(DevicePool::with_transport(cfg.transport, cfg.workers, &bs, opts()).unwrap());
+        let (gp2, ds2) = ExactGp::load(&dir, &cfg, pool2, spec).unwrap();
+        let again = gp2.predict(&ds2.test_x).unwrap();
+        for i in 0..want.mean.len() {
+            assert_eq!(again.mean[i].to_bits(), want.mean[i].to_bits(), "restored mean[{i}]");
+            assert_eq!(again.var[i].to_bits(), want.var[i].to_bits(), "restored var[{i}]");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
