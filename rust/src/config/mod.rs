@@ -272,6 +272,20 @@ pub struct Config {
     /// shedding it anyway (milliseconds).
     pub server_shed_wait_ms: f64,
 
+    // online learning (the `observe` path; see `coordinator::serve` and
+    // `runtime::checkpoint` append-delta records)
+    /// Observations the serve loop buffers before folding them into the
+    /// model via `ExactGp::fold_observations` (a buffer also folds when
+    /// its oldest observation hits `online_fold_max_delay_ms`).
+    pub online_buffer_points: usize,
+    /// Milliseconds the oldest buffered observation may wait before a
+    /// partially filled buffer is folded anyway.
+    pub online_fold_max_delay_ms: f64,
+    /// Auto-compact a checkpoint's append-delta chain once it reaches
+    /// this many records (0 disables auto-compaction; `exactgp compact`
+    /// always works). A durability-layout knob, never part of the model.
+    pub online_compact_after_deltas: usize,
+
     // experiment control
     /// Dataset scale policy (caps training sizes; `paper` = full size).
     pub scale: Scale,
@@ -334,6 +348,9 @@ impl Default for Config {
             server_max_inflight_per_model: 64,
             server_shed_policy: ShedPolicy::Reject,
             server_shed_wait_ms: 5.0,
+            online_buffer_points: 64,
+            online_fold_max_delay_ms: 50.0,
+            online_compact_after_deltas: 8,
             scale: Scale::DEFAULT,
             trials: 1,
             seed: 0,
@@ -453,6 +470,11 @@ impl Config {
                 self.server_shed_policy = ShedPolicy::parse(&unquote(v))?
             }
             "server.shed_wait_ms" => self.server_shed_wait_ms = v.parse()?,
+            "online.buffer_points" => self.online_buffer_points = v.parse()?,
+            "online.fold_max_delay_ms" => self.online_fold_max_delay_ms = v.parse()?,
+            "online.compact_after_deltas" => {
+                self.online_compact_after_deltas = v.parse()?
+            }
             "run.scale" => {
                 self.scale = Scale::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad scale {v:?}"))?
@@ -521,6 +543,21 @@ mod tests {
         assert_eq!(c.server_max_inflight_per_model, 64);
         assert_eq!(c.server_shed_policy, ShedPolicy::Reject);
         assert_eq!(c.server_shed_wait_ms, 5.0);
+        assert_eq!(c.online_buffer_points, 64);
+        assert_eq!(c.online_fold_max_delay_ms, 50.0);
+        assert_eq!(c.online_compact_after_deltas, 8);
+    }
+
+    #[test]
+    fn online_section_overrides() {
+        let mut c = Config::default();
+        c.set("online.buffer_points", "16").unwrap();
+        c.set("online.fold_max_delay_ms", "12.5").unwrap();
+        c.set("online.compact_after_deltas", "0").unwrap();
+        assert_eq!(c.online_buffer_points, 16);
+        assert_eq!(c.online_fold_max_delay_ms, 12.5);
+        assert_eq!(c.online_compact_after_deltas, 0);
+        assert!(c.set("online.buffer_points", "lots").is_err());
     }
 
     #[test]
@@ -618,6 +655,12 @@ mod tests {
         // knobs: a run crash-tested at every step trains the same model.
         b.faults = "train.crash:2".into();
         b.ckpt_every = 1;
+        // Online-learning knobs shape buffering and durability layout,
+        // never the model: the appended-vs-scratch parity guarantee
+        // depends on them staying out of the fingerprint.
+        b.online_buffer_points = 1;
+        b.online_fold_max_delay_ms = 0.0;
+        b.online_compact_after_deltas = 1;
         assert_eq!(a.model_fingerprint(), b.model_fingerprint());
         // Model-shaping fields must.
         b.probes = 16;

@@ -123,6 +123,19 @@ results_dir = "results/x # not a comment"
     }
 
     #[test]
+    fn online_section_round_trips() {
+        let text = "[online]\nbuffer_points = 32\nfold_max_delay_ms = 7.5\n\
+                    compact_after_deltas = 3\n";
+        let mut cfg = crate::config::Config::default();
+        for (k, v) in parse(text).unwrap() {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.online_buffer_points, 32);
+        assert_eq!(cfg.online_fold_max_delay_ms, 7.5);
+        assert_eq!(cfg.online_compact_after_deltas, 3);
+    }
+
+    #[test]
     fn sparse_kernel_knobs_round_trip() {
         // Both quoted (real TOML) and bare (override style) kernel names.
         let text = "[model]\nkernel = \"wendland_c2\"\nsupport_radius = 2.5\n\

@@ -32,6 +32,22 @@
 //! waiters and the loop keeps serving — a single poisoned batch must not
 //! kill serving for every client. The loop gives up only after
 //! [`ServeOptions::max_consecutive_failures`] failures in a row.
+//!
+//! ## Online learning
+//!
+//! [`run_online`] is the append-capable variant: it owns the model
+//! mutably and additionally accepts *observations* — (x, y) pairs
+//! submitted through [`ServeHandle::observe`] — which it holds in a
+//! bounded buffer and folds into the model via
+//! `ExactGp::fold_observations` **between** coalesced predict batches,
+//! when the buffer reaches `online.buffer_points` or its oldest
+//! observation has waited `online.fold_max_delay_ms`. Queries in flight
+//! during a fold simply see the pre-fold model (a fold never lands
+//! mid-batch), and each fold is the deterministic cold rebuild that
+//! keeps appended models bitwise-identical to from-scratch training on
+//! the concatenated data. The read-only loops ([`run`]/[`run_opts`])
+//! reply an explicit error to observations instead of silently dropping
+//! them.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -39,6 +55,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::config::Config;
 use crate::faults::{FaultPlan, Seam};
 use crate::gp::exact::ExactGp;
 use crate::gp::Predictions;
@@ -48,11 +65,18 @@ use crate::metrics::Accounting;
 /// serving-side error description.
 pub type ServeReply = Result<Predictions, String>;
 
-/// One in-flight query: `x` is flat row-major (m, d) in the model's
+/// A reply to one observation: `Ok` once it has been folded into the
+/// model, or a serving-side error description.
+pub type ObserveReply = Result<(), String>;
+
+/// One in-flight request. `x` is flat row-major (m, d) in the model's
 /// feature space; the reply is delivered on `reply`.
-pub struct ServeRequest {
-    x: Vec<f64>,
-    reply: Sender<ServeReply>,
+pub enum ServeRequest {
+    /// A prediction query.
+    Query { x: Vec<f64>, reply: Sender<ServeReply> },
+    /// New training observations (online serve loops only): `m` points
+    /// with their targets, acknowledged once folded into the model.
+    Observe { x: Vec<f64>, y: Vec<f64>, reply: Sender<ObserveReply> },
 }
 
 /// Client-side handle to the serve loop. Clone freely across threads;
@@ -76,7 +100,7 @@ impl ServeHandle {
         );
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(ServeRequest { x, reply: tx })
+            .send(ServeRequest::Query { x, reply: tx })
             .map_err(|_| anyhow::anyhow!("serve loop has shut down"))?;
         Ok(rx)
     }
@@ -88,6 +112,36 @@ impl ServeHandle {
             Ok(Ok(p)) => Ok(p),
             Ok(Err(e)) => bail!("serve dispatch failed: {e}"),
             Err(_) => bail!("serve loop dropped the request"),
+        }
+    }
+
+    /// Submit observations — `m` training points (flat row-major (m, d))
+    /// with their `m` targets — to an online serve loop; returns the
+    /// receiver the fold acknowledgement will arrive on. A read-only
+    /// serve loop replies an explicit error.
+    pub fn observe(&self, x: Vec<f64>, y: Vec<f64>) -> Result<mpsc::Receiver<ObserveReply>> {
+        anyhow::ensure!(
+            !y.is_empty() && x.len() == y.len() * self.d,
+            "observation holds {} inputs for {} targets (d={})",
+            x.len(),
+            y.len(),
+            self.d
+        );
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(ServeRequest::Observe { x, y, reply: tx })
+            .map_err(|_| anyhow::anyhow!("serve loop has shut down"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit observations and wait until they are
+    /// folded into the model.
+    pub fn observe_blocking(&self, x: Vec<f64>, y: Vec<f64>) -> Result<()> {
+        let rx = self.observe(x, y)?;
+        match rx.recv() {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => bail!("observation rejected: {e}"),
+            Err(_) => bail!("serve loop dropped the observation"),
         }
     }
 }
@@ -109,6 +163,10 @@ pub struct ServeStats {
     /// loop kept serving (a single poisoned batch must never kill serving
     /// for every other client).
     pub dispatch_failures: u64,
+    /// Observation points accepted ([`run_online`] only).
+    pub observations: u64,
+    /// Buffer folds performed ([`run_online`] only).
+    pub folds: u64,
 }
 
 /// Default for [`ServeOptions::max_consecutive_failures`]: enough retries
@@ -184,6 +242,23 @@ pub fn run_opts(
     run_with_dispatch(gp.dim(), gp.accounting().clone(), rx, opts, |xs| gp.predict(xs))
 }
 
+/// Accept a request into a read-only loop: queries pass through,
+/// observations get an immediate, explicit rejection — a read-only loop
+/// must never silently drop training data.
+fn expect_query(req: ServeRequest) -> Option<(Vec<f64>, Sender<ServeReply>)> {
+    match req {
+        ServeRequest::Query { x, reply } => Some((x, reply)),
+        ServeRequest::Observe { reply, .. } => {
+            let _ = reply.send(Err(
+                "this serve loop is read-only: observations need an online \
+                 serve loop (serve --online)"
+                    .into(),
+            ));
+            None
+        }
+    }
+}
+
 /// The loop itself, generalized over the dispatch function (`gp.predict`
 /// in production; tests inject failing dispatchers to exercise the
 /// poisoned-batch path). `d` is the feature dimensionality the handle was
@@ -204,21 +279,27 @@ where
     let mut consecutive_failures = 0usize;
     let mut stats = ServeStats::default();
 
-    loop {
+    'outer: loop {
         // Block for the first query of the next batch; a closed, drained
         // queue is the shutdown signal.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
+        let (first_x, first_reply) = loop {
+            match rx.recv() {
+                Ok(r) => {
+                    if let Some(q) = expect_query(r) {
+                        break q;
+                    }
+                }
+                Err(_) => break 'outer,
+            }
         };
         let deadline = Instant::now() + max_delay;
         let mut xs: Vec<f64> = Vec::with_capacity(batch_points * d);
         let mut pending: Vec<(usize, Sender<ServeReply>)> = Vec::new();
         let mut disconnected = false;
         {
-            let m = first.x.len() / d;
-            xs.extend_from_slice(&first.x);
-            pending.push((m, first.reply));
+            let m = first_x.len() / d;
+            xs.extend_from_slice(&first_x);
+            pending.push((m, first_reply));
         }
         // Coalesce until batch-full or the deadline; a multi-point query
         // may overshoot `batch_points` — it is never split across
@@ -230,9 +311,11 @@ where
             }
             match rx.recv_timeout(remaining) {
                 Ok(r) => {
-                    let m = r.x.len() / d;
-                    xs.extend_from_slice(&r.x);
-                    pending.push((m, r.reply));
+                    if let Some((x, reply)) = expect_query(r) {
+                        let m = x.len() / d;
+                        xs.extend_from_slice(&x);
+                        pending.push((m, reply));
+                    }
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
@@ -307,6 +390,213 @@ where
     Ok(stats)
 }
 
+/// Buffering policy for an online serve loop (the two `online.*` config
+/// knobs that govern when buffered observations are folded).
+#[derive(Clone, Debug)]
+pub struct OnlineOptions {
+    /// Fold once this many observation points are buffered.
+    pub buffer_points: usize,
+    /// Fold once the oldest buffered observation has waited this long.
+    pub fold_max_delay: Duration,
+}
+
+impl OnlineOptions {
+    /// The `online.buffer_points` / `online.fold_max_delay_ms` knobs.
+    pub fn from_config(cfg: &Config) -> OnlineOptions {
+        OnlineOptions {
+            buffer_points: cfg.online_buffer_points,
+            fold_max_delay: Duration::from_secs_f64(cfg.online_fold_max_delay_ms / 1000.0),
+        }
+    }
+}
+
+/// The append-capable serve loop: coalesced predict batches exactly like
+/// [`run_opts`], plus a bounded observation buffer folded into the model
+/// (via `ExactGp::fold_observations`) between dispatches — when the
+/// buffer reaches `buffer_points`, when its oldest observation has
+/// waited `fold_max_delay`, or at shutdown drain. Owns the model mutably
+/// for the duration; a fold never lands mid-batch, so every query in a
+/// dispatch sees one consistent model.
+///
+/// A failed *dispatch* follows the read-only loop's policy (the batch's
+/// waiters get the error, the loop keeps serving until the consecutive-
+/// failure cap). A failed *fold* is fatal: the model may hold appended
+/// rows without a rebuilt prediction cache, and serving from it would be
+/// silently wrong.
+pub fn run_online(
+    gp: &mut ExactGp,
+    rx: Receiver<ServeRequest>,
+    opts: &ServeOptions,
+    online: &OnlineOptions,
+) -> Result<ServeStats> {
+    let d = gp.dim();
+    let acct = gp.accounting().clone();
+    let batch_points = opts.batch_points.max(1);
+    let failure_cap = opts.max_consecutive_failures.max(1);
+    let buffer_points = online.buffer_points.max(1);
+    let mut consecutive_failures = 0usize;
+    let mut stats = ServeStats::default();
+
+    // The pending query batch and the observation buffer, each with the
+    // deadline started by its first entry.
+    let mut xs: Vec<f64> = Vec::new();
+    let mut pending: Vec<(usize, Sender<ServeReply>)> = Vec::new();
+    let mut query_deadline: Option<Instant> = None;
+    let mut obs_x: Vec<f64> = Vec::new();
+    let mut obs_y: Vec<f64> = Vec::new();
+    let mut obs_acks: Vec<Sender<ObserveReply>> = Vec::new();
+    let mut obs_deadline: Option<Instant> = None;
+    let mut shutdown = false;
+
+    while !(shutdown && pending.is_empty() && obs_y.is_empty()) {
+        // Wait for the next request, bounded by the nearest deadline.
+        enum Wake {
+            Req(ServeRequest),
+            Deadline,
+            Shutdown,
+        }
+        let wake = if shutdown {
+            // Drain mode: flush whatever is still buffered below.
+            Wake::Deadline
+        } else {
+            match [query_deadline, obs_deadline].into_iter().flatten().min() {
+                None => match rx.recv() {
+                    Ok(r) => Wake::Req(r),
+                    Err(_) => Wake::Shutdown,
+                },
+                Some(deadline) => {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        Wake::Deadline
+                    } else {
+                        match rx.recv_timeout(remaining) {
+                            Ok(r) => Wake::Req(r),
+                            Err(RecvTimeoutError::Timeout) => Wake::Deadline,
+                            Err(RecvTimeoutError::Disconnected) => Wake::Shutdown,
+                        }
+                    }
+                }
+            }
+        };
+        match wake {
+            Wake::Req(ServeRequest::Query { x, reply }) => {
+                if pending.is_empty() {
+                    query_deadline = Some(Instant::now() + opts.max_delay);
+                }
+                let m = x.len() / d;
+                xs.extend_from_slice(&x);
+                pending.push((m, reply));
+            }
+            Wake::Req(ServeRequest::Observe { x, y, reply }) => {
+                if obs_y.is_empty() {
+                    obs_deadline = Some(Instant::now() + online.fold_max_delay);
+                }
+                obs_x.extend_from_slice(&x);
+                obs_y.extend_from_slice(&y);
+                obs_acks.push(reply);
+                stats.observations += y.len() as u64;
+            }
+            Wake::Deadline => {}
+            Wake::Shutdown => shutdown = true,
+        }
+
+        // Dispatch the query batch when full, past its deadline, or at
+        // shutdown drain (same policy as the read-only loop; a multi-
+        // point query may overshoot `batch_points`, never split).
+        let query_due = !pending.is_empty()
+            && (xs.len() / d >= batch_points
+                || shutdown
+                || query_deadline.is_some_and(|dl| Instant::now() >= dl));
+        if query_due {
+            let batch_xs = std::mem::take(&mut xs);
+            let waiters = std::mem::take(&mut pending);
+            query_deadline = None;
+            let points = batch_xs.len() / d;
+            let full = points >= batch_points;
+            stats.batches += 1;
+            stats.requests += waiters.len() as u64;
+            stats.points += points as u64;
+            if full {
+                stats.flush_full += 1;
+            } else {
+                stats.flush_deadline += 1;
+            }
+            acct.note_serve_requests(waiters.len() as u64);
+            acct.note_serve_batch(full);
+            match opts
+                .plan
+                .fire_as_error(Seam::ServeDispatch, "batched predict dispatch")
+                .and_then(|()| gp.predict(&batch_xs))
+            {
+                Ok(preds) => {
+                    consecutive_failures = 0;
+                    let mut off = 0;
+                    for (m, reply) in waiters {
+                        let slice = Predictions {
+                            mean: preds.mean[off..off + m].to_vec(),
+                            var: preds.var[off..off + m].to_vec(),
+                            noise: preds.noise,
+                        };
+                        let _ = reply.send(Ok(slice));
+                        off += m;
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (_, reply) in waiters {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    stats.dispatch_failures += 1;
+                    acct.note_serve_dispatch_failure();
+                    consecutive_failures += 1;
+                    if consecutive_failures >= failure_cap {
+                        for ack in obs_acks.drain(..) {
+                            let _ = ack.send(Err(msg.clone()));
+                        }
+                        bail!(
+                            "serve loop giving up after {consecutive_failures} \
+                             consecutive dispatch failures, last: {msg}"
+                        );
+                    }
+                }
+            }
+        }
+
+        // Fold the observation buffer between dispatches: when it is
+        // full, past its deadline, or at shutdown drain.
+        let obs_due = !obs_y.is_empty()
+            && (obs_y.len() >= buffer_points
+                || shutdown
+                || obs_deadline.is_some_and(|dl| Instant::now() >= dl));
+        if obs_due {
+            let fold_x = std::mem::take(&mut obs_x);
+            let fold_y = std::mem::take(&mut obs_y);
+            let acks = std::mem::take(&mut obs_acks);
+            obs_deadline = None;
+            stats.folds += 1;
+            match gp.fold_observations(&fold_x, &fold_y) {
+                Ok(()) => {
+                    for ack in acks {
+                        let _ = ack.send(Ok(()));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for ack in acks {
+                        let _ = ack.send(Err(msg.clone()));
+                    }
+                    bail!(
+                        "online serve loop: folding {} observations failed \
+                         (model state is no longer serveable): {msg}",
+                        fold_y.len()
+                    );
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,5 +615,36 @@ mod tests {
         drop(rx);
         let err = handle.submit(vec![0.0, 0.0]).unwrap_err();
         assert!(format!("{err}").contains("shut down"));
+    }
+
+    #[test]
+    fn handle_rejects_malformed_observations() {
+        let (handle, _rx) = channel(2);
+        assert!(handle.observe(vec![1.0, 2.0], vec![]).is_err());
+        assert!(handle.observe(vec![1.0, 2.0, 3.0], vec![0.5]).is_err());
+        assert!(handle.observe(vec![1.0, 2.0], vec![0.5]).is_ok());
+    }
+
+    #[test]
+    fn read_only_loop_rejects_observations_explicitly() {
+        let (handle, rx) = channel(1);
+        let acct = Arc::new(Accounting::default());
+        let opts = ServeOptions::new(4, Duration::from_millis(1));
+        let t = std::thread::spawn(move || {
+            run_with_dispatch(1, acct, rx, &opts, |xs| {
+                Ok(Predictions {
+                    mean: vec![0.0; xs.len()],
+                    var: vec![1.0; xs.len()],
+                    noise: 0.25,
+                })
+            })
+        });
+        let err = handle.observe_blocking(vec![1.0], vec![2.0]).unwrap_err();
+        assert!(format!("{err}").contains("read-only"), "{err}");
+        // Queries interleaved with rejected observations still serve.
+        let p = handle.query(vec![0.5]).unwrap();
+        assert_eq!(p.mean.len(), 1);
+        drop(handle);
+        t.join().unwrap().unwrap();
     }
 }

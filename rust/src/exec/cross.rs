@@ -15,9 +15,10 @@
 //! `set_hypers`). Within a chunk, a multi-column RHS (the `[a | W]`
 //! prediction block is 1 + r columns, walked t at a time) replays each
 //! materialized test-train block gemm-only; across chunks the generation
-//! bump guarantees a worker can never serve a block built from a previous
-//! chunk's test rows, because blocks are keyed by (op_id, generation,
-//! row_start) and row offsets repeat between chunks.
+//! bump (mapped onto the worker cache's *hyper* generation) guarantees a
+//! worker can never serve a block built from a previous chunk's test
+//! rows, because blocks are keyed by (op_id, hyper_gen, data_gen) plus
+//! tile coordinates and row offsets repeat between chunks.
 
 use std::sync::Arc;
 
@@ -156,8 +157,12 @@ impl CrossKernelOp {
             .with_force_dense(self.force_dense);
             // Stable identity across the operator's lifetime; fresh
             // generation per chunk (row offsets repeat between chunks).
+            // The chunk counter maps onto the rect op's *hyper* generation
+            // — a mismatch clears the whole cache, which is exactly the
+            // cross-chunk invalidation we need. Its data generation stays
+            // 0: cross ops are rebuilt per predict call, never appended.
             op.op_id = self.op_id;
-            op.generation = self.generation;
+            op.hyper_gen = self.generation;
             let passes = passes.get_or_insert_with(|| op.rhs_passes(v));
             let kv = op.apply_passes(v.cols, passes);
             for i in 0..rows {

@@ -185,6 +185,11 @@ pub struct PaddedData {
     pub x: Vec<f32>,
     /// Process-unique identity (see [`PaddedData::data_id`]).
     id: u64,
+    /// Append lineage: `(base_id, base_n)` when this operand was built by
+    /// `append_from` — the first `base_n` rows are bitwise-identical to the
+    /// base operand's, so transports can ship only the delta rows to
+    /// workers that already hold the base.
+    lineage: Option<(u64, usize)>,
     /// Memoized column-tile bounding boxes (one entry per tile width
     /// requested so far — in practice exactly one, `spec.c`). Computed
     /// over *true* rows only: padding rows are zeros and would corrupt
@@ -222,8 +227,44 @@ impl PaddedData {
             d_pad: spec.d,
             x: out,
             id: DATA_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            lineage: None,
             bounds: Mutex::new(None),
         }
+    }
+
+    /// Column-layout operand for the grown training set `x` (ALL rows,
+    /// base + appended), recording append lineage against `base`.
+    ///
+    /// The f32 conversion is per-element, so the first `base.n` rows of
+    /// the result are bitwise-identical to the base operand's — that is
+    /// what lets transports upload only the delta rows, and what keeps an
+    /// appended operand indistinguishable from one built from scratch on
+    /// the concatenated data (the bitwise append-parity guarantee).
+    /// The column-tile bounds memo is seeded incrementally from the base
+    /// instead of recomputed over all rows.
+    pub fn append_from(base: &PaddedData, x: &[f64], d: usize, spec: &TileSpec) -> PaddedData {
+        assert_eq!(d, base.d, "appended rows must share the base dimensionality");
+        assert_eq!(spec.d, base.d_pad, "appended rows must share the base tile layout");
+        let mut out = PaddedData::new(x, d, spec);
+        assert!(out.n > base.n, "append_from needs at least one new row");
+        debug_assert_eq!(
+            out.x[..base.n * base.d_pad],
+            base.x[..base.n * base.d_pad],
+            "appended operand must keep the base prefix bitwise intact"
+        );
+        out.lineage = Some((base.id, base.n));
+        if let Some(b) = base.bounds.lock().unwrap().as_ref() {
+            let mut tb = (**b).clone();
+            tb.extend_for_appended_rows(&out.x, out.d_pad, base.n, out.n);
+            *out.bounds.lock().unwrap() = Some(Arc::new(tb));
+        }
+        out
+    }
+
+    /// Append lineage `(base_id, base_n)`, if this operand was grown from
+    /// a previously existing one (see `append_from`).
+    pub fn lineage(&self) -> Option<(u64, usize)> {
+        self.lineage
     }
 
     /// Reassemble an already-padded operand on the far side of a
@@ -244,6 +285,7 @@ impl PaddedData {
             d_pad,
             x,
             id: DATA_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            lineage: None,
             bounds: Mutex::new(None),
         }
     }
@@ -278,8 +320,9 @@ impl PaddedData {
 }
 
 /// Process-unique operator ids: worker caches key their blocks by
-/// (op_id, generation) so blocks from one operator (or one hyperparameter
-/// setting) are never served to another.
+/// (op_id, hyper_gen) so blocks from one operator (or one hyperparameter
+/// setting) are never served to another; the data generation additionally
+/// retires blocks that touched rows grown by an append.
 static OP_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
 /// Allocate a fresh process-unique operator id from the shared namespace
@@ -313,7 +356,12 @@ pub struct PartitionedKernelOp {
     pub op_id: u64,
     /// Hyperparameter generation: bumped by `set_hypers`, so worker-cached
     /// correlation blocks from a previous setting are never reused.
-    pub generation: u64,
+    pub hyper_gen: u64,
+    /// Data generation: bumped by `append_rows`. Distinct from the hyper
+    /// generation so an append alone invalidates only the cached blocks
+    /// that touched padding rows (now real data) — blocks fully inside the
+    /// old true rows stay warm.
+    pub data_gen: u64,
     /// Byte budget for worker-resident correlation blocks (0 = stream
     /// every tile, the pre-cache behavior).
     pub cache_budget_bytes: usize,
@@ -351,7 +399,8 @@ impl PartitionedKernelOp {
             square: true,
             acct,
             op_id: next_op_id(),
-            generation: 0,
+            hyper_gen: 0,
+            data_gen: 0,
             cache_budget_bytes: 0,
             force_dense: force_dense_tiles_from_env(),
         }
@@ -379,7 +428,8 @@ impl PartitionedKernelOp {
             square: false,
             acct,
             op_id: next_op_id(),
-            generation: 0,
+            hyper_gen: 0,
+            data_gen: 0,
             cache_budget_bytes: 0,
             force_dense: force_dense_tiles_from_env(),
         }
@@ -411,7 +461,40 @@ impl PartitionedKernelOp {
         // outside apply_raw), but real optimizer steps move all hypers at
         // once, so conditional keying would buy nothing while making
         // "set_hypers == invalidate" harder to reason about.
-        self.generation += 1;
+        self.hyper_gen += 1;
+    }
+
+    /// Grow the square training operator in place for appended rows:
+    /// `data` must have been built with `PaddedData::append_from` over the
+    /// current column operand. The plan's trailing partition extends (or
+    /// new ones open) without moving existing boundaries, stale bounding
+    /// boxes — those of partitions touching the appended/unclamped rows —
+    /// are refreshed incrementally, and the data generation bumps so
+    /// workers drop only cached blocks that overlapped padding rows.
+    pub fn append_rows(&mut self, data: Arc<PaddedData>) {
+        assert!(self.square, "append_rows only applies to the square training operator");
+        assert_eq!(
+            data.lineage().map(|(id, _)| id),
+            Some(self.col_data.data_id()),
+            "appended operand must descend from the operator's current data"
+        );
+        let old_n = self.col_data.n;
+        let plan_dirty = self.plan.append_rows(data.n_pad, data.n_pad);
+        // Bounding boxes go stale one partition earlier than the layout
+        // does: the partition containing the old true row count was
+        // clamped there, and its box must now cover the formerly-padding
+        // rows that became real data.
+        let bbox_dirty = self
+            .plan
+            .partitions
+            .iter()
+            .position(|p| p.end > old_n)
+            .unwrap_or(plan_dirty)
+            .min(plan_dirty);
+        self.plan.refresh_bboxes_from(bbox_dirty, &data.x, data.d_pad, data.n);
+        self.row_data = data.clone();
+        self.col_data = data;
+        self.data_gen += 1;
     }
 
     /// True (unpadded) row count of the operator.
@@ -626,7 +709,8 @@ impl PartitionedKernelOp {
                 theta: theta.clone(),
                 acct: self.acct.clone(),
                 op_id: self.op_id,
-                generation: self.generation,
+                hyper_gen: self.hyper_gen,
+                data_gen: self.data_gen,
                 cache_tiles: quotas[id],
                 allow_skip: !self.force_dense,
             })
@@ -829,13 +913,66 @@ mod tests {
     }
 
     #[test]
-    fn set_hypers_bumps_generation() {
+    fn set_hypers_bumps_hyper_gen_only() {
         let spec = TileSpec { r: 8, c: 8, t: 2, d: 2 };
         let (mut op, _) = toy_op(16, 2, false, 1, spec, 8);
-        assert_eq!(op.generation, 0);
+        assert_eq!((op.hyper_gen, op.data_gen), (0, 0));
         let h = op.hypers.clone();
         op.set_hypers(h);
-        assert_eq!(op.generation, 1);
+        assert_eq!((op.hyper_gen, op.data_gen), (1, 0));
+    }
+
+    #[test]
+    fn appended_operator_matches_scratch_bitwise() {
+        // Growing the operator in place (append_from + append_rows) must
+        // produce exactly the MVM of an operator built from scratch on the
+        // concatenated data — padding rows turning into real rows, plan
+        // extension, and incremental bbox refresh are all bitwise-invisible.
+        let spec = TileSpec { r: 4, c: 8, t: 2, d: 2 };
+        let (n0, grow, d) = (21, 9, 2);
+        let mut rng = Rng::new(59, 0);
+        let x: Vec<f64> = (0..(n0 + grow) * d).map(|_| rng.normal()).collect();
+        let (mut op, _) = toy_op(n0, d, false, 2, spec, 8);
+        // Rebuild the operand over the same coordinates the scratch op sees.
+        let base = Arc::new(PaddedData::new(&x[..n0 * d], d, &spec));
+        let plan = Plan::with_rows(base.n_pad, base.n_pad, 8);
+        op = PartitionedKernelOp::square(
+            base.clone(),
+            op.pool.clone(),
+            plan,
+            spec,
+            op.hypers.clone(),
+            Arc::new(Accounting::default()),
+        );
+        let grown = Arc::new(PaddedData::append_from(&base, &x, d, &spec));
+        assert_eq!(grown.lineage(), Some((base.data_id(), n0)));
+        op.append_rows(grown);
+        assert_eq!((op.hyper_gen, op.data_gen), (0, 1));
+        assert_eq!(op.n_rows(), n0 + grow);
+
+        let (scratch, _) = {
+            let data = Arc::new(PaddedData::new(&x, d, &spec));
+            let plan = Plan::with_rows(data.n_pad, data.n_pad, 8);
+            let sop = PartitionedKernelOp::square(
+                data,
+                op.pool.clone(),
+                plan,
+                spec,
+                op.hypers.clone(),
+                Arc::new(Accounting::default()),
+            );
+            (sop, ())
+        };
+        assert_eq!(op.plan.partitions, scratch.plan.partitions);
+        assert_eq!(op.plan.bboxes.len(), scratch.plan.bboxes.len());
+        for (a, b) in op.plan.bboxes.iter().zip(&scratch.plan.bboxes) {
+            assert_eq!(a, b, "incremental bbox refresh diverged from scratch");
+        }
+        let n1 = n0 + grow;
+        let v = Mat::from_vec(n1, 3, rng.normal_vec(n1 * 3));
+        let a = op.mvm(&v);
+        let b = scratch.mvm(&v);
+        assert_eq!(a.data, b.data, "appended operator MVM is not bitwise scratch");
     }
 
     #[test]

@@ -20,14 +20,19 @@
 //! `transport::worker::run_partition`, so results are bitwise-identical
 //! across transports.
 //!
-//! Cache protocol: a job carries (op_id, generation, cache_tiles). The
-//! worker keeps blocks for exactly one (op_id, generation) at a time;
-//! a cached job with a different identity clears the stale blocks first
-//! (set_hypers bumps the generation, so stale-lengthscale blocks can
-//! never be served). Blocks are the leading `cache_tiles` tiles of the
-//! job's fixed traversal order, so fills and hits are deterministic and
-//! the byte budget is enforced by construction. Streaming jobs
-//! (cache_tiles = 0) leave the cache untouched.
+//! Cache protocol: a job carries (op_id, hyper_gen, data_gen,
+//! cache_tiles). The worker keeps blocks for exactly one (op_id,
+//! hyper_gen) at a time; a cached job with a different identity clears
+//! the stale blocks first (set_hypers bumps the hyper generation, so
+//! stale-lengthscale blocks can never be served). A data-generation
+//! change (an append) is gentler: blocks whose tile was entirely true
+//! data when filled are still exact on the grown operator and survive;
+//! only blocks that overlapped padding rows — now real points — are
+//! dropped. Blocks are keyed by (row, col) tile coordinates and admitted
+//! in the job's fixed traversal order up to `cache_tiles`, so fills and
+//! hits are deterministic and the byte budget is enforced by
+//! construction. Streaming jobs (cache_tiles = 0) leave the cache
+//! untouched.
 
 use std::sync::Arc;
 
@@ -78,8 +83,11 @@ pub struct Job {
     pub acct: Arc<Accounting>,
     /// Cache identity: which operator issued this job...
     pub op_id: u64,
-    /// ...at which hyperparameter generation.
-    pub generation: u64,
+    /// ...at which hyperparameter generation...
+    pub hyper_gen: u64,
+    /// ...and which data generation (bumped by appends; see the module
+    /// docs for the partial-invalidation rule).
+    pub data_gen: u64,
     /// Leading (row-tile x col-tile) blocks of this job's strip the worker
     /// may hold resident (0 = streaming only).
     pub cache_tiles: usize,

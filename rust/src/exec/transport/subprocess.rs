@@ -4,8 +4,9 @@
 //!
 //! Topology: one coordinator, W children. Each child owns a private
 //! backend and a resident kernel-block cache (exactly like a local worker
-//! thread — the cache and its `(op_id, generation)` invalidation live on
-//! the far side of the pipe). A dedicated reader thread per child drains
+//! thread — the cache and its `(op_id, hyper_gen, data_gen)` invalidation
+//! live on the far side of the pipe). A dedicated reader thread per child
+//! drains
 //! its stdout into one event channel, so result collection never blocks
 //! job submission and a full pipe cannot deadlock the batch.
 //!
@@ -227,22 +228,45 @@ fn send(slot: &mut Slot, payload: &[u8], acct: &Accounting) -> Result<()> {
 }
 
 /// Upload an operand if this worker incarnation has not seen it yet.
+/// Appended operands whose base the worker already holds ship as an
+/// `UploadDelta` — only the rows past the base — so append IPC cost
+/// scales with the delta, not n. A respawned worker (empty `uploaded`
+/// set) falls back to the full upload.
 fn ensure_uploaded(slot: &mut Slot, data: &PaddedData, acct: &Accounting) -> Result<()> {
-    if slot.uploaded.insert(data.data_id()) {
-        send(
-            slot,
-            &wire::encode_upload(
-                data.data_id(),
-                data.n as u64,
-                data.n_pad as u64,
-                data.d as u64,
-                data.d_pad as u64,
-                &data.x,
-            ),
-            acct,
-        )?;
+    if !slot.uploaded.insert(data.data_id()) {
+        return Ok(());
     }
-    Ok(())
+    if let Some((base_id, base_n)) = data.lineage() {
+        if slot.uploaded.contains(&base_id) {
+            acct.add_append_delta_bytes(((data.n_pad - base_n) * data.d_pad * 4) as u64);
+            return send(
+                slot,
+                &wire::encode_upload_delta(
+                    data.data_id(),
+                    base_id,
+                    base_n as u64,
+                    data.n as u64,
+                    data.n_pad as u64,
+                    data.d as u64,
+                    data.d_pad as u64,
+                    &data.x[base_n * data.d_pad..],
+                ),
+                acct,
+            );
+        }
+    }
+    send(
+        slot,
+        &wire::encode_upload(
+            data.data_id(),
+            data.n as u64,
+            data.n_pad as u64,
+            data.d as u64,
+            data.d_pad as u64,
+            &data.x,
+        ),
+        acct,
+    )
 }
 
 /// (Re)send every job a worker owns, uploading operands first.

@@ -13,6 +13,13 @@
 //! * `Upload` — one `PaddedData` operand, keyed by its process-unique
 //!   data id. Sent lazily before the first job referencing it (and again
 //!   after a respawn — a fresh worker holds no data).
+//! * `UploadDelta` — an appended operand shipped as only its new rows:
+//!   the worker reconstructs the full operand from the resident base
+//!   (first `base_n` true rows, bitwise identical by the append-lineage
+//!   contract) plus the delta rows. Sent instead of `Upload` when the
+//!   worker already holds the base — `ipc_bytes_tx` then counts only the
+//!   delta, which is how an append's upload cost scales with the delta
+//!   instead of n.
 //! * `Run` — one row-partition job. References operands by data id; the
 //!   RHS and theta travel inline (the paper's per-MVM communication).
 //! * `Shutdown` — drain and exit.
@@ -148,6 +155,7 @@ const REQ_INIT: u8 = 1;
 const REQ_UPLOAD: u8 = 2;
 const REQ_RUN: u8 = 3;
 const REQ_SHUTDOWN: u8 = 4;
+const REQ_UPLOAD_DELTA: u8 = 5;
 
 const RESP_READY: u8 = 1;
 const RESP_INIT_ERR: u8 = 2;
@@ -188,6 +196,26 @@ pub(crate) enum Request {
         /// The (n_pad, d_pad) f32 features, flat row-major.
         x: Vec<f32>,
     },
+    /// Register an appended operand under `id` from a resident base plus
+    /// only the new rows (see the module docs).
+    UploadDelta {
+        /// Coordinator-side `PaddedData::data_id` of the grown operand.
+        id: u64,
+        /// Data id of the resident base operand.
+        base_id: u64,
+        /// True row count of the base; rows `[0, base_n)` are reused.
+        base_n: u64,
+        /// True row count of the grown operand.
+        n: u64,
+        /// Padded row count of the grown operand.
+        n_pad: u64,
+        /// True feature dimensionality.
+        d: u64,
+        /// Padded feature dimensionality.
+        d_pad: u64,
+        /// Rows `[base_n, n_pad)` of the grown operand, flat row-major.
+        delta: Vec<f32>,
+    },
     /// Execute one row-partition job.
     Run(WireJob),
     /// Drain and exit.
@@ -212,8 +240,10 @@ pub(crate) struct WireJob {
     pub col_limit: u64,
     /// Cache identity: issuing operator...
     pub op_id: u64,
-    /// ...at this hyperparameter generation.
-    pub generation: u64,
+    /// ...at this hyperparameter generation...
+    pub hyper_gen: u64,
+    /// ...and this data generation.
+    pub data_gen: u64,
     /// Leading blocks of the strip the worker may hold resident.
     pub cache_tiles: u64,
     /// Whether the worker may skip bbox-proved-zero tiles.
@@ -380,6 +410,32 @@ pub(crate) fn encode_upload(id: u64, n: u64, n_pad: u64, d: u64, d_pad: u64, x: 
     buf
 }
 
+/// Encode `UploadDelta` for an appended operand: only rows
+/// `[base_n, n_pad)` travel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn encode_upload_delta(
+    id: u64,
+    base_id: u64,
+    base_n: u64,
+    n: u64,
+    n_pad: u64,
+    d: u64,
+    d_pad: u64,
+    delta: &[f32],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(1 + 7 * 8 + 8 + delta.len() * 4);
+    put_u8(&mut buf, REQ_UPLOAD_DELTA);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, base_id);
+    put_u64(&mut buf, base_n);
+    put_u64(&mut buf, n);
+    put_u64(&mut buf, n_pad);
+    put_u64(&mut buf, d);
+    put_u64(&mut buf, d_pad);
+    put_f32s(&mut buf, delta);
+    buf
+}
+
 /// Encode `Run` straight from a coordinator-side [`Job`] (operands by
 /// data id; RHS and theta inline).
 pub(crate) fn encode_run(job: &Job) -> Vec<u8> {
@@ -399,7 +455,8 @@ pub(crate) fn encode_run(job: &Job) -> Vec<u8> {
     put_u64(&mut buf, job.col_data.data_id());
     put_u64(&mut buf, job.col_limit as u64);
     put_u64(&mut buf, job.op_id);
-    put_u64(&mut buf, job.generation);
+    put_u64(&mut buf, job.hyper_gen);
+    put_u64(&mut buf, job.data_gen);
     put_u64(&mut buf, job.cache_tiles as u64);
     put_u8(&mut buf, u8::from(job.allow_skip));
     put_f32s(&mut buf, &job.v);
@@ -431,6 +488,16 @@ pub(crate) fn decode_request(payload: &[u8]) -> Result<Request> {
             d_pad: d.u64()?,
             x: d.f32s()?,
         }),
+        REQ_UPLOAD_DELTA => Ok(Request::UploadDelta {
+            id: d.u64()?,
+            base_id: d.u64()?,
+            base_n: d.u64()?,
+            n: d.u64()?,
+            n_pad: d.u64()?,
+            d: d.u64()?,
+            d_pad: d.u64()?,
+            delta: d.f32s()?,
+        }),
         REQ_RUN => {
             let id = d.u64()?;
             let grads_nl = match d.u8()? {
@@ -447,7 +514,8 @@ pub(crate) fn decode_request(payload: &[u8]) -> Result<Request> {
                 col_data: d.u64()?,
                 col_limit: d.u64()?,
                 op_id: d.u64()?,
-                generation: d.u64()?,
+                hyper_gen: d.u64()?,
+                data_gen: d.u64()?,
                 cache_tiles: d.u64()?,
                 allow_skip: d.u8()? != 0,
                 v: d.f32s()?,
@@ -614,7 +682,8 @@ mod tests {
             theta: Arc::new(vec![0.1, 0.2]),
             acct: Arc::new(Accounting::default()),
             op_id: 77,
-            generation: 9,
+            hyper_gen: 9,
+            data_gen: 2,
             cache_tiles: 6,
             allow_skip: true,
         };
@@ -624,7 +693,8 @@ mod tests {
                 assert_eq!(wj.grads_nl, Some(3));
                 assert_eq!((wj.row_start, wj.row_len), (4, 4));
                 assert_eq!((wj.row_data, wj.col_data), (data.data_id(), data.data_id()));
-                assert_eq!((wj.col_limit, wj.op_id, wj.generation, wj.cache_tiles), (5, 77, 9, 6));
+                assert_eq!((wj.col_limit, wj.op_id, wj.cache_tiles), (5, 77, 6));
+                assert_eq!((wj.hyper_gen, wj.data_gen), (9, 2));
                 assert!(wj.allow_skip);
                 assert_eq!(wj.v, *job.v, "RHS must survive bitwise");
                 assert_eq!(wj.theta, *job.theta);
@@ -638,6 +708,41 @@ mod tests {
             _ => panic!("wrong request variant"),
         }
         assert!(matches!(decode_request(&encode_shutdown()).unwrap(), Request::Shutdown));
+    }
+
+    #[test]
+    fn upload_delta_round_trips_only_the_new_rows() {
+        let x: Vec<f64> = (0..18).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let base = Arc::new(PaddedData::new(&x[..9], 3, &SPEC));
+        let grown = PaddedData::append_from(&base, &x, 3, &SPEC);
+        let (base_id, base_n) = grown.lineage().unwrap();
+        let delta = &grown.x[base_n * grown.d_pad..];
+        let buf = encode_upload_delta(
+            grown.data_id(),
+            base_id,
+            base_n as u64,
+            grown.n as u64,
+            grown.n_pad as u64,
+            grown.d as u64,
+            grown.d_pad as u64,
+            delta,
+        );
+        // The frame carries the delta rows, never the full operand.
+        assert!(buf.len() < grown.x.len() * 4);
+        match decode_request(&buf).unwrap() {
+            Request::UploadDelta { id, base_id: b, base_n: bn, n, n_pad, d, d_pad, delta: dl } => {
+                assert_eq!(id, grown.data_id());
+                assert_eq!((b, bn), (base.data_id(), 3));
+                assert_eq!((n, n_pad), (grown.n as u64, grown.n_pad as u64));
+                assert_eq!((d, d_pad), (3, SPEC.d as u64));
+                assert_eq!(dl, delta, "delta rows must survive bitwise");
+                // Reassembly: base prefix ++ delta == the grown operand.
+                let mut full = base.x[..bn as usize * d_pad as usize].to_vec();
+                full.extend_from_slice(&dl);
+                assert_eq!(full, grown.x);
+            }
+            _ => panic!("wrong request variant"),
+        }
     }
 
     #[test]

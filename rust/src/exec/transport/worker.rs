@@ -8,7 +8,7 @@
 //! f32 tile op sequence and the f64 accumulation traversal are the same
 //! code, and the wire moves f32/f64 values losslessly.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufReader, BufWriter};
 use std::sync::Arc;
 
@@ -20,20 +20,37 @@ use crate::exec::{PaddedData, TileBackend};
 use crate::metrics::Accounting;
 use crate::partition::BBox;
 
-/// One cached strip: the leading `filled` blocks (each spec.r * spec.c
-/// f32 correlations) of a job's tile traversal.
-#[derive(Default)]
-pub(crate) struct CachedStrip {
-    pub(crate) filled: usize,
-    pub(crate) data: Vec<f32>,
+/// One cached (spec.r x spec.c) correlation block plus the provenance
+/// needed to decide whether it survives a data append.
+pub(crate) struct CachedBlock {
+    /// True when the tile was entirely true data at fill time (no padding
+    /// rows on either axis). Such a block stays exact when rows are
+    /// appended — the points it covers do not move — while a partial block
+    /// baked in kernel values against padding coordinates that an append
+    /// turns into real points, so it must be refilled.
+    full: bool,
+    /// The materialized f32 correlations, row-major.
+    data: Vec<f32>,
 }
 
-/// Worker-resident cache: strips for one (op_id, generation), keyed by
-/// the job's row_start (job row ranges are disjoint per operator).
+/// One job's cached blocks, keyed by (absolute row-block start, col-tile
+/// start). The ordered map matches the job's traversal order (rows outer,
+/// columns inner), so quota eviction from the back always removes the
+/// blocks a prefix-admission policy would never have filled.
+#[derive(Default)]
+pub(crate) struct CachedStrip {
+    pub(crate) blocks: BTreeMap<(usize, usize), CachedBlock>,
+}
+
+/// Worker-resident cache: strips for one (op_id, hyper_gen), keyed by the
+/// job's row_start (job row ranges are disjoint per operator). A hyper
+/// generation change clears everything; a data generation change (an
+/// append) retains exactly the blocks marked `full`.
 #[derive(Default)]
 pub(crate) struct WorkerCache {
     pub(crate) op_id: u64,
-    pub(crate) generation: u64,
+    pub(crate) hyper_gen: u64,
+    pub(crate) data_gen: u64,
     pub(crate) strips: HashMap<usize, CachedStrip>,
 }
 
@@ -73,19 +90,34 @@ pub(crate) fn run_partition(
 
     // Reconcile the cache identity: blocks materialized for another
     // operator or an older hyper generation are dead — clear them before
-    // any lookup so they can never be served.
+    // any lookup so they can never be served. A data-generation change
+    // (an append) invalidates only partial blocks: tiles that were
+    // entirely true data when filled cover points an append cannot move,
+    // so they stay warm — the whole point of keying data separately.
     let block = spec.r * spec.c;
     let use_cache =
         job.cache_tiles > 0 && matches!(job.kind, JobKind::Mvm) && backend.supports_cache();
-    if use_cache && (cache.op_id != job.op_id || cache.generation != job.generation) {
-        cache.strips.clear();
-        cache.op_id = job.op_id;
-        cache.generation = job.generation;
+    if use_cache {
+        if cache.op_id != job.op_id || cache.hyper_gen != job.hyper_gen {
+            cache.strips.clear();
+            cache.op_id = job.op_id;
+            cache.hyper_gen = job.hyper_gen;
+            cache.data_gen = job.data_gen;
+        } else if cache.data_gen != job.data_gen {
+            for strip in cache.strips.values_mut() {
+                strip.blocks.retain(|_, b| b.full);
+            }
+            cache.data_gen = job.data_gen;
+        }
     }
     let mut strip = if use_cache {
         let mut s = cache.strips.remove(&job.row_start).unwrap_or_default();
-        if s.data.len() < job.cache_tiles * block {
-            s.data.resize(job.cache_tiles * block, 0.0);
+        // Quotas can shrink when an append re-splits the cache budget:
+        // evict from the back of the traversal order, so what remains is
+        // exactly the prefix a cold fill under the new quota would admit.
+        while s.blocks.len() > job.cache_tiles {
+            let k = *s.blocks.keys().next_back().unwrap();
+            s.blocks.remove(&k);
         }
         s
     } else {
@@ -109,7 +141,6 @@ pub(crate) fn run_partition(
     // rows-per-partition < tile height); clamp the row block to the padded
     // data and zero-fill the overhang in a scratch tile.
     let mut xr_scratch = vec![0.0f32; spec.r * job.row_data.d_pad];
-    let mut tile_idx = 0usize;
     let mut row = job.row_start;
     while row < job.row_start + job.row_len {
         // Row-block bounding box over *true* rows only (padding rows sit
@@ -138,9 +169,9 @@ pub(crate) fn run_partition(
                 let cb = col_bounds.as_ref().unwrap().tile(col / spec.c);
                 if cut.proves_zero(rb.min_scaled_sq_dist(&cb, &cut.inv_ls)) {
                     // Proved all-zero: skip materialization, gemm, and the
-                    // cache entirely. tile_idx does NOT advance — cache
-                    // slots stay a prefix of the *live* tile traversal,
-                    // which is deterministic per (theta, generation).
+                    // cache entirely — skipped tiles consume no cache
+                    // quota, so admission stays a prefix of the *live*
+                    // tile traversal, deterministic per (theta, data).
                     job.acct.note_tile_skipped();
                     col += spec.c;
                     continue;
@@ -152,18 +183,24 @@ pub(crate) fn run_partition(
                 .note_tile((spec.r * spec.c * 4 + spec.c * t * 4 + spec.r * t * 4) as u64);
             match job.kind {
                 JobKind::Mvm => {
-                    let kv = if use_cache && tile_idx < job.cache_tiles {
-                        let rho = &mut strip.data[tile_idx * block..(tile_idx + 1) * block];
-                        if tile_idx >= strip.filled {
-                            // Fills happen in traversal order, so `filled`
-                            // is always a prefix count.
-                            backend.materialize_tile(xr, xc, &job.theta, rho)?;
-                            strip.filled = tile_idx + 1;
-                            job.acct.note_cache_fill();
-                        } else {
+                    let kv = if use_cache {
+                        if let Some(blk) = strip.blocks.get(&(row, col)) {
                             job.acct.note_cache_hit();
+                            backend.mvm_cached(&blk.data, vt, &job.theta)?
+                        } else if strip.blocks.len() < job.cache_tiles {
+                            // Admission happens in traversal order, so the
+                            // resident set is deterministic per identity.
+                            let mut rho = vec![0.0f32; block];
+                            backend.materialize_tile(xr, xc, &job.theta, &mut rho)?;
+                            job.acct.note_cache_fill();
+                            let kv = backend.mvm_cached(&rho, vt, &job.theta)?;
+                            let full = row + spec.r <= job.row_data.n
+                                && col + spec.c <= job.col_data.n;
+                            strip.blocks.insert((row, col), CachedBlock { full, data: rho });
+                            kv
+                        } else {
+                            backend.mvm(xr, xc, vt, &job.theta)?
                         }
-                        backend.mvm_cached(rho, vt, &job.theta)?
                     } else {
                         backend.mvm(xr, xc, vt, &job.theta)?
                     };
@@ -199,7 +236,6 @@ pub(crate) fn run_partition(
                 }
             }
             col += spec.c;
-            tile_idx += 1;
         }
         row += spec.r;
     }
@@ -237,7 +273,8 @@ fn job_from_wire(
         theta: Arc::new(wj.theta.clone()),
         acct: acct.clone(),
         op_id: wj.op_id,
-        generation: wj.generation,
+        hyper_gen: wj.hyper_gen,
+        data_gen: wj.data_gen,
         cache_tiles: wj.cache_tiles as usize,
         allow_skip: wj.allow_skip,
     })
@@ -302,6 +339,48 @@ pub fn serve_stdio() -> Result<()> {
                         n_pad as usize,
                         d as usize,
                         d_pad as usize,
+                        x,
+                    )),
+                );
+            }
+            Request::UploadDelta { id, base_id, base_n, n, n_pad, d, d_pad, delta } => {
+                // Reassemble the grown operand from the resident base's
+                // true-row prefix plus the delta rows. The coordinator
+                // only sends a delta against a base it knows this worker
+                // holds, so a missing or mismatched base is a protocol
+                // violation, not a condition to paper over.
+                let Some(base) = data.get(&base_id) else {
+                    bail!(
+                        "worker {worker_id}: UploadDelta for {id} references \
+                         unknown base data id {base_id}"
+                    );
+                };
+                let (bn, dp) = (base_n as usize, d_pad as usize);
+                if base.n != bn || base.d_pad != dp {
+                    bail!(
+                        "worker {worker_id}: UploadDelta base mismatch — resident \
+                         (n={}, d_pad={}) vs frame (base_n={bn}, d_pad={dp})",
+                        base.n,
+                        base.d_pad
+                    );
+                }
+                let mut x = base.x[..bn * dp].to_vec();
+                x.extend_from_slice(&delta);
+                if x.len() != n_pad as usize * dp {
+                    bail!(
+                        "worker {worker_id}: UploadDelta for {id} reassembles to {} \
+                         values, want {}",
+                        x.len(),
+                        n_pad as usize * dp
+                    );
+                }
+                data.insert(
+                    id,
+                    Arc::new(PaddedData::from_wire(
+                        n as usize,
+                        n_pad as usize,
+                        d as usize,
+                        dp,
                         x,
                     )),
                 );

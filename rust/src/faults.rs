@@ -28,6 +28,14 @@
 //!   ([`coordinator::serve`](crate::coordinator::serve)).
 //! * `registry.load` — a registry cold load fails
 //!   ([`server::registry`](crate::server::registry)).
+//! * `append.crash` — an append-delta save crashes after staging but
+//!   before the atomic publish rename, leaving only an `append-*.tmp`
+//!   directory that recovery garbage-collects
+//!   ([`runtime::checkpoint::save_append`](crate::runtime::checkpoint::save_append)).
+//! * `append.delta-torn` — an append-delta save publishes a record whose
+//!   manifest is truncated mid-byte (a torn write that survived the
+//!   rename), then errors; loaders must garbage-collect a torn *last*
+//!   delta and hard-fail on a torn mid-chain one.
 //!
 //! Plans are written as a comma-separated spec, `seam[@worker]:count`,
 //! e.g. `ckpt.partial:2,worker.kill@1:3`, supplied via the `run.faults`
@@ -57,6 +65,10 @@ pub enum Seam {
     ServeDispatch,
     /// Model registry: one cold load fails.
     RegistryLoad,
+    /// Append-delta save: crash after staging, before the publish rename.
+    AppendCrash,
+    /// Append-delta save: publish a record with a torn manifest, then error.
+    AppendDeltaTorn,
 }
 
 impl Seam {
@@ -70,6 +82,8 @@ impl Seam {
             Seam::WorkerHang => "worker.hang",
             Seam::ServeDispatch => "serve.dispatch",
             Seam::RegistryLoad => "registry.load",
+            Seam::AppendCrash => "append.crash",
+            Seam::AppendDeltaTorn => "append.delta-torn",
         }
     }
 
@@ -83,12 +97,14 @@ impl Seam {
             "worker.hang" => Some(Seam::WorkerHang),
             "serve.dispatch" => Some(Seam::ServeDispatch),
             "registry.load" => Some(Seam::RegistryLoad),
+            "append.crash" => Some(Seam::AppendCrash),
+            "append.delta-torn" => Some(Seam::AppendDeltaTorn),
             _ => None,
         }
     }
 
     /// Every seam name, for "valid values are ..." error messages.
-    pub const ALL: [Seam; 7] = [
+    pub const ALL: [Seam; 9] = [
         Seam::CkptPartial,
         Seam::CkptEnospc,
         Seam::TrainCrash,
@@ -96,6 +112,8 @@ impl Seam {
         Seam::WorkerHang,
         Seam::ServeDispatch,
         Seam::RegistryLoad,
+        Seam::AppendCrash,
+        Seam::AppendDeltaTorn,
     ];
 
     /// Whether this seam is consumed at worker spawn time (carries an
@@ -294,6 +312,10 @@ mod tests {
         // Worker seams default to worker 0 (the legacy hook's target).
         let p = FaultPlan::parse("worker.hang:5").unwrap();
         assert_eq!(p.worker_arming(0), (0, 5));
+        // Every seam's name round-trips through parse.
+        for s in Seam::ALL {
+            assert_eq!(Seam::parse(s.name()), Some(s), "{}", s.name());
+        }
     }
 
     #[test]

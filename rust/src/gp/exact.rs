@@ -34,7 +34,7 @@ use crate::opt::Adam;
 use crate::runtime::checkpoint::{self, TrainState};
 use crate::partition::Plan;
 use crate::solvers::lanczos::{lanczos, VarianceCache};
-use crate::solvers::mbcg::{logdet_from_tridiags, mbcg};
+use crate::solvers::mbcg::{logdet_from_tridiags, mbcg, mbcg_warm};
 use crate::solvers::pivchol::{pivoted_cholesky, NativeKernelRows};
 use crate::solvers::precond::PivCholPrecond;
 use crate::solvers::Preconditioner;
@@ -130,6 +130,15 @@ pub struct ExactGp {
     /// built once at precompute time so `predict` never re-copies the
     /// variance cache column by column — and the only resident copy.
     pred_rhs: Option<Mat>,
+    /// The pre-append prediction cache, stashed by `add_data` so
+    /// `precompute_warm` can seed the mean solve from the old `a` column
+    /// (padded with zeros over the new rows). Consumed opportunistically;
+    /// never used by the cold `precompute` path.
+    prev_pred_rhs: Option<Mat>,
+    /// mBCG iterations of the most recent precompute mean solve — the
+    /// observable the warm-start convergence tests (and the append bench)
+    /// compare against a cold solve.
+    pub last_mean_solve_iters: Option<usize>,
     /// Per-step training diagnostics.
     pub step_log: Vec<StepLog>,
     /// Wall-clock seconds spent in subset pretraining.
@@ -176,6 +185,8 @@ impl ExactGp {
             precond: None,
             precond_hypers: None,
             pred_rhs: None,
+            prev_pred_rhs: None,
+            last_mean_solve_iters: None,
             step_log: vec![],
             pretrain_seconds: 0.0,
             train_seconds: 0.0,
@@ -555,6 +566,54 @@ impl ExactGp {
         }
         self.train_seconds = base_train_seconds + sw.total();
         self.pred_rhs = None;
+        // Retraining moves the hypers; a pre-append warm seed solved at
+        // the old hypers is no longer a useful (or comparable) guess.
+        self.prev_pred_rhs = None;
+        Ok(())
+    }
+
+    /// Grow the training set in place: append `new_y.len()` points
+    /// without rebuilding the model. The padded operand grows via
+    /// [`PaddedData::append_from`] (the old rows are bitwise-preserved,
+    /// so both transports ship only the delta and worker-cached blocks
+    /// over old tiles survive the data-generation bump), the persistent
+    /// operator's partition plan extends in place, and the preconditioner
+    /// is dropped (its pivots depend on every row — it rebuilds
+    /// deterministically at the next solve, matching a from-scratch model
+    /// bitwise). The prediction cache is invalidated but stashed so
+    /// [`precompute_warm`](Self::precompute_warm) can seed the next mean
+    /// solve; call [`precompute`](Self::precompute) (or `_warm`) before
+    /// predicting again.
+    pub fn add_data(&mut self, new_x: &[f64], new_y: &[f64]) -> Result<()> {
+        anyhow::ensure!(!new_y.is_empty(), "add_data: empty append");
+        anyhow::ensure!(
+            new_x.len() == new_y.len() * self.d,
+            "add_data: {} x-values is not {} points of d={}",
+            new_x.len(),
+            new_y.len(),
+            self.d
+        );
+        self.x.extend_from_slice(new_x);
+        self.y.extend_from_slice(new_y);
+        let grown = Arc::new(PaddedData::append_from(&self.data, &self.x, self.d, &self.spec));
+        if let Some(op) = self.op.as_mut() {
+            op.append_rows(grown.clone());
+            self.partitions = op.plan.p();
+        } else {
+            self.partitions = Self::plan_for(&self.cfg, &grown, &self.spec).p();
+        }
+        self.data = grown;
+        // The pivoted-Cholesky pivot order depends on every row: rebuild
+        // from scratch at the next solve (deterministic in (x, hypers),
+        // so append and scratch models agree bitwise).
+        self.precond = None;
+        self.precond_hypers = None;
+        // The old [a | W] no longer matches n; keep it as the warm-start
+        // seed for the next precompute.
+        if let Some(old) = self.pred_rhs.take() {
+            self.prev_pred_rhs = Some(old);
+        }
+        self.acct.note_append(new_y.len() as u64);
         Ok(())
     }
 
@@ -563,16 +622,56 @@ impl ExactGp {
     /// solve and the Lanczos recursion share the persistent operator, so
     /// the Lanczos MVMs replay the blocks the solve materialized.
     pub fn precompute(&mut self, rng: &mut Rng) -> Result<()> {
+        self.precompute_impl(rng, false)
+    }
+
+    /// [`precompute`](Self::precompute) seeding the mean solve from the
+    /// pre-append `a` (zero-padded over the new rows) when `add_data`
+    /// stashed one. The solve meets the same `predict_tol`-vs-||y||
+    /// contract as a cold solve — a good seed only cuts iterations (see
+    /// `last_mean_solve_iters`). Results are tolerance-identical but NOT
+    /// bitwise-identical to a cold solve, so parity-critical paths (the
+    /// checkpoint replay, the observe fold) stay cold.
+    pub fn precompute_warm(&mut self, rng: &mut Rng) -> Result<()> {
+        self.precompute_impl(rng, true)
+    }
+
+    fn precompute_impl(&mut self, rng: &mut Rng, warm: bool) -> Result<()> {
         let sw = Stopwatch::start();
         self.ensure_op();
         self.ensure_precond()?;
-        let (a, cache) = {
+        // Warm seed: old a over the old rows, zero over the appended ones
+        // (built before the op borrow below; the stash is consumed either
+        // way so a later cold precompute cannot silently go warm).
+        let stash = self.prev_pred_rhs.take();
+        let x0: Option<Mat> = if warm {
+            stash.and_then(|old| {
+                if old.rows > self.n() || old.cols == 0 {
+                    return None;
+                }
+                let mut m = Mat::zeros(self.n(), 1);
+                for i in 0..old.rows {
+                    m[(i, 0)] = old[(i, 0)];
+                }
+                Some(m)
+            })
+        } else {
+            None
+        };
+        let (a, cache, mean_iters) = {
             let op = self.op.as_ref().unwrap();
             let precond = self.precond.as_ref().unwrap();
             let b = Mat::col_vec(&self.y);
             self.acct.note_mbcg_solve();
-            let res =
-                mbcg(op, precond, &b, self.cfg.predict_tol, self.cfg.max_cg_iters, 1);
+            let res = mbcg_warm(
+                op,
+                precond,
+                &b,
+                self.cfg.predict_tol,
+                self.cfg.max_cg_iters,
+                1,
+                x0.as_ref(),
+            );
             // Unlike training, the mean solve a = K^{-1} y is *cached*:
             // a breakdown here would poison every prediction this model
             // ever serves. Bail instead of building the cache.
@@ -596,8 +695,9 @@ impl ExactGp {
             let rank = self.cfg.variance_rank.min(self.n());
             self.acct.note_lanczos_pass();
             let f = lanczos(op, rank, rng)?;
-            (res.u.col(0), VarianceCache::from_lanczos(&f)?)
+            (res.u.col(0), VarianceCache::from_lanczos(&f)?, res.stats.iterations)
         };
+        self.last_mean_solve_iters = Some(mean_iters);
         // Build the combined prediction RHS V = [a | W] once, with whole-row
         // copies (W's rows are contiguous), so predict() never walks W
         // element by element again.
@@ -610,6 +710,20 @@ impl ExactGp {
         }
         self.pred_rhs = Some(v);
         self.precompute_seconds = sw.total();
+        Ok(())
+    }
+
+    /// The serve loop's append step: fold buffered observations into the
+    /// model and rebuild the prediction cache with a *cold*,
+    /// deterministic solve — the RNG is derived from `(run.seed, n)`, so
+    /// a from-scratch model over the concatenated data whose precompute
+    /// uses the same derivation produces bitwise-identical predictions
+    /// (the online-parity invariant, tested in `tests/online_parity.rs`).
+    pub fn fold_observations(&mut self, new_x: &[f64], new_y: &[f64]) -> Result<()> {
+        self.add_data(new_x, new_y)?;
+        let mut rng = Rng::new(self.cfg.seed, self.n() as u64);
+        self.precompute(&mut rng)?;
+        self.acct.note_append_fold();
         Ok(())
     }
 
@@ -736,6 +850,65 @@ impl ExactGp {
             },
             plan,
         )
+    }
+
+    /// Persist an append as a crash-atomic **delta record** next to an
+    /// existing base checkpoint at `dir`: the last `rows_appended`
+    /// training points plus the full post-append prediction cache, in an
+    /// `append-NNNNNN` subdirectory replayed in order by `load`. The base
+    /// checkpoint's sidecars are never rewritten — a 1k-point append to a
+    /// 1M-point model costs O(delta + pred_rhs), not O(n). Returns the
+    /// delta's sequence number. `ds` must already include the appended
+    /// points (the same post-append dataset `save` would see).
+    pub fn save_append(
+        &self,
+        dir: &std::path::Path,
+        ds: &Dataset,
+        rows_appended: usize,
+        plan: &FaultPlan,
+    ) -> Result<u64> {
+        let pred_rhs = self.pred_rhs.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "save_append: call precompute() first — a delta record \
+                 captures the post-append prediction cache"
+            )
+        })?;
+        anyhow::ensure!(
+            rows_appended > 0 && rows_appended <= self.n(),
+            "save_append: {} appended rows out of n={}",
+            rows_appended,
+            self.n()
+        );
+        anyhow::ensure!(
+            ds.n_train() == self.n() && ds.d == self.d && ds.train_y == self.y,
+            "save_append: dataset {:?} (n_train={}, d={}) is not this model's \
+             post-append training set (n_train={}, d={})",
+            ds.name,
+            ds.n_train(),
+            ds.d,
+            self.n(),
+            self.d
+        );
+        let n_before = self.n() - rows_appended;
+        let seq = crate::runtime::checkpoint::save_append(
+            dir,
+            &crate::runtime::checkpoint::AppendView {
+                config_fingerprint: self.cfg.model_fingerprint(),
+                d: self.d,
+                n_before,
+                new_x: &self.x[n_before * self.d..],
+                new_y: &self.y[n_before..],
+                pred_rhs,
+            },
+            plan,
+        )?;
+        // The chain is gapless from 1, so the new record's sequence
+        // number *is* the chain length: auto-compact at the threshold.
+        let threshold = self.cfg.online_compact_after_deltas as u64;
+        if threshold > 0 && seq >= threshold {
+            crate::runtime::checkpoint::compact(dir, plan)?;
+        }
+        Ok(seq)
     }
 
     /// Restore a predict-ready model from a checkpoint directory: no
@@ -866,17 +1039,118 @@ mod tests {
         let snap = gp.accounting().snapshot();
         assert!(snap.cache_fills > 0, "no kernel blocks were materialized");
         assert!(snap.cache_hits > 0, "solve iterations never hit the cache");
-        let gen0 = gp.op.as_ref().unwrap().generation;
+        let gen0 = gp.op.as_ref().unwrap().hyper_gen;
         // Unchanged hypers: the operator (and its blocks) stay valid.
         let _ = gp.nll_and_grad(&mut rng).unwrap();
-        assert_eq!(gp.op.as_ref().unwrap().generation, gen0);
+        assert_eq!(gp.op.as_ref().unwrap().hyper_gen, gen0);
         // Moved hypers: generation bump, stale blocks refilled from scratch.
         gp.hypers.log_lengthscales[0] += 0.1;
         let before = gp.accounting().snapshot();
         let _ = gp.nll_and_grad(&mut rng).unwrap();
         let delta = gp.accounting().snapshot().delta(&before);
-        assert!(gp.op.as_ref().unwrap().generation > gen0);
+        assert!(gp.op.as_ref().unwrap().hyper_gen > gen0);
         assert!(delta.cache_fills > 0, "stale blocks were not refilled");
+    }
+
+    #[test]
+    fn add_data_then_precompute_matches_scratch_bitwise() {
+        let (n0, k, d) = (150usize, 37usize, 2usize);
+        let mut rng = Rng::new(70, 0);
+        let x: Vec<f64> = (0..(n0 + k) * d).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n0 + k)
+            .map(|i| (1.3 * x[i * d]).sin() + 0.2 * x[i * d + 1])
+            .collect();
+        let mk_ds = |n: usize| Dataset {
+            name: "online-toy".into(),
+            d,
+            d_original: d,
+            train_x: x[..n * d].to_vec(),
+            train_y: y[..n].to_vec(),
+            val_x: vec![],
+            val_y: vec![],
+            test_x: vec![],
+            test_y: vec![],
+            y_std: 1.0,
+            y_mean: 0.0,
+            feature_mu: vec![],
+            feature_sd: vec![],
+            projection: None,
+        };
+        let mut cfg = Config::default();
+        cfg.precond_rank = 12;
+        cfg.variance_rank = 20;
+
+        // Appended path: live operator + prediction cache first, so the
+        // append exercises the in-place plan extension and the warm stash.
+        let mut appended = native_gp(&cfg, &mk_ds(n0), 2);
+        appended.precompute(&mut Rng::new(71, 0)).unwrap();
+        appended.add_data(&x[n0 * d..], &y[n0..]).unwrap();
+        appended.precompute(&mut Rng::new(72, 0)).unwrap();
+        let snap = appended.accounting().snapshot();
+        assert_eq!((snap.append_calls, snap.append_rows), (1, k as u64));
+
+        let mut scratch = native_gp(&cfg, &mk_ds(n0 + k), 2);
+        scratch.precompute(&mut Rng::new(72, 0)).unwrap();
+
+        let (pa, ps) =
+            (appended.pred_rhs.as_ref().unwrap(), scratch.pred_rhs.as_ref().unwrap());
+        assert_eq!((pa.rows, pa.cols), (ps.rows, ps.cols));
+        for (a, b) in pa.data.iter().zip(&ps.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let q: Vec<f64> = (0..9 * d).map(|_| rng.normal()).collect();
+        let (qa, qs) = (appended.predict(&q).unwrap(), scratch.predict(&q).unwrap());
+        for i in 0..9 {
+            assert_eq!(qa.mean[i].to_bits(), qs.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(qa.var[i].to_bits(), qs.var[i].to_bits(), "var[{i}]");
+        }
+    }
+
+    #[test]
+    fn warm_precompute_meets_tolerance_with_fewer_iterations() {
+        let ds = toy_dataset(600, 2, 93); // n_train = 266
+        let mut cfg = Config::default();
+        cfg.precond_rank = 10;
+        cfg.variance_rank = 12;
+        cfg.predict_tol = 1e-8;
+        let n0 = 220; // append the remaining 46 (~17%)
+        let base = Dataset {
+            name: "warm-toy".into(),
+            d: ds.d,
+            d_original: ds.d,
+            train_x: ds.train_x[..n0 * ds.d].to_vec(),
+            train_y: ds.train_y[..n0].to_vec(),
+            val_x: vec![],
+            val_y: vec![],
+            test_x: vec![],
+            test_y: vec![],
+            y_std: 1.0,
+            y_mean: 0.0,
+            feature_mu: vec![],
+            feature_sd: vec![],
+            projection: None,
+        };
+        // Cold reference over the full set.
+        let mut cold = native_gp(&cfg, &ds, 2);
+        cold.precompute(&mut Rng::new(94, 0)).unwrap();
+        let cold_iters = cold.last_mean_solve_iters.unwrap();
+
+        // Warm path: precompute on the base, append the tail, warm solve.
+        let mut warm = native_gp(&cfg, &base, 2);
+        warm.precompute(&mut Rng::new(95, 0)).unwrap();
+        warm.add_data(&ds.train_x[n0 * ds.d..], &ds.train_y[n0..]).unwrap();
+        warm.precompute_warm(&mut Rng::new(94, 0)).unwrap();
+        let warm_iters = warm.last_mean_solve_iters.unwrap();
+        assert!(
+            warm_iters < cold_iters,
+            "warm mean solve took {warm_iters} iterations vs cold {cold_iters}"
+        );
+        // Same tolerance contract: predictions agree to solver precision.
+        let q = &ds.test_x[..8 * ds.d];
+        let (pw, pc) = (warm.predict(q).unwrap(), cold.predict(q).unwrap());
+        for i in 0..8 {
+            assert!((pw.mean[i] - pc.mean[i]).abs() < 1e-5, "mean[{i}]");
+        }
     }
 
     #[test]

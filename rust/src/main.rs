@@ -11,7 +11,16 @@
 //!                queries are batched into memory-budgeted dispatches.
 //!                With --listen: the networked multi-tenant serving tier
 //!                (TCP front-end, LRU model registry under a shared
-//!                memory budget, admission control with explicit sheds)
+//!                memory budget, admission control with explicit sheds);
+//!                --online additionally accepts the `observe` verb and
+//!                folds observations into the model between batches
+//!   update       append new training points to a checkpointed model
+//!                without retraining: in-place operator growth + a
+//!                crash-atomic append-delta record, gated on bitwise
+//!                parity with from-scratch precompute over the
+//!                concatenated data; writes results/BENCH_update.json
+//!   compact      fold a checkpoint's append-delta chain into its base
+//!                sidecars (one atomic full save; deltas are removed)
 //!   reproduce    run a paper experiment (table1|table2|fig1..fig4|table3|table5)
 //!   datasets     list the benchmark suite (paper signature + scaled size)
 //!   info         runtime / artifact environment report
@@ -72,6 +81,8 @@ fn run() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
+        Some("update") => cmd_update(&args),
+        Some("compact") => cmd_compact(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("info") => cmd_info(&args),
@@ -79,7 +90,10 @@ fn run() -> Result<()> {
         // protocol channel, so this path must print nothing to it.
         Some("worker") => exactgp::exec::transport::worker::serve_stdio(),
         Some(other) => {
-            bail!("unknown subcommand {other:?} (train|predict|serve|reproduce|datasets|info|worker)")
+            bail!(
+                "unknown subcommand {other:?} \
+                 (train|predict|serve|update|compact|reproduce|datasets|info|worker)"
+            )
         }
         None => {
             print_usage();
@@ -116,8 +130,14 @@ fn print_usage() {
            exactgp serve --listen <addr> --models name=dir[,name=dir...]\n\
                          [--memory-mb M] [--max-inflight N]\n\
                          [--max-inflight-per-model N] [--shed-policy reject|wait]\n\
+                         [--online]  (accept the observe verb: buffered\n\
+                         observations fold into the model between batches)\n\
                          [--clients C --requests R] [--assert-sheds]\n\
                          [--assert-evictions] [--assert-p99-ms X]\n\
+           exactgp update --ckpt <dir> [--points N] [--retrain-baseline]\n\
+                          [--assert-update-frac F] [--assert-warm-iters]\n\
+                          [--out results/BENCH_update.json]\n\
+           exactgp compact --ckpt <dir>\n\
            exactgp reproduce --exp table1|table2|table3|table5|fig1|fig2|fig3|fig4\n\
            exactgp datasets [--scale ...]\n\
            exactgp info\n\
@@ -783,7 +803,12 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
         }
     }
 
-    let server = Server::start(&cfg, &specs)?;
+    let online = args.flag_present("online");
+    let server = {
+        let mut registry = exactgp::server::Registry::new(&cfg, &specs)?;
+        registry.set_online(online);
+        Server::start_with_registry(&cfg, std::sync::Arc::new(registry))?
+    };
     // Machine-readable (stdout) so wrappers and the shutdown integration
     // test can find the bound address under an ephemeral --listen :0.
     println!("listening on {}", server.addr());
@@ -791,13 +816,14 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     let _ = std::io::stdout().flush();
     eprintln!(
         "serving {} model(s) on {} — budget {} MiB, caps: global={} per-model={}, \
-         shed policy {}",
+         shed policy {}{}",
         specs.len(),
         server.addr(),
         cfg.server_memory_mb,
         cfg.server_max_inflight,
         cfg.server_max_inflight_per_model,
         cfg.server_shed_policy.name(),
+        if online { ", online (observe accepted)" } else { "" },
     );
     for e in server.registry().entries() {
         eprintln!(
@@ -1004,6 +1030,270 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     let out = args.get_or("out", &out_default);
     std::fs::write(out, doc.to_string_pretty())?;
     eprintln!("wrote {out}");
+    Ok(())
+}
+
+/// Append new training points to a checkpointed model **without
+/// retraining**, and prove the two online-learning guarantees on the
+/// spot:
+///
+/// 1. **Bitwise parity** — the appended model's predictions equal a
+///    from-scratch model built over the concatenated data with the same
+///    hyperparameters (fresh partition plan, fresh uploads, cold
+///    precompute), bit for bit; and reloading the checkpoint (base +
+///    append-delta record) reproduces them bit for bit again.
+/// 2. **Delta-scaled cost** — the update costs O(delta + precompute),
+///    not a full retrain: with `--retrain-baseline` (implied by
+///    `--assert-update-frac F`) the same concatenated data is trained
+///    from scratch and the update must come in under `F` of that
+///    wall-clock.
+///
+/// The appended points are drawn from the head of the checkpoint's test
+/// split (they have targets and live in the model's feature space);
+/// parity probes use later, disjoint test points. A second restore of
+/// the base measures the opt-in warm-started solve (`--assert-warm-iters`
+/// gates warm mBCG iterations strictly below cold). Writes
+/// `results/BENCH_update.json` and persists the append as a crash-atomic
+/// delta record next to the base checkpoint.
+fn cmd_update(args: &Args) -> Result<()> {
+    use exactgp::util::json::{num, obj, s, Json};
+    use std::time::Instant;
+
+    let cfg = build_config(args)?;
+    let dir = args.get("ckpt").ok_or_else(|| {
+        anyhow::anyhow!(
+            "update requires --ckpt <dir> (create one with `exactgp predict \
+             --dataset <name> --ckpt <dir>`)"
+        )
+    })?;
+    let dir = std::path::Path::new(dir);
+
+    // Three reads of the same base: the model that takes the cold
+    // (parity-grade) append path and is persisted, a second restore for
+    // the warm-started measurement, and the raw checkpoint for the
+    // kernel + hypers the from-scratch reference needs.
+    let (mut gp, mut ds) = coordinator::load_model(&cfg, dir)?;
+    let (mut gp_warm, _) = coordinator::load_model(&cfg, dir)?;
+    let ckpt = exactgp::runtime::checkpoint::load(dir)?;
+    let d = ds.d;
+    let n_before = ds.n_train();
+
+    let points = args.get_usize("points")?.unwrap_or(128).max(1);
+    anyhow::ensure!(
+        ds.n_test() > points,
+        "--points {points} does not leave parity probes in the checkpoint's \
+         test split ({} points)",
+        ds.n_test()
+    );
+    let new_x = ds.test_x[..points * d].to_vec();
+    let new_y = ds.test_y[..points].to_vec();
+    let m = (ds.n_test() - points).min(256);
+    let probe_x = ds.test_x[points * d..(points + m) * d].to_vec();
+    eprintln!(
+        "appending {points} points to {} (n_train={n_before}, d={d}); \
+         parity probes: {m} disjoint test points",
+        ds.name
+    );
+
+    // Cold append: the default bitwise-parity-grade path — grow the
+    // operator in place, then precompute with the same deterministic
+    // probe stream a from-scratch model at the new size draws.
+    let acct_before = gp.accounting().snapshot();
+    let t0 = Instant::now();
+    gp.fold_observations(&new_x, &new_y)?;
+    let update_seconds = t0.elapsed().as_secs_f64();
+    let iters_cold = gp.last_mean_solve_iters.unwrap_or(0);
+    let n_after = gp.n();
+
+    // Warm append: opt-in warm-started mBCG seeded from the base model's
+    // prediction cache. Tolerance-identical, not bitwise; the win is
+    // iterations.
+    let t0 = Instant::now();
+    gp_warm.add_data(&new_x, &new_y)?;
+    let mut rng = exactgp::util::rng::Rng::new(cfg.seed, gp_warm.n() as u64);
+    gp_warm.precompute_warm(&mut rng)?;
+    let warm_seconds = t0.elapsed().as_secs_f64();
+    let iters_warm = gp_warm.last_mean_solve_iters.unwrap_or(0);
+    eprintln!(
+        "update: cold fold {update_seconds:.2}s ({iters_cold} mBCG iters), \
+         warm {warm_seconds:.2}s ({iters_warm} iters)"
+    );
+
+    // Persist the append as a delta record and prove the round trip:
+    // reloading base + delta must reproduce the appended model bitwise.
+    ds.train_x.extend_from_slice(&new_x);
+    ds.train_y.extend_from_slice(&new_y);
+    let plan = exactgp::faults::FaultPlan::resolve(&cfg.faults);
+    let seq = gp.save_append(dir, &ds, points, &plan)?;
+    let acct_delta = gp.accounting().snapshot().delta(&acct_before);
+    eprintln!(
+        "persisted append-{seq:06} ({} delta bytes uploaded to workers)",
+        acct_delta.append_delta_bytes
+    );
+
+    let cold = gp.predict(&probe_x)?;
+    let (gp_re, _) = coordinator::load_model(&cfg, dir)?;
+    let reloaded = gp_re.predict(&probe_x)?;
+    drop(gp_re);
+
+    // From-scratch reference: fresh partition plan, fresh worker
+    // uploads, same hypers, cold precompute over the concatenated data.
+    let mut scratch_cfg = cfg.clone();
+    scratch_cfg.kernel = ckpt.kernel;
+    scratch_cfg.ard = ckpt.hypers.is_ard();
+    let (pool, spec) = coordinator::make_pool(&scratch_cfg, d)?;
+    let mut scratch =
+        exactgp::gp::exact::ExactGp::new(&scratch_cfg, ckpt.kernel, &ds, pool, spec);
+    scratch.hypers = ckpt.hypers.clone();
+    let mut rng = exactgp::util::rng::Rng::new(cfg.seed, scratch.n() as u64);
+    scratch.precompute(&mut rng)?;
+    let fresh = scratch.predict(&probe_x)?;
+
+    for i in 0..m {
+        if cold.mean[i].to_bits() != fresh.mean[i].to_bits()
+            || cold.var[i].to_bits() != fresh.var[i].to_bits()
+        {
+            bail!(
+                "appended model diverged from from-scratch precompute at probe \
+                 {i}: mean {:e} vs {:e}, var {:e} vs {:e}",
+                cold.mean[i],
+                fresh.mean[i],
+                cold.var[i],
+                fresh.var[i]
+            );
+        }
+        if cold.mean[i].to_bits() != reloaded.mean[i].to_bits()
+            || cold.var[i].to_bits() != reloaded.var[i].to_bits()
+        {
+            bail!(
+                "reloading base + append-delta diverged from the live appended \
+                 model at probe {i}: mean {:e} vs {:e}",
+                reloaded.mean[i],
+                cold.mean[i]
+            );
+        }
+    }
+    // The warm path converges to the same tolerance, not the same bits;
+    // report its drift, gate only the iteration count.
+    let warm_preds = gp_warm.predict(&probe_x)?;
+    let warm_drift = cold
+        .mean
+        .iter()
+        .zip(&warm_preds.mean)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0_f64, f64::max);
+
+    // Retrain baseline: the cost the update avoided.
+    let want_frac = args.get_f64("assert-update-frac")?;
+    let retrain_seconds = if args.flag_present("retrain-baseline") || want_frac.is_some() {
+        let (pool, spec) = coordinator::make_pool(&scratch_cfg, d)?;
+        let mut rt =
+            exactgp::gp::exact::ExactGp::new(&scratch_cfg, ckpt.kernel, &ds, pool, spec);
+        let mut rng = exactgp::util::rng::Rng::new(cfg.seed, 0);
+        let t0 = Instant::now();
+        rt.train(exactgp::gp::exact::Recipe::paper_default(&scratch_cfg), &mut rng)?;
+        rt.precompute(&mut rng)?;
+        Some(t0.elapsed().as_secs_f64())
+    } else {
+        None
+    };
+
+    coordinator::print_table(
+        &format!("online update: +{points} points onto n={n_before} ({})", ds.name),
+        &["metric", "value"],
+        &[
+            vec!["update (cold fold)".into(), format!("{update_seconds:.2} s")],
+            vec!["update (warm solve)".into(), format!("{warm_seconds:.2} s")],
+            vec![
+                "full retrain".into(),
+                retrain_seconds.map_or("skipped".into(), |t| format!("{t:.2} s")),
+            ],
+            vec![
+                "update / retrain".into(),
+                retrain_seconds
+                    .map_or("-".into(), |t| format!("{:.1}%", 1e2 * update_seconds / t)),
+            ],
+            vec!["mBCG iters cold / warm".into(), format!("{iters_cold} / {iters_warm}")],
+            vec!["delta bytes uploaded".into(), acct_delta.append_delta_bytes.to_string()],
+            vec!["warm max |Δmean|".into(), format!("{warm_drift:.1e}")],
+            vec!["parity vs from-scratch".into(), "bitwise-identical".into()],
+            vec!["parity after reload".into(), "bitwise-identical".into()],
+        ],
+    );
+
+    if let Some(frac) = want_frac {
+        let rt = retrain_seconds.expect("baseline runs when the gate is set");
+        if !(update_seconds < frac * rt) {
+            bail!(
+                "append of {points} points took {update_seconds:.2}s — not under \
+                 {frac} of the {rt:.2}s full retrain"
+            );
+        }
+    }
+    if args.flag_present("assert-warm-iters") && iters_warm >= iters_cold {
+        bail!(
+            "warm-started solve took {iters_warm} mBCG iterations, not strictly \
+             below the cold solve's {iters_cold}"
+        );
+    }
+
+    let doc = obj(vec![
+        ("experiment", s("update")),
+        ("dataset", s(&ds.name)),
+        ("n_before", num(n_before as f64)),
+        ("points_appended", num(points as f64)),
+        ("n_after", num(n_after as f64)),
+        ("d", num(d as f64)),
+        ("workers", num(cfg.workers as f64)),
+        ("update_seconds", num(update_seconds)),
+        ("warm_update_seconds", num(warm_seconds)),
+        (
+            "retrain_seconds",
+            retrain_seconds.map_or(Json::Null, num),
+        ),
+        (
+            "update_over_retrain",
+            retrain_seconds.map_or(Json::Null, |t| num(update_seconds / t)),
+        ),
+        ("mbcg_iters_cold", num(iters_cold as f64)),
+        ("mbcg_iters_warm", num(iters_warm as f64)),
+        ("append_delta_seq", num(seq as f64)),
+        ("append_calls", num(acct_delta.append_calls as f64)),
+        ("append_rows", num(acct_delta.append_rows as f64)),
+        ("append_delta_bytes", num(acct_delta.append_delta_bytes as f64)),
+        ("warm_mean_max_abs_diff", num(warm_drift)),
+        ("parity_bitwise_vs_scratch", Json::Bool(true)),
+        ("parity_bitwise_after_reload", Json::Bool(true)),
+    ]);
+    std::fs::create_dir_all(&cfg.results_dir)?;
+    let out_default = format!("{}/BENCH_update.json", cfg.results_dir);
+    let out = args.get_or("out", &out_default);
+    std::fs::write(out, doc.to_string_pretty())?;
+    eprintln!("wrote {out}");
+    Ok(())
+}
+
+/// Fold a checkpoint's append-delta chain into its base sidecars: one
+/// atomic full save (publish-by-rename), after which the delta records
+/// are gone and a fresh `load` sees the identical model.
+fn cmd_compact(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let dir = args.get("ckpt").ok_or_else(|| {
+        anyhow::anyhow!("compact requires --ckpt <dir> (a checkpoint directory)")
+    })?;
+    let dir = std::path::Path::new(dir);
+    let plan = exactgp::faults::FaultPlan::resolve(&cfg.faults);
+    let t0 = std::time::Instant::now();
+    let folded = exactgp::runtime::checkpoint::compact(dir, &plan)?;
+    if folded == 0 {
+        eprintln!("{dir:?}: no append deltas to compact");
+    } else {
+        eprintln!(
+            "{dir:?}: folded {folded} append delta(s) into the base checkpoint \
+             in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+    }
     Ok(())
 }
 

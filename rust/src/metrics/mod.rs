@@ -116,6 +116,15 @@ pub struct Accounting {
     /// Serving: batched dispatches that failed; their waiters got the
     /// error reply and the loop kept serving (up to its consecutive cap).
     pub serve_dispatch_failures: AtomicU64,
+    /// Online learning: `add_data` calls folded into a live model.
+    pub append_calls: AtomicU64,
+    /// Online learning: training rows appended across all `add_data` calls.
+    pub append_rows: AtomicU64,
+    /// Online learning: bytes persisted as incremental checkpoint delta
+    /// records (the base checkpoint is never rewritten for an append).
+    pub append_delta_bytes: AtomicU64,
+    /// Online learning: observe-buffer folds performed by the serve loop.
+    pub append_folds: AtomicU64,
     /// Transport: worker processes respawned after a death or timeout.
     pub worker_restarts: AtomicU64,
     /// Transport: in-flight jobs resubmitted after their worker died.
@@ -219,6 +228,22 @@ impl Accounting {
         self.serve_dispatch_failures.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one `add_data` call appending `rows` training rows.
+    pub fn note_append(&self, rows: u64) {
+        self.append_calls.fetch_add(1, Ordering::Relaxed);
+        self.append_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Record `b` bytes persisted as an incremental append delta record.
+    pub fn add_append_delta_bytes(&self, b: u64) {
+        self.append_delta_bytes.fetch_add(b, Ordering::Relaxed);
+    }
+
+    /// Record one observe-buffer fold performed by the serve loop.
+    pub fn note_append_fold(&self) {
+        self.append_folds.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one worker process respawn (death or timeout recovery).
     pub fn note_worker_restart(&self) {
         self.worker_restarts.fetch_add(1, Ordering::Relaxed);
@@ -277,6 +302,10 @@ impl Accounting {
             serve_flush_full: self.serve_flush_full.load(Ordering::Relaxed),
             serve_flush_deadline: self.serve_flush_deadline.load(Ordering::Relaxed),
             serve_dispatch_failures: self.serve_dispatch_failures.load(Ordering::Relaxed),
+            append_calls: self.append_calls.load(Ordering::Relaxed),
+            append_rows: self.append_rows.load(Ordering::Relaxed),
+            append_delta_bytes: self.append_delta_bytes.load(Ordering::Relaxed),
+            append_folds: self.append_folds.load(Ordering::Relaxed),
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             jobs_resubmitted: self.jobs_resubmitted.load(Ordering::Relaxed),
             ipc_bytes_tx: self.ipc_bytes_tx.load(Ordering::Relaxed),
@@ -306,6 +335,10 @@ impl Accounting {
         self.serve_flush_full.store(0, Ordering::Relaxed);
         self.serve_flush_deadline.store(0, Ordering::Relaxed);
         self.serve_dispatch_failures.store(0, Ordering::Relaxed);
+        self.append_calls.store(0, Ordering::Relaxed);
+        self.append_rows.store(0, Ordering::Relaxed);
+        self.append_delta_bytes.store(0, Ordering::Relaxed);
+        self.append_folds.store(0, Ordering::Relaxed);
         self.worker_restarts.store(0, Ordering::Relaxed);
         self.jobs_resubmitted.store(0, Ordering::Relaxed);
         self.ipc_bytes_tx.store(0, Ordering::Relaxed);
@@ -356,6 +389,14 @@ pub struct AccountingSnapshot {
     pub serve_flush_deadline: u64,
     /// Failed serve dispatches (error replied to that batch's waiters).
     pub serve_dispatch_failures: u64,
+    /// `add_data` calls folded into a live model.
+    pub append_calls: u64,
+    /// Training rows appended across all `add_data` calls.
+    pub append_rows: u64,
+    /// Bytes persisted as incremental checkpoint delta records.
+    pub append_delta_bytes: u64,
+    /// Observe-buffer folds performed by the serve loop.
+    pub append_folds: u64,
     /// Worker processes respawned after a death or timeout.
     pub worker_restarts: u64,
     /// In-flight jobs resubmitted after their worker died.
@@ -391,6 +432,10 @@ impl AccountingSnapshot {
             serve_flush_deadline: self.serve_flush_deadline - earlier.serve_flush_deadline,
             serve_dispatch_failures: self.serve_dispatch_failures
                 - earlier.serve_dispatch_failures,
+            append_calls: self.append_calls - earlier.append_calls,
+            append_rows: self.append_rows - earlier.append_rows,
+            append_delta_bytes: self.append_delta_bytes - earlier.append_delta_bytes,
+            append_folds: self.append_folds - earlier.append_folds,
             worker_restarts: self.worker_restarts - earlier.worker_restarts,
             jobs_resubmitted: self.jobs_resubmitted - earlier.jobs_resubmitted,
             ipc_bytes_tx: self.ipc_bytes_tx - earlier.ipc_bytes_tx,
@@ -541,6 +586,31 @@ mod tests {
         let z = acc.snapshot();
         assert_eq!(z.tiles_total, 0);
         assert_eq!(z.tiles_skipped, 0);
+    }
+
+    #[test]
+    fn append_counters_flow_through_snapshot_delta_reset() {
+        let acc = Accounting::default();
+        acc.note_append(17);
+        acc.note_append(1);
+        acc.add_append_delta_bytes(4096);
+        acc.note_append_fold();
+        let s = acc.snapshot();
+        assert_eq!(s.append_calls, 2);
+        assert_eq!(s.append_rows, 18);
+        assert_eq!(s.append_delta_bytes, 4096);
+        assert_eq!(s.append_folds, 1);
+        acc.note_append(5);
+        let d = acc.snapshot().delta(&s);
+        assert_eq!(d.append_calls, 1);
+        assert_eq!(d.append_rows, 5);
+        assert_eq!(d.append_delta_bytes, 0);
+        acc.reset();
+        let z = acc.snapshot();
+        assert_eq!(z.append_calls, 0);
+        assert_eq!(z.append_rows, 0);
+        assert_eq!(z.append_delta_bytes, 0);
+        assert_eq!(z.append_folds, 0);
     }
 
     #[test]

@@ -127,6 +127,22 @@ impl TileBounds {
             hi: vec![f64::NEG_INFINITY],
         })
     }
+
+    /// Incremental update for appended rows: tiles entirely below `old_n`
+    /// are reused as-is (their row ranges did not change), and boxes from
+    /// the tile containing `old_n` onward are recomputed over the grown
+    /// data. The result is exactly `for_rows(x, d, new_n, self.width)` —
+    /// appends refresh O(delta / width) boxes instead of O(new_n / width).
+    pub fn extend_for_appended_rows(&mut self, x: &[f32], d: usize, old_n: usize, new_n: usize) {
+        assert!(new_n >= old_n);
+        let width = self.width.max(1);
+        let first_dirty = old_n / width;
+        self.boxes.truncate(first_dirty);
+        for k in first_dirty..new_n.div_ceil(width) {
+            let start = k * width;
+            self.boxes.push(BBox::from_rows(x, d, start, width.min(new_n - start)));
+        }
+    }
 }
 
 /// A full plan for one n x n (or n_rows x n_cols rectangular) operator.
@@ -192,6 +208,55 @@ impl Plan {
         let raw = (budget_bytes / bytes_per_row.max(1)).max(1);
         let aligned = if raw >= align { (raw / align) * align } else { raw };
         Plan::with_rows(n_rows, n_cols, aligned.max(1).min(n_rows.max(1)))
+    }
+
+    /// Extend the plan in place for appended rows: the trailing partition
+    /// grows until it reaches `rows_per_partition`, and further rows open
+    /// new partitions. Existing partition boundaries never move, so row
+    /// ranges for old rows stay stable across appends — and because the
+    /// trailing partition of any plan is exactly `n_rows % rows_per_partition`
+    /// rows (or full), the extended layout is identical to
+    /// `Plan::with_rows(new_n_rows, new_n_cols, rows_per_partition)`.
+    ///
+    /// Returns the index of the first partition whose row range changed
+    /// (== `p()` when nothing changed); bounding boxes from there on are
+    /// stale and must be refreshed via `refresh_bboxes_from`.
+    pub fn append_rows(&mut self, new_n_rows: usize, new_n_cols: usize) -> usize {
+        assert!(new_n_rows >= self.n_rows, "append_rows cannot shrink the operator");
+        self.n_cols = new_n_cols;
+        if new_n_rows == self.n_rows {
+            return self.partitions.len();
+        }
+        self.n_rows = new_n_rows;
+        let mut first_dirty = self.partitions.len();
+        if let Some(last) = self.partitions.last_mut() {
+            if last.len() < self.rows_per_partition {
+                last.end = (last.start + self.rows_per_partition).min(new_n_rows);
+                first_dirty -= 1;
+            }
+        }
+        let mut start = self.partitions.last().map_or(0, |p| p.end);
+        while start < new_n_rows {
+            let end = (start + self.rows_per_partition).min(new_n_rows);
+            self.partitions.push(Partition { start, end });
+            start = end;
+        }
+        first_dirty
+    }
+
+    /// Refresh the bounding boxes of partitions `[first, p())` over the
+    /// first `n` true rows of `x` — the incremental complement of
+    /// `attach_bboxes` for plans grown with `append_rows`. A plan that
+    /// never had boxes attached stays box-free.
+    pub fn refresh_bboxes_from(&mut self, first: usize, x: &[f32], d: usize, n: usize) {
+        if self.bboxes.is_empty() && first > 0 {
+            return;
+        }
+        self.bboxes.truncate(first);
+        for p in &self.partitions[first..] {
+            let start = p.start.min(n);
+            self.bboxes.push(BBox::from_rows(x, d, start, p.end.min(n) - start));
+        }
     }
 
     /// Number of partitions (the paper's `p`).
@@ -404,6 +469,69 @@ mod tests {
         assert_eq!(plan.bboxes[1].hi, vec![14.0, -3.0]);
         // Partition [6, 8) is all padding => empty box.
         assert!(plan.bboxes[2].is_empty());
+    }
+
+    #[test]
+    fn appended_plans_match_from_scratch_plans() {
+        // Growing a plan by arbitrary increments always lands on exactly
+        // the layout a scratch plan over the final size would choose, and
+        // refreshed boxes match attach_bboxes over the full data.
+        check("plan-append", 64, |g| {
+            let rpp = 1 + g.rng.below(64);
+            let n0 = 1 + g.rng.below(256);
+            let d = 1 + g.rng.below(3);
+            let grow = 1 + g.rng.below(128);
+            let n1 = n0 + grow;
+            let x: Vec<f32> =
+                (0..n1 * d).map(|_| (g.rng.below(2000) as f32 - 1000.0) / 41.0).collect();
+            let mut plan = Plan::with_rows(n0, n0, rpp);
+            plan.attach_bboxes(&x, d, n0);
+            let dirty = plan.append_rows(n1, n1);
+            if dirty < plan.p() && plan.partitions[dirty].end <= n0 {
+                return Err("dirty index points at an unchanged partition".into());
+            }
+            plan.refresh_bboxes_from(dirty, &x, d, n1);
+            let mut scratch = Plan::with_rows(n1, n1, rpp);
+            scratch.attach_bboxes(&x, d, n1);
+            if plan.partitions != scratch.partitions {
+                return Err(format!(
+                    "partitions diverge: {:?} vs {:?}",
+                    plan.partitions, scratch.partitions
+                ));
+            }
+            if plan.bboxes != scratch.bboxes {
+                return Err("refreshed bboxes diverge from scratch attach".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn append_rows_with_no_growth_is_a_no_op() {
+        let mut plan = Plan::with_rows(10, 10, 4);
+        let before = plan.partitions.clone();
+        let dirty = plan.append_rows(10, 10);
+        assert_eq!(dirty, plan.p());
+        assert_eq!(plan.partitions, before);
+    }
+
+    #[test]
+    fn tile_bounds_extend_matches_recompute() {
+        check("tile-bounds-extend", 64, |g| {
+            let d = 1 + g.rng.below(3);
+            let width = 1 + g.rng.below(8);
+            let n0 = g.rng.below(40);
+            let n1 = n0 + 1 + g.rng.below(40);
+            let x: Vec<f32> =
+                (0..n1 * d).map(|_| (g.rng.below(2000) as f32 - 1000.0) / 67.0).collect();
+            let mut tb = TileBounds::for_rows(&x, d, n0, width);
+            tb.extend_for_appended_rows(&x, d, n0, n1);
+            let scratch = TileBounds::for_rows(&x, d, n1, width);
+            if tb.boxes != scratch.boxes {
+                return Err("extended tile bounds diverge from recompute".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

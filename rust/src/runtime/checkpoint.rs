@@ -22,6 +22,7 @@
 //! <dir>/checkpoint.json   versioned manifest (util::json; written last)
 //! <dir>/<array>.bin       raw little-endian f64 payloads (train_x,
 //!                         train_y, test_x, test_y, pred_rhs, projection)
+//! <dir>/append-NNNNNN/    incremental append-delta records (see below)
 //! ```
 //!
 //! Large arrays live in binary sidecars — exact bitwise f64 round-trip by
@@ -41,6 +42,38 @@
 //! always complete**. Fault seams (`ckpt.partial`, `ckpt.enospc`; see
 //! [`crate::faults`]) are compiled into the staging path so tests can
 //! crash a save at exact points and prove that invariant.
+//!
+//! ## Append-delta records
+//!
+//! Online learning appends rows to a trained model without retraining
+//! ([`ExactGp::add_data`](crate::gp::exact::ExactGp::add_data)); the
+//! durable counterpart is [`save_append`], which persists each append as
+//! a numbered delta record `<dir>/append-NNNNNN/` *inside* the base
+//! checkpoint directory — the base is never rewritten for an append, so
+//! its cost scales with the delta, not with `n`. A record holds the new
+//! inputs/targets plus the full post-append prediction RHS (the RHS is
+//! rebuilt by `precompute` anyway, and persisting it whole keeps load
+//! zero-solve) under the same sidecar + manifest-last + rename protocol
+//! as the base. [`load`] replays the chain in sequence order, validating
+//! that each record's `n_before` matches the replayed state and that its
+//! config fingerprint matches the base; [`peek`] folds the chain into
+//! `n_train`/`resident_bytes` from manifests alone.
+//!
+//! Because the records live inside `<dir>`, the atomic publish rename of
+//! a full save (or of [`compact`], which is exactly load-then-save)
+//! swaps them out together with the old base — compaction inherits crash
+//! atomicity for free, and the compacted checkpoint's sidecars are
+//! bitwise what a from-scratch save of the same state would write.
+//!
+//! Torn-write policy: a record whose manifest is missing or unparseable
+//! is the footprint of a crash mid-publish. If it is the *last* record
+//! in the chain, loaders garbage-collect it (the append simply didn't
+//! happen, exactly like a `.tmp` leftover); anywhere earlier it means
+//! later appends were built on state we can no longer reconstruct, and
+//! load fails loudly with "corrupt append chain". Checksum-failing
+//! sidecars inside a record are always a hard error, like the base. The
+//! `append.crash` / `append.delta-torn` fault seams script both crash
+//! windows deterministically.
 //!
 //! ## Training-state records
 //!
@@ -85,6 +118,15 @@ pub const TRAIN_VERSION: u64 = 1;
 
 /// Manifest file name inside a training-state record directory.
 pub const TRAIN_MANIFEST: &str = "train_state.json";
+
+/// Manifest `format` tag of an append-delta record.
+pub const APPEND_FORMAT: &str = "exactgp-append-delta";
+
+/// Append-delta record layout version.
+pub const APPEND_VERSION: u64 = 1;
+
+/// Manifest file name inside an append-delta record directory.
+pub const APPEND_MANIFEST: &str = "append.json";
 
 /// True if `dir` looks like a checkpoint (manifest present). Used by the
 /// CLI to decide between "load" and "train then save".
@@ -207,6 +249,7 @@ pub fn peek(dir: &Path) -> Result<CheckpointMeta> {
     let ds = m.req("dataset")?;
     let arrays = m.req("arrays")?;
     let mut elems: u64 = 0;
+    let mut rhs_elems: u64 = 0;
     match arrays {
         Json::Obj(entries) => {
             for (name, entry) in entries {
@@ -214,17 +257,41 @@ pub fn peek(dir: &Path) -> Result<CheckpointMeta> {
                     .req_usize("len")
                     .with_context(|| format!("corrupt checkpoint: array {name:?}"))?;
                 elems += len as u64;
+                if name.as_str() == "pred_rhs" {
+                    rhs_elems = len as u64;
+                }
             }
         }
         _ => anyhow::bail!("corrupt checkpoint: arrays is not an object"),
     }
+
+    // Fold the append-delta chain in, manifests only: each delta adds its
+    // new rows and *replaces* the resident prediction RHS with its own.
+    let mut n_train = ds.req_usize("n_train")?;
+    let mut pred_rhs_cols = m.req_usize("pred_rhs_cols")?;
+    for dl in append_chain(dir)? {
+        let am = append_meta(&dl)?;
+        ensure!(
+            am.n_before == n_train,
+            "corrupt append chain: append-{:06} expects {} training points \
+             before it, the chain has {n_train}",
+            dl.seq,
+            am.n_before
+        );
+        elems = elems - rhs_elems + (am.new_x_elems + am.new_y_elems) as u64
+            + am.pred_rhs_elems as u64;
+        rhs_elems = am.pred_rhs_elems as u64;
+        n_train = am.n_after;
+        pred_rhs_cols = am.pred_rhs_cols;
+    }
+
     Ok(CheckpointMeta {
         kernel,
         name: ds.req_str("name")?.to_string(),
         d: ds.req_usize("d")?,
-        n_train: ds.req_usize("n_train")?,
+        n_train,
         n_test: ds.req_usize("n_test")?,
-        pred_rhs_cols: m.req_usize("pred_rhs_cols")?,
+        pred_rhs_cols,
         resident_bytes: elems * 8,
     })
 }
@@ -569,7 +636,7 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
     }
     let t = m.req("timings")?;
 
-    Ok(Checkpoint {
+    let mut ckpt = Checkpoint {
         version,
         kernel,
         hypers,
@@ -580,7 +647,352 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
         pretrain_seconds: t.req_f64("pretrain_seconds")?,
         train_seconds: t.req_f64("train_seconds")?,
         precompute_seconds: t.req_f64("precompute_seconds")?,
+    };
+    apply_append_deltas(dir, &mut ckpt)?;
+    Ok(ckpt)
+}
+
+// ---------------------------------------------------------------------------
+// Append-delta records
+// ---------------------------------------------------------------------------
+
+/// Borrowed view of the state [`save_append`] persists for one append:
+/// the delta itself plus the full post-append prediction RHS.
+pub struct AppendView<'a> {
+    /// `Config::model_fingerprint()` of the appending model — must match
+    /// the base checkpoint's at replay, or the delta belongs to a
+    /// different model.
+    pub config_fingerprint: u64,
+    /// Feature dimensionality (post feature pipeline).
+    pub d: usize,
+    /// Training points *before* this append (chain-validated at replay).
+    pub n_before: usize,
+    /// Appended inputs, `rows × d` row-major.
+    pub new_x: &'a [f64],
+    /// Appended targets, `rows` values.
+    pub new_y: &'a [f64],
+    /// The `[a | W]` prediction RHS rebuilt by `precompute` *after* the
+    /// append (`n_before + rows` rows).
+    pub pred_rhs: &'a Mat,
+}
+
+/// One published append-delta record: its sequence number, directory,
+/// and parsed manifest.
+struct AppendDelta {
+    seq: u64,
+    dir: PathBuf,
+    manifest: Json,
+}
+
+/// Manifest-level summary of one append delta, with every internal
+/// consistency check applied (format, version, seq, row counts, array
+/// lengths). Cross-record checks — `n_before` continuity, fingerprint
+/// against the base — are the caller's, since they need replayed state.
+struct AppendMeta {
+    config_fingerprint: u64,
+    d: usize,
+    n_before: usize,
+    n_after: usize,
+    pred_rhs_cols: usize,
+    new_x_elems: usize,
+    new_y_elems: usize,
+    pred_rhs_elems: usize,
+}
+
+fn parse_append_dir(name: &str) -> Option<u64> {
+    name.strip_prefix("append-")?.parse().ok()
+}
+
+/// Enumerate `dir`'s append-delta chain in sequence order, verifying it
+/// is gapless from `append-000001`. Stale `append-*.tmp`/`.old` staging
+/// leftovers are garbage-collected on the way (best effort), and a
+/// *last* record with a missing or unparseable manifest — the footprint
+/// of a crash mid-publish — is garbage-collected too: that append simply
+/// didn't happen. A torn record with valid successors is unrecoverable
+/// and fails loudly.
+fn append_chain(dir: &Path) -> Result<Vec<AppendDelta>> {
+    let mut found: Vec<(u64, PathBuf)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("append-")
+                && (name.ends_with(".tmp") || name.ends_with(".old"))
+            {
+                let _ = std::fs::remove_dir_all(e.path());
+                continue;
+            }
+            if let Some(seq) = parse_append_dir(&name) {
+                found.push((seq, e.path()));
+            }
+        }
+    }
+    found.sort();
+    let mut chain = Vec::with_capacity(found.len());
+    let total = found.len();
+    for (i, (seq, path)) in found.into_iter().enumerate() {
+        ensure!(
+            seq == i as u64 + 1,
+            "corrupt append chain: expected append-{:06} next in {dir:?}, \
+             found append-{seq:06}",
+            i + 1
+        );
+        let mpath = path.join(APPEND_MANIFEST);
+        let manifest =
+            std::fs::read_to_string(&mpath).ok().and_then(|t| Json::parse(&t).ok());
+        let Some(manifest) = manifest else {
+            if i + 1 == total {
+                // Torn tail: the crash window of a mid-publish append.
+                let _ = std::fs::remove_dir_all(&path);
+                break;
+            }
+            anyhow::bail!(
+                "corrupt append chain: append-{seq:06} in {dir:?} has a torn \
+                 manifest but later deltas were built on it"
+            );
+        };
+        chain.push(AppendDelta { seq, dir: path, manifest });
+    }
+    Ok(chain)
+}
+
+/// Validate one record's manifest against itself and summarize it.
+fn append_meta(dl: &AppendDelta) -> Result<AppendMeta> {
+    let m = &dl.manifest;
+    let what = format!("append delta append-{:06}", dl.seq);
+    let format = m.req_str("format")?;
+    ensure!(
+        format == APPEND_FORMAT,
+        "{what}: format is {format:?} (expected {APPEND_FORMAT:?})"
+    );
+    let version = m.req_usize("version")? as u64;
+    ensure!(
+        version == APPEND_VERSION,
+        "{what}: version mismatch (record has v{version}, this binary reads \
+         v{APPEND_VERSION})"
+    );
+    let seq = m.req_usize("seq")? as u64;
+    ensure!(
+        seq == dl.seq,
+        "corrupt append chain: {what} claims sequence number {seq}"
+    );
+    let config_fingerprint = u64::from_str_radix(m.req_str("config_fingerprint")?, 16)
+        .with_context(|| format!("{what}: bad config_fingerprint"))?;
+    let d = m.req_usize("d")?;
+    let n_before = m.req_usize("n_before")?;
+    let rows = m.req_usize("rows")?;
+    let n_after = m.req_usize("n_after")?;
+    ensure!(
+        rows >= 1 && n_after == n_before + rows,
+        "{what}: row counts disagree (n_before={n_before}, rows={rows}, \
+         n_after={n_after})"
+    );
+    let pred_rhs_cols = m.req_usize("pred_rhs_cols")?;
+    let arrays = m.req("arrays")?;
+    let alen = |name: &str| -> Result<usize> {
+        arrays.req(name)?.req_usize("len").with_context(|| format!("{what}: array {name:?}"))
+    };
+    let new_x_elems = alen("new_x")?;
+    let new_y_elems = alen("new_y")?;
+    let pred_rhs_elems = alen("pred_rhs")?;
+    ensure!(
+        new_x_elems == rows * d && new_y_elems == rows,
+        "{what}: appended arrays disagree with the manifest \
+         (x: {new_x_elems} for {rows}x{d}, y: {new_y_elems})"
+    );
+    ensure!(
+        pred_rhs_cols >= 1 && pred_rhs_elems == n_after * pred_rhs_cols,
+        "{what}: pred_rhs holds {pred_rhs_elems} values, expected \
+         {n_after}x{pred_rhs_cols}"
+    );
+    Ok(AppendMeta {
+        config_fingerprint,
+        d,
+        n_before,
+        n_after,
+        pred_rhs_cols,
+        new_x_elems,
+        new_y_elems,
+        pred_rhs_elems,
     })
+}
+
+/// Replay `dir`'s append-delta chain onto a freshly-loaded base
+/// checkpoint: extend the training arrays, replace the prediction RHS.
+fn apply_append_deltas(dir: &Path, ckpt: &mut Checkpoint) -> Result<()> {
+    for dl in append_chain(dir)? {
+        let am = append_meta(&dl)?;
+        ensure!(
+            am.config_fingerprint == ckpt.config_fingerprint,
+            "append delta append-{:06} was written under config fingerprint \
+             {:016x} but the base checkpoint's is {:016x} — the delta belongs \
+             to a different model",
+            dl.seq,
+            am.config_fingerprint,
+            ckpt.config_fingerprint
+        );
+        ensure!(
+            am.d == ckpt.dataset.d,
+            "append delta append-{:06} has d={} but the base checkpoint has \
+             d={}",
+            dl.seq,
+            am.d,
+            ckpt.dataset.d
+        );
+        ensure!(
+            am.n_before == ckpt.dataset.n_train(),
+            "corrupt append chain: append-{:06} expects {} training points \
+             before it, the replayed state has {}",
+            dl.seq,
+            am.n_before,
+            ckpt.dataset.n_train()
+        );
+        let arrays = dl.manifest.req("arrays")?;
+        let new_x = read_array(&dl.dir, arrays.req("new_x")?, "appended inputs")?;
+        let new_y = read_array(&dl.dir, arrays.req("new_y")?, "appended targets")?;
+        let rhs =
+            read_array(&dl.dir, arrays.req("pred_rhs")?, "post-append prediction RHS")?;
+        // Lengths are already pinned: append_meta checked the manifest's
+        // counts and read_array checked each sidecar against its entry.
+        ckpt.dataset.train_x.extend_from_slice(&new_x);
+        ckpt.dataset.train_y.extend_from_slice(&new_y);
+        ckpt.pred_rhs = Mat::from_vec(am.n_after, am.pred_rhs_cols, rhs);
+    }
+    Ok(())
+}
+
+/// Persist one append as a delta record under the base checkpoint at
+/// `dir`, crash-atomically (staged `append-NNNNNN.tmp`, sidecars and
+/// manifest fsynced, then renamed into place). The base checkpoint is
+/// never touched — an append's durable cost scales with the delta, not
+/// with `n`. Returns the record's sequence number (1-based; equal to the
+/// chain length, since the chain is gapless).
+///
+/// The `append.crash` seam fires after staging but before the publish
+/// rename (leaving only a `.tmp` that loaders garbage-collect); the
+/// `append.delta-torn` seam publishes a record whose manifest stops
+/// mid-byte and then errors, exercising the torn-tail recovery path.
+pub fn save_append(dir: &Path, view: &AppendView, plan: &FaultPlan) -> Result<u64> {
+    ensure!(
+        exists(dir),
+        "append delta requires a base checkpoint at {dir:?} — save a full \
+         checkpoint first"
+    );
+    let rows = view.new_y.len();
+    ensure!(rows >= 1, "append delta with no rows");
+    ensure!(
+        view.new_x.len() == rows * view.d,
+        "append delta: new_x holds {} values, expected {rows}x{}",
+        view.new_x.len(),
+        view.d
+    );
+    let n_after = view.n_before + rows;
+    ensure!(
+        view.pred_rhs.rows == n_after && view.pred_rhs.cols >= 1,
+        "append delta: pred_rhs is {}x{} but the appended model has {n_after} \
+         training points",
+        view.pred_rhs.rows,
+        view.pred_rhs.cols
+    );
+    // The chain on disk must be exactly the state the model appended onto
+    // — a divergent delta would replay into a different model than the
+    // one that wrote it.
+    let meta = peek(dir)?;
+    ensure!(
+        view.d == meta.d,
+        "append delta: model has d={} but the checkpoint at {dir:?} has d={}",
+        view.d,
+        meta.d
+    );
+    ensure!(
+        view.n_before == meta.n_train,
+        "append delta: model had {} training points before the append but \
+         the checkpoint chain at {dir:?} replays to {} — refusing to write a \
+         divergent delta",
+        view.n_before,
+        meta.n_train
+    );
+
+    let seq = append_chain(dir)?.last().map(|dl| dl.seq).unwrap_or(0) + 1;
+    let record = dir.join(format!("append-{seq:06}"));
+    let staged = sibling(&record, ".tmp");
+    let _ = std::fs::remove_dir_all(&staged);
+    std::fs::create_dir_all(&staged)
+        .with_context(|| format!("creating append staging directory {staged:?}"))?;
+
+    let arrays = vec![
+        ("new_x", write_array(&staged, "new_x", view.new_x, plan)?),
+        ("new_y", write_array(&staged, "new_y", view.new_y, plan)?),
+        ("pred_rhs", write_array(&staged, "pred_rhs", &view.pred_rhs.data, plan)?),
+    ];
+    let manifest = obj(vec![
+        ("format", s(APPEND_FORMAT)),
+        ("version", num(APPEND_VERSION as f64)),
+        ("seq", num(seq as f64)),
+        ("config_fingerprint", s(&format!("{:016x}", view.config_fingerprint))),
+        ("d", num(view.d as f64)),
+        ("n_before", num(view.n_before as f64)),
+        ("rows", num(rows as f64)),
+        ("n_after", num(n_after as f64)),
+        ("pred_rhs_cols", num(view.pred_rhs.cols as f64)),
+        ("arrays", Json::Obj(arrays.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+    ]);
+
+    if plan.should_fire(Seam::AppendDeltaTorn) {
+        // A torn write that survived the rename: the published record's
+        // manifest stops mid-byte. Loaders must GC it if (and only if)
+        // it is the last record in the chain.
+        let text = manifest.to_string_pretty();
+        let _ = std::fs::write(staged.join(APPEND_MANIFEST), &text.as_bytes()[..text.len() / 2]);
+        fsync_dir(&staged);
+        publish_staged(&staged, &record)?;
+        anyhow::bail!(
+            "crashed after publishing a torn append delta (injected fault {})",
+            Seam::AppendDeltaTorn.name()
+        );
+    }
+    write_manifest(&staged, APPEND_MANIFEST, &manifest, plan)?;
+    fsync_dir(&staged);
+    if plan.should_fire(Seam::AppendCrash) {
+        anyhow::bail!(
+            "crashed before publishing append delta append-{seq:06} \
+             (injected fault {})",
+            Seam::AppendCrash.name()
+        );
+    }
+    publish_staged(&staged, &record)?;
+    Ok(seq)
+}
+
+/// Fold every append-delta record into the base: load the fully-replayed
+/// state and re-save it at `dir`. The publish rename of the re-save swaps
+/// the whole directory — delta records included — so compaction is as
+/// crash-atomic as any save: an interruption leaves either the original
+/// base + chain or the compacted checkpoint, never a mix. The compacted
+/// sidecars are bitwise identical to what a from-scratch save of the
+/// same state would write. Returns the number of deltas folded (0 means
+/// there was nothing to do and `dir` was left untouched).
+pub fn compact(dir: &Path, plan: &FaultPlan) -> Result<usize> {
+    let n_deltas = append_chain(dir)?.len();
+    if n_deltas == 0 {
+        return Ok(0);
+    }
+    let ck = load(dir)?;
+    save_with(
+        dir,
+        &CheckpointView {
+            kernel: ck.kernel,
+            hypers: &ck.hypers,
+            config_fingerprint: ck.config_fingerprint,
+            dataset: &ck.dataset,
+            pred_rhs: &ck.pred_rhs,
+            step_log: &ck.step_log,
+            pretrain_seconds: ck.pretrain_seconds,
+            train_seconds: ck.train_seconds,
+            precompute_seconds: ck.precompute_seconds,
+        },
+        plan,
+    )?;
+    Ok(n_deltas)
 }
 
 // ---------------------------------------------------------------------------
@@ -1334,6 +1746,188 @@ mod tests {
         torn.step_log.pop();
         assert!(save_train_state(&dir, &torn, &FaultPlan::default()).is_err());
         clear_train_state(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn append_view<'a>(
+        n_before: usize,
+        new_x: &'a [f64],
+        new_y: &'a [f64],
+        rhs: &'a Mat,
+    ) -> AppendView<'a> {
+        AppendView {
+            config_fingerprint: 0xDEAD_BEEF_u64,
+            d: 2,
+            n_before,
+            new_x,
+            new_y,
+            pred_rhs: rhs,
+        }
+    }
+
+    #[test]
+    fn append_deltas_replay_in_order_and_compact_to_a_scratch_save() {
+        let dir =
+            std::env::temp_dir().join(format!("exactgp_ckpt_app_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut ds = toy_dataset(12, 2);
+        let hypers = Hypers::default_init(None);
+        let mut rng = Rng::new(77, 0);
+        let rhs0 = Mat::from_vec(12, 3, rng.normal_vec(12 * 3));
+        save(&dir, &toy_view(&ds, &hypers, &rhs0, &[])).unwrap();
+        let base_manifest = std::fs::read(dir.join(MANIFEST)).unwrap();
+
+        // Two appends of different sizes; each ships the full post-append
+        // prediction RHS.
+        let (x1, y1) = (rng.normal_vec(5 * 2), rng.normal_vec(5));
+        let rhs1 = Mat::from_vec(17, 3, rng.normal_vec(17 * 3));
+        let seq =
+            save_append(&dir, &append_view(12, &x1, &y1, &rhs1), &FaultPlan::default());
+        assert_eq!(seq.unwrap(), 1);
+        let (x2, y2) = (rng.normal_vec(2 * 2), rng.normal_vec(2));
+        let rhs2 = Mat::from_vec(19, 3, rng.normal_vec(19 * 3));
+        let seq =
+            save_append(&dir, &append_view(17, &x2, &y2, &rhs2), &FaultPlan::default());
+        assert_eq!(seq.unwrap(), 2);
+        // Appends never rewrite the base: its cost scales with the delta.
+        assert_eq!(
+            std::fs::read(dir.join(MANIFEST)).unwrap(),
+            base_manifest,
+            "append rewrote the base checkpoint"
+        );
+
+        // peek folds the chain from manifests alone.
+        let meta = peek(&dir).unwrap();
+        assert_eq!((meta.n_train, meta.pred_rhs_cols), (19, 3));
+        let elems = 19 * 2 + 19 + 3 * 2 + 3 + 19 * 3;
+        assert_eq!(meta.resident_bytes, (elems as u64) * 8);
+
+        // load replays the chain bitwise: concatenated training arrays,
+        // last delta's RHS.
+        let ck = load(&dir).unwrap();
+        let mut want_x = ds.train_x.clone();
+        want_x.extend_from_slice(&x1);
+        want_x.extend_from_slice(&x2);
+        let mut want_y = ds.train_y.clone();
+        want_y.extend_from_slice(&y1);
+        want_y.extend_from_slice(&y2);
+        assert_eq!(ck.dataset.train_x, want_x);
+        assert_eq!(ck.dataset.train_y, want_y);
+        assert_eq!(ck.pred_rhs.data, rhs2.data);
+        assert_eq!((ck.pred_rhs.rows, ck.pred_rhs.cols), (19, 3));
+
+        // Compact folds both deltas, is idempotent, and restarts the
+        // sequence; the result loads identically.
+        assert_eq!(compact(&dir, &FaultPlan::default()).unwrap(), 2);
+        assert_eq!(compact(&dir, &FaultPlan::default()).unwrap(), 0);
+        assert!(!dir.join("append-000001").exists(), "compact left delta records");
+        let ck2 = load(&dir).unwrap();
+        assert_eq!(ck2.dataset.train_x, want_x);
+        assert_eq!(ck2.pred_rhs.data, rhs2.data);
+        let (x3, y3) = (rng.normal_vec(2), rng.normal_vec(1));
+        let rhs3 = Mat::from_vec(20, 3, rng.normal_vec(20 * 3));
+        let seq =
+            save_append(&dir, &append_view(19, &x3, &y3, &rhs3), &FaultPlan::default());
+        assert_eq!(seq.unwrap(), 1, "sequence numbers restart after compaction");
+        assert_eq!(compact(&dir, &FaultPlan::default()).unwrap(), 1);
+
+        // The compacted sidecars are bitwise what a from-scratch save of
+        // the same state writes.
+        let scratch = sibling(&dir, ".scratch");
+        ds.train_x = want_x;
+        ds.train_x.extend_from_slice(&x3);
+        ds.train_y = want_y;
+        ds.train_y.extend_from_slice(&y3);
+        save(&scratch, &toy_view(&ds, &hypers, &rhs3, &[])).unwrap();
+        for f in ["train_x", "train_y", "test_x", "test_y", "pred_rhs"] {
+            assert_eq!(
+                std::fs::read(dir.join(format!("{f}.bin"))).unwrap(),
+                std::fs::read(scratch.join(format!("{f}.bin"))).unwrap(),
+                "{f} diverges from a scratch save"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+
+    #[test]
+    fn append_crash_windows_recover_or_fail_loudly() {
+        let dir = std::env::temp_dir()
+            .join(format!("exactgp_ckpt_appfault_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = toy_dataset(10, 2);
+        let hypers = Hypers::default_init(None);
+        let mut rng = Rng::new(78, 0);
+        let rhs0 = Mat::from_vec(10, 2, rng.normal_vec(10 * 2));
+        save(&dir, &toy_view(&ds, &hypers, &rhs0, &[])).unwrap();
+        let (x1, y1) = (rng.normal_vec(4 * 2), rng.normal_vec(4));
+        let rhs1 = Mat::from_vec(14, 2, rng.normal_vec(14 * 2));
+
+        // A delta whose n_before disagrees with the chain on disk is
+        // refused before anything is written.
+        let bad_rhs = Mat::zeros(15, 2);
+        let err = format!(
+            "{:#}",
+            save_append(&dir, &append_view(11, &x1, &y1, &bad_rhs), &FaultPlan::default())
+                .unwrap_err()
+        );
+        assert!(err.contains("divergent"), "{err}");
+
+        // append.crash: staged but never published — nothing visible, the
+        // staging leftover is GC'd, and the next append still takes seq 1.
+        let plan = FaultPlan::parse("append.crash:1").unwrap();
+        let err = format!(
+            "{:#}",
+            save_append(&dir, &append_view(10, &x1, &y1, &rhs1), &plan).unwrap_err()
+        );
+        assert!(err.contains("append.crash"), "{err}");
+        let staging = dir.join("append-000001.tmp");
+        assert!(staging.exists(), "crash seam should leave the staging dir");
+        assert_eq!(load(&dir).unwrap().dataset.n_train(), 10);
+        assert!(!staging.exists(), "load did not GC append staging");
+
+        // append.delta-torn publishes a record whose manifest stops
+        // mid-byte. As the *last* record it is GC'd: the append simply
+        // didn't happen.
+        let plan = FaultPlan::parse("append.delta-torn:1").unwrap();
+        let err = format!(
+            "{:#}",
+            save_append(&dir, &append_view(10, &x1, &y1, &rhs1), &plan).unwrap_err()
+        );
+        assert!(err.contains("append.delta-torn"), "{err}");
+        assert!(dir.join("append-000001").join(APPEND_MANIFEST).is_file());
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.dataset.n_train(), 10);
+        assert_eq!(ck.pred_rhs.data, rhs0.data);
+        assert!(!dir.join("append-000001").exists(), "torn tail not GC'd");
+
+        // Land two good deltas, then tear the first by hand: a torn
+        // record with a valid successor is unrecoverable.
+        let seq =
+            save_append(&dir, &append_view(10, &x1, &y1, &rhs1), &FaultPlan::default());
+        assert_eq!(seq.unwrap(), 1);
+        let (x2, y2) = (rng.normal_vec(2), rng.normal_vec(1));
+        let rhs2 = Mat::from_vec(15, 2, rng.normal_vec(15 * 2));
+        let seq =
+            save_append(&dir, &append_view(14, &x2, &y2, &rhs2), &FaultPlan::default());
+        assert_eq!(seq.unwrap(), 2);
+        let m1 = dir.join("append-000001").join(APPEND_MANIFEST);
+        let text = std::fs::read_to_string(&m1).unwrap();
+        std::fs::write(&m1, &text.as_bytes()[..text.len() / 2]).unwrap();
+        let err = format!("{:#}", load(&dir).unwrap_err());
+        assert!(err.contains("corrupt append chain"), "{err}");
+        assert!(dir.join("append-000001").exists(), "mid-chain torn delta was GC'd");
+
+        // A checksum-failing sidecar inside a delta is always a hard
+        // error, exactly like the base.
+        std::fs::write(&m1, &text).unwrap();
+        assert_eq!(load(&dir).unwrap().dataset.n_train(), 15, "repaired chain loads");
+        let path = dir.join("append-000002").join("new_y.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[1] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&dir).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -34,5 +34,5 @@ pub mod registry;
 
 pub use admission::{Admission, Permit};
 pub use net::{Client, Server};
-pub use proto::{PredictOutcome, Request};
+pub use proto::{ObserveOutcome, PredictOutcome, Request};
 pub use registry::{parse_model_specs, ModelEntry, Registry, TenantCounters};

@@ -39,7 +39,9 @@ use crate::gp::Predictions;
 use crate::util::json::{num, obj, Json};
 
 use super::admission::Admission;
-use super::proto::{self, error_reply, predict_reply, PredictOutcome, Request};
+use super::proto::{
+    self, error_reply, observe_reply, predict_reply, ObserveOutcome, PredictOutcome, Request,
+};
 use super::registry::Registry;
 
 /// How often an idle connection thread re-checks the stop flag.
@@ -194,6 +196,7 @@ fn handle_request(registry: &Registry, admission: &Admission, doc: &Json) -> Jso
             ("models", registry.models_json()),
         ]),
         Request::Predict { model, x } => handle_predict(registry, admission, &model, x),
+        Request::Observe { model, x, y } => handle_observe(registry, admission, &model, x, y),
     }
 }
 
@@ -271,6 +274,89 @@ fn handle_predict(
     unreachable!("the retry loop always returns")
 }
 
+/// The `observe` verb: hand observed points to the model's online serve
+/// loop and reply once they are **folded** (an `ok` reply means later
+/// predicts see them). Mirrors `handle_predict`'s admission, dead-loop
+/// retry, and retryability conventions; against a registry whose loops
+/// are read-only (`serve --online` not given) the loop itself replies
+/// with a non-retryable explanation.
+fn handle_observe(
+    registry: &Registry,
+    admission: &Admission,
+    model: &str,
+    x: Vec<f64>,
+    y: Vec<f64>,
+) -> Json {
+    let Some(entry) = registry.entry(model) else {
+        return error_reply(&format!("unknown model {model:?}"), false);
+    };
+    entry.counters.requests.fetch_add(1, Ordering::SeqCst);
+
+    // Shape-check before admission, same rationale as predict: malformed
+    // observations never consume capacity, and a later observe() failure
+    // then unambiguously means the serve loop died.
+    let d = entry.meta.d;
+    if y.is_empty() || x.len() != y.len() * d {
+        return error_reply(
+            &format!(
+                "{} x-values is not {} observed points of d={d}",
+                x.len(),
+                y.len()
+            ),
+            false,
+        );
+    }
+    let rows = y.len();
+
+    let _permit = match admission.try_admit(&entry.counters.inflight) {
+        Ok(p) => p,
+        Err(msg) => {
+            entry.counters.sheds.fetch_add(1, Ordering::SeqCst);
+            return error_reply(&msg, true);
+        }
+    };
+
+    for attempt in 0..2 {
+        let handle = match registry.handle(model) {
+            Ok(h) => h,
+            Err(e) => {
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                return error_reply(&format!("loading model {model:?}: {e:#}"), false);
+            }
+        };
+        let rx = match handle.observe(x.clone(), y.clone()) {
+            Ok(rx) => rx,
+            Err(_) => {
+                registry.invalidate(model);
+                if attempt == 0 {
+                    continue;
+                }
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                return error_reply(
+                    &format!("serve loop for {model:?} is unavailable (died twice)"),
+                    true,
+                );
+            }
+        };
+        return match rx.recv() {
+            Ok(Ok(())) => observe_reply(model, rows),
+            // A refusal (read-only loop) or a failed fold: retrying the
+            // identical request will not help — a failed fold also kills
+            // the loop, and the reload behind a retry would discard every
+            // previously folded observation, silently.
+            Ok(Err(e)) => {
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                error_reply(&e, false)
+            }
+            Err(_) => {
+                entry.counters.errors.fetch_add(1, Ordering::SeqCst);
+                error_reply("serve loop dropped the observation", true)
+            }
+        };
+    }
+    unreachable!("the retry loop always returns")
+}
+
 fn stats_reply(registry: &Registry, admission: &Admission) -> Json {
     // Caps echo the config convention: 0 = unlimited.
     let cap = |c: usize| num(if c == usize::MAX { 0.0 } else { c as f64 });
@@ -342,6 +428,20 @@ impl Client {
         }
     }
 
+    /// One observe round-trip: `Folded(rows)` once the model's online
+    /// serve loop has folded the points in; sheds come back as
+    /// [`ObserveOutcome::Shed`], not errors.
+    pub fn observe(
+        &mut self,
+        model: &str,
+        x: Vec<f64>,
+        y: Vec<f64>,
+    ) -> Result<ObserveOutcome> {
+        let reply =
+            self.call(&Request::Observe { model: model.to_string(), x, y }.to_json())?;
+        proto::parse_observe_reply(&reply)
+    }
+
     /// The `stats` verb: global + per-model serving counters.
     pub fn stats(&mut self) -> Result<Json> {
         self.call(&Request::Stats.to_json())
@@ -378,6 +478,12 @@ mod tests {
         // Unknown model: permanent failure, not a shed.
         match client.predict("ghost", vec![1.0]).unwrap() {
             PredictOutcome::Failed(msg) => assert!(msg.contains("ghost"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+
+        // Observe follows the same convention over the wire.
+        match client.observe("ghost", vec![1.0], vec![2.0]).unwrap() {
+            ObserveOutcome::Failed(msg) => assert!(msg.contains("ghost"), "{msg}"),
             other => panic!("expected Failed, got {other:?}"),
         }
 

@@ -1,8 +1,9 @@
 //! The serving tier's wire protocol: length-delimited JSON frames.
 //!
 //! One frame = a `u32` little-endian byte length followed by that many
-//! bytes of UTF-8 JSON. Requests carry a `verb` field (`predict`, `stats`,
-//! `models`); every reply carries `ok` (and, when `ok` is false, `error`
+//! bytes of UTF-8 JSON. Requests carry a `verb` field (`predict`,
+//! `observe`, `stats`, `models`); every reply carries `ok` (and, when
+//! `ok` is false, `error`
 //! plus `retryable` — `true` marks a shed that the client should simply
 //! retry, `false` a real failure).
 //!
@@ -36,6 +37,18 @@ pub enum Request {
         /// Flat row-major (m, d) query points.
         x: Vec<f64>,
     },
+    /// Feed observed training points to the named model's online serve
+    /// loop. The reply is sent only once the observations are *folded*
+    /// into the model (not merely buffered), so an `ok` reply means
+    /// subsequent predicts see them.
+    Observe {
+        /// Registry name of the target model.
+        model: String,
+        /// Flat row-major (m, d) observed points.
+        x: Vec<f64>,
+        /// The m observed targets.
+        y: Vec<f64>,
+    },
     /// Per-model and global serving counters.
     Stats,
     /// List the registered models and their residency.
@@ -50,6 +63,12 @@ impl Request {
                 ("verb", s("predict")),
                 ("model", s(model)),
                 ("x", arr(x.iter().map(|&v| num(v)))),
+            ]),
+            Request::Observe { model, x, y } => obj(vec![
+                ("verb", s("observe")),
+                ("model", s(model)),
+                ("x", arr(x.iter().map(|&v| num(v)))),
+                ("y", arr(y.iter().map(|&v| num(v)))),
             ]),
             Request::Stats => obj(vec![("verb", s("stats"))]),
             Request::Models => obj(vec![("verb", s("models"))]),
@@ -66,9 +85,14 @@ impl Request {
                 model: doc.req_str("model")?.to_string(),
                 x: doc.req_f64_arr("x")?,
             }),
+            "observe" => Ok(Request::Observe {
+                model: doc.req_str("model")?.to_string(),
+                x: doc.req_f64_arr("x")?,
+                y: doc.req_f64_arr("y")?,
+            }),
             "stats" => Ok(Request::Stats),
             "models" => Ok(Request::Models),
-            _ => bail!("unknown verb {verb:?} (predict|stats|models)"),
+            _ => bail!("unknown verb {verb:?} (predict|observe|stats|models)"),
         }
     }
 }
@@ -82,6 +106,45 @@ pub fn predict_reply(model: &str, p: &Predictions) -> Json {
         ("var", arr(p.var.iter().map(|&v| num(v)))),
         ("noise", num(p.noise)),
     ])
+}
+
+/// Successful observe reply body: the `rows` observed points are folded
+/// into `model` and visible to subsequent predicts.
+pub fn observe_reply(model: &str, rows: usize) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", s(model)),
+        ("folded", num(rows as f64)),
+    ])
+}
+
+/// Client-side decoding of an observe reply: `Ok(rows_folded)`, or the
+/// server's error with its retryability.
+pub fn parse_observe_reply(doc: &Json) -> Result<ObserveOutcome> {
+    match doc.req("ok")?.as_bool() {
+        Some(true) => Ok(ObserveOutcome::Folded(doc.req_usize("folded")?)),
+        Some(false) => {
+            let msg = doc.req_str("error")?.to_string();
+            let retryable = doc.req("retryable")?.as_bool().unwrap_or(false);
+            Ok(if retryable {
+                ObserveOutcome::Shed(msg)
+            } else {
+                ObserveOutcome::Failed(msg)
+            })
+        }
+        None => bail!("reply's \"ok\" field is not a boolean"),
+    }
+}
+
+/// Client-side decoding of an observe reply.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ObserveOutcome {
+    /// The model folded this many observed points.
+    Folded(usize),
+    /// The server shed the request; retry after backing off.
+    Shed(String),
+    /// Permanent failure (unknown model, read-only model, bad shape).
+    Failed(String),
 }
 
 /// Error reply body. `retryable: true` marks an explicit shed (admission
@@ -241,6 +304,42 @@ mod tests {
                 assert_eq!(ab, bb);
             }
             _ => panic!("verb changed shape"),
+        }
+    }
+
+    #[test]
+    fn observe_round_trips_bitwise() {
+        let req = Request::Observe {
+            model: "bike".into(),
+            x: vec![0.5, -0.0, 2.0_f64.sqrt(), 1e-300],
+            y: vec![3.25, -7.5],
+        };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &req.to_json()).unwrap();
+        let mut keep = always();
+        let doc = read_frame(&mut Cursor::new(&wire), &mut keep).unwrap().unwrap();
+        let back = Request::parse(&doc).unwrap();
+        match (&req, &back) {
+            (Request::Observe { x: ax, y: ay, .. }, Request::Observe { model, x, y }) => {
+                assert_eq!(model, "bike");
+                let bits = |v: &[f64]| v.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(ax), bits(x));
+                assert_eq!(bits(ay), bits(y));
+            }
+            _ => panic!("verb changed shape"),
+        }
+        // Reply decoding covers all three outcomes.
+        match parse_observe_reply(&observe_reply("bike", 2)).unwrap() {
+            ObserveOutcome::Folded(n) => assert_eq!(n, 2),
+            other => panic!("expected folded, got {other:?}"),
+        }
+        match parse_observe_reply(&error_reply("overloaded", true)).unwrap() {
+            ObserveOutcome::Shed(m) => assert!(m.contains("overloaded")),
+            other => panic!("expected a shed, got {other:?}"),
+        }
+        match parse_observe_reply(&error_reply("read-only", false)).unwrap() {
+            ObserveOutcome::Failed(m) => assert!(m.contains("read-only")),
+            other => panic!("expected a failure, got {other:?}"),
         }
     }
 

@@ -37,8 +37,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
 use crate::coordinator;
-use crate::coordinator::serve::{self, ServeHandle, ServeOptions};
+use crate::coordinator::serve::{self, OnlineOptions, ServeHandle, ServeOptions};
 use crate::faults::{FaultPlan, Seam};
+use crate::metrics::Accounting;
 use crate::runtime::checkpoint::{self, CheckpointMeta};
 use crate::util::json::{obj, s, Json};
 
@@ -75,6 +76,11 @@ pub struct ModelEntry {
     pub meta: CheckpointMeta,
     /// Serving counters for this model.
     pub counters: Arc<TenantCounters>,
+    /// The resident model's solver/transport accounting (append counters
+    /// included), stashed at each cold load so the `stats` verb can read
+    /// it. Survives eviction with the values it had when the loop exited;
+    /// replaced wholesale by the next load's fresh [`Accounting`].
+    pub acct: Mutex<Option<Arc<Accounting>>>,
 }
 
 /// A resident model: the registry's handle clone keeps its serve loop
@@ -105,6 +111,11 @@ struct Resident {
 pub struct Registry {
     cfg: Config,
     budget_bytes: u64,
+    /// When set, cold loads spawn *online* serve loops
+    /// ([`serve::run_online`]) that accept the `observe` verb and fold
+    /// buffered observations into the model between predict batches.
+    /// Off by default: read-only loops reject observations explicitly.
+    online: bool,
     models: BTreeMap<String, ModelEntry>,
     resident: Mutex<Resident>,
     /// Fault plan (resolved from `run.faults` + `EXACTGP_FAULTS`): the
@@ -141,6 +152,7 @@ impl Registry {
                 dir: dir.clone(),
                 meta,
                 counters: Arc::new(TenantCounters::default()),
+                acct: Mutex::new(None),
             };
             if models.insert(name.clone(), entry).is_some() {
                 bail!("model {name:?} registered twice");
@@ -149,10 +161,23 @@ impl Registry {
         Ok(Registry {
             cfg: cfg.clone(),
             budget_bytes,
+            online: false,
             models,
             resident: Mutex::new(Resident::default()),
             plan: FaultPlan::resolve(&cfg.faults),
         })
+    }
+
+    /// Switch every *future* cold load to an online serve loop (or back).
+    /// Call before serving starts: already-resident loops keep the mode
+    /// they were spawned with.
+    pub fn set_online(&mut self, online: bool) {
+        self.online = online;
+    }
+
+    /// Whether cold loads spawn online (observe-capable) serve loops.
+    pub fn is_online(&self) -> bool {
+        self.online
     }
 
     /// The registered entry for `name`, if any.
@@ -249,6 +274,8 @@ impl Registry {
             .fire_as_error(Seam::RegistryLoad, &format!("cold load of model {name:?}"))?;
         let (gp, _ds) = coordinator::load_model(&self.cfg, &entry.dir)
             .with_context(|| format!("loading model {name:?} from {:?}", entry.dir))?;
+        *entry.acct.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(gp.accounting().clone());
         let (handle, rx) = serve::channel(gp.dim());
         let opts = ServeOptions {
             plan: self.plan.clone(),
@@ -257,11 +284,17 @@ impl Registry {
                 Duration::from_secs_f64(self.cfg.serve_max_delay_ms.max(0.0) / 1e3),
             )
         };
+        let online = self.online.then(|| OnlineOptions::from_config(&self.cfg));
         let loop_name = name.to_string();
         let thread = std::thread::Builder::new()
             .name(format!("serve-{name}"))
             .spawn(move || {
-                if let Err(e) = serve::run_opts(&gp, rx, &opts) {
+                let mut gp = gp;
+                let r = match &online {
+                    Some(online) => serve::run_online(&mut gp, rx, &opts, online),
+                    None => serve::run_opts(&gp, rx, &opts),
+                };
+                if let Err(e) = r {
                     eprintln!("serve loop for model {loop_name:?} died: {e:#}");
                 }
             })
@@ -299,6 +332,18 @@ impl Registry {
         let mut models = BTreeMap::new();
         for e in self.models.values() {
             let c = &e.counters;
+            // Append counters come from the model's own accounting (the
+            // serve loop increments them as it folds observations); a
+            // never-loaded model reports zeros.
+            let snap = e
+                .acct
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .as_ref()
+                .map(|a| a.snapshot());
+            let (ac, ar, ab, af) = snap.map_or((0, 0, 0, 0), |s| {
+                (s.append_calls, s.append_rows, s.append_delta_bytes, s.append_folds)
+            });
             models.insert(
                 e.name.clone(),
                 obj(vec![
@@ -311,6 +356,10 @@ impl Registry {
                     ("sheds", Json::Num(c.sheds.load(Ordering::SeqCst) as f64)),
                     ("errors", Json::Num(c.errors.load(Ordering::SeqCst) as f64)),
                     ("inflight", Json::Num(c.inflight.load(Ordering::SeqCst) as f64)),
+                    ("append_calls", Json::Num(ac as f64)),
+                    ("append_rows", Json::Num(ar as f64)),
+                    ("append_delta_bytes", Json::Num(ab as f64)),
+                    ("append_folds", Json::Num(af as f64)),
                 ]),
             );
         }

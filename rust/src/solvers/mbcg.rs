@@ -104,14 +104,45 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
     max_iters: usize,
     track_from: usize,
 ) -> MbcgResult {
+    mbcg_warm(op, precond, b, tol, max_iters, track_from, None)
+}
+
+/// [`mbcg`] with an optional warm-start initial guess.
+///
+/// `x0 = Some(U0)` starts CG from U0 instead of zero — one extra batched
+/// MVM computes the initial residual B - K^ U0, after which each iteration
+/// is the standard recurrence. Convergence is still measured against
+/// ||B|| (not the warm residual), so the solution meets exactly the same
+/// tolerance contract as a cold solve; a good guess just gets there in
+/// fewer iterations. `x0 = None` is byte-for-byte the cold path — `mbcg`
+/// delegates here.
+///
+/// Warm starts restart the Lanczos recurrence from the warm residual, so
+/// the tridiagonals no longer estimate log|K^| of the original system —
+/// callers that need quadrature (training) must solve cold; the warm path
+/// is for pure solves (the prediction cache after an append).
+pub fn mbcg_warm<O: BatchMvm, P: Preconditioner>(
+    op: &O,
+    precond: &P,
+    b: &Mat,
+    tol: f64,
+    max_iters: usize,
+    track_from: usize,
+    x0: Option<&Mat>,
+) -> MbcgResult {
     let n = b.rows;
     let t = b.cols;
     assert_eq!(op.n(), n);
 
     let b_norms = col_norms(b);
 
-    let mut u = Mat::zeros(n, t);
-    let mut r = b.clone(); // r = B - K^ U = B at U = 0
+    let (mut u, mut r) = match x0 {
+        Some(u0) => {
+            assert_eq!((u0.rows, u0.cols), (n, t), "warm-start shape mismatch");
+            (u0.clone(), b.sub(&op.mvm(u0)))
+        }
+        None => (Mat::zeros(n, t), b.clone()), // r = B - K^ U = B at U = 0
+    };
     let z0 = precond.apply(&r);
     let mut rz = col_dots(&r, &z0);
     let mut p = z0;
@@ -130,6 +161,22 @@ pub fn mbcg<O: BatchMvm, P: Preconditioner>(
     let mut rel_res: Vec<f64> = (0..t)
         .map(|j| if b_norms[j] > 0.0 { 1.0 } else { 0.0 })
         .collect();
+    if x0.is_some() {
+        // A warm column whose guess already meets the tolerance must be
+        // deactivated up front: its residual (and thus its search
+        // direction) is ~0, which the loop would misread as a curvature
+        // breakdown. Cold solves never enter here, keeping that path
+        // bitwise-unchanged.
+        let r_norms = col_norms(&r);
+        for j in 0..t {
+            if active[j] {
+                rel_res[j] = r_norms[j] / b_norms[j];
+                if rel_res[j] <= tol {
+                    active[j] = false;
+                }
+            }
+        }
+    }
 
     let mut iterations = 0;
     for _ in 0..max_iters {
@@ -492,6 +539,56 @@ mod tests {
         // The extremal eigenvalues are resolved tightly.
         assert!((ritz.first().unwrap() - 1.0).abs() < 1e-7, "min {:?}", ritz.first());
         assert!((ritz.last().unwrap() - n as f64).abs() < 1e-7, "max {:?}", ritz.last());
+    }
+
+    #[test]
+    fn warm_start_cuts_iterations_and_keeps_the_tolerance_contract() {
+        let mut rng = Rng::new(21, 0);
+        let n = 96;
+        let a = random_spd(n, 0.05, &mut rng);
+        let op = DenseOp { a: a.clone() };
+        let b = Mat::from_vec(n, 2, rng.normal_vec(n * 2));
+        let tol = 1e-8;
+        let cold = mbcg(&op, &IdentityPrecond { n }, &b, tol, 1000, 2);
+        assert!(cold.stats.converged.iter().all(|&c| c));
+
+        // Warm-starting from a mildly perturbed solution converges in
+        // strictly fewer iterations, to the same ||B||-relative tolerance.
+        let mut x0 = cold.u.clone();
+        for v in x0.data.iter_mut() {
+            *v += 1e-4 * rng.normal();
+        }
+        let warm = mbcg_warm(&op, &IdentityPrecond { n }, &b, tol, 1000, 2, Some(&x0));
+        assert!(warm.stats.converged.iter().all(|&c| c));
+        assert!(
+            warm.stats.iterations < cold.stats.iterations,
+            "warm={} cold={}",
+            warm.stats.iterations,
+            cold.stats.iterations
+        );
+        let r = b.sub(&a.matmul(&warm.u));
+        assert!(r.frob_norm() / b.frob_norm() <= tol * 2.0);
+
+        // An exact warm start is recognized up front — zero iterations,
+        // no spurious breakdown from the ~0 search direction.
+        let exact = mbcg_warm(&op, &IdentityPrecond { n }, &b, tol, 1000, 2, Some(&cold.u));
+        assert_eq!(exact.stats.iterations, 0);
+        assert_eq!(exact.stats.breakdown_count(), 0);
+        assert!(exact.stats.converged.iter().all(|&c| c));
+        assert_eq!(exact.u.data, cold.u.data);
+    }
+
+    #[test]
+    fn warm_none_is_the_cold_path() {
+        let mut rng = Rng::new(22, 0);
+        let n = 40;
+        let a = random_spd(n, 0.3, &mut rng);
+        let op = DenseOp { a };
+        let b = Mat::from_vec(n, 3, rng.normal_vec(n * 3));
+        let cold = mbcg(&op, &IdentityPrecond { n }, &b, 1e-9, 300, 3);
+        let via_none = mbcg_warm(&op, &IdentityPrecond { n }, &b, 1e-9, 300, 3, None);
+        assert_eq!(cold.u.data, via_none.u.data);
+        assert_eq!(cold.stats.iterations, via_none.stats.iterations);
     }
 
     #[test]

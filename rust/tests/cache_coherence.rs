@@ -116,13 +116,13 @@ fn set_hypers_invalidates_stale_blocks() {
     let (x, v) = toy(40);
     let mut op = build_op(&x, 2, SPEC.r * 2, 64 << 20);
     let old = op.mvm(&v);
-    let gen0 = op.generation;
+    let gen0 = op.hyper_gen;
 
     // Move the lengthscale: every cached rho block is now stale.
     let mut h2 = hypers();
     h2.log_lengthscales[0] = 0.6;
     op.set_hypers(h2.clone());
-    assert!(op.generation > gen0, "set_hypers must bump the generation");
+    assert!(op.hyper_gen > gen0, "set_hypers must bump the hyper generation");
 
     let before = op.acct.snapshot();
     let got = op.mvm(&v);
@@ -136,6 +136,73 @@ fn set_hypers_invalidates_stale_blocks() {
     let want = fresh.mvm(&v);
     assert_eq!(got.data, want.data, "cached MVM after set_hypers is stale");
     assert!(got.max_abs_diff(&old) > 1e-6, "hyper move should change results");
+}
+
+#[test]
+fn append_rows_keeps_prior_blocks_and_matches_a_fresh_op_bitwise() {
+    // Growing an op in place (online learning) is a cache event distinct
+    // from a hyper move: the data generation bumps, blocks that were
+    // fully in-bounds before the append survive it (the appended rows
+    // cannot change them), and the grown op must be observably identical
+    // to an op built from scratch over the concatenated rows.
+    let (x, v0) = toy(40); // 40 aligns with r=4 and c=8: every block is full
+    let mut rng = Rng::new(106, 0);
+    let extra: Vec<f64> = (0..7 * SPEC.d).map(|_| rng.normal()).collect();
+    let mut all = x.clone();
+    all.extend_from_slice(&extra);
+    let v1 = Mat::from_vec(47, SPEC.t, rng.normal_vec(47 * SPEC.t));
+
+    let pool = build_pool(2);
+    let base = Arc::new(PaddedData::new(&x, SPEC.d, &SPEC));
+    let plan = Plan::with_rows(base.n_pad, base.n_pad, SPEC.r * 2);
+    let mut op = PartitionedKernelOp::square(
+        base.clone(),
+        pool,
+        plan,
+        SPEC,
+        hypers(),
+        Arc::new(Accounting::default()),
+    )
+    .with_cache_budget(64 << 20);
+
+    let _ = op.mvm(&v0); // warm the cache over the base rows
+    let warmed = op.acct.snapshot();
+    assert!(warmed.cache_fills > 0);
+    let (h0, d0) = (op.hyper_gen, op.data_gen);
+
+    let grown = Arc::new(PaddedData::append_from(&base, &all, SPEC.d, &SPEC));
+    op.append_rows(grown);
+    assert_eq!(op.hyper_gen, h0, "append must not invalidate hyper state");
+    assert_eq!(op.data_gen, d0 + 1, "append must bump the data generation");
+    assert_eq!(op.n_rows(), 47);
+
+    let got = op.mvm(&v1);
+    let after = op.acct.snapshot().delta(&warmed);
+    // Retention: the base rows' blocks were full, so the first pass at
+    // the new size serves them from cache and only fills blocks touching
+    // the appended rows.
+    assert!(after.cache_hits > 0, "append dropped the still-valid base blocks");
+    assert!(after.cache_fills > 0, "blocks over the appended rows must be new fills");
+
+    let fresh_data = Arc::new(PaddedData::new(&all, SPEC.d, &SPEC));
+    let fresh_plan = Plan::with_rows(fresh_data.n_pad, fresh_data.n_pad, SPEC.r * 2);
+    let fresh = PartitionedKernelOp::square(
+        fresh_data,
+        build_pool(2),
+        fresh_plan,
+        SPEC,
+        hypers(),
+        Arc::new(Accounting::default()),
+    );
+    assert_eq!(got.data, fresh.mvm(&v1).data, "grown op != fresh op over the same rows");
+
+    // Steady state at the new size: a second pass is all hits again.
+    let before = op.acct.snapshot();
+    let again = op.mvm(&v1);
+    let delta = op.acct.snapshot().delta(&before);
+    assert_eq!(again.data, got.data);
+    assert_eq!(delta.cache_fills, 0, "post-append warm pass re-materialized blocks");
+    assert!(delta.cache_hits > 0);
 }
 
 #[test]

@@ -252,3 +252,88 @@ fn corrupt_train_state_records_fail_loudly() {
 
     let _ = std::fs::remove_dir_all(&root);
 }
+
+/// The append-delta fault seams, end to end through the model API: a
+/// crash before the publish rename leaves only staging that the next
+/// load garbage-collects; a torn published tail is garbage-collected
+/// too; a flipped byte inside a delta sidecar fails the checksum at
+/// load; and the retry that finally lands replays into the appended
+/// model bitwise.
+#[test]
+fn append_delta_crashes_recover_and_replay_bitwise() {
+    let cfg = base_cfg();
+    let (mut gp, mut ds) = trained_model(&cfg, "bike");
+    let dir = tmp_dir("appendfault");
+    let _ = std::fs::remove_dir_all(&dir);
+    gp.save(&dir, &ds).unwrap();
+    let n_before = ds.n_train();
+
+    // Fold five fresh points in (the cold, parity-grade path) and grow
+    // the dataset to match — save_append requires the post-append set.
+    let k = 5;
+    let new_x = ds.test_x[..k * ds.d].to_vec();
+    let new_y = ds.test_y[..k].to_vec();
+    gp.fold_observations(&new_x, &new_y).unwrap();
+    ds.train_x.extend_from_slice(&new_x);
+    ds.train_y.extend_from_slice(&new_y);
+
+    // Crash window 1: staged but never published. The record must stay
+    // invisible — the next load serves the base model and sweeps the
+    // staging directory.
+    let plan = FaultPlan::parse("append.crash:1").unwrap();
+    let err = format!("{:#}", gp.save_append(&dir, &ds, k, &plan).unwrap_err());
+    assert!(err.contains("append.crash"), "{err}");
+    assert!(
+        dir.join("append-000001.tmp").is_dir(),
+        "the crash window leaves exactly the staging dir"
+    );
+    assert!(!dir.join("append-000001").exists());
+    let ck = checkpoint::load(&dir).unwrap();
+    assert_eq!(ck.dataset.n_train(), n_before, "unpublished delta must stay invisible");
+    assert!(
+        !dir.join("append-000001.tmp").exists(),
+        "load must garbage-collect append staging leftovers"
+    );
+
+    // Crash window 2: published, but with a manifest that stops
+    // mid-byte. As the last record in the chain it is the footprint of a
+    // mid-publish crash, so load garbage-collects it — that append
+    // simply didn't happen.
+    let plan = FaultPlan::parse("append.delta-torn:1").unwrap();
+    let err = format!("{:#}", gp.save_append(&dir, &ds, k, &plan).unwrap_err());
+    assert!(err.contains("append.delta-torn"), "{err}");
+    assert!(dir.join("append-000001").is_dir(), "the torn record was published");
+    let ck = checkpoint::load(&dir).unwrap();
+    assert_eq!(ck.dataset.n_train(), n_before);
+    assert!(!dir.join("append-000001").exists(), "torn tail must be garbage-collected");
+
+    // The retry lands (the chain restarts at 1 — both failed attempts
+    // were swept, never numbered).
+    let seq = gp.save_append(&dir, &ds, k, &FaultPlan::default()).unwrap();
+    assert_eq!(seq, 1);
+
+    // A flipped byte inside the published delta's sidecar fails the
+    // FNV checksum at load, exactly like a base sidecar would.
+    let sidecar = dir.join("append-000001").join("new_y.bin");
+    let original = std::fs::read(&sidecar).unwrap();
+    let mut bytes = original.clone();
+    bytes[original.len() / 2] ^= 0x01;
+    std::fs::write(&sidecar, &bytes).unwrap();
+    let err = load_err(&dir);
+    assert!(err.contains("checksum"), "bitflipped delta sidecar: {err}");
+    std::fs::write(&sidecar, &original).unwrap();
+
+    // Restored, the base + delta replays into the appended model
+    // bitwise — prediction cache included.
+    let probes = &ds.test_x[k * ds.d..(k + 32) * ds.d];
+    let want = gp.predict(probes).unwrap();
+    let (gp2, _) = coordinator::load_model(&cfg, &dir).unwrap();
+    assert_eq!(gp2.n(), n_before + k);
+    let got = gp2.predict(probes).unwrap();
+    for i in 0..want.mean.len() {
+        assert_eq!(got.mean[i].to_bits(), want.mean[i].to_bits());
+        assert_eq!(got.var[i].to_bits(), want.var[i].to_bits());
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,362 @@
+//! Online-learning parity: the headline invariant of the append path.
+//! A model grown in place by `add_data`/`fold_observations` must be
+//! **bitwise identical** to a from-scratch model built over the
+//! concatenated data under the same hyperparameter trajectory — on both
+//! transports, with or without a serve loop in the middle — and the
+//! compacted checkpoint of an appended model must match a scratch save
+//! byte for byte. The warm-started solve is the one deliberate
+//! exception: tolerance-identical, not bitwise, and it must pay fewer
+//! mBCG iterations than the cold solve it replaces.
+
+use std::time::Duration;
+
+use exactgp::config::{Backend, Config, TransportKind};
+use exactgp::coordinator::{
+    self,
+    serve::{self, OnlineOptions, ServeOptions},
+};
+use exactgp::data::synthetic::Scale;
+use exactgp::data::Dataset;
+use exactgp::faults::FaultPlan;
+use exactgp::gp::exact::{ExactGp, Recipe};
+use exactgp::runtime::checkpoint;
+use exactgp::util::rng::Rng;
+
+/// Training points in the base model before any append.
+const N_BASE: usize = 160;
+/// The appended chunk sizes, exercised as one cumulative chain: a single
+/// point, an unaligned handful, and a chunk far larger than the base's
+/// tile rows.
+const CHUNKS: [usize; 3] = [1, 17, 1024];
+
+fn base_cfg(transport: TransportKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    // Large enough that the full training split covers the base plus
+    // every appended chunk; the base model sees only a truncated prefix.
+    cfg.scale = Scale { train_cap: 1280 };
+    cfg.workers = 2;
+    cfg.transport = transport;
+    cfg.precond_rank = 16;
+    cfg.variance_rank = 24;
+    cfg
+}
+
+/// The same dataset with the training split truncated to its first `n`
+/// points — the "model that hasn't seen the rest yet". Using a prefix of
+/// one split (rather than two differently-scaled loads) guarantees the
+/// appended rows are exactly the rows the from-scratch twin trains on.
+fn truncated(ds: &Dataset, n: usize) -> Dataset {
+    let mut out = ds.clone();
+    out.train_x.truncate(n * ds.d);
+    out.train_y.truncate(n);
+    out
+}
+
+fn cheap_recipe() -> Recipe {
+    Recipe { pretrain: false, adam_steps: 1 }
+}
+
+/// Train the base prefix, then fold the chunks in one by one, checking
+/// each stage bitwise against a from-scratch model over the concatenated
+/// prefix (same hypers, same `(seed, n)` RNG derivation that
+/// `fold_observations` uses). Returns every stage's prediction bits so
+/// the caller can compare transports against each other.
+fn run_append_stages(transport: TransportKind) -> Vec<Vec<u64>> {
+    let cfg = base_cfg(transport);
+    let ds_full = coordinator::load_dataset(&cfg, "bike", 0).unwrap();
+    let total: usize = N_BASE + CHUNKS.iter().sum::<usize>();
+    assert!(
+        ds_full.n_train() >= total,
+        "dataset too small: {} < {total}",
+        ds_full.n_train()
+    );
+    let d = ds_full.d;
+    let probes = &ds_full.test_x[..32 * d];
+
+    let ds_base = truncated(&ds_full, N_BASE);
+    let (pool, spec) = coordinator::make_pool(&cfg, d).unwrap();
+    let mut rng = Rng::new(7, 0);
+    let mut gp = ExactGp::new(&cfg, cfg.kernel, &ds_base, pool, spec);
+    gp.train(cheap_recipe(), &mut rng).unwrap();
+    gp.precompute(&mut rng).unwrap();
+    let hypers = gp.hypers.clone();
+
+    let mut stages = Vec::new();
+    let mut n = N_BASE;
+    for k in CHUNKS {
+        let new_x = &ds_full.train_x[n * d..(n + k) * d];
+        let new_y = &ds_full.train_y[n..n + k];
+        gp.fold_observations(new_x, new_y).unwrap();
+        n += k;
+        assert_eq!(gp.n(), n);
+
+        // The from-scratch twin: a fresh model over the concatenated
+        // prefix, handed the same hypers (the "same hyper trajectory"
+        // premise) and precomputed with the same deterministic RNG
+        // derivation the fold used.
+        let ds_n = truncated(&ds_full, n);
+        let (pool2, spec2) = coordinator::make_pool(&cfg, d).unwrap();
+        let mut scratch = ExactGp::new(&cfg, cfg.kernel, &ds_n, pool2, spec2);
+        scratch.hypers = hypers.clone();
+        let mut rng2 = Rng::new(cfg.seed, n as u64);
+        scratch.precompute(&mut rng2).unwrap();
+
+        let got = gp.predict(probes).unwrap();
+        let want = scratch.predict(probes).unwrap();
+        for i in 0..want.mean.len() {
+            assert_eq!(
+                got.mean[i].to_bits(),
+                want.mean[i].to_bits(),
+                "mean[{i}] diverged from scratch after appending {k} (n={n}, \
+                 transport {transport:?})"
+            );
+            assert_eq!(
+                got.var[i].to_bits(),
+                want.var[i].to_bits(),
+                "var[{i}] diverged from scratch after appending {k} (n={n}, \
+                 transport {transport:?})"
+            );
+        }
+        stages.push(
+            got.mean
+                .iter()
+                .chain(got.var.iter())
+                .map(|v| v.to_bits())
+                .collect(),
+        );
+    }
+
+    // The append counters tell the same story on every transport.
+    let snap = gp.accounting().snapshot();
+    assert_eq!(snap.append_calls, CHUNKS.len() as u64);
+    assert_eq!(snap.append_rows, CHUNKS.iter().sum::<usize>() as u64);
+    assert_eq!(snap.append_folds, CHUNKS.len() as u64);
+    stages
+}
+
+/// The headline invariant, chunk sizes {1, 17, 1024}: append == scratch
+/// bitwise at every stage, on the local transport and over worker
+/// processes — and the two transports agree with *each other* bit for
+/// bit, stage by stage.
+#[test]
+fn appended_model_matches_from_scratch_bitwise_on_both_transports() {
+    let local = run_append_stages(TransportKind::Local);
+    let subprocess = run_append_stages(TransportKind::Subprocess);
+    assert_eq!(
+        local, subprocess,
+        "online-parity stages diverged between transports"
+    );
+}
+
+/// A model trained by the cheap deterministic recipe (shared by the
+/// serve-loop and warm-start tests, which each need two identical
+/// copies).
+fn trained_small(cfg: &Config, rng_seed: u64) -> (ExactGp, Dataset) {
+    let ds = coordinator::load_dataset(cfg, "bike", 0).unwrap();
+    let (pool, spec) = coordinator::make_pool(cfg, ds.d).unwrap();
+    let mut rng = Rng::new(rng_seed, 0);
+    let mut gp = ExactGp::new(cfg, cfg.kernel, &ds, pool, spec);
+    gp.train(cheap_recipe(), &mut rng).unwrap();
+    gp.precompute(&mut rng).unwrap();
+    (gp, ds)
+}
+
+/// Observations routed through a live `run_online` serve loop (buffered,
+/// folded between dispatches, acked only once folded) land bitwise where
+/// direct `fold_observations` calls land — the loop adds plumbing, not
+/// arithmetic. Also pins the loop's observation accounting.
+#[test]
+fn serve_loop_observe_matches_direct_fold_bitwise() {
+    let mut cfg = base_cfg(TransportKind::Local);
+    cfg.scale = Scale { train_cap: 192 };
+
+    // Two bitwise-identical models: same config, same training RNG.
+    let (mut gp_direct, ds) = trained_small(&cfg, 21);
+    let (mut gp_serve, _) = trained_small(&cfg, 21);
+    let d = ds.d;
+
+    // Two chunks from the test split: one exactly at the fold threshold,
+    // one well past it (folded in a single oversized batch).
+    let (k1, k2) = (16usize, 48usize);
+    let c1x = ds.test_x[..k1 * d].to_vec();
+    let c1y = ds.test_y[..k1].to_vec();
+    let c2x = ds.test_x[k1 * d..(k1 + k2) * d].to_vec();
+    let c2y = ds.test_y[k1..k1 + k2].to_vec();
+    let m = 16usize;
+    let probe_base = (k1 + k2) * d;
+    let probes = &ds.test_x[probe_base..probe_base + m * d];
+
+    gp_direct.fold_observations(&c1x, &c1y).unwrap();
+    gp_direct.fold_observations(&c2x, &c2y).unwrap();
+    let want = gp_direct.predict(probes).unwrap();
+
+    let (handle, rx) = serve::channel(gp_serve.dim());
+    let opts = ServeOptions::new(16, Duration::from_millis(5));
+    let online = OnlineOptions {
+        buffer_points: k1,
+        fold_max_delay: Duration::from_millis(10),
+    };
+    let (stats, replies) = std::thread::scope(|s| {
+        let loop_thread =
+            s.spawn(|| serve::run_online(&mut gp_serve, rx, &opts, &online));
+        // observe_blocking returns only once the chunk is *folded*, so
+        // the serve model walks the exact fold sequence the direct one
+        // did: fold(c1), fold(c2).
+        handle.observe_blocking(c1x.clone(), c1y.clone()).unwrap();
+        handle.observe_blocking(c2x.clone(), c2y.clone()).unwrap();
+        let replies: Vec<_> = (0..m)
+            .map(|qi| {
+                handle
+                    .query(probes[qi * d..(qi + 1) * d].to_vec())
+                    .unwrap()
+            })
+            .collect();
+        drop(handle);
+        (loop_thread.join().unwrap().unwrap(), replies)
+    });
+
+    assert_eq!(stats.observations, (k1 + k2) as u64);
+    assert_eq!(stats.folds, 2, "expected one fold per chunk: {stats:?}");
+    for (qi, p) in replies.iter().enumerate() {
+        assert_eq!(p.mean.len(), 1);
+        assert_eq!(
+            p.mean[0].to_bits(),
+            want.mean[qi].to_bits(),
+            "serve-loop mean[{qi}] diverged from direct fold"
+        );
+        assert_eq!(
+            p.var[0].to_bits(),
+            want.var[qi].to_bits(),
+            "serve-loop var[{qi}] diverged from direct fold"
+        );
+    }
+    // The two models are still the same model afterwards.
+    let after = gp_serve.predict(probes).unwrap();
+    for i in 0..m {
+        assert_eq!(after.mean[i].to_bits(), want.mean[i].to_bits());
+        assert_eq!(after.var[i].to_bits(), want.var[i].to_bits());
+    }
+}
+
+/// The warm-started mean solve: seeded from the pre-append `a`, it must
+/// converge in strictly fewer mBCG iterations than the cold solve on the
+/// same appended model, and land within solver tolerance of the cold
+/// answer (it is documented as tolerance-identical, NOT bitwise).
+#[test]
+fn warm_start_cuts_mean_solve_iterations_within_tolerance() {
+    let mut cfg = base_cfg(TransportKind::Local);
+    cfg.scale = Scale { train_cap: 512 };
+    // Tighten the cache tolerance so the cold solve does real work —
+    // at the loose default both paths converge in a handful of
+    // iterations and the comparison is noise.
+    cfg.predict_tol = 1e-4;
+
+    let (mut gp_cold, ds) = trained_small(&cfg, 33);
+    let (mut gp_warm, _) = trained_small(&cfg, 33);
+    let d = ds.d;
+    let k = 64usize;
+    let new_x = &ds.test_x[..k * d];
+    let new_y = &ds.test_y[..k];
+    let probes = &ds.test_x[k * d..(k + 32) * d];
+
+    gp_cold.fold_observations(new_x, new_y).unwrap();
+    let iters_cold = gp_cold.last_mean_solve_iters.unwrap();
+
+    gp_warm.add_data(new_x, new_y).unwrap();
+    let mut rng = Rng::new(cfg.seed, gp_warm.n() as u64);
+    gp_warm.precompute_warm(&mut rng).unwrap();
+    let iters_warm = gp_warm.last_mean_solve_iters.unwrap();
+
+    assert!(iters_cold >= 3, "cold solve trivial ({iters_cold} iters) — the \
+             comparison below would be meaningless");
+    assert!(
+        iters_warm < iters_cold,
+        "warm start did not cut iterations: warm {iters_warm} vs cold \
+         {iters_cold}"
+    );
+
+    // Tolerance-grade agreement: both caches met predict_tol, so their
+    // predictions agree to a small multiple of it (whitened units).
+    let pc = gp_cold.predict(probes).unwrap();
+    let pw = gp_warm.predict(probes).unwrap();
+    let mut max_diff = 0.0f64;
+    for i in 0..pc.mean.len() {
+        max_diff = max_diff.max((pc.mean[i] - pw.mean[i]).abs());
+    }
+    assert!(
+        max_diff <= 1e-3,
+        "warm-started predictions drifted {max_diff:.3e} from cold \
+         (predict_tol {:.1e})",
+        cfg.predict_tol
+    );
+}
+
+/// Compaction folds the append chain into the base so thoroughly that
+/// the result is indistinguishable from never having appended at all:
+/// every binary sidecar of the compacted directory equals — byte for
+/// byte — a scratch `save` of the same post-append model.
+#[test]
+fn compacted_append_chain_matches_scratch_save_byte_for_byte() {
+    let mut cfg = base_cfg(TransportKind::Local);
+    cfg.scale = Scale { train_cap: 192 };
+    let (mut gp, mut ds) = trained_small(&cfg, 45);
+    let pid = std::process::id();
+    let dir_a = std::env::temp_dir().join(format!("exactgp_op_compact_{pid}"));
+    let dir_b = std::env::temp_dir().join(format!("exactgp_op_scratch_{pid}"));
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+    gp.save(&dir_a, &ds).unwrap();
+
+    let k = 9usize;
+    let new_x = ds.test_x[..k * ds.d].to_vec();
+    let new_y = ds.test_y[..k].to_vec();
+    gp.fold_observations(&new_x, &new_y).unwrap();
+    ds.train_x.extend_from_slice(&new_x);
+    ds.train_y.extend_from_slice(&new_y);
+
+    let plan = FaultPlan::default();
+    let seq = gp.save_append(&dir_a, &ds, k, &plan).unwrap();
+    assert_eq!(seq, 1);
+    assert!(dir_a.join("append-000001").is_dir());
+
+    assert_eq!(checkpoint::compact(&dir_a, &plan).unwrap(), 1);
+    assert!(
+        !dir_a.join("append-000001").exists(),
+        "compaction must consume the delta record"
+    );
+
+    gp.save(&dir_b, &ds).unwrap();
+    let bins = |dir: &std::path::Path| -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".bin"))
+            .collect();
+        v.sort();
+        v
+    };
+    let names = bins(&dir_b);
+    assert!(names.len() >= 5, "expected the full sidecar set, got {names:?}");
+    assert_eq!(bins(&dir_a), names, "compacted sidecar set differs");
+    for name in &names {
+        let a = std::fs::read(dir_a.join(name)).unwrap();
+        let b = std::fs::read(dir_b.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs between compacted and scratch save");
+    }
+
+    // And the compacted checkpoint still loads into the appended model.
+    let (gp2, _) = coordinator::load_model(&cfg, &dir_a).unwrap();
+    assert_eq!(gp2.n(), gp.n());
+    let probes = &ds.test_x[k * ds.d..(k + 16) * ds.d];
+    let want = gp.predict(probes).unwrap();
+    let got = gp2.predict(probes).unwrap();
+    for i in 0..want.mean.len() {
+        assert_eq!(got.mean[i].to_bits(), want.mean[i].to_bits());
+        assert_eq!(got.var[i].to_bits(), want.var[i].to_bits());
+    }
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
